@@ -1,0 +1,68 @@
+//! Quickstart: load the runtime, train a small PIM-QAT model for a few
+//! steps, and deploy it on the simulated 7-bit chip.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! This touches every layer of the stack: HLO artifacts through PJRT (L2/L1
+//! lowered), the rust training loop, and the chip simulator.
+
+use pim_qat::chip::ChipModel;
+use pim_qat::config::{JobConfig, Mode, Scheme};
+use pim_qat::data::synth;
+use pim_qat::nn::ExecSpec;
+use pim_qat::runtime;
+use pim_qat::train;
+use pim_qat::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. open the artifacts produced by `make artifacts`
+    let rt = runtime::open_default()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // 2. a small PIM-QAT training job: bit-serial scheme, N = 72, b_PIM = 7
+    let job = JobConfig {
+        model: "tiny".into(),
+        mode: Mode::Ours,
+        scheme: Scheme::BitSerial,
+        unit_channels: 8,
+        b_pim_train: 7,
+        steps: 120,
+        train_size: 1024,
+        test_size: 256,
+        ..Default::default()
+    };
+    let train_ds = synth::generate(16, 10, job.train_size, 1);
+    let test_ds = synth::generate(16, 10, job.test_size, 2);
+
+    println!("training {} for {} steps ...", job.artifact_name(), job.steps);
+    let res = train::run_job(&rt, &job, &train_ds, &test_ds, 20)?;
+    for l in &res.history {
+        println!("  step {:>4} loss {:.3} batch-acc {:.1}%", l.step, l.loss, l.acc);
+    }
+    println!("software (digital) test accuracy: {:.1}%", res.software_acc);
+
+    // 3. deploy the checkpoint on the chip simulator: ideal and real
+    let net = train::network_from_ckpt(&rt, &res.ckpt)?;
+    let mut rng = Rng::new(0);
+    for (label, chip) in [
+        ("ideal 7-bit chip", ChipModel::ideal(7)),
+        ("real chip (curves + 0.35 LSB noise)", ChipModel::real(0xC819).with_noise(0.35)),
+    ] {
+        let acc = net.evaluate(
+            &test_ds,
+            32,
+            &ExecSpec::Pim { scheme: job.scheme, unit_channels: job.unit_channels, chip: &chip },
+            &mut rng,
+        )?;
+        println!("{label}: {acc:.1}%");
+    }
+
+    // 4. BN calibration (§3.4) recovers real-chip accuracy
+    let mut net = train::network_from_ckpt(&rt, &res.ckpt)?;
+    let chip = ChipModel::real(0xC819).with_noise(0.35);
+    let exec = ExecSpec::Pim { scheme: job.scheme, unit_channels: job.unit_channels, chip: &chip };
+    net.calibrate_bn(&train_ds, 32, 4, &exec, &mut rng)?;
+    let acc = net.evaluate(&test_ds, 32, &exec, &mut rng)?;
+    println!("real chip after BN calibration: {acc:.1}%");
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! End-to-end training driver (the repo's E2E validation example): trains
+//! the paper's method and its two baselines on the full synthetic corpus,
+//! logs loss curves, and reports the Table-3-style comparison on ideal PIM
+//! chips at several resolutions.  Takes a few minutes on one core.
+//!
+//!     make artifacts && cargo run --release --example train_pim_qat [-- steps]
+//!
+//! The run is recorded in EXPERIMENTS.md §End-to-end.
+
+use pim_qat::chip::ChipModel;
+use pim_qat::config::{JobConfig, Mode, Scheme};
+use pim_qat::coordinator::SweepRunner;
+use pim_qat::nn::ExecSpec;
+use pim_qat::runtime;
+use pim_qat::train::network_from_ckpt;
+use pim_qat::util::rng::Rng;
+use pim_qat::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(400);
+    let rt = runtime::open_default()?;
+    let mut runner = SweepRunner::new(&rt);
+
+    let base = JobConfig {
+        model: "tiny".into(),
+        steps,
+        train_size: 4096,
+        test_size: 512,
+        ..Default::default()
+    };
+
+    // --- train the three methods (bit-serial, b_PIM = 5: a regime where the
+    // baseline visibly degrades)
+    let b_pim = 5u32;
+    let mut jobs = Vec::new();
+    for mode in [Mode::Baseline, Mode::Ams, Mode::Ours] {
+        let mut j = base.clone();
+        j.mode = mode;
+        j.scheme = if mode == Mode::Ams { Scheme::Native } else { Scheme::BitSerial };
+        j.unit_channels = if mode == Mode::Ams { 1 } else { 8 };
+        j.b_pim_train = b_pim;
+        jobs.push(j);
+    }
+
+    let mut results = Vec::new();
+    for job in &jobs {
+        let out = runner.run(job)?;
+        println!(
+            "\n=== {} — loss curve ===",
+            job.artifact_name()
+        );
+        for l in &out.history {
+            println!("  step {:>4} lr {:<6} loss {:<8.4} batch-acc {:.1}%", l.step, l.lr, l.loss, l.acc);
+        }
+        results.push(out);
+    }
+
+    // --- deploy on ideal chips of decreasing resolution
+    let mut t = Table::new(&["Method", "software", "b=7 chip", "b=5 chip", "b=4 chip"]);
+    for (job, out) in jobs.iter().zip(&results) {
+        let (scheme, uc) = (job.scheme, job.unit_channels);
+        let mut accs = Vec::new();
+        for b in [7u32, 5, 4] {
+            let chip = ChipModel::ideal(b);
+            let net = network_from_ckpt(&rt, &out.ckpt)?;
+            let mut rng = Rng::new(0);
+            let test = {
+                let pair = runner.datasets(job)?;
+                pair.1.clone()
+            };
+            let acc = net.evaluate(
+                &test,
+                32,
+                &ExecSpec::Pim { scheme, unit_channels: uc, chip: &chip },
+                &mut rng,
+            )?;
+            accs.push(acc);
+        }
+        t.row(&[
+            format!("{}", job.mode),
+            format!("{:.1}", out.software_acc),
+            format!("{:.1}", accs[0]),
+            format!("{:.1}", accs[1]),
+            format!("{:.1}", accs[2]),
+        ]);
+    }
+    println!("\n{}", t.render());
+    println!("expected shape: ours holds its accuracy on low-resolution chips; the baseline collapses (paper Tables 3/A2)");
+    Ok(())
+}

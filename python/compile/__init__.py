@@ -1,0 +1,5 @@
+"""Compile-time (build-path) package for the PIM-QAT reproduction.
+
+Everything here runs exactly once inside `make artifacts`; nothing is
+imported at run time.
+"""

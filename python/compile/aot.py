@@ -1,0 +1,333 @@
+"""AOT lowering: JAX → HLO text artifacts + manifest for the rust runtime.
+
+Run once via ``make artifacts``::
+
+    cd python && python -m compile.aot --out-dir ../artifacts [--set full]
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids that the crate's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest (artifacts/manifest.json) is the single contract with rust:
+parameter ordering (flatten_tree), input/output signatures, and the
+model/quant/PIM configuration of every artifact.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from . import train as train_lib
+from .configs import (
+    BIT_SERIAL,
+    DIFFERENTIAL,
+    MODE_AMS,
+    MODE_BASELINE,
+    MODE_OURS,
+    NATIVE,
+    ModelConfig,
+    PimConfig,
+    QuantConfig,
+    TrainConfig,
+)
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust's
+    ``to_tuple`` unwrapping)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Model zoo: the scaled stand-ins for the paper's models (see EXPERIMENTS.md
+# for the mapping table: paper ResNet20 → r8w16 etc. on this 1-core testbed).
+# ---------------------------------------------------------------------------
+
+MODELS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig(depth_n=1, width=8, image=16),
+    "small": ModelConfig(depth_n=1, width=16, image=16),
+    "r14": ModelConfig(depth_n=2, width=16, image=16),
+    "r20": ModelConfig(depth_n=3, width=16, image=16),
+    "vgg11": ModelConfig(arch="vgg11", depth_n=0, width=8, image=16),
+    "tiny100": ModelConfig(depth_n=1, width=8, image=16, classes=100),
+    "small100": ModelConfig(depth_n=1, width=16, image=16, classes=100),
+}
+
+QCFG = QuantConfig(b_w=4, b_a=4, m=4)
+BATCH = 32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+@dataclasses.dataclass
+class Artifact:
+    name: str
+    kind: str  # init | train | eval | pimeval
+    model: str
+    mode: str | None = None
+    pim: PimConfig | None = None
+    tcfg: TrainConfig | None = None
+
+
+def default_artifacts(full: bool) -> List[Artifact]:
+    tc = TrainConfig(batch=BATCH)
+    arts: List[Artifact] = []
+
+    def add_model(mkey: str, schemes: List[tuple], baseline=True, ams=False, pimeval=None):
+        arts.append(Artifact(f"{mkey}_init", "init", mkey))
+        arts.append(Artifact(f"{mkey}_eval", "eval", mkey, MODE_BASELINE, tcfg=tc))
+        if baseline:
+            arts.append(Artifact(f"{mkey}_train_baseline", "train", mkey, MODE_BASELINE, tcfg=tc))
+        if ams:
+            arts.append(Artifact(f"{mkey}_train_ams", "train", mkey, MODE_AMS, tcfg=tc))
+        for scheme, uc in schemes:
+            arts.append(
+                Artifact(
+                    f"{mkey}_train_ours_{scheme}_uc{uc}",
+                    "train",
+                    mkey,
+                    MODE_OURS,
+                    PimConfig(scheme=scheme, unit_channels=uc),
+                    tc,
+                )
+            )
+        for scheme, uc in pimeval or []:
+            arts.append(
+                Artifact(
+                    f"{mkey}_pimeval_{scheme}_uc{uc}",
+                    "pimeval",
+                    mkey,
+                    MODE_OURS,
+                    PimConfig(scheme=scheme, unit_channels=uc),
+                    tc,
+                )
+            )
+
+    # Core set: everything the default experiment grids need.
+    add_model(
+        "tiny",
+        [(NATIVE, 1), (BIT_SERIAL, 8), (DIFFERENTIAL, 8)],
+        baseline=True,
+        ams=True,
+        pimeval=[(BIT_SERIAL, 8), (NATIVE, 1), (DIFFERENTIAL, 8)],
+    )
+    # Rescaling ablation variants (Table A3): fwd/bwd rescale toggles.
+    for fwd, bwd, tag in ((False, True, "nofwd"), (False, False, "norescale")):
+        arts.append(
+            Artifact(
+                f"tiny_train_ours_bit_serial_uc8_{tag}",
+                "train",
+                "tiny",
+                MODE_OURS,
+                PimConfig(scheme=BIT_SERIAL, unit_channels=8),
+                dataclasses.replace(tc, fwd_rescale=fwd, bwd_rescale=bwd),
+            )
+        )
+    add_model("small", [(BIT_SERIAL, 8), (BIT_SERIAL, 16), (DIFFERENTIAL, 16)])
+    add_model("tiny100", [(BIT_SERIAL, 8)])
+    add_model("vgg11", [(BIT_SERIAL, 8)])
+    # L1 kernel artifacts: the same grouped PIM matmul lowered through the
+    # Pallas kernel and through the jnp twin — the rust integration test
+    # proves the Pallas path loads and runs via PJRT, and the runtime bench
+    # compares the two lowerings.
+    arts.append(Artifact("kernel_pim_mac_pallas", "kernel", "tiny", MODE_OURS,
+                         PimConfig(scheme=BIT_SERIAL, unit_channels=8), tc))
+    arts.append(Artifact("kernel_pim_mac_jnp", "kernel", "tiny", MODE_OURS,
+                         PimConfig(scheme=BIT_SERIAL, unit_channels=8), tc))
+    if full:
+        add_model("r14", [(BIT_SERIAL, 8), (BIT_SERIAL, 16)])
+        add_model("r20", [(BIT_SERIAL, 8), (BIT_SERIAL, 16)])
+        add_model("small100", [(BIT_SERIAL, 8), (BIT_SERIAL, 16)])
+    return arts
+
+
+# Kernel-artifact geometry: M×(G,N)×O grouped matmul (one mid-size conv's
+# worth of work; see rust/benches/runtime_step.rs).
+KERNEL_M, KERNEL_G, KERNEL_N, KERNEL_O = 256, 2, 72, 16
+
+
+def lower_artifact(art: Artifact, out_dir: str) -> Dict[str, Any]:
+    mcfg = MODELS[art.model]
+    pcfg = art.pim or PimConfig()
+    tcfg = art.tcfg or TrainConfig(batch=BATCH)
+    b = tcfg.batch
+    img, cin = mcfg.image, mcfg.in_channels
+
+    p0, s0 = model_lib.model_init(jax.random.PRNGKey(0), mcfg)
+    p_flat = model_lib.flatten_tree(p0)
+    s_flat = model_lib.flatten_tree(s0)
+    p_specs = [spec(v.shape) for _, v in p_flat]
+    s_specs = [spec(v.shape) for _, v in s_flat]
+
+    inputs: List[Dict[str, Any]]
+    if art.kind == "init":
+        fn = train_lib.make_init(mcfg)
+        args = [spec((), I32)]
+        inputs = [{"name": "seed", "shape": [], "dtype": "i32"}]
+        n_out = 2 * len(p_specs) + len(s_specs)
+    elif art.kind == "train":
+        fn, _meta = train_lib.make_train_step(mcfg, QCFG, pcfg, art.mode, tcfg)
+        args = (
+            p_specs
+            + s_specs
+            + p_specs  # momentum
+            + [
+                spec((b, img, img, cin)),
+                spec((b,), I32),
+                spec(()),
+                spec(()),
+                spec(()),
+                spec(()),
+                spec((), I32),
+            ]
+        )
+        inputs = (
+            [{"name": f"param:{k}", "shape": list(v.shape), "dtype": "f32"} for k, v in p_flat]
+            + [{"name": f"state:{k}", "shape": list(v.shape), "dtype": "f32"} for k, v in s_flat]
+            + [{"name": f"mom:{k}", "shape": list(v.shape), "dtype": "f32"} for k, v in p_flat]
+            + [
+                {"name": "x", "shape": [b, img, img, cin], "dtype": "f32"},
+                {"name": "y", "shape": [b], "dtype": "i32"},
+                {"name": "lr", "shape": [], "dtype": "f32"},
+                {"name": "levels", "shape": [], "dtype": "f32"},
+                {"name": "eta", "shape": [], "dtype": "f32"},
+                {"name": "ams_sigma", "shape": [], "dtype": "f32"},
+                {"name": "seed", "shape": [], "dtype": "i32"},
+            ]
+        )
+        n_out = 2 * len(p_specs) + len(s_specs) + 2
+    elif art.kind in ("eval", "pimeval"):
+        fn = train_lib.make_eval_step(mcfg, QCFG, pcfg, art.mode, tcfg)
+        args = p_specs + s_specs + [
+            spec((b, img, img, cin)),
+            spec((b,), I32),
+            spec(()),
+            spec(()),
+        ]
+        inputs = (
+            [{"name": f"param:{k}", "shape": list(v.shape), "dtype": "f32"} for k, v in p_flat]
+            + [{"name": f"state:{k}", "shape": list(v.shape), "dtype": "f32"} for k, v in s_flat]
+            + [
+                {"name": "x", "shape": [b, img, img, cin], "dtype": "f32"},
+                {"name": "y", "shape": [b], "dtype": "i32"},
+                {"name": "levels", "shape": [], "dtype": "f32"},
+                {"name": "eta", "shape": [], "dtype": "f32"},
+            ]
+        )
+        n_out = 2
+    elif art.kind == "kernel":
+        from . import pim as pim_lib
+        from .kernels.pim_mac import pim_matmul_pallas
+
+        m_, g_, n_, o_ = KERNEL_M, KERNEL_G, KERNEL_N, KERNEL_O
+        if art.name.endswith("pallas"):
+            def fn(a, w, lv):
+                return pim_matmul_pallas(a, w, lv, pcfg.scheme, QCFG, block_m=64)
+        else:
+            def fn(a, w, lv):
+                return pim_lib.pim_forward(a, w, lv[0], pcfg.scheme, QCFG)
+        args = [spec((m_, g_, n_)), spec((g_, n_, o_)), spec((1,))]
+        inputs = [
+            {"name": "a", "shape": [m_, g_, n_], "dtype": "f32"},
+            {"name": "w", "shape": [g_, n_, o_], "dtype": "f32"},
+            {"name": "levels", "shape": [1], "dtype": "f32"},
+        ]
+        n_out = 1
+    else:
+        raise ValueError(art.kind)
+
+    # keep_unused: the manifest promises a fixed input arity for every mode;
+    # without it jax DCEs e.g. `levels` out of the baseline train step and
+    # the compiled program rejects the rust-side buffer list.
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    text = to_hlo_text(lowered)
+    fname = f"{art.name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+
+    return {
+        "name": art.name,
+        "file": fname,
+        "kind": art.kind,
+        "model": art.model,
+        "mode": art.mode,
+        "scheme": pcfg.scheme if art.pim else None,
+        "unit_channels": pcfg.unit_channels if art.pim else None,
+        "batch": b,
+        "fwd_rescale": tcfg.fwd_rescale,
+        "bwd_rescale": tcfg.bwd_rescale,
+        "n_params": len(p_specs),
+        "n_state": len(s_specs),
+        "n_outputs": n_out,
+        "inputs": inputs,
+    }
+
+
+def model_entry(key: str) -> Dict[str, Any]:
+    mcfg = MODELS[key]
+    p0, s0 = model_lib.model_init(jax.random.PRNGKey(0), mcfg)
+    return {
+        "arch": mcfg.arch,
+        "depth_n": mcfg.depth_n,
+        "width": mcfg.width,
+        "image": mcfg.image,
+        "classes": mcfg.classes,
+        "in_channels": mcfg.in_channels,
+        "param_paths": [k for k, _ in model_lib.flatten_tree(p0)],
+        "param_shapes": [list(v.shape) for _, v in model_lib.flatten_tree(p0)],
+        "state_paths": [k for k, _ in model_lib.flatten_tree(s0)],
+        "state_shapes": [list(v.shape) for _, v in model_lib.flatten_tree(s0)],
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--set", default="default", choices=["default", "full"])
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    arts = default_artifacts(args.set == "full")
+    if args.only:
+        keep = set(args.only.split(","))
+        arts = [a for a in arts if a.name in keep]
+
+    entries = []
+    for i, art in enumerate(arts):
+        print(f"[{i + 1}/{len(arts)}] lowering {art.name} ...", flush=True)
+        entries.append(lower_artifact(art, args.out_dir))
+
+    manifest = {
+        "quant": {"b_w": QCFG.b_w, "b_a": QCFG.b_a, "m": QCFG.m},
+        "batch": BATCH,
+        "models": {k: model_entry(k) for k in sorted({a.model for a in arts})},
+        "artifacts": entries,
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(entries)} artifacts + manifest.json to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Configuration dataclasses shared by the compile path.
+
+These mirror the rust-side ``config`` module (rust/src/config/).  The contract
+between the two sides is the artifact *manifest* emitted by ``aot.py`` — the
+dataclasses here are never pickled across the boundary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+# PIM decomposition schemes (paper §2, Appendix A1).
+NATIVE = "native"
+BIT_SERIAL = "bit_serial"
+DIFFERENTIAL = "differential"
+SCHEMES = (NATIVE, BIT_SERIAL, DIFFERENTIAL)
+
+# Training modes.
+MODE_OURS = "ours"          # PIM-QAT: PIM forward + GSTE backward (+rescaling)
+MODE_BASELINE = "baseline"  # conventional QAT (digital forward), Jin et al. 2020
+MODE_AMS = "ams"            # Rekhi et al. 2019 additive-noise model
+MODES = (MODE_OURS, MODE_BASELINE, MODE_AMS)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Bit-widths of the conventional (digital) quantization step.
+
+    The paper fixes ``b_w = b_a = 4`` for all experiments (§A2.1); ``m`` is
+    the DAC resolution used to slice activations into ``b_a / m`` planes
+    (Eqn. A2).  ``m`` must divide ``b_a``.
+    """
+
+    b_w: int = 4
+    b_a: int = 4
+    m: int = 4
+
+    def __post_init__(self) -> None:
+        if self.b_a % self.m != 0:
+            raise ValueError(f"m={self.m} must divide b_a={self.b_a}")
+        if self.b_w < 2:
+            raise ValueError("b_w must be >= 2 (one sign bit + magnitude)")
+
+    @property
+    def w_levels(self) -> int:
+        """Positive full-scale of the weight grid: weights are integers in
+        [-w_levels, w_levels] (DoReFa never emits -2^{b_w-1})."""
+        return 2 ** (self.b_w - 1) - 1
+
+    @property
+    def a_levels(self) -> int:
+        """Full-scale of the activation grid: integers in [0, a_levels]."""
+        return 2**self.b_a - 1
+
+    @property
+    def delta(self) -> int:
+        """DAC radix Δ = 2^m (Eqn. A2c)."""
+        return 2**self.m
+
+    @property
+    def n_slices(self) -> int:
+        """Number of input (activation) planes b_a / m."""
+        return self.b_a // self.m
+
+
+@dataclasses.dataclass(frozen=True)
+class PimConfig:
+    """Static PIM-array parameters baked into an artifact.
+
+    ``b_PIM`` (the ADC resolution) is deliberately NOT here: it is a runtime
+    scalar input (``levels = 2^{b_PIM} - 1``) so a single artifact covers the
+    whole Table-3/Fig-5 resolution sweep and adjusted-precision training.
+    """
+
+    scheme: str = BIT_SERIAL
+    unit_channels: int = 8  # input channels per analog group ("unit channel")
+    kernel_hw: int = 3
+
+    def __post_init__(self) -> None:
+        if self.scheme not in SCHEMES:
+            raise ValueError(f"unknown scheme {self.scheme!r}")
+
+    @property
+    def n_macs(self) -> int:
+        """N, the number of MACs summed on one analog bitline."""
+        return self.unit_channels * self.kernel_hw * self.kernel_hw
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """CIFAR-style model family (paper §A2.1).
+
+    ``depth_n`` follows the 6n+2 ResNet convention (n=3 → ResNet20).  The
+    1-core-CPU reproduction defaults to a narrower, shallower instance; the
+    paper's exact shapes are reachable with width=16, depth_n=3, image=32.
+    """
+
+    arch: str = "resnet"  # "resnet" | "vgg11"
+    depth_n: int = 1
+    width: int = 8
+    image: int = 16
+    classes: int = 10
+    in_channels: int = 3
+
+    @property
+    def name(self) -> str:
+        if self.arch == "resnet":
+            return f"resnet{6 * self.depth_n + 2}w{self.width}i{self.image}"
+        return f"{self.arch}w{self.width}i{self.image}"
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Hyper-parameters of the SGD step baked into the train artifact."""
+
+    batch: int = 32
+    momentum: float = 0.9
+    weight_decay: float = 1e-4
+    nesterov: bool = True
+    bn_momentum: float = 0.1
+    # Rescaling toggles (§3.3, ablated in Table A3).
+    fwd_rescale: bool = True
+    bwd_rescale: bool = True
+
+
+def artifact_tag(mode: str, scheme: str, pim: PimConfig, model: ModelConfig) -> str:
+    """Canonical artifact-set name, mirrored by rust/src/runtime/registry.rs."""
+    if mode == MODE_OURS:
+        return f"{model.name}_{mode}_{scheme}_uc{pim.unit_channels}"
+    return f"{model.name}_{mode}"
+
+
+def plane_weights(cfg: QuantConfig, scheme: str) -> Tuple[Tuple[float, ...], int]:
+    """Digital recombination weights for each ADC plane and the integer
+    full-scale FS of one plane sum (see DESIGN.md and Appendix A1).
+
+    Returns (weights, full_scale) where the PIM output in integer units is
+    ``sum_p weights[p] * dequant(plane_sum_p)`` and each plane sum lies in
+    [0, FS] (bit-serial / differential halves) or [-FS, FS] (native).
+    Plane order: for bit-serial the planes enumerate (weight bit k, input
+    slice l) row-major in k; otherwise just input slices l.
+    """
+    d = cfg.delta
+    if scheme == BIT_SERIAL:
+        ws = []
+        for k in range(cfg.b_w):
+            sign = -1.0 if k == cfg.b_w - 1 else 1.0
+            for l in range(cfg.n_slices):
+                ws.append(sign * (2.0**k) * (float(d) ** l))
+        return tuple(ws), 1  # FS multiplier: N*(Δ-1) * 1 (binary weight bits)
+    # native & differential: planes are input slices; weights are multi-bit.
+    ws = tuple(float(d) ** l for l in range(cfg.n_slices))
+    return ws, cfg.w_levels  # FS multiplier: N*(Δ-1) * (2^{b_w-1}-1)

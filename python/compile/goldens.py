@@ -1,0 +1,151 @@
+"""Golden-vector emitter: pins the rust substrates to the python oracle.
+
+``make artifacts`` runs this after aot.py.  Rust unit/integration tests read
+``artifacts/golden/*.json`` (rust/tests/golden_cross.rs) and must reproduce:
+
+  * ``pim_mac_*.json``   — grouped PIM matmul, integer-exact per scheme;
+  * ``quant.json``       — modified-DoReFa weight quantization (Eqn. A20);
+  * ``model_tiny.json``  — full-model forward: software logits and ideal-PIM
+                           logits for each scheme, from the real init params.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as model_lib
+from . import pim, quant, train as train_lib
+from .configs import (
+    BIT_SERIAL,
+    DIFFERENTIAL,
+    MODE_BASELINE,
+    MODE_OURS,
+    NATIVE,
+    ModelConfig,
+    PimConfig,
+    QuantConfig,
+    TrainConfig,
+)
+from .kernels import ref
+
+
+def emit_pim_mac(out_dir: str, rng: np.random.Generator) -> None:
+    cfg = QuantConfig()
+    for scheme in (NATIVE, BIT_SERIAL, DIFFERENTIAL):
+        cases = []
+        for levels in (7, 31, 127):
+            m_, g_, n_, o_ = 4, 2, 18, 3
+            a_int = rng.integers(0, cfg.a_levels + 1, (m_, g_, n_))
+            w_int = rng.integers(-cfg.w_levels, cfg.w_levels + 1, (g_, n_, o_))
+            y = ref.pim_matmul_ref(a_int, w_int, levels, scheme, cfg)
+            cases.append(
+                {
+                    "levels": levels,
+                    "m": m_,
+                    "g": g_,
+                    "n": n_,
+                    "o": o_,
+                    "a_int": a_int.flatten().tolist(),
+                    "w_int": w_int.flatten().tolist(),
+                    "y": y.flatten().tolist(),
+                }
+            )
+        with open(os.path.join(out_dir, f"pim_mac_{scheme}.json"), "w") as f:
+            json.dump({"scheme": scheme, "b_w": cfg.b_w, "b_a": cfg.b_a, "m_dac": cfg.m, "cases": cases}, f)
+
+
+def emit_quant(out_dir: str, rng: np.random.Generator) -> None:
+    cfg = QuantConfig()
+    w = rng.normal(0, 0.5, (3, 3, 4, 8)).astype(np.float32)
+    qu = np.asarray(quant.weight_quant_unit(jnp.asarray(w), cfg))
+    s = float(quant.weight_scale(jnp.asarray(qu), 8))
+    x = rng.uniform(-0.2, 1.2, (64,)).astype(np.float32)
+    qa = np.asarray(quant.act_quant(jnp.asarray(x), cfg))
+    with open(os.path.join(out_dir, "quant.json"), "w") as f:
+        json.dump(
+            {
+                "b_w": cfg.b_w,
+                "b_a": cfg.b_a,
+                "w": w.flatten().tolist(),
+                "w_shape": list(w.shape),
+                "q_unit": qu.flatten().tolist(),
+                "scale": s,
+                "x": x.tolist(),
+                "q_act": qa.tolist(),
+            },
+            f,
+        )
+
+
+def emit_model(out_dir: str, rng: np.random.Generator) -> None:
+    mcfg = ModelConfig(depth_n=1, width=8, image=16)
+    qcfg = QuantConfig()
+    tcfg = TrainConfig(batch=4)
+    params, state = model_lib.model_init(jax.random.PRNGKey(0), mcfg)
+    x = rng.uniform(0, 1, (4, 16, 16, 3)).astype(np.float32)
+
+    entry = {
+        "model": {"depth_n": mcfg.depth_n, "width": mcfg.width, "image": mcfg.image, "classes": mcfg.classes},
+        "x": x.flatten().tolist(),
+        "params": {
+            k: np.asarray(v).flatten().tolist()
+            for k, v in model_lib.flatten_tree(params)
+        },
+        "param_shapes": {
+            k: list(v.shape) for k, v in model_lib.flatten_tree(params)
+        },
+        "state": {
+            k: np.asarray(v).flatten().tolist()
+            for k, v in model_lib.flatten_tree(state)
+        },
+        "logits": {},
+    }
+
+    # Software (digital) logits.
+    apply_sw = train_lib.make_apply(mcfg, qcfg, PimConfig(), MODE_BASELINE, tcfg)
+    logits, _ = apply_sw(
+        params, state, jnp.asarray(x), jnp.float32(127.0), jnp.float32(1.0),
+        jnp.float32(0.0), jax.random.PRNGKey(0), False,
+    )
+    entry["logits"]["software"] = np.asarray(logits).flatten().tolist()
+
+    # Ideal-PIM logits per scheme at a couple of resolutions.
+    for scheme, uc in ((NATIVE, 1), (BIT_SERIAL, 8), (DIFFERENTIAL, 8)):
+        for b_pim in (5, 7):
+            ap = train_lib.make_apply(
+                mcfg, qcfg, PimConfig(scheme=scheme, unit_channels=uc), MODE_OURS, tcfg
+            )
+            lg, _ = ap(
+                params, state, jnp.asarray(x),
+                jnp.float32(2.0**b_pim - 1.0), jnp.float32(1.0),
+                jnp.float32(0.0), jax.random.PRNGKey(0), False,
+            )
+            entry["logits"][f"{scheme}_uc{uc}_b{b_pim}"] = (
+                np.asarray(lg).flatten().tolist()
+            )
+
+    with open(os.path.join(out_dir, "model_tiny.json"), "w") as f:
+        json.dump(entry, f)
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts/golden")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    rng = np.random.default_rng(1234)
+    emit_pim_mac(args.out_dir, rng)
+    emit_quant(args.out_dir, rng)
+    emit_model(args.out_dir, rng)
+    print(f"goldens written to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

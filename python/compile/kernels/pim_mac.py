@@ -1,0 +1,106 @@
+"""Layer-1 Pallas kernel: the PIM-quantized grouped MAC.
+
+One kernel instance plays the role of one PIM macro activation: it holds a
+single analog group's weights resident (the SRAM cell array → a VMEM-resident
+``[N, O]`` tile), streams a tile of input rows through the DAC planes, applies
+the ADC quantizer to every partial sum *before* digital accumulation — exactly
+where the chip digitizes — and shift-and-adds the planes (§Hardware-Adaptation
+in DESIGN.md).
+
+Grid: ``(M / block_m, G)`` — output tiles × analog groups; the output block is
+revisited across the G axis and accumulated, mirroring the chip's digital
+accumulator that sums partial results from successive channel groups.
+
+CPU PJRT cannot execute Mosaic custom-calls, so ``interpret=True`` is
+mandatory here; the kernel's numerics are pinned against ``ref.py`` by
+``tests/test_pallas_kernel.py`` and the lowered HLO is load-tested from rust
+(``rust/tests/runtime_pallas.rs``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import BIT_SERIAL, DIFFERENTIAL, NATIVE, QuantConfig
+
+
+def _adc(s, full_scale, levels):
+    lsb = full_scale / levels
+    return jnp.round(s / lsb) * lsb
+
+
+def _pim_group_kernel(a_ref, w_ref, lv_ref, o_ref, *, scheme: str, cfg: QuantConfig, n: int):
+    """Compute one (row-tile × analog-group) partial PIM product."""
+    g = pl.program_id(1)
+    a_unit = a_ref[:, 0, :]  # [bm, N] on the 1/a_levels grid
+    w_unit = w_ref[0]  # [N, O] on the 1/w_levels grid
+    levels = lv_ref[0]
+    d = float(cfg.delta)
+    wl, al = float(cfg.w_levels), float(cfg.a_levels)
+    a_int = jnp.round(a_unit * al)
+    w_int = jnp.round(w_unit * wl)
+
+    y = jnp.zeros((a_unit.shape[0], w_unit.shape[1]), jnp.float32)
+    for l in range(cfg.n_slices):
+        a_l = jnp.mod(jnp.floor(a_int / (d**l)), d)
+        if scheme == NATIVE:
+            fs = wl * n * (d - 1)
+            y += (d**l) * _adc(a_l @ w_int, fs, levels)
+        elif scheme == DIFFERENTIAL:
+            fs = wl * n * (d - 1)
+            wp = jnp.maximum(w_int, 0.0)
+            wn = jnp.maximum(-w_int, 0.0)
+            y += (d**l) * (_adc(a_l @ wp, fs, levels) - _adc(a_l @ wn, fs, levels))
+        elif scheme == BIT_SERIAL:
+            fs = float(n * (d - 1))
+            u = jnp.where(w_int < 0, w_int + 2**cfg.b_w, w_int)
+            for k in range(cfg.b_w):
+                sign = -1.0 if k == cfg.b_w - 1 else 1.0
+                b_k = jnp.mod(jnp.floor(u / 2.0**k), 2.0)
+                y += sign * (2.0**k) * (d**l) * _adc(a_l @ b_k, fs, levels)
+        else:
+            raise ValueError(scheme)
+    y = y / (wl * al)
+
+    # Digital accumulator across channel groups.
+    @pl.when(g == 0)
+    def _init():
+        o_ref[...] = y
+
+    @pl.when(g != 0)
+    def _acc():
+        o_ref[...] += y
+
+
+@functools.partial(jax.jit, static_argnames=("scheme", "cfg", "block_m"))
+def pim_matmul_pallas(
+    a_unit: jnp.ndarray,  # [M, G, N]
+    w_unit: jnp.ndarray,  # [G, N, O]
+    levels: jnp.ndarray,  # [1] f32
+    scheme: str = BIT_SERIAL,
+    cfg: QuantConfig = QuantConfig(),
+    block_m: int = 64,
+) -> jnp.ndarray:
+    """Grouped PIM matmul through the Pallas kernel → [M, O]."""
+    m, g, n = a_unit.shape
+    o = w_unit.shape[2]
+    bm = min(block_m, m)
+    if m % bm != 0:
+        raise ValueError(f"M={m} must be a multiple of block_m={bm}")
+    kern = functools.partial(_pim_group_kernel, scheme=scheme, cfg=cfg, n=n)
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, g),
+        in_specs=[
+            pl.BlockSpec((bm, 1, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, n, o), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, o), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, o), jnp.float32),
+        interpret=True,  # CPU PJRT: Mosaic custom-calls are not executable
+    )(a_unit, w_unit, levels)

@@ -1,0 +1,140 @@
+"""Pure-numpy oracle for the PIM MAC (paper Eqn. 1 / Appendix A1).
+
+Deliberately written in the most literal, loop-level style — one analog group
+at a time, one ADC plane at a time — so it can be audited against the paper's
+equations (A3, A7, A11).  It is the single source of truth that the
+vectorized jnp implementation (``compile.pim``), the Pallas kernel
+(``compile.kernels.pim_mac``), and the rust chip simulator
+(``rust/src/pim/``) are all tested against.
+
+Integer-domain convention (see DESIGN.md):
+  * activations are integers ``a ∈ [0, 2^{b_a}-1]``  (q̃ = a / a_levels)
+  * weights    are integers ``w ∈ [-wl, wl]``, wl = 2^{b_w-1}-1  (Q̃ = w / wl)
+  * a plane sum S is quantized by the ADC as ``code = round(S * levels / FS)``
+    with ``levels = 2^{b_PIM} - 1`` and FS the plane's integer full-scale,
+    then dequantized as ``code * FS / levels`` and recombined digitally.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..configs import BIT_SERIAL, DIFFERENTIAL, NATIVE, QuantConfig
+
+
+def _round_half_away(x: np.ndarray) -> np.ndarray:
+    """round-half-away-from-zero — matches jnp.round? No: jnp.round is
+    banker's rounding.  We therefore use banker's rounding (numpy default)
+    everywhere, including the rust side, so all four implementations agree on
+    ties."""
+    return np.round(x)
+
+
+def input_slices(a_int: np.ndarray, cfg: QuantConfig) -> list[np.ndarray]:
+    """Decompose integer activations into b_a/m DAC planes (Eqn. A2)."""
+    return [
+        (a_int // (cfg.delta**l)) % cfg.delta for l in range(cfg.n_slices)
+    ]
+
+
+def weight_bits(w_int: np.ndarray, cfg: QuantConfig) -> list[np.ndarray]:
+    """Two's-complement bit planes of integer weights (Eqn. A9): plane k has
+    digital weight +2^k for k < b_w-1 and -2^{b_w-1} for the MSB."""
+    u = np.where(w_int < 0, w_int + 2**cfg.b_w, w_int)
+    return [(u // 2**k) % 2 for k in range(cfg.b_w)]
+
+
+def adc(s: np.ndarray, full_scale: float, levels: int) -> np.ndarray:
+    """Ideal PIM quantizer Q(·; b_PIM): direct bit-truncation onto the
+    ``levels = 2^{b_PIM}-1`` grid covering [0, FS] (or [-FS, FS] for signed
+    native sums — round() handles the sign symmetrically).
+
+    All arithmetic is float32 on purpose: the jnp/Pallas twins and the rust
+    chip simulator compute the ADC input in f32, and a tie (x.5) can fall on
+    different sides in f64 vs f32.  Standardizing on f32 + ties-to-even makes
+    all four implementations bit-identical.
+    """
+    lsb = np.float32(full_scale) / np.float32(levels)
+    u = np.float32(s) / lsb
+    return np.float32(_round_half_away(u)) * lsb
+
+
+def pim_mac_group(
+    a_int: np.ndarray,  # [N] integer activations of one analog group
+    w_int: np.ndarray,  # [N] integer weights of one column
+    levels: int,
+    scheme: str,
+    cfg: QuantConfig,
+) -> float:
+    """One PIM inner product (Eqn. 1 forward, noiseless & perfectly linear).
+
+    Returns the recombined output in *unit* scale, i.e. the PIM estimate of
+    ``sum_i (w_i/wl) * (a_i/al)``.
+    """
+    n = a_int.shape[0]
+    d = cfg.delta
+    slices = input_slices(a_int, cfg)
+
+    if scheme == NATIVE:
+        # A3b: signed multi-bit analog weights, one ADC conversion per slice.
+        fs = float(cfg.w_levels * n * (d - 1))
+        y = 0.0
+        for l, a_l in enumerate(slices):
+            s = float(np.dot(w_int, a_l))
+            y += (d**l) * adc(s, fs, levels)
+        return y / (cfg.w_levels * cfg.a_levels)
+
+    if scheme == DIFFERENTIAL:
+        # A7b: weights split into positive / negative halves, two conversions
+        # per slice, subtracted digitally.
+        wp = np.maximum(w_int, 0)
+        wn = np.maximum(-w_int, 0)
+        fs = float(cfg.w_levels * n * (d - 1))
+        y = 0.0
+        for l, a_l in enumerate(slices):
+            sp = float(np.dot(wp, a_l))
+            sn = float(np.dot(wn, a_l))
+            y += (d**l) * (adc(sp, fs, levels) - adc(sn, fs, levels))
+        return y / (cfg.w_levels * cfg.a_levels)
+
+    if scheme == BIT_SERIAL:
+        # A11b: binary weight planes (MSB negative), one conversion per
+        # (weight bit k, input slice l).
+        bits = weight_bits(w_int, cfg)
+        fs = float(n * (d - 1))
+        y = 0.0
+        for k, b_k in enumerate(bits):
+            sign = -1.0 if k == cfg.b_w - 1 else 1.0
+            for l, a_l in enumerate(slices):
+                s = float(np.dot(b_k, a_l))
+                y += sign * (2.0**k) * (d**l) * adc(s, fs, levels)
+        return y / (cfg.w_levels * cfg.a_levels)
+
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+def pim_matmul_ref(
+    a_int: np.ndarray,  # [M, G, N] integer activations
+    w_int: np.ndarray,  # [G, N, O] integer weights
+    levels: int,
+    scheme: str,
+    cfg: QuantConfig,
+) -> np.ndarray:
+    """Grouped PIM matmul oracle: quantize each group's partial result, then
+    digitally accumulate over groups.  Returns [M, O] in unit scale."""
+    m_, g_, n_ = a_int.shape
+    o_ = w_int.shape[2]
+    out = np.zeros((m_, o_), dtype=np.float64)
+    for mi in range(m_):
+        for gi in range(g_):
+            for oi in range(o_):
+                out[mi, oi] += pim_mac_group(
+                    a_int[mi, gi], w_int[gi, :, oi], levels, scheme, cfg
+                )
+    return out
+
+
+def digital_matmul_ref(a_int: np.ndarray, w_int: np.ndarray, cfg: QuantConfig) -> np.ndarray:
+    """The b_PIM = +∞ limit: exact grouped matmul in unit scale."""
+    y = np.einsum("mgn,gno->mo", a_int.astype(np.float64), w_int.astype(np.float64))
+    return y / (cfg.w_levels * cfg.a_levels)

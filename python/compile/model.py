@@ -1,0 +1,318 @@
+"""Layer-2 model: quantized CIFAR-style ResNet-k / VGG11 with PIM-mapped convs.
+
+Layer placement follows the paper (§A2.1):
+  * the first conv, the final FC, and the 1×1 residual-shortcut convs run on
+    the digital system (b_PIM = +∞); their weights are still 4-bit DoReFa;
+  * every other conv runs through the PIM forward model (`compile.pim`);
+  * inputs to the first layer are 8-bit, all other activations b_a-bit;
+  * BN parameters and the FC bias stay full-precision.
+
+Training modes (§4, Table 3):
+  * ``ours``     — PIM-QAT (Eqn. 4a/4b + rescaling);
+  * ``baseline`` — conventional QAT (digital forward, Jin et al. 2020);
+  * ``ams``      — Rekhi et al. 2019: digital forward + additive Gaussian
+    noise whose std (in unit output scale) models the whole AMS chain.
+
+Parameters / state are nested dicts; ``flatten_tree`` defines the
+deterministic ordering contract with the rust side (manifest in aot.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import pim, quant
+from .configs import MODE_AMS, MODE_BASELINE, MODE_OURS, ModelConfig, PimConfig, QuantConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Parameter tree utilities (ordering contract with rust/src/train/manifest.rs)
+# ---------------------------------------------------------------------------
+
+
+def flatten_tree(tree: Params, prefix: str = "") -> List[Tuple[str, jnp.ndarray]]:
+    """Depth-first, key-sorted flattening — THE parameter order contract."""
+    out: List[Tuple[str, jnp.ndarray]] = []
+    for key in sorted(tree.keys()):
+        path = f"{prefix}/{key}" if prefix else key
+        val = tree[key]
+        if isinstance(val, dict):
+            out.extend(flatten_tree(val, path))
+        else:
+            out.append((path, val))
+    return out
+
+
+def unflatten_like(tree: Params, leaves: List[jnp.ndarray]) -> Params:
+    """Inverse of flatten_tree given a structural template."""
+    it = iter(leaves)
+
+    def rec(t: Params) -> Params:
+        return {
+            k: rec(v) if isinstance(v, dict) else next(it)
+            for k, v in ((k, t[k]) for k in sorted(t.keys()))
+        }
+
+    return rec(tree)
+
+
+# ---------------------------------------------------------------------------
+# Initialization (lowered into the `init` artifact: rust never re-implements)
+# ---------------------------------------------------------------------------
+
+
+def _kaiming(key, shape, fan_in):
+    return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+
+def _conv_init(key, k, cin, cout):
+    return {"w": _kaiming(key, (k, k, cin, cout), k * k * cin)}
+
+
+def _bn_init(c):
+    return {"gamma": jnp.ones((c,)), "beta": jnp.zeros((c,))}
+
+
+def _bn_state_init(c):
+    return {"mean": jnp.zeros((c,)), "var": jnp.ones((c,))}
+
+
+def resnet_init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    """(params, bn_state) for the 6n+2 CIFAR ResNet."""
+    keys = iter(jax.random.split(key, 128))
+    w = cfg.width
+    params: Params = {"conv0": _conv_init(next(keys), 3, cfg.in_channels, w)}
+    state: Params = {"bn0": _bn_state_init(w)}
+    params["bn0"] = _bn_init(w)
+    cin = w
+    for s in range(3):
+        cout = w * (2**s)
+        for b in range(cfg.depth_n):
+            blk = f"s{s}b{b}"
+            params[blk] = {
+                "conv1": _conv_init(next(keys), 3, cin, cout),
+                "bn1": _bn_init(cout),
+                "conv2": _conv_init(next(keys), 3, cout, cout),
+                "bn2": _bn_init(cout),
+            }
+            # BN state is a single-level dict keyed by slash-joined paths so
+            # the forward pass can record updates without nested plumbing.
+            state[f"{blk}/bn1"] = _bn_state_init(cout)
+            state[f"{blk}/bn2"] = _bn_state_init(cout)
+            if cin != cout:
+                params[blk]["convs"] = _conv_init(next(keys), 1, cin, cout)
+                params[blk]["bns"] = _bn_init(cout)
+                state[f"{blk}/bns"] = _bn_state_init(cout)
+            cin = cout
+    params["fc"] = {
+        "w": _kaiming(next(keys), (cin, cfg.classes), cin),
+        "b": jnp.zeros((cfg.classes,)),
+    }
+    return params, state
+
+
+# VGG11 feature plan: (out_channels_multiplier, pool_after).  Adapted from the
+# modified VGGNet11 of Jia et al. 2020; pool count trimmed to the image size
+# in vgg11_plan().
+_VGG11_MULTS = (1, 2, 4, 4, 8, 8, 8, 8)
+
+
+def vgg11_plan(cfg: ModelConfig) -> List[Tuple[int, bool]]:
+    import math
+
+    max_pools = max(2, int(math.log2(cfg.image)) - 1)  # keep final map >= 2x2
+    pool_after = {0: True, 1: True, 3: True, 5: True, 7: True}
+    plan, pools = [], 0
+    for i, mult in enumerate(_VGG11_MULTS):
+        do_pool = pool_after.get(i, False) and pools < max_pools
+        pools += int(do_pool)
+        plan.append((cfg.width * mult, do_pool))
+    return plan
+
+
+def vgg_init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    keys = iter(jax.random.split(key, 64))
+    params: Params = {}
+    state: Params = {}
+    cin = cfg.in_channels
+    for i, (cout, _) in enumerate(vgg11_plan(cfg)):
+        params[f"conv{i}"] = _conv_init(next(keys), 3, cin, cout)
+        params[f"bn{i}"] = _bn_init(cout)
+        state[f"bn{i}"] = _bn_state_init(cout)
+        cin = cout
+    params["fc"] = {
+        "w": _kaiming(next(keys), (cin, cfg.classes), cin),
+        "b": jnp.zeros((cfg.classes,)),
+    }
+    return params, state
+
+
+def model_init(key, cfg: ModelConfig) -> Tuple[Params, Params]:
+    if cfg.arch == "resnet":
+        return resnet_init(key, cfg)
+    if cfg.arch == "vgg11":
+        return vgg_init(key, cfg)
+    raise ValueError(cfg.arch)
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+
+class Ctx:
+    """Per-call context threaded through the forward pass."""
+
+    def __init__(
+        self,
+        qcfg: QuantConfig,
+        pcfg: PimConfig,
+        mode: str,
+        levels: jnp.ndarray,
+        eta: jnp.ndarray,
+        ams_sigma: jnp.ndarray,
+        train: bool,
+        bn_momentum: float,
+        bwd_rescale: bool,
+        key: Optional[jnp.ndarray],
+    ):
+        self.qcfg = qcfg
+        self.pcfg = pcfg
+        self.mode = mode
+        self.levels = levels
+        self.eta = eta
+        self.ams_sigma = ams_sigma
+        self.train = train
+        self.bn_momentum = bn_momentum
+        self.bwd_rescale = bwd_rescale
+        self.key = key
+        self.new_state: Params = {}
+
+    def next_key(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+
+def _digital_conv(x, w, stride, n_out, qcfg):
+    """Digital-system conv (first layer / shortcuts): 4-bit DoReFa weights,
+    exact accumulation."""
+    wq = quant.weight_quant(w, n_out, qcfg)
+    return jax.lax.conv_general_dilated(
+        x,
+        wq,
+        (stride, stride),
+        "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _pim_conv(x, w, stride, ctx: Ctx):
+    """A PIM-mapped conv: grouped im2col → per-group quantized MAC →
+    digital recombination, then the digital weight scale s (Eqn. A20b)."""
+    qcfg, pcfg = ctx.qcfg, ctx.pcfg
+    kh, kw, cin, cout = w.shape
+    wq = quant.weight_quant_unit(w, qcfg)  # [-1,1] grid: what the array stores
+    s = quant.weight_scale(wq, cout)
+    patches, oh, ow, _uc = pim.grouped_patches(x, kh, stride, pcfg.unit_channels)
+    gw = pim.grouped_weights(wq, pcfg.unit_channels)
+    if ctx.mode == MODE_OURS:
+        y = pim.pim_matmul(
+            patches, gw, ctx.levels, ctx.eta, pcfg.scheme, qcfg, ctx.bwd_rescale
+        )
+    else:
+        y = pim.digital_forward(patches, gw)
+        if ctx.mode == MODE_AMS and ctx.train:
+            # Rekhi et al. 2019: the whole AMS chain as one additive Gaussian
+            # noise source on the (unit-scale) MAC output.
+            noise = jax.random.normal(ctx.next_key(), y.shape, y.dtype)
+            y = y + ctx.ams_sigma * noise
+    y = y.reshape(x.shape[0], oh, ow, cout)
+    return s * y
+
+
+def _bn(x, p, st, name, ctx: Ctx):
+    """BatchNorm with running-stat update (training) or running stats (eval).
+    The running stats are exactly what BN calibration (§3.4) overwrites."""
+    if ctx.train:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        mom = ctx.bn_momentum
+        ctx.new_state[name] = {
+            "mean": (1 - mom) * st["mean"] + mom * mean,
+            "var": (1 - mom) * st["var"] + mom * var,
+        }
+    else:
+        mean, var = st["mean"], st["var"]
+        ctx.new_state[name] = dict(st)
+    inv = jax.lax.rsqrt(var + 1e-5)
+    return p["gamma"] * (x - mean) * inv + p["beta"]
+
+
+def _act(x, ctx: Ctx):
+    return quant.act_quant(jax.nn.relu(x), ctx.qcfg)
+
+
+def resnet_apply(params, state, x, cfg: ModelConfig, ctx: Ctx):
+    x = quant.act_quant_bits(x, 8)  # 8-bit first-layer inputs (§A2.1)
+    x = _digital_conv(x, params["conv0"]["w"], 1, cfg.width, ctx.qcfg)
+    x = _bn(x, params["bn0"], state["bn0"], "bn0", ctx)
+    x = _act(x, ctx)
+    cin = cfg.width
+    for s in range(3):
+        cout = cfg.width * (2**s)
+        for b in range(cfg.depth_n):
+            blk = f"s{s}b{b}"
+            bp = params[blk]
+            stride = 2 if (s > 0 and b == 0) else 1
+            h = _pim_conv(x, bp["conv1"]["w"], stride, ctx)
+            h = _bn(h, bp["bn1"], state[f"{blk}/bn1"], f"{blk}/bn1", ctx)
+            h = _act(h, ctx)
+            h = _pim_conv(h, bp["conv2"]["w"], 1, ctx)
+            h = _bn(h, bp["bn2"], state[f"{blk}/bn2"], f"{blk}/bn2", ctx)
+            if cin != cout or stride != 1:
+                sc = _digital_conv(x, bp["convs"]["w"], stride, cout, ctx.qcfg)
+                sc = _bn(sc, bp["bns"], state[f"{blk}/bns"], f"{blk}/bns", ctx)
+            else:
+                sc = x
+            x = _act(h + sc, ctx)
+            cin = cout
+    x = jnp.mean(x, axis=(1, 2))
+    wq = quant.weight_quant(params["fc"]["w"], cfg.classes, ctx.qcfg)
+    return x @ wq + params["fc"]["b"]
+
+
+def vgg_apply(params, state, x, cfg: ModelConfig, ctx: Ctx):
+    x = quant.act_quant_bits(x, 8)
+    cin = cfg.in_channels
+    for i, (cout, do_pool) in enumerate(vgg11_plan(cfg)):
+        w = params[f"conv{i}"]["w"]
+        if i == 0:
+            x = _digital_conv(x, w, 1, cout, ctx.qcfg)
+        else:
+            x = _pim_conv(x, w, 1, ctx)
+        x = _bn(x, params[f"bn{i}"], state[f"bn{i}"], f"bn{i}", ctx)
+        x = _act(x, ctx)
+        if do_pool:
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+            )
+        cin = cout
+    x = jnp.mean(x, axis=(1, 2))
+    wq = quant.weight_quant(params["fc"]["w"], cfg.classes, ctx.qcfg)
+    return x @ wq + params["fc"]["b"]
+
+
+def model_apply(params, state, x, cfg: ModelConfig, ctx: Ctx):
+    """Returns (logits, new_bn_state)."""
+    if cfg.arch == "resnet":
+        logits = resnet_apply(params, state, x, cfg, ctx)
+    elif cfg.arch == "vgg11":
+        logits = vgg_apply(params, state, x, cfg, ctx)
+    else:
+        raise ValueError(cfg.arch)
+    return logits, ctx.new_state

@@ -1,0 +1,213 @@
+"""Vectorized PIM forward model + GSTE backward (paper §3.1–§3.3).
+
+This is the Layer-2 compute core: the grouped, plane-decomposed,
+ADC-quantized matmul of Eqn. 1 / Appendix A1, wrapped in a ``jax.custom_vjp``
+that implements the generalized straight-through estimator (Assumption 1,
+Theorem 1) with the backward rescaling ξ = sqrt(VAR[y_PIM]/VAR[y]) of
+Eqn. 8.
+
+The math here is the vectorized twin of the loop-level oracle in
+``kernels/ref.py``; ``tests/test_pim_schemes.py`` pins them against each
+other exactly.  ``b_PIM`` enters only through ``levels = 2^{b_PIM}-1``, a
+*traced* scalar, so one lowered artifact serves every resolution.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import BIT_SERIAL, DIFFERENTIAL, NATIVE, QuantConfig
+
+
+def _input_planes(a_int: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """[L, M, G, N] DAC planes of integer activations (Eqn. A2)."""
+    d = float(cfg.delta)
+    planes = [
+        jnp.mod(jnp.floor(a_int / (d**l)), d) for l in range(cfg.n_slices)
+    ]
+    return jnp.stack(planes, axis=0)
+
+
+def _weight_bit_planes(w_int: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """[K, G, N, O] two's-complement bit planes of integer weights (A9)."""
+    u = jnp.where(w_int < 0, w_int + 2**cfg.b_w, w_int)
+    planes = [jnp.mod(jnp.floor(u / 2.0**k), 2.0) for k in range(cfg.b_w)]
+    return jnp.stack(planes, axis=0)
+
+
+def _adc(s: jnp.ndarray, full_scale: float, levels: jnp.ndarray) -> jnp.ndarray:
+    """Ideal ADC: round onto the `levels`-step grid over [0, FS] (banker's
+    rounding — identical to numpy/rust ties-to-even)."""
+    lsb = full_scale / levels
+    return jnp.round(s / lsb) * lsb
+
+
+def pim_forward(
+    a_unit: jnp.ndarray,  # [M, G, N] activations on the 1/a_levels grid
+    w_unit: jnp.ndarray,  # [G, N, O] weights on the 1/w_levels grid
+    levels: jnp.ndarray,  # scalar f32, 2^{b_PIM} - 1
+    scheme: str,
+    cfg: QuantConfig,
+) -> jnp.ndarray:
+    """Noiseless, perfectly-linear PIM grouped matmul (Eqn. 4a) → [M, O].
+
+    Output is in unit scale: the PIM estimate of einsum('mgn,gno->mo').
+    """
+    n = a_unit.shape[-1]
+    d = cfg.delta
+    wl, al = float(cfg.w_levels), float(cfg.a_levels)
+    a_int = jnp.round(a_unit * al)
+    w_int = jnp.round(w_unit * wl)
+    a_planes = _input_planes(a_int, cfg)  # [L,M,G,N]
+    slice_w = jnp.asarray([float(d) ** l for l in range(cfg.n_slices)])
+
+    if scheme == NATIVE:
+        fs = wl * n * (d - 1)
+        s = jnp.einsum("lmgn,gno->lmgo", a_planes, w_int)
+        q = _adc(s, fs, levels)
+        y = jnp.einsum("l,lmgo->mo", slice_w, q)
+        return y / (wl * al)
+
+    if scheme == DIFFERENTIAL:
+        fs = wl * n * (d - 1)
+        wp = jnp.maximum(w_int, 0.0)
+        wn = jnp.maximum(-w_int, 0.0)
+        sp = jnp.einsum("lmgn,gno->lmgo", a_planes, wp)
+        sn = jnp.einsum("lmgn,gno->lmgo", a_planes, wn)
+        q = _adc(sp, fs, levels) - _adc(sn, fs, levels)
+        y = jnp.einsum("l,lmgo->mo", slice_w, q)
+        return y / (wl * al)
+
+    if scheme == BIT_SERIAL:
+        fs = float(n * (d - 1))
+        w_bits = _weight_bit_planes(w_int, cfg)  # [K,G,N,O]
+        bit_w = jnp.asarray(
+            [
+                (-1.0 if k == cfg.b_w - 1 else 1.0) * 2.0**k
+                for k in range(cfg.b_w)
+            ]
+        )
+        s = jnp.einsum("lmgn,kgno->klmgo", a_planes, w_bits)
+        q = _adc(s, fs, levels)
+        y = jnp.einsum("k,l,klmgo->mo", bit_w, slice_w, q)
+        return y / (wl * al)
+
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+def digital_forward(a_unit: jnp.ndarray, w_unit: jnp.ndarray) -> jnp.ndarray:
+    """The b_PIM = +∞ limit (conventional digital accelerator) → [M, O]."""
+    return jnp.einsum("mgn,gno->mo", a_unit, w_unit)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def pim_matmul(
+    a_unit: jnp.ndarray,
+    w_unit: jnp.ndarray,
+    levels: jnp.ndarray,
+    eta: jnp.ndarray,
+    scheme: str,
+    cfg: QuantConfig,
+    bwd_rescale: bool,
+) -> jnp.ndarray:
+    """η-scaled PIM matmul with GSTE backward (Theorem 1 + Eqn. 8).
+
+    Forward:  z = η · Q_PIM(Σ W̃q̃; levels)          (Eqn. 4a, §3.3 forward η)
+    Backward: dz = η · ξ · d(Σ W̃q̃),  ξ = √(VAR[y_PIM]/VAR[y])   (4b, 8)
+    """
+    return eta * pim_forward(a_unit, w_unit, levels, scheme, cfg)
+
+
+def _pim_matmul_fwd(a_unit, w_unit, levels, eta, scheme, cfg, bwd_rescale):
+    y_pim = pim_forward(a_unit, w_unit, levels, scheme, cfg)
+    if bwd_rescale:
+        y_exact = digital_forward(a_unit, w_unit)
+        xi = jnp.sqrt(
+            (jnp.var(y_pim) + 1e-12) / (jnp.var(y_exact) + 1e-12)
+        )
+        xi = jax.lax.stop_gradient(xi)
+    else:
+        xi = jnp.float32(1.0)
+    return eta * y_pim, (a_unit, w_unit, eta, xi)
+
+
+def _pim_matmul_bwd(scheme, cfg, bwd_rescale, res, g):
+    a_unit, w_unit, eta, xi = res
+    scale = eta * xi
+    da = scale * jnp.einsum("mo,gno->mgn", g, w_unit)
+    dw = scale * jnp.einsum("mgn,mo->gno", a_unit, g)
+    # levels and eta are hyper-parameters: no gradient.
+    return da, dw, jnp.zeros(()), jnp.zeros(())
+
+
+pim_matmul.defvjp(_pim_matmul_fwd, _pim_matmul_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Grouped patch extraction (the PIM channel decomposition for convolutions)
+# ---------------------------------------------------------------------------
+
+
+def grouped_patches(
+    x: jnp.ndarray,  # [B, H, W, C] NHWC
+    kernel_hw: int,
+    stride: int,
+    unit_channels: int,
+) -> Tuple[jnp.ndarray, int, int, int]:
+    """im2col with the PIM group layout.
+
+    Returns (patches [M, G, N], out_h, out_w, uc_eff) where
+    ``n = cg * kh*kw + (dy * kw + dx)`` indexes within a group of
+    ``uc_eff`` input channels — the layout contract shared with
+    ``grouped_weights`` and the rust chip simulator (rust/src/pim/layout.rs).
+    """
+    b, h, w, c = x.shape
+    k = kernel_hw
+    uc = effective_unit_channels(c, unit_channels)
+    g = c // uc
+    pad = k // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    slabs = []
+    for dy in range(k):
+        for dx in range(k):
+            slabs.append(
+                jax.lax.slice(
+                    xp,
+                    (0, dy, dx, 0),
+                    (b, dy + (oh - 1) * stride + 1, dx + (ow - 1) * stride + 1, c),
+                    (1, stride, stride, 1),
+                )
+            )
+    # [B, OH, OW, C, k*k] -> [B, OH, OW, G, uc, k*k] -> [M, G, uc*k*k]
+    p = jnp.stack(slabs, axis=-1)
+    p = p.reshape(b, oh, ow, g, uc, k * k)
+    p = p.reshape(b * oh * ow, g, uc * k * k)
+    return p, oh, ow, uc
+
+
+def grouped_weights(
+    w: jnp.ndarray,  # [kh, kw, C, O]
+    unit_channels: int,
+) -> jnp.ndarray:
+    """Reshape conv weights to [G, N, O] with the grouped_patches layout."""
+    kh, kw, c, o = w.shape
+    uc = effective_unit_channels(c, unit_channels)
+    g = c // uc
+    # [C, kh*kw, O] -> [G, uc, kh*kw, O] -> [G, uc*kh*kw, O]
+    wt = jnp.transpose(w, (2, 0, 1, 3)).reshape(c, kh * kw, o)
+    return wt.reshape(g, uc, kh * kw, o).reshape(g, uc * kh * kw, o)
+
+
+def effective_unit_channels(c: int, unit_channels: int) -> int:
+    """Largest uc ≤ unit_channels that divides C (a narrow early layer maps
+    onto a smaller slice of the array; documented in DESIGN.md)."""
+    uc = min(unit_channels, c)
+    while c % uc != 0:
+        uc -= 1
+    return uc

@@ -1,0 +1,62 @@
+"""Conventional (digital) quantizers: modified DoReFa (paper Eqn. A20).
+
+Weights: ``Q = s * round((2^{b_w-1}-1) * tanh(W)/max|tanh(W)|) / (2^{b_w-1}-1)``
+with the scale-adjusted-training factor ``s = 1/sqrt(n_out * VAR[q])`` (Jin et
+al. 2020), *without* the DoReFa [-1,1]→[0,1] interval mapping.
+
+Activations: DoReFa ``round((2^{b_a}-1) * clip(x, 0, 1)) / (2^{b_a}-1)``.
+
+Both use the plain STE (GSTE with ξ=1) for their own round; the PIM
+quantizer's GSTE with ξ≠1 lives in ``pim.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import QuantConfig
+
+
+def ste_round(x: jnp.ndarray) -> jnp.ndarray:
+    """round(x) with a straight-through gradient (GSTE, ξ = 1)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def weight_quant_unit(w: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """Quantized weights on the [-1, 1] integer grid (no scale s).
+
+    This is what the PIM array physically stores: integers in
+    [-w_levels, w_levels] divided by ``w_levels``.
+    """
+    t = jnp.tanh(w)
+    t = t / (jnp.max(jnp.abs(t)) + 1e-12)
+    lv = float(cfg.w_levels)
+    return ste_round(t * lv) / lv
+
+
+def weight_scale(q_unit: jnp.ndarray, n_out: int) -> jnp.ndarray:
+    """Scale-adjusted-training factor s = 1/sqrt(n_out * VAR[q]) (Eqn. A20b).
+
+    Applied digitally after the (PIM) MAC — it never enters the analog array.
+    """
+    var = jnp.var(jax.lax.stop_gradient(q_unit)) + 1e-12
+    return 1.0 / jnp.sqrt(n_out * var)
+
+
+def weight_quant(w: jnp.ndarray, n_out: int, cfg: QuantConfig) -> jnp.ndarray:
+    """Full digital quantized weight Q = s * q_unit (for digital layers)."""
+    q = weight_quant_unit(w, cfg)
+    return weight_scale(q, n_out) * q
+
+
+def act_quant(x: jnp.ndarray, cfg: QuantConfig) -> jnp.ndarray:
+    """DoReFa activation quantizer onto {0, 1/a_levels, ..., 1}."""
+    lv = float(cfg.a_levels)
+    return ste_round(jnp.clip(x, 0.0, 1.0) * lv) / lv
+
+
+def act_quant_bits(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Activation quantizer at an explicit bit-width (first layer uses 8)."""
+    lv = float(2**bits - 1)
+    return ste_round(jnp.clip(x, 0.0, 1.0) * lv) / lv

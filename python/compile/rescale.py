@@ -1,0 +1,29 @@
+"""Forward-rescaling constants (paper Table A1, §3.3).
+
+The paper finds a constant forward scale η, applied to the PIM output before
+batch normalization, is required for convergence at low b_PIM.  Values below
+are Table A1 verbatim for b_PIM in 3..7; for higher resolutions the PIM output
+scale approaches the digital one (Fig. A2) so η → 1.  The rust side mirrors
+this table in rust/src/config/rescale.rs; ``test_rescale.py`` pins both.
+"""
+
+from __future__ import annotations
+
+from . import configs
+
+# Table A1 (b_PIM -> eta), per decomposition scheme.
+_TABLE_A1 = {
+    configs.NATIVE: {3: 100.0, 4: 20.0, 5: 1.0, 6: 1.0, 7: 1.0},
+    configs.DIFFERENTIAL: {3: 1000.0, 4: 1000.0, 5: 1000.0, 6: 1000.0, 7: 1000.0},
+    configs.BIT_SERIAL: {3: 100.0, 4: 30.0, 5: 30.0, 6: 30.0, 7: 1.03},
+}
+
+
+def forward_eta(scheme: str, b_pim: int) -> float:
+    """η(scheme, b_PIM): Table A1 inside 3..7, 1.0 above, clamped-to-3 below."""
+    table = _TABLE_A1[scheme]
+    if b_pim in table:
+        return table[b_pim]
+    if b_pim < 3:
+        return table[3]
+    return 1.0

@@ -1,0 +1,156 @@
+"""Layer-2 training step: SGD (Nesterov) + cross-entropy, built for AOT.
+
+``make_train_step`` returns a pure function over *flat lists* of tensors —
+exactly the calling convention the rust runtime uses (ordered buffers, no
+pytrees across the boundary).  The ordering contract is ``flatten_tree`` and
+is recorded in the artifact manifest.
+
+Hyper-parameters that sweep at run time are traced scalars:
+  lr        — learning-rate schedule lives in rust (rust/src/train/schedule.rs)
+  levels    — 2^{b_PIM}-1 (PIM-QAT / adjusted-precision training, §3.5)
+  eta       — forward rescale (Table A1), fed from rust's mirror table
+  ams_sigma — AMS additive-noise std (unit output scale), for mode=ams
+  seed      — per-step RNG seed (AMS noise)
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import model as model_lib
+from .configs import MODE_OURS, ModelConfig, PimConfig, QuantConfig, TrainConfig
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    return jnp.mean(nll)
+
+
+def accuracy_count(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))
+
+
+def make_apply(mcfg: ModelConfig, qcfg: QuantConfig, pcfg: PimConfig, mode: str, tcfg: TrainConfig):
+    """Returns apply(params, state, x, levels, eta, ams_sigma, key, train)."""
+
+    def apply(params, state, x, levels, eta, ams_sigma, key, train):
+        ctx = model_lib.Ctx(
+            qcfg=qcfg,
+            pcfg=pcfg,
+            mode=mode,
+            levels=levels,
+            eta=eta if (tcfg.fwd_rescale and mode == MODE_OURS) else jnp.float32(1.0),
+            ams_sigma=ams_sigma,
+            train=train,
+            bn_momentum=tcfg.bn_momentum,
+            bwd_rescale=tcfg.bwd_rescale,
+            key=key,
+        )
+        return model_lib.model_apply(params, state, x, mcfg, ctx)
+
+    return apply
+
+
+def make_train_step(
+    mcfg: ModelConfig,
+    qcfg: QuantConfig,
+    pcfg: PimConfig,
+    mode: str,
+    tcfg: TrainConfig,
+):
+    """Flat-list SGD train step for AOT lowering.
+
+    Signature (all f32 unless noted):
+      inputs : params... , bn_state... , momentum... ,
+               x [B,H,W,C], y i32[B], lr, levels, eta, ams_sigma, seed i32
+      outputs: params'..., bn_state'..., momentum'..., loss, acc_count
+    """
+    apply = make_apply(mcfg, qcfg, pcfg, mode, tcfg)
+    p0, s0 = model_lib.model_init(jax.random.PRNGKey(0), mcfg)
+    p_paths = [k for k, _ in model_lib.flatten_tree(p0)]
+    s_paths = [k for k, _ in model_lib.flatten_tree(s0)]
+    n_p, n_s = len(p_paths), len(s_paths)
+
+    def step(*args):
+        params_flat = list(args[:n_p])
+        state_flat = list(args[n_p : n_p + n_s])
+        mom_flat = list(args[n_p + n_s : 2 * n_p + n_s])
+        x, y, lr, levels, eta, ams_sigma, seed = args[2 * n_p + n_s :]
+        params = model_lib.unflatten_like(p0, params_flat)
+        state = model_lib.unflatten_like(s0, state_flat)
+        key = jax.random.PRNGKey(seed)
+
+        def loss_fn(params):
+            logits, new_state = apply(
+                params, state, x, levels, eta, ams_sigma, key, True
+            )
+            loss = cross_entropy(logits, y)
+            return loss, (new_state, accuracy_count(logits, y))
+
+        (loss, (new_state, acc)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True
+        )(params)
+
+        g_flat = [v for _, v in model_lib.flatten_tree(grads)]
+        new_p, new_m = [], []
+        for p, g, m in zip(params_flat, g_flat, mom_flat):
+            g = g + tcfg.weight_decay * p
+            m_new = tcfg.momentum * m + g
+            upd = g + tcfg.momentum * m_new if tcfg.nesterov else m_new
+            new_p.append(p - lr * upd)
+            new_m.append(m_new)
+        ns_flat = [v for _, v in model_lib.flatten_tree(new_state)]
+        return tuple(new_p) + tuple(ns_flat) + tuple(new_m) + (loss, acc)
+
+    meta = {
+        "param_paths": p_paths,
+        "state_paths": s_paths,
+        "param_shapes": [list(v.shape) for _, v in model_lib.flatten_tree(p0)],
+        "state_shapes": [list(v.shape) for _, v in model_lib.flatten_tree(s0)],
+    }
+    return step, meta
+
+
+def make_eval_step(mcfg: ModelConfig, qcfg: QuantConfig, pcfg: PimConfig, mode: str, tcfg: TrainConfig):
+    """Software (digital) or ideal-PIM evaluation step.
+
+    inputs : params..., bn_state..., x, y, levels, eta
+    outputs: loss_sum, acc_count
+    """
+    apply = make_apply(mcfg, qcfg, pcfg, mode, tcfg)
+    p0, s0 = model_lib.model_init(jax.random.PRNGKey(0), mcfg)
+    n_p = len(model_lib.flatten_tree(p0))
+    n_s = len(model_lib.flatten_tree(s0))
+
+    def step(*args):
+        params = model_lib.unflatten_like(p0, list(args[:n_p]))
+        state = model_lib.unflatten_like(s0, list(args[n_p : n_p + n_s]))
+        x, y, levels, eta = args[n_p + n_s :]
+        logits, _ = apply(
+            params, state, x, levels, eta, jnp.float32(0.0), jax.random.PRNGKey(0), False
+        )
+        bsz = x.shape[0]
+        return cross_entropy(logits, y) * bsz, accuracy_count(logits, y)
+
+    return step
+
+
+def make_init(mcfg: ModelConfig):
+    """Parameter/state/momentum initialization, lowered to its own artifact
+    so rust never re-implements Kaiming init.
+
+    inputs : seed i32 ; outputs: params..., bn_state..., momentum...
+    """
+
+    def init(seed):
+        params, state = model_lib.model_init(jax.random.PRNGKey(seed), mcfg)
+        p_flat = [v for _, v in model_lib.flatten_tree(params)]
+        s_flat = [v for _, v in model_lib.flatten_tree(state)]
+        m_flat = [jnp.zeros_like(v) for v in p_flat]
+        return tuple(p_flat) + tuple(s_flat) + tuple(m_flat)
+
+    return init

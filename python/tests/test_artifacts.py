@@ -1,0 +1,88 @@
+"""Artifact/manifest sanity: the contract rust relies on.
+
+These run against the artifacts directory if `make artifacts` has produced
+one (skipped otherwise, so pytest stays runnable before the first build).
+"""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="artifacts not built yet"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_all_files_exist(manifest):
+    for a in manifest["artifacts"]:
+        assert os.path.exists(os.path.join(ART, a["file"])), a["name"]
+
+
+def test_hlo_is_text_not_proto(manifest):
+    for a in manifest["artifacts"][:3]:
+        with open(os.path.join(ART, a["file"])) as f:
+            head = f.read(200)
+        assert "HloModule" in head, "expected HLO text format"
+
+
+def test_input_counts(manifest):
+    for a in manifest["artifacts"]:
+        n_p, n_s = a["n_params"], a["n_state"]
+        n_in = len(a["inputs"])
+        if a["kind"] == "init":
+            assert n_in == 1
+            assert a["n_outputs"] == 2 * n_p + n_s
+        elif a["kind"] == "train":
+            assert n_in == 2 * n_p + n_s + 7
+            assert a["n_outputs"] == 2 * n_p + n_s + 2
+        elif a["kind"] in ("eval", "pimeval"):
+            assert n_in == n_p + n_s + 4
+            assert a["n_outputs"] == 2
+        elif a["kind"] == "kernel":
+            assert n_in == 3
+            assert a["n_outputs"] == 1
+
+
+def test_param_paths_match_model_entry(manifest):
+    for a in manifest["artifacts"]:
+        m = manifest["models"][a["model"]]
+        assert a["n_params"] == len(m["param_paths"])
+        assert a["n_state"] == len(m["state_paths"])
+
+
+def test_required_artifact_set(manifest):
+    names = {a["name"] for a in manifest["artifacts"]}
+    required = {
+        "tiny_init",
+        "tiny_eval",
+        "tiny_train_baseline",
+        "tiny_train_ams",
+        "tiny_train_ours_native_uc1",
+        "tiny_train_ours_bit_serial_uc8",
+        "tiny_train_ours_differential_uc8",
+        "tiny_pimeval_bit_serial_uc8",
+        "small_train_ours_bit_serial_uc16",
+    }
+    assert required <= names, required - names
+
+
+def test_goldens_exist():
+    gold = os.path.join(ART, "golden")
+    for f in (
+        "pim_mac_native.json",
+        "pim_mac_bit_serial.json",
+        "pim_mac_differential.json",
+        "quant.json",
+        "model_tiny.json",
+    ):
+        assert os.path.exists(os.path.join(gold, f)), f

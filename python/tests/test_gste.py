@@ -1,0 +1,103 @@
+"""GSTE backward (Theorem 1) and the rescaling techniques (§3.3, Eqn. 8)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import pim
+from compile.configs import BIT_SERIAL, NATIVE, SCHEMES, QuantConfig
+from compile.rescale import forward_eta
+
+CFG = QuantConfig()
+
+
+def _case(seed, m_=6, g_=2, n_=18, o_=4):
+    rng = np.random.default_rng(seed)
+    a_u = jnp.asarray(rng.integers(0, 16, (m_, g_, n_)) / 15.0, jnp.float32)
+    w_u = jnp.asarray(rng.integers(-7, 8, (g_, n_, o_)) / 7.0, jnp.float32)
+    return a_u, w_u
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_gste_grad_equals_scaled_matmul_grad(scheme):
+    """Theorem 1: backward of pim_matmul == ξ·η × backward of exact matmul."""
+    a_u, w_u = _case(0)
+    levels, eta = jnp.float32(31.0), jnp.float32(2.0)
+    g = jnp.ones((6, 4), jnp.float32)
+
+    def f(a, w):
+        return jnp.sum(pim.pim_matmul(a, w, levels, eta, scheme, CFG, True) * g)
+
+    da, dw = jax.grad(f, argnums=(0, 1))(a_u, w_u)
+
+    # ξ recomputed exactly as in _pim_matmul_fwd
+    y_pim = pim.pim_forward(a_u, w_u, levels, scheme, CFG)
+    y_ex = pim.digital_forward(a_u, w_u)
+    xi = float(jnp.sqrt((jnp.var(y_pim) + 1e-12) / (jnp.var(y_ex) + 1e-12)))
+
+    def f_exact(a, w):
+        return jnp.sum(pim.digital_forward(a, w) * g)
+
+    da_e, dw_e = jax.grad(f_exact, argnums=(0, 1))(a_u, w_u)
+    np.testing.assert_allclose(np.asarray(da), 2.0 * xi * np.asarray(da_e), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(dw), 2.0 * xi * np.asarray(dw_e), rtol=1e-4)
+
+
+def test_no_bwd_rescale_sets_xi_one():
+    a_u, w_u = _case(1)
+    levels, eta = jnp.float32(7.0), jnp.float32(1.0)
+
+    def f(a):
+        return jnp.sum(pim.pim_matmul(a, w_u, levels, eta, BIT_SERIAL, CFG, False))
+
+    da = jax.grad(f)(a_u)
+
+    def f_exact(a):
+        return jnp.sum(pim.digital_forward(a, w_u))
+
+    np.testing.assert_allclose(
+        np.asarray(da), np.asarray(jax.grad(f_exact)(a_u)), rtol=1e-5
+    )
+
+
+def test_xi_tracks_scale_enlargement():
+    """ξ > 1 at very low b_PIM (the scale-enlarging effect, Appendix A3)."""
+    a_u, w_u = _case(2, m_=64, n_=144, o_=16)
+    y3 = pim.pim_forward(a_u, w_u, jnp.float32(7.0), BIT_SERIAL, CFG)
+    y_ex = pim.digital_forward(a_u, w_u)
+    xi = float(jnp.std(y3) / jnp.std(y_ex))
+    assert xi > 1.2
+
+
+def test_hyperparams_get_zero_grad():
+    a_u, w_u = _case(3)
+
+    def f(levels, eta):
+        return jnp.sum(pim.pim_matmul(a_u, w_u, levels, eta, NATIVE, CFG, True))
+
+    dl, de = jax.grad(f, argnums=(0, 1))(jnp.float32(31.0), jnp.float32(5.0))
+    assert float(dl) == 0.0 and float(de) == 0.0
+
+
+def test_forward_eta_scales_output():
+    a_u, w_u = _case(4)
+    y1 = pim.pim_matmul(a_u, w_u, jnp.float32(31.0), jnp.float32(1.0), NATIVE, CFG, True)
+    y9 = pim.pim_matmul(a_u, w_u, jnp.float32(31.0), jnp.float32(9.0), NATIVE, CFG, True)
+    np.testing.assert_allclose(np.asarray(y9), 9.0 * np.asarray(y1), rtol=1e-5)
+
+
+class TestRescaleTable:
+    """Table A1 pinning — mirrored by rust/src/config/rescale.rs."""
+
+    def test_values(self):
+        assert forward_eta("native", 3) == 100.0
+        assert forward_eta("native", 4) == 20.0
+        assert forward_eta("native", 5) == 1.0
+        assert forward_eta("differential", 6) == 1000.0
+        assert forward_eta("bit_serial", 4) == 30.0
+        assert forward_eta("bit_serial", 7) == 1.03
+
+    def test_extremes(self):
+        assert forward_eta("bit_serial", 10) == 1.0
+        assert forward_eta("bit_serial", 2) == 100.0

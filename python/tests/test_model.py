@@ -1,0 +1,161 @@
+"""Model-level tests: shapes, parameter contract, mode behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as model_lib
+from compile import train as train_lib
+from compile.configs import (
+    BIT_SERIAL,
+    MODE_AMS,
+    MODE_BASELINE,
+    MODE_OURS,
+    ModelConfig,
+    PimConfig,
+    QuantConfig,
+    TrainConfig,
+)
+
+QCFG = QuantConfig()
+TCFG = TrainConfig(batch=4)
+
+
+def _mk(mcfg=None, mode=MODE_BASELINE, scheme=BIT_SERIAL, uc=8):
+    mcfg = mcfg or ModelConfig(depth_n=1, width=8, image=16)
+    params, state = model_lib.model_init(jax.random.PRNGKey(0), mcfg)
+    apply = train_lib.make_apply(mcfg, QCFG, PimConfig(scheme=scheme, unit_channels=uc), mode, TCFG)
+    x = jnp.asarray(np.random.default_rng(0).uniform(0, 1, (4, mcfg.image, mcfg.image, 3)), jnp.float32)
+    return mcfg, params, state, apply, x
+
+
+def _run(apply, params, state, x, train=False, levels=127.0, eta=1.0, sigma=0.0):
+    return apply(
+        params, state, x, jnp.float32(levels), jnp.float32(eta),
+        jnp.float32(sigma), jax.random.PRNGKey(0), train,
+    )
+
+
+class TestShapes:
+    @pytest.mark.parametrize("depth_n,width", [(1, 8), (2, 8), (1, 16)])
+    def test_resnet_logits(self, depth_n, width):
+        mcfg = ModelConfig(depth_n=depth_n, width=width, image=16)
+        _, params, state, apply, x = _mk(mcfg)
+        logits, ns = _run(apply, params, state, x)
+        assert logits.shape == (4, 10)
+        assert set(ns.keys()) == set(state.keys())
+
+    def test_vgg_logits(self):
+        mcfg = ModelConfig(arch="vgg11", depth_n=0, width=8, image=16)
+        _, params, state, apply, x = _mk(mcfg)
+        logits, _ = _run(apply, params, state, x)
+        assert logits.shape == (4, 10)
+
+    def test_cifar100_head(self):
+        mcfg = ModelConfig(depth_n=1, width=8, image=16, classes=100)
+        _, params, state, apply, x = _mk(mcfg)
+        logits, _ = _run(apply, params, state, x)
+        assert logits.shape == (4, 100)
+
+
+class TestParamContract:
+    def test_flatten_roundtrip(self):
+        mcfg = ModelConfig(depth_n=2, width=8, image=16)
+        params, state = model_lib.model_init(jax.random.PRNGKey(1), mcfg)
+        flat = model_lib.flatten_tree(params)
+        rebuilt = model_lib.unflatten_like(params, [v for _, v in flat])
+        for (k1, v1), (k2, v2) in zip(flat, model_lib.flatten_tree(rebuilt)):
+            assert k1 == k2
+            np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+    def test_flatten_deterministic_order(self):
+        mcfg = ModelConfig(depth_n=1, width=8, image=16)
+        p1, _ = model_lib.model_init(jax.random.PRNGKey(0), mcfg)
+        p2, _ = model_lib.model_init(jax.random.PRNGKey(9), mcfg)
+        assert [k for k, _ in model_lib.flatten_tree(p1)] == [
+            k for k, _ in model_lib.flatten_tree(p2)
+        ]
+
+    def test_resnet20_param_count(self):
+        """The full-size config reproduces ResNet20's ~0.27M params."""
+        mcfg = ModelConfig(depth_n=3, width=16, image=32)
+        params, _ = model_lib.model_init(jax.random.PRNGKey(0), mcfg)
+        n = sum(int(np.prod(v.shape)) for _, v in model_lib.flatten_tree(params))
+        assert 0.25e6 < n < 0.30e6
+
+
+class TestModes:
+    def test_ours_differs_from_baseline_at_low_bpim(self):
+        _, params, state, apply_b, x = _mk(mode=MODE_BASELINE)
+        *_, apply_o, _ = _mk(mode=MODE_OURS)
+        lb, _ = _run(apply_b, params, state, x)
+        lo, _ = _run(apply_o, params, state, x, levels=7.0)
+        assert not np.allclose(np.asarray(lb), np.asarray(lo), atol=1e-3)
+
+    def test_ours_converges_to_baseline_at_high_bpim(self):
+        _, params, state, apply_b, x = _mk(mode=MODE_BASELINE)
+        *_, apply_o, _ = _mk(mode=MODE_OURS)
+        lb, _ = _run(apply_b, params, state, x)
+        lo, _ = _run(apply_o, params, state, x, levels=2.0**22 - 1)
+        np.testing.assert_allclose(np.asarray(lb), np.asarray(lo), atol=5e-3)
+
+    def test_ams_noise_only_in_training(self):
+        _, params, state, apply, x = _mk(mode=MODE_AMS)
+        l1, _ = _run(apply, params, state, x, train=False, sigma=0.5)
+        l2, _ = _run(apply, params, state, x, train=False, sigma=0.5)
+        np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+        lt, _ = _run(apply, params, state, x, train=True, sigma=0.5)
+        assert not np.allclose(np.asarray(l1), np.asarray(lt), atol=1e-4)
+
+    def test_bn_state_updates_in_training_only(self):
+        _, params, state, apply, x = _mk()
+        _, ns_eval = _run(apply, params, state, x, train=False)
+        np.testing.assert_array_equal(
+            np.asarray(ns_eval["bn0"]["mean"]), np.asarray(state["bn0"]["mean"])
+        )
+        _, ns_train = _run(apply, params, state, x, train=True)
+        assert not np.allclose(
+            np.asarray(ns_train["bn0"]["mean"]), np.asarray(state["bn0"]["mean"])
+        )
+
+
+class TestTrainStep:
+    def test_loss_decreases_on_fixed_batch(self):
+        """Over-fitting a single batch must drive the loss down (all modes)."""
+        mcfg = ModelConfig(depth_n=1, width=8, image=16)
+        for mode, levels in ((MODE_BASELINE, 127.0), (MODE_OURS, 127.0)):
+            step, meta = train_lib.make_train_step(
+                mcfg, QCFG, PimConfig(scheme=BIT_SERIAL, unit_channels=8), mode,
+                TrainConfig(batch=8),
+            )
+            init = train_lib.make_init(mcfg)
+            outs = list(jax.jit(init)(jnp.int32(0)))
+            n_p, n_s = len(meta["param_paths"]), len(meta["state_paths"])
+            rng = np.random.default_rng(0)
+            x = jnp.asarray(rng.uniform(0, 1, (8, 16, 16, 3)), jnp.float32)
+            y = jnp.asarray(rng.integers(0, 10, 8), jnp.int32)
+            jstep = jax.jit(step)
+            losses = []
+            for i in range(30):
+                res = jstep(
+                    *outs, x, y, jnp.float32(0.05), jnp.float32(levels),
+                    jnp.float32(1.03), jnp.float32(0.0), jnp.int32(i),
+                )
+                outs = list(res[: 2 * n_p + n_s])
+                losses.append(float(res[-2]))
+            assert losses[-1] < losses[0] * 0.7, (mode, losses[0], losses[-1])
+
+    def test_eval_step_counts(self):
+        mcfg = ModelConfig(depth_n=1, width=8, image=16)
+        estep = train_lib.make_eval_step(
+            mcfg, QCFG, PimConfig(), MODE_BASELINE, TrainConfig(batch=8)
+        )
+        params, state = model_lib.model_init(jax.random.PRNGKey(0), mcfg)
+        p = [v for _, v in model_lib.flatten_tree(params)]
+        s = [v for _, v in model_lib.flatten_tree(state)]
+        x = jnp.zeros((8, 16, 16, 3))
+        y = jnp.zeros((8,), jnp.int32)
+        loss_sum, acc = jax.jit(estep)(*p, *s, x, y, jnp.float32(127.0), jnp.float32(1.0))
+        assert 0.0 <= float(acc) <= 8.0
+        assert np.isfinite(float(loss_sum))

@@ -1,0 +1,173 @@
+"""The vectorized jnp PIM model vs the loop-level oracle (kernels/ref.py).
+
+Hypothesis sweeps shapes, bit-widths, DAC resolutions and ADC resolutions —
+the jnp twin must agree with the paper-literal oracle to float precision on
+every scheme.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import pim
+from compile.configs import BIT_SERIAL, DIFFERENTIAL, NATIVE, SCHEMES, QuantConfig
+from compile.kernels import ref
+
+
+def _rand_case(rng, cfg, m_, g_, n_, o_):
+    a_int = rng.integers(0, cfg.a_levels + 1, (m_, g_, n_))
+    w_int = rng.integers(-cfg.w_levels, cfg.w_levels + 1, (g_, n_, o_))
+    a_u = (a_int / cfg.a_levels).astype(np.float32)
+    w_u = (w_int / cfg.w_levels).astype(np.float32)
+    return a_int, w_int, a_u, w_u
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+@pytest.mark.parametrize("b_pim", [3, 5, 7, 10])
+def test_jnp_matches_ref(scheme, b_pim):
+    cfg = QuantConfig()
+    rng = np.random.default_rng(len(scheme) * 1000 + b_pim)
+    a_int, w_int, a_u, w_u = _rand_case(rng, cfg, 6, 2, 18, 4)
+    levels = 2**b_pim - 1
+    y_ref = ref.pim_matmul_ref(a_int, w_int, levels, scheme, cfg)
+    y_jnp = np.asarray(
+        pim.pim_forward(jnp.asarray(a_u), jnp.asarray(w_u), jnp.float32(levels), scheme, cfg)
+    )
+    np.testing.assert_allclose(y_jnp, y_ref, atol=2e-5)
+
+
+@given(
+    scheme=st.sampled_from(SCHEMES),
+    b_pim=st.integers(2, 12),
+    m_dac=st.sampled_from([1, 2, 4]),
+    b_w=st.sampled_from([2, 3, 4]),
+    n_=st.integers(1, 40),
+    o_=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=60, deadline=None)
+def test_jnp_matches_ref_hypothesis(scheme, b_pim, m_dac, b_w, n_, o_, seed):
+    cfg = QuantConfig(b_w=b_w, b_a=4, m=m_dac)
+    rng = np.random.default_rng(seed)
+    a_int, w_int, a_u, w_u = _rand_case(rng, cfg, 3, 2, n_, o_)
+    levels = 2**b_pim - 1
+    y_ref = ref.pim_matmul_ref(a_int, w_int, levels, scheme, cfg)
+    y_jnp = np.asarray(
+        pim.pim_forward(jnp.asarray(a_u), jnp.asarray(w_u), jnp.float32(levels), scheme, cfg)
+    )
+    np.testing.assert_allclose(y_jnp, y_ref, atol=5e-5)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_high_resolution_converges_to_digital(scheme):
+    """b_PIM → ∞ must recover the exact digital inner product (Thm. 1)."""
+    cfg = QuantConfig()
+    rng = np.random.default_rng(7)
+    a_int, w_int, a_u, w_u = _rand_case(rng, cfg, 4, 2, 18, 3)
+    y_dig = ref.digital_matmul_ref(a_int, w_int, cfg)
+    y_hi = np.asarray(
+        pim.pim_forward(
+            jnp.asarray(a_u), jnp.asarray(w_u), jnp.float32(2.0**20 - 1), scheme, cfg
+        )
+    )
+    np.testing.assert_allclose(y_hi, y_dig, atol=1e-4)
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_error_monotone_in_resolution(scheme):
+    """Mean-squared PIM error must (weakly) shrink as b_PIM grows."""
+    cfg = QuantConfig()
+    rng = np.random.default_rng(11)
+    a_int, w_int, a_u, w_u = _rand_case(rng, cfg, 16, 2, 36, 8)
+    y_dig = ref.digital_matmul_ref(a_int, w_int, cfg)
+    errs = []
+    for b in (3, 5, 7, 9):
+        y = np.asarray(
+            pim.pim_forward(
+                jnp.asarray(a_u), jnp.asarray(w_u), jnp.float32(2.0**b - 1), scheme, cfg
+            )
+        )
+        errs.append(np.mean((y - y_dig) ** 2))
+    assert errs[0] >= errs[1] >= errs[2] >= errs[3]
+
+
+def test_scale_enlarging_effect_fig_a2():
+    """Fig. A2: the std ratio ρ = std(y_PIM)/std(y) grows as b_PIM falls
+    (bit-serial scheme) and approaches 1 at high resolution."""
+    cfg = QuantConfig()
+    rng = np.random.default_rng(3)
+    a_int, w_int, a_u, w_u = _rand_case(rng, cfg, 64, 2, 144, 16)
+    y_dig = ref.digital_matmul_ref(a_int, w_int, cfg)
+    rho = {}
+    for b in (3, 7, 10):
+        y = np.asarray(
+            pim.pim_forward(
+                jnp.asarray(a_u), jnp.asarray(w_u), jnp.float32(2.0**b - 1), BIT_SERIAL, cfg
+            )
+        )
+        rho[b] = float(np.std(y) / np.std(y_dig))
+    assert rho[3] > rho[7] > 0.5
+    assert abs(rho[10] - 1.0) < 0.1
+    assert rho[3] > 1.5  # the paper reports 2–4x at 3–4 bit
+
+
+def test_differential_equals_native_when_all_positive():
+    """With all-positive weights the negative half is empty: differential
+    must reduce exactly to native."""
+    cfg = QuantConfig()
+    rng = np.random.default_rng(5)
+    a_int = rng.integers(0, 16, (4, 1, 9))
+    w_int = rng.integers(0, 8, (1, 9, 3))
+    for levels in (7, 127):
+        y_n = ref.pim_matmul_ref(a_int, w_int, levels, NATIVE, cfg)
+        y_d = ref.pim_matmul_ref(a_int, w_int, levels, DIFFERENTIAL, cfg)
+        np.testing.assert_allclose(y_n, y_d, atol=1e-9)
+
+
+def test_group_decomposition_identity():
+    """Splitting channels into more groups only changes *where* quantization
+    happens; at infinite resolution the grouping must not matter."""
+    cfg = QuantConfig()
+    rng = np.random.default_rng(6)
+    a_int = rng.integers(0, 16, (4, 4, 9))
+    w_int = rng.integers(-7, 8, (4, 9, 3))
+    y4 = ref.pim_matmul_ref(a_int, w_int, 2**18 - 1, BIT_SERIAL, cfg)
+    a2 = a_int.reshape(4, 2, 18)
+    w2 = w_int.reshape(2, 18, 3)
+    y2 = ref.pim_matmul_ref(a2, w2, 2**18 - 1, BIT_SERIAL, cfg)
+    # f32 ADC arithmetic leaves ~LSB-scale residuals at finite "infinite"
+    # resolution; the identity is structural, not bit-exact.
+    np.testing.assert_allclose(y4, y2, atol=5e-4)
+
+
+class TestLayoutHelpers:
+    def test_effective_unit_channels(self):
+        assert pim.effective_unit_channels(8, 16) == 8
+        assert pim.effective_unit_channels(32, 16) == 16
+        assert pim.effective_unit_channels(12, 8) == 6
+        assert pim.effective_unit_channels(7, 4) == 1
+
+    def test_grouped_patches_shapes(self):
+        x = jnp.zeros((2, 8, 8, 16))
+        p, oh, ow, uc = pim.grouped_patches(x, 3, 1, 8)
+        assert p.shape == (2 * 8 * 8, 2, 72) and (oh, ow, uc) == (8, 8, 8)
+        p, oh, ow, uc = pim.grouped_patches(x, 3, 2, 8)
+        assert p.shape == (2 * 4 * 4, 2, 72) and (oh, ow) == (4, 4)
+
+    def test_patch_weight_layout_consistency(self):
+        """conv(x, w) computed via grouped_patches/grouped_weights at infinite
+        resolution must equal lax.conv."""
+        import jax
+
+        rng = np.random.default_rng(8)
+        x = jnp.asarray(rng.uniform(0, 1, (2, 6, 6, 8)).astype(np.float32))
+        w = jnp.asarray(rng.normal(0, 1, (3, 3, 8, 5)).astype(np.float32))
+        p, oh, ow, _ = pim.grouped_patches(x, 3, 1, 4)
+        gw = pim.grouped_weights(w, 4)
+        y = pim.digital_forward(p, gw).reshape(2, oh, ow, 5)
+        y_ref = jax.lax.conv_general_dilated(
+            x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=1e-4)

@@ -1,0 +1,87 @@
+"""Unit tests for the modified-DoReFa quantizers (paper Eqn. A20)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import quant
+from compile.configs import QuantConfig
+
+CFG = QuantConfig()
+
+
+class TestWeightQuant:
+    def test_on_grid(self):
+        rng = np.random.default_rng(0)
+        w = jnp.asarray(rng.normal(0, 1, (3, 3, 8, 16)).astype(np.float32))
+        q = quant.weight_quant_unit(w, CFG)
+        ints = np.asarray(q) * CFG.w_levels
+        assert np.allclose(ints, np.round(ints), atol=1e-5)
+
+    def test_range(self):
+        rng = np.random.default_rng(1)
+        w = jnp.asarray(rng.normal(0, 3, (64,)).astype(np.float32))
+        q = np.asarray(quant.weight_quant_unit(w, CFG))
+        assert q.min() >= -1.0 - 1e-6 and q.max() <= 1.0 + 1e-6
+
+    def test_max_maps_to_full_scale(self):
+        w = jnp.asarray([0.1, -2.5, 0.3], jnp.float32)
+        q = np.asarray(quant.weight_quant_unit(w, CFG))
+        # the element with max |tanh| maps to ±1 exactly
+        assert abs(q[1]) == pytest.approx(1.0, abs=1e-6)
+
+    def test_monotone(self):
+        w = jnp.linspace(-2, 2, 101)
+        q = np.asarray(quant.weight_quant_unit(w, CFG))
+        assert np.all(np.diff(q) >= -1e-7)
+
+    def test_scale_normalizes_variance(self):
+        rng = np.random.default_rng(2)
+        w = jnp.asarray(rng.normal(0, 1, (128, 32)).astype(np.float32))
+        q = quant.weight_quant_unit(w, CFG)
+        s = quant.weight_scale(q, 32)
+        assert float(s) == pytest.approx(
+            1.0 / np.sqrt(32 * np.var(np.asarray(q))), rel=1e-4
+        )
+
+    def test_gradient_flows(self):
+        w = jnp.asarray([0.3, -0.4, 0.9], jnp.float32)
+        g = jax.grad(lambda w: jnp.sum(quant.weight_quant_unit(w, CFG) ** 2))(w)
+        assert np.all(np.isfinite(np.asarray(g)))
+        assert np.any(np.asarray(g) != 0)
+
+
+class TestActQuant:
+    @given(st.lists(st.floats(-2, 3, width=32), min_size=1, max_size=64))
+    @settings(max_examples=25, deadline=None)
+    def test_grid_and_range(self, xs):
+        x = jnp.asarray(xs, jnp.float32)
+        q = np.asarray(quant.act_quant(x, CFG))
+        assert q.min() >= 0 and q.max() <= 1
+        ints = q * CFG.a_levels
+        assert np.allclose(ints, np.round(ints), atol=1e-4)
+
+    def test_identity_on_grid(self):
+        grid = jnp.arange(16, dtype=jnp.float32) / 15.0
+        q = np.asarray(quant.act_quant(grid, CFG))
+        assert np.allclose(q, np.asarray(grid), atol=1e-6)
+
+    def test_clip(self):
+        x = jnp.asarray([-0.5, 1.5], jnp.float32)
+        q = np.asarray(quant.act_quant(x, CFG))
+        assert q[0] == 0.0 and q[1] == 1.0
+
+    def test_ste_gradient_inside_range(self):
+        # STE: d/dx quant(clip(x)) = 1 inside (0,1), 0 outside.
+        g = jax.grad(lambda x: jnp.sum(quant.act_quant(x, CFG)))(
+            jnp.asarray([0.5, -0.5, 1.5], jnp.float32)
+        )
+        assert np.asarray(g).tolist() == [1.0, 0.0, 0.0]
+
+    def test_bits_8(self):
+        x = jnp.asarray([0.5], jnp.float32)
+        q = np.asarray(quant.act_quant_bits(x, 8))
+        assert abs(q[0] - round(0.5 * 255) / 255) < 1e-6

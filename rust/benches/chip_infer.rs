@@ -1,0 +1,64 @@
+//! Bench: full-network chip-simulator inference (the Table-4 evaluation
+//! path) — images/s for software vs ideal vs real chip execution.
+
+use pim_qat::chip::ChipModel;
+use pim_qat::config::Scheme;
+use pim_qat::data::synth;
+use pim_qat::nn::ExecSpec;
+use pim_qat::runtime::Runtime;
+use pim_qat::train::network_from_ckpt;
+use pim_qat::train::Checkpoint;
+use pim_qat::util::bench::Bencher;
+use pim_qat::util::rng::Rng;
+
+fn main() {
+    // needs artifacts (for the manifest/model entry) and one checkpoint;
+    // trains a tiny 20-step one if no cache exists.
+    let rt = match Runtime::new(std::path::Path::new("artifacts")) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("skipping chip_infer bench (no artifacts): {e}");
+            return;
+        }
+    };
+    let dir = std::path::Path::new("results/bench_ckpt");
+    let ckpt = if dir.join("ckpt.json").exists() {
+        Checkpoint::load(dir).unwrap()
+    } else {
+        let job = pim_qat::config::JobConfig {
+            steps: 20,
+            train_size: 128,
+            test_size: 64,
+            ..Default::default()
+        };
+        let tr = synth::generate(16, 10, 128, 1);
+        let te = synth::generate(16, 10, 64, 2);
+        let res = pim_qat::train::run_job(&rt, &job, &tr, &te, 10).unwrap();
+        res.ckpt.save(dir).unwrap();
+        res.ckpt
+    };
+    let net = network_from_ckpt(&rt, &ckpt).unwrap();
+    let ds = synth::generate(16, 10, 32, 3);
+    let batch = {
+        let mut r = Rng::new(0);
+        ds.batch(&(0..32).collect::<Vec<_>>(), false, &mut r)
+    };
+
+    let b = Bencher::default();
+    let mut rng = Rng::new(4);
+    let imgs = 32.0;
+    let ideal = ChipModel::ideal(7);
+    let real = ChipModel::real(1).with_noise(0.35);
+    let cases: Vec<(&str, ExecSpec)> = vec![
+        ("software (digital)", ExecSpec::Software),
+        ("ideal 7-bit chip", ExecSpec::Pim { scheme: Scheme::BitSerial, unit_channels: 8, chip: &ideal }),
+        ("real chip", ExecSpec::Pim { scheme: Scheme::BitSerial, unit_channels: 8, chip: &real }),
+    ];
+    println!("full-network inference, batch 32, tiny model (images/s)");
+    for (label, exec) in &cases {
+        let stats = b.run(label, Some(imgs), || {
+            std::hint::black_box(net.forward(&batch.x, exec, &mut rng).unwrap());
+        });
+        println!("{}", stats.report());
+    }
+}

@@ -1,0 +1,55 @@
+//! Bench: coordinator overhead — grid expansion, fingerprinting, dataset
+//! batching/augmentation, and checkpoint (de)serialization.  The §Perf L3
+//! target is coordinator overhead ≪ step time.
+
+use pim_qat::config::JobConfig;
+use pim_qat::coordinator::sweep::{fingerprint, parse_grid};
+use pim_qat::data::synth;
+use pim_qat::tensor::Tensor;
+use pim_qat::train::Checkpoint;
+use pim_qat::util::bench::Bencher;
+use pim_qat::util::rng::Rng;
+
+fn main() {
+    let b = Bencher::default();
+    let base = JobConfig::default();
+
+    let stats = b.run("grid: parse 3x5x2 sweep", Some(30.0), || {
+        std::hint::black_box(
+            parse_grid(&base, "scheme=native,bit_serial,differential;b_pim=3..7;mode=ours,baseline")
+                .unwrap(),
+        );
+    });
+    println!("{}", stats.report());
+
+    let jobs = parse_grid(&base, "b_pim=3..7").unwrap();
+    let stats = b.run("fingerprint 5 jobs", Some(5.0), || {
+        for j in &jobs {
+            std::hint::black_box(fingerprint(j));
+        }
+    });
+    println!("{}", stats.report());
+
+    let ds = synth::generate(16, 10, 512, 1);
+    let mut rng = Rng::new(2);
+    let idx: Vec<usize> = (0..32).collect();
+    let stats = b.run("batch assembly + augmentation (32 imgs)", Some(32.0), || {
+        std::hint::black_box(ds.batch(&idx, true, &mut rng));
+    });
+    println!("{}", stats.report());
+
+    let ck = Checkpoint {
+        model: "tiny".into(),
+        meta: Default::default(),
+        params: (0..24)
+            .map(|i| (format!("p{i}"), Tensor::full(&[3, 3, 8, 8], 0.5)))
+            .collect(),
+        state: vec![],
+    };
+    let dir = std::env::temp_dir().join("pimqat_bench_ckpt");
+    let stats = b.run("checkpoint save+load (13k params)", None, || {
+        ck.save(&dir).unwrap();
+        std::hint::black_box(Checkpoint::load(&dir).unwrap());
+    });
+    println!("{}", stats.report());
+}

@@ -1,0 +1,39 @@
+//! Bench: the PIM MAC engine's grouped matmul (the chip simulator's hot
+//! path) across schemes and ADC configurations.  Regenerates the
+//! throughput side of Table 1's story: how much work one conversion chain
+//! amortizes, and what the noise/curve models cost on top.
+
+use pim_qat::chip::ChipModel;
+use pim_qat::config::Scheme;
+use pim_qat::pim::{PimEngine, QuantBits};
+use pim_qat::tensor::Tensor;
+use pim_qat::util::bench::Bencher;
+use pim_qat::util::rng::Rng;
+
+fn main() {
+    let b = Bencher::default();
+    let bits = QuantBits::default();
+    let mut rng = Rng::new(1);
+    // one mid-size conv layer's worth of work: M=1024 rows, C=16, O=32
+    let (m, c, k, o, uc) = (1024usize, 16usize, 3usize, 32usize, 8usize);
+    let cols = c * k * k;
+    let a = Tensor::from_vec(&[m, cols], (0..m * cols).map(|_| rng.int_in(0, 15) as f32).collect());
+    let w = Tensor::from_vec(&[cols, o], (0..cols * o).map(|_| rng.int_in(-7, 7) as f32).collect());
+    let macs = (m * cols * o) as f64;
+
+    println!("PIM MAC engine, {m}x{cols}x{o} grouped matmul (N = {})", uc * 9);
+    for scheme in [Scheme::Native, Scheme::BitSerial, Scheme::Differential] {
+        let engine = PimEngine::prepare(scheme, bits, &w, c, k, uc);
+        for (label, chip) in [
+            ("ideal", ChipModel::ideal(7)),
+            ("ideal+noise", ChipModel::ideal(7).with_noise(0.35)),
+            ("real curves+noise", ChipModel::real(1).with_noise(0.35)),
+        ] {
+            let mut nrng = Rng::new(2);
+            let stats = b.run(&format!("{scheme}/{label}"), Some(macs), || {
+                std::hint::black_box(engine.matmul(&a, &chip, &mut nrng));
+            });
+            println!("{}", stats.report());
+        }
+    }
+}

@@ -1,0 +1,72 @@
+//! Bench: the PJRT runtime path — train-step latency (the end-to-end
+//! training hot loop) and the L1 kernel artifact in both lowerings
+//! (Pallas interpret vs jnp twin).
+
+use pim_qat::runtime::literal::{scalar_f32, scalar_i32, tensor_to_literal, vec_i32};
+use pim_qat::runtime::Runtime;
+use pim_qat::tensor::Tensor;
+use pim_qat::util::bench::Bencher;
+use pim_qat::util::rng::Rng;
+
+fn main() {
+    let rt = match Runtime::new(std::path::Path::new("artifacts")) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("skipping runtime bench (no artifacts): {e}");
+            return;
+        }
+    };
+    let b = Bencher::default();
+    let mut rng = Rng::new(1);
+
+    // --- train-step latency (tiny model, batch 32)
+    let init = rt.load("tiny_init").unwrap();
+    let outs = init.run(&[scalar_i32(0)]).unwrap();
+    for name in ["tiny_train_baseline", "tiny_train_ours_bit_serial_uc8"] {
+        let train = rt.load(name).unwrap();
+        let x = Tensor::from_vec(
+            &[32, 16, 16, 3],
+            (0..32 * 16 * 16 * 3).map(|_| rng.uniform_in(0.0, 1.0)).collect(),
+        );
+        let y: Vec<i32> = (0..32).map(|_| rng.int_in(0, 9) as i32).collect();
+        let stats = b.run(&format!("{name} (batch 32)"), Some(32.0), || {
+            let mut inputs = Vec::with_capacity(outs.len() + 7);
+            for l in &outs {
+                inputs.push(
+                    tensor_to_literal(
+                        &pim_qat::runtime::literal::literal_to_tensor(l).unwrap(),
+                    )
+                    .unwrap(),
+                );
+            }
+            inputs.push(tensor_to_literal(&x).unwrap());
+            inputs.push(vec_i32(&y));
+            inputs.push(scalar_f32(0.1));
+            inputs.push(scalar_f32(127.0));
+            inputs.push(scalar_f32(1.0));
+            inputs.push(scalar_f32(0.0));
+            inputs.push(scalar_i32(0));
+            std::hint::black_box(train.run(&inputs).unwrap());
+        });
+        println!("{}", stats.report());
+    }
+
+    // --- L1 kernel artifact: pallas vs jnp lowering
+    let (m, g, n, o) = (256usize, 2usize, 72usize, 16usize);
+    let a = Tensor::from_vec(&[m, g, n], (0..m * g * n).map(|_| rng.int_in(0, 15) as f32 / 15.0).collect());
+    let w = Tensor::from_vec(&[g, n, o], (0..g * n * o).map(|_| rng.int_in(-7, 7) as f32 / 7.0).collect());
+    let lv = Tensor::from_vec(&[1], vec![127.0]);
+    for name in ["kernel_pim_mac_jnp", "kernel_pim_mac_pallas"] {
+        let exe = rt.load(name).unwrap();
+        let macs = (m * g * n * o) as f64;
+        let stats = b.run(name, Some(macs), || {
+            let inputs = [
+                tensor_to_literal(&a).unwrap(),
+                tensor_to_literal(&w).unwrap(),
+                tensor_to_literal(&lv).unwrap(),
+            ];
+            std::hint::black_box(exe.run(&inputs).unwrap());
+        });
+        println!("{}", stats.report());
+    }
+}

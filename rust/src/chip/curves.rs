@@ -1,0 +1,244 @@
+//! ADC transfer-curve synthesis and serialization.
+//!
+//! The paper measures 32 transfer functions on its prototype (Fig. A1) and
+//! reports their variation statistics; absent the silicon we synthesize a
+//! bank with the same statistics: per-curve gain ~ N(1, σ_gain), offset ~
+//! N(0, σ_off) LSB, plus a smooth integral-non-linearity profile built from
+//! a few random low-order sinusoids (the classic INL shape of SAR/flash
+//! ADCs).  Banks serialize to JSON so an experiment can pin the exact
+//! hardware instance it evaluated on.
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One ADC's transfer function: code_out(u) = gain·u + offset + INL(u).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdcCurve {
+    pub gain: f32,
+    /// Offset in LSB.
+    pub offset: f32,
+    /// Sinusoid INL components: (amplitude_lsb, cycles, phase).
+    pub inl: Vec<(f32, f32, f32)>,
+}
+
+impl AdcCurve {
+    pub fn ideal() -> Self {
+        AdcCurve { gain: 1.0, offset: 0.0, inl: Vec::new() }
+    }
+
+    /// Distort a continuous ideal code `u` (in [0, levels], or [-levels,
+    /// levels] when `signed`).  The INL profile is evaluated on |u| so the
+    /// signed (native) case sees a symmetric characteristic, as a
+    /// differential ADC would.
+    #[inline]
+    pub fn distort(&self, u: f32, levels: f32, signed: bool) -> f32 {
+        let mut v = self.gain * u + self.offset;
+        let x = if signed { u.abs() } else { u };
+        let t = (x / levels).clamp(0.0, 1.0);
+        for &(a, cycles, phase) in &self.inl {
+            v += a * (std::f32::consts::PI * cycles * t + phase).sin();
+        }
+        v
+    }
+
+    /// Peak INL magnitude in LSB (analytic upper bound).
+    pub fn inl_bound(&self) -> f32 {
+        self.inl.iter().map(|&(a, _, _)| a.abs()).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("gain", Json::num(self.gain as f64)),
+            ("offset", Json::num(self.offset as f64)),
+            (
+                "inl",
+                Json::Arr(
+                    self.inl
+                        .iter()
+                        .map(|&(a, c, p)| Json::f32s(&[a, c, p]))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Self> {
+        let inl = j
+            .get("inl")
+            .as_arr()?
+            .iter()
+            .filter_map(|e| {
+                let v = e.as_f32_vec()?;
+                Some((v[0], v[1], v[2]))
+            })
+            .collect();
+        Some(AdcCurve {
+            gain: j.get("gain").as_f64()? as f32,
+            offset: j.get("offset").as_f64()? as f32,
+            inl,
+        })
+    }
+}
+
+/// A bank of per-ADC curves (the chip's 32 converters).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CurveBank {
+    pub b_pim: u32,
+    pub curves: Vec<AdcCurve>,
+}
+
+/// Variation statistics. Defaults are the paper's measured values (§A2.1,
+/// Fig. A7): noise is configured separately on `ChipModel`.
+#[derive(Debug, Clone, Copy)]
+pub struct CurveStats {
+    pub gain_std: f32,
+    pub offset_std_lsb: f32,
+    /// Target peak INL in LSB (smooth non-linearity, Fig. A1's curvature).
+    pub inl_peak_lsb: f32,
+}
+
+impl Default for CurveStats {
+    fn default() -> Self {
+        // calibrated-chip regime: small residual gain/offset error, ~1 LSB INL
+        CurveStats { gain_std: 0.004, offset_std_lsb: 0.3, inl_peak_lsb: 1.0 }
+    }
+}
+
+impl CurveStats {
+    /// Pre-calibration variation measured on the real chip (Fig. A7):
+    /// offset ~ N(0, 2.04) LSB, gain ~ N(1, 0.024).
+    pub fn uncalibrated() -> Self {
+        CurveStats { gain_std: 0.024, offset_std_lsb: 2.04, inl_peak_lsb: 1.0 }
+    }
+}
+
+/// Synthesize a bank of `n` curves with the calibrated-chip statistics.
+pub fn synthesize_bank(b_pim: u32, n: usize, seed: u64) -> CurveBank {
+    synthesize_bank_with(b_pim, n, seed, CurveStats::default())
+}
+
+/// Synthesize with explicit statistics (Fig. A7 uses `uncalibrated()`).
+pub fn synthesize_bank_with(b_pim: u32, n: usize, seed: u64, st: CurveStats) -> CurveBank {
+    let mut rng = Rng::new(seed ^ 0xC0FFEE);
+    let curves = (0..n)
+        .map(|_| {
+            let n_comp = 3;
+            let mut inl = Vec::with_capacity(n_comp);
+            // distribute the peak budget across components
+            for c in 0..n_comp {
+                let amp = rng.normal_in(0.0, st.inl_peak_lsb / (n_comp as f32).sqrt() / 2.0);
+                let cycles = (c + 1) as f32 + rng.uniform_in(-0.3, 0.3);
+                let phase = rng.uniform_in(0.0, std::f32::consts::TAU);
+                inl.push((amp, cycles, phase));
+            }
+            AdcCurve {
+                gain: rng.normal_in(1.0, st.gain_std),
+                offset: rng.normal_in(0.0, st.offset_std_lsb),
+                inl,
+            }
+        })
+        .collect();
+    CurveBank { b_pim, curves }
+}
+
+impl CurveBank {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("b_pim", Json::num(self.b_pim as f64)),
+            ("curves", Json::Arr(self.curves.iter().map(|c| c.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Self> {
+        Some(CurveBank {
+            b_pim: j.get("b_pim").as_i64()? as u32,
+            curves: j
+                .get("curves")
+                .as_arr()?
+                .iter()
+                .filter_map(AdcCurve::from_json)
+                .collect(),
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        let j = crate::util::json::parse_file(path)?;
+        Self::from_json(&j).ok_or_else(|| anyhow::anyhow!("malformed curve bank"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bank_statistics_match_request() {
+        let st = CurveStats::uncalibrated();
+        let bank = synthesize_bank_with(7, 256, 42, st);
+        let gains: Vec<f32> = bank.curves.iter().map(|c| c.gain).collect();
+        let offs: Vec<f32> = bank.curves.iter().map(|c| c.offset).collect();
+        let mean = |v: &[f32]| v.iter().sum::<f32>() / v.len() as f32;
+        let std = |v: &[f32]| {
+            let m = mean(v);
+            (v.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / v.len() as f32).sqrt()
+        };
+        assert!((mean(&gains) - 1.0).abs() < 0.01, "gain mean {}", mean(&gains));
+        assert!((std(&gains) - st.gain_std).abs() < 0.008);
+        assert!(mean(&offs).abs() < 0.5);
+        assert!((std(&offs) - st.offset_std_lsb).abs() < 0.5);
+    }
+
+    #[test]
+    fn ideal_curve_is_identity() {
+        let c = AdcCurve::ideal();
+        for u in [0.0, 13.7, 127.0] {
+            assert_eq!(c.distort(u, 127.0, false), u);
+        }
+    }
+
+    #[test]
+    fn distortion_is_bounded() {
+        let bank = synthesize_bank(7, 32, 7);
+        for c in &bank.curves {
+            for i in 0..=127 {
+                let u = i as f32;
+                let d = (c.distort(u, 127.0, false) - u).abs();
+                let bound = c.inl_bound() + c.offset.abs() + (c.gain - 1.0).abs() * 127.0 + 1e-3;
+                assert!(d <= bound, "d={d} bound={bound}");
+            }
+        }
+    }
+
+    #[test]
+    fn signed_symmetric_inl() {
+        let bank = synthesize_bank(5, 1, 3);
+        let c = &bank.curves[0];
+        // INL component of distort(u) - gain*u - offset must be even in u
+        let f = |u: f32| c.distort(u, 31.0, true) - c.gain * u - c.offset;
+        assert!((f(10.0) - f(-10.0)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let bank = synthesize_bank(7, 4, 11);
+        let j = bank.to_json().to_string();
+        let back = CurveBank::from_json(&crate::util::json::parse(&j).unwrap()).unwrap();
+        assert_eq!(bank.b_pim, back.b_pim);
+        assert_eq!(bank.curves.len(), back.curves.len());
+        for (a, b) in bank.curves.iter().zip(&back.curves) {
+            assert!((a.gain - b.gain).abs() < 1e-6);
+            assert!((a.offset - b.offset).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        assert_eq!(synthesize_bank(7, 8, 5), synthesize_bank(7, 8, 5));
+        assert_ne!(synthesize_bank(7, 8, 5), synthesize_bank(7, 8, 6));
+    }
+}

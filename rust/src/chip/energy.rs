@@ -1,0 +1,100 @@
+//! Hardware energy model — regenerates Table 1 (peak TOPS/W).
+//!
+//! The digital rows are the paper's cited numbers (V100 from Mujtaba 2017,
+//! TPU from Jouppi et al. 2017, ReRAM PIM from Yao et al. 2020).  The SRAM
+//! PIM row is *modeled*: per-MAC analog energy plus ADC conversion energy
+//! amortized over the N MACs sharing one conversion, using standard
+//! mixed-signal scaling (ADC energy ~ 4^b · E_conv_unit; Murmann's survey
+//! figure-of-merit regime).  The model is calibrated so the paper's chip
+//! configuration (N = 144 shared per conversion chain, b_PIM = 7) lands at
+//! its reported 49.6 TOPS/W — and then lets the benches sweep N and b_PIM to
+//! show the efficiency/accuracy trade-off the paper discusses (larger N →
+//! more energy saving → more information loss).
+
+/// Cited peak efficiencies (TOPS/W), Table 1.
+pub const V100_TOPS_W: f64 = 0.1;
+pub const TPU_TOPS_W: f64 = 2.3;
+pub const RERAM_TOPS_W: f64 = 11.0;
+pub const SRAM_PIM_TOPS_W: f64 = 49.6;
+
+/// SRAM PIM energy model parameters (femtojoules).
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyModel {
+    /// Analog MAC energy per multiply-accumulate (fJ) — cap switching.
+    pub e_mac_fj: f64,
+    /// ADC conversion energy unit (fJ): E_adc = e_conv_unit · 4^b / 4^7,
+    /// normalized so b=7 costs e_conv_unit.
+    pub e_conv7_fj: f64,
+    /// Digital recombination (shift-add) energy per output per plane (fJ).
+    pub e_digital_fj: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        // Calibrated: pim_tops_w(N=144, b=7, planes=4) ≈ 49.6 (paper Table 1).
+        EnergyModel { e_mac_fj: 1.1, e_conv7_fj: 5590.0, e_digital_fj: 60.0 }
+    }
+}
+
+impl EnergyModel {
+    /// Energy of one full PIM inner product over N MACs with `planes`
+    /// conversions (bit-serial b_w=4, m=4 → 4 planes), in fJ.
+    pub fn inner_product_fj(&self, n: usize, b_pim: u32, planes: usize) -> f64 {
+        let e_adc = self.e_conv7_fj * 4f64.powi(b_pim as i32 - 7);
+        planes as f64 * (n as f64 * self.e_mac_fj + e_adc + self.e_digital_fj)
+    }
+
+    /// Peak efficiency in TOPS/W (1 MAC = 2 ops).
+    pub fn pim_tops_w(&self, n: usize, b_pim: u32, planes: usize) -> f64 {
+        let ops = 2.0 * (n * planes) as f64;
+        let joules = self.inner_product_fj(n, b_pim, planes) * 1e-15;
+        ops / joules * 1e-12
+    }
+}
+
+/// Table 1 rows: (hardware, TOPS/W, source).
+pub fn table1() -> Vec<(&'static str, f64, &'static str)> {
+    let m = EnergyModel::default();
+    vec![
+        ("V100 GPU", V100_TOPS_W, "cited (Mujtaba 2017)"),
+        ("TPU", TPU_TOPS_W, "cited (Jouppi et al. 2017)"),
+        ("ReRAM PIM", RERAM_TOPS_W, "cited (Yao et al. 2020)"),
+        ("SRAM PIM (ours)", m.pim_tops_w(144, 7, 4), "energy model (calibrated)"),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibrated_to_paper() {
+        let m = EnergyModel::default();
+        let eff = m.pim_tops_w(144, 7, 4);
+        assert!(
+            (eff - SRAM_PIM_TOPS_W).abs() / SRAM_PIM_TOPS_W < 0.05,
+            "model gives {eff}, paper reports {SRAM_PIM_TOPS_W}"
+        );
+    }
+
+    #[test]
+    fn larger_n_more_efficient() {
+        // §2: "a larger N brings more energy savings"
+        let m = EnergyModel::default();
+        assert!(m.pim_tops_w(144, 7, 4) > m.pim_tops_w(72, 7, 4));
+        assert!(m.pim_tops_w(72, 7, 4) > m.pim_tops_w(9, 7, 4));
+    }
+
+    #[test]
+    fn higher_resolution_less_efficient() {
+        let m = EnergyModel::default();
+        assert!(m.pim_tops_w(144, 5, 4) > m.pim_tops_w(144, 8, 4));
+    }
+
+    #[test]
+    fn pim_beats_digital_rows() {
+        let rows = table1();
+        let sram = rows.last().unwrap().1;
+        assert!(sram > RERAM_TOPS_W && sram > TPU_TOPS_W && sram > V100_TOPS_W);
+    }
+}

@@ -1,0 +1,236 @@
+//! Chip / ADC model substrate (S4): the "hardware-calibrated physical model"
+//! the paper evaluates on (§A2.1), rebuilt from its published statistics.
+//!
+//! The prototype chip in the paper has 32 ADCs whose measured transfer
+//! functions (Fig. A1) capture non-linearity and mismatch; thermal noise is
+//! Gaussian with 0.35 LSB RMS; pre-calibration gain/offset variation is
+//! gain ~ N(1, 0.024), offset ~ N(0, 2.04) LSB (Fig. A7).  We do not have
+//! the silicon, so `curves::synthesize_bank` generates a 32-curve bank with
+//! exactly those variation statistics plus smooth INL, and `ChipModel`
+//! evaluates any plane sum through curve + noise — the same role the paper's
+//! physical model plays.
+
+pub mod curves;
+pub mod energy;
+pub mod enob;
+
+pub use curves::{AdcCurve, CurveBank};
+
+
+use crate::util::rng::Rng;
+
+/// A complete PIM chip configuration for inference.
+#[derive(Debug, Clone)]
+pub struct ChipModel {
+    /// ADC resolution b_PIM; the code grid is [0, 2^b - 1].
+    pub b_pim: u32,
+    /// Thermal-noise RMS in LSB (paper's chip: 0.35).
+    pub noise_lsb: f32,
+    /// One transfer curve per physical ADC; `None` = ideal quantizer.
+    pub bank: Option<CurveBank>,
+    /// Output channels served by one ADC (paper: unit output channel of 8).
+    pub unit_out: usize,
+}
+
+impl ChipModel {
+    /// Perfectly linear, noiseless chip (training-time assumption).
+    pub fn ideal(b_pim: u32) -> Self {
+        ChipModel { b_pim, noise_lsb: 0.0, bank: None, unit_out: 8 }
+    }
+
+    /// The paper's real-chip setting: 7-bit, measured-curve bank, 0.35 LSB.
+    pub fn real(seed: u64) -> Self {
+        ChipModel {
+            b_pim: 7,
+            noise_lsb: 0.35,
+            bank: Some(curves::synthesize_bank(7, 32, seed)),
+            unit_out: 8,
+        }
+    }
+
+    pub fn with_noise(mut self, noise_lsb: f32) -> Self {
+        self.noise_lsb = noise_lsb;
+        self
+    }
+
+    pub fn levels(&self) -> f32 {
+        ((1u32 << self.b_pim) - 1) as f32
+    }
+
+    /// Which curve converts output channel `oc`.
+    pub fn curve_index(&self, oc: usize) -> usize {
+        match &self.bank {
+            Some(b) => (oc / self.unit_out) % b.curves.len(),
+            None => 0,
+        }
+    }
+
+    /// Convert one analog plane sum `s` (integer units, full-scale `fs`) to
+    /// its dequantized value (integer units).  `signed` marks native-scheme
+    /// conversions whose sums may be negative.
+    #[inline]
+    pub fn convert(&self, s: f32, fs: f32, oc: usize, signed: bool, rng: &mut Rng) -> f32 {
+        let levels = self.levels();
+        let lsb = fs / levels;
+        let mut u = s / lsb; // ideal code, continuous
+        if let Some(bank) = &self.bank {
+            u = bank.curves[self.curve_index(oc)].distort(u, levels, signed);
+        }
+        if self.noise_lsb > 0.0 {
+            u += rng.normal_in(0.0, self.noise_lsb);
+        }
+        let lo = if signed { -levels } else { 0.0 };
+        let code = round_ties_even(u).clamp(lo, levels);
+        code * lsb
+    }
+}
+
+/// A conversion context prepared once per (layer, full-scale): hoists the
+/// LSB constants and tabulates each curve's INL at integer codes (linear
+/// interpolation between samples — the INL profile is a sum of ≤3 smooth
+/// sinusoids, so sub-LSB sampling error is ~1e-3 LSB).  §Perf L3: removes
+/// the per-element sin() calls and curve-index modulo from the hot loop
+/// (~1.9× on the real-curve path, see EXPERIMENTS.md §Perf).
+pub struct Converter<'a> {
+    chip: &'a ChipModel,
+    fs: f32,
+    lsb: f32,
+    inv_lsb: f32,
+    levels: f32,
+    /// Per-curve INL table sampled at codes 0..=levels (empty when ideal).
+    inl_tables: Vec<Vec<f32>>,
+}
+
+impl<'a> Converter<'a> {
+    pub fn new(chip: &'a ChipModel, fs: f32) -> Self {
+        let levels = chip.levels();
+        let inl_tables = match &chip.bank {
+            Some(bank) => bank
+                .curves
+                .iter()
+                .map(|c| {
+                    (0..=levels as usize)
+                        .map(|u| {
+                            // INL component only (gain/offset applied exactly)
+                            let x = u as f32;
+                            c.distort(x, levels, false) - c.gain * x - c.offset
+                        })
+                        .collect()
+                })
+                .collect(),
+            None => Vec::new(),
+        };
+        Converter { chip, fs, lsb: fs / levels, inv_lsb: levels / fs, levels, inl_tables }
+    }
+
+    /// Hot-path conversion; bit-compatible with `ChipModel::convert` up to
+    /// the tabulated-INL approximation.
+    #[inline]
+    pub fn convert(&self, s: f32, oc: usize, signed: bool, rng: &mut Rng) -> f32 {
+        let mut u = s * self.inv_lsb;
+        if let Some(bank) = &self.chip.bank {
+            let ci = self.chip.curve_index(oc);
+            let c = &bank.curves[ci];
+            let t = &self.inl_tables[ci];
+            let x = u.abs().min(self.levels);
+            let i = x as usize;
+            let frac = x - i as f32;
+            let inl = if i + 1 < t.len() {
+                t[i] + (t[i + 1] - t[i]) * frac
+            } else {
+                t[t.len() - 1]
+            };
+            u = c.gain * u + c.offset + inl;
+        }
+        if self.chip.noise_lsb > 0.0 {
+            u += rng.normal_in(0.0, self.chip.noise_lsb);
+        }
+        let lo = if signed { -self.levels } else { 0.0 };
+        round_ties_even(u).clamp(lo, self.levels) * self.lsb
+    }
+
+    pub fn full_scale(&self) -> f32 {
+        self.fs
+    }
+}
+
+/// Banker's rounding, matching jnp.round / np.round so the ideal chip is
+/// bit-identical to the python forward model.
+#[inline]
+pub fn round_ties_even(x: f32) -> f32 {
+    let r = x.round(); // half-away-from-zero
+    if (x - x.trunc()).abs() == 0.5 {
+        // tie: pick the even neighbour
+        let f = x.floor();
+        if (f as i64) % 2 == 0 {
+            f
+        } else {
+            f + 1.0
+        }
+    } else {
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ties_to_even() {
+        assert_eq!(round_ties_even(0.5), 0.0);
+        assert_eq!(round_ties_even(1.5), 2.0);
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(-0.5), -0.0);
+        assert_eq!(round_ties_even(-1.5), -2.0);
+        assert_eq!(round_ties_even(1.4), 1.0);
+        assert_eq!(round_ties_even(-1.6), -2.0);
+    }
+
+    #[test]
+    fn ideal_convert_is_quantizer() {
+        let chip = ChipModel::ideal(3); // levels = 7
+        let mut rng = Rng::new(0);
+        // fs=70 → lsb=10; s=34 → code 3 (3.4 rounds to 3) → 30
+        assert_eq!(chip.convert(34.0, 70.0, 0, false, &mut rng), 30.0);
+        // exact grid point passes through
+        assert_eq!(chip.convert(50.0, 70.0, 0, false, &mut rng), 50.0);
+        // clamping at full scale
+        assert_eq!(chip.convert(80.0, 70.0, 0, false, &mut rng), 70.0);
+        // unsigned floor at 0
+        assert_eq!(chip.convert(-5.0, 70.0, 0, false, &mut rng), 0.0);
+    }
+
+    #[test]
+    fn signed_convert_for_native() {
+        let chip = ChipModel::ideal(3);
+        let mut rng = Rng::new(0);
+        assert_eq!(chip.convert(-34.0, 70.0, 0, true, &mut rng), -30.0);
+        assert_eq!(chip.convert(-90.0, 70.0, 0, true, &mut rng), -70.0);
+    }
+
+    #[test]
+    fn noise_perturbs_codes() {
+        let chip = ChipModel::ideal(7).with_noise(0.35);
+        let mut rng = Rng::new(1);
+        let mut diff = 0;
+        for i in 0..200 {
+            let s = 10.0 * i as f32;
+            let y = chip.convert(s, 2160.0, 0, false, &mut rng);
+            let y0 = ChipModel::ideal(7).convert(s, 2160.0, 0, false, &mut rng);
+            if y != y0 {
+                diff += 1;
+            }
+        }
+        assert!(diff > 20, "noise should flip some codes, flipped {diff}");
+    }
+
+    #[test]
+    fn curve_assignment_unit_out() {
+        let chip = ChipModel::real(0);
+        assert_eq!(chip.curve_index(0), 0);
+        assert_eq!(chip.curve_index(7), 0);
+        assert_eq!(chip.curve_index(8), 1);
+        assert_eq!(chip.curve_index(8 * 32), 0); // wraps around the bank
+    }
+}

@@ -1,0 +1,230 @@
+//! Config substrate (S9): experiment configuration types, presets, and
+//! `key=value` override parsing for the CLI.
+
+pub mod rescale;
+
+use std::fmt;
+use std::str::FromStr;
+
+/// PIM decomposition scheme (paper §2 / Appendix A1, Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    Native,
+    BitSerial,
+    Differential,
+}
+
+impl Scheme {
+    pub const ALL: [Scheme; 3] = [Scheme::Native, Scheme::BitSerial, Scheme::Differential];
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Scheme::Native => "native",
+            Scheme::BitSerial => "bit_serial",
+            Scheme::Differential => "differential",
+        }
+    }
+}
+
+impl FromStr for Scheme {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "native" => Ok(Scheme::Native),
+            "bit_serial" | "bitserial" | "bit-serial" => Ok(Scheme::BitSerial),
+            "differential" | "diff" => Ok(Scheme::Differential),
+            _ => Err(format!("unknown scheme {s:?}")),
+        }
+    }
+}
+
+impl fmt::Display for Scheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Training mode (Table 3 rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Mode {
+    /// PIM-QAT (this paper).
+    Ours,
+    /// Conventional QAT (Jin et al. 2020), PIM-unaware.
+    Baseline,
+    /// Rekhi et al. 2019 additive-noise AMS model.
+    Ams,
+}
+
+impl Mode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Mode::Ours => "ours",
+            Mode::Baseline => "baseline",
+            Mode::Ams => "ams",
+        }
+    }
+}
+
+impl FromStr for Mode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "ours" => Ok(Mode::Ours),
+            "baseline" => Ok(Mode::Baseline),
+            "ams" => Ok(Mode::Ams),
+            _ => Err(format!("unknown mode {s:?}")),
+        }
+    }
+}
+
+impl fmt::Display for Mode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One training job's configuration (consumed by `crate::train` and produced
+/// by presets / the coordinator's sweep grids).
+#[derive(Debug, Clone)]
+pub struct JobConfig {
+    /// Model key in the artifact manifest ("tiny", "small", ...).
+    pub model: String,
+    pub mode: Mode,
+    pub scheme: Scheme,
+    pub unit_channels: usize,
+    /// Training-time PIM resolution (adjusted-precision training trains at
+    /// a resolution ≤ the inference resolution, §3.5).
+    pub b_pim_train: u32,
+    /// Rescaling-ablation variant tag appended to the artifact name
+    /// ("", "nofwd", "norescale").
+    pub variant: String,
+    /// Override the Table-A1 forward rescale η (the paper notes the best
+    /// value is software-version dependent, §A5).
+    pub eta_override: Option<f32>,
+    pub steps: usize,
+    pub lr: f32,
+    /// LR decay milestones as fractions of `steps` (paper: 0.5, 0.75).
+    pub milestones: (f64, f64),
+    pub seed: u64,
+    /// Dataset size (synthetic corpus).
+    pub train_size: usize,
+    pub test_size: usize,
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        JobConfig {
+            model: "tiny".into(),
+            mode: Mode::Ours,
+            scheme: Scheme::BitSerial,
+            unit_channels: 8,
+            b_pim_train: 7,
+            variant: String::new(),
+            eta_override: None,
+            steps: 300,
+            lr: 0.1,
+            milestones: (0.5, 0.75),
+            seed: 0,
+            train_size: 2048,
+            test_size: 512,
+        }
+    }
+}
+
+impl JobConfig {
+    /// Artifact-set name for this job (mirrors python `artifact_tag`).
+    pub fn artifact_name(&self) -> String {
+        let base = match self.mode {
+            Mode::Ours => format!(
+                "{}_train_ours_{}_uc{}",
+                self.model, self.scheme, self.unit_channels
+            ),
+            Mode::Baseline => format!("{}_train_baseline", self.model),
+            Mode::Ams => format!("{}_train_ams", self.model),
+        };
+        if self.variant.is_empty() {
+            base
+        } else {
+            format!("{base}_{}", self.variant)
+        }
+    }
+
+    /// Apply a `key=value` override; returns Err on unknown key/bad value.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<(), String> {
+        let bad = |e: String| format!("{key}={value}: {e}");
+        match key {
+            "model" => self.model = value.to_string(),
+            "mode" => self.mode = value.parse().map_err(bad)?,
+            "scheme" => self.scheme = value.parse().map_err(bad)?,
+            "uc" | "unit_channels" => {
+                self.unit_channels = value.parse().map_err(|e| bad(format!("{e}")))?
+            }
+            "b_pim" | "b_pim_train" => {
+                self.b_pim_train = value.parse().map_err(|e| bad(format!("{e}")))?
+            }
+            "variant" => self.variant = value.to_string(),
+            "eta" => {
+                self.eta_override = Some(value.parse().map_err(|e| bad(format!("{e}")))?)
+            }
+            "steps" => self.steps = value.parse().map_err(|e| bad(format!("{e}")))?,
+            "lr" => self.lr = value.parse().map_err(|e| bad(format!("{e}")))?,
+            "seed" => self.seed = value.parse().map_err(|e| bad(format!("{e}")))?,
+            "train_size" => self.train_size = value.parse().map_err(|e| bad(format!("{e}")))?,
+            "test_size" => self.test_size = value.parse().map_err(|e| bad(format!("{e}")))?,
+            _ => return Err(format!("unknown config key {key:?}")),
+        }
+        Ok(())
+    }
+
+    /// Parse a list of `key=value` overrides.
+    pub fn apply_overrides(&mut self, kvs: &[String]) -> Result<(), String> {
+        for kv in kvs {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| format!("expected key=value, got {kv:?}"))?;
+            self.set(k.trim(), v.trim())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_roundtrip() {
+        for s in Scheme::ALL {
+            assert_eq!(s.as_str().parse::<Scheme>().unwrap(), s);
+        }
+        assert!("bogus".parse::<Scheme>().is_err());
+    }
+
+    #[test]
+    fn artifact_names() {
+        let mut j = JobConfig::default();
+        assert_eq!(j.artifact_name(), "tiny_train_ours_bit_serial_uc8");
+        j.mode = Mode::Baseline;
+        assert_eq!(j.artifact_name(), "tiny_train_baseline");
+        j.mode = Mode::Ours;
+        j.variant = "nofwd".into();
+        assert_eq!(j.artifact_name(), "tiny_train_ours_bit_serial_uc8_nofwd");
+    }
+
+    #[test]
+    fn overrides() {
+        let mut j = JobConfig::default();
+        j.apply_overrides(&[
+            "scheme=native".into(),
+            "uc=1".into(),
+            "b_pim=5".into(),
+            "steps=10".into(),
+        ])
+        .unwrap();
+        assert_eq!(j.scheme, Scheme::Native);
+        assert_eq!(j.unit_channels, 1);
+        assert_eq!(j.b_pim_train, 5);
+        assert!(j.apply_overrides(&["nope=1".into()]).is_err());
+        assert!(j.apply_overrides(&["steps".into()]).is_err());
+    }
+}

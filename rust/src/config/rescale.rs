@@ -1,0 +1,80 @@
+//! Forward-rescaling constants η (paper Table A1, §3.3).
+//!
+//! The paper states outright that the best η "can even be different for
+//! different software package versions" (§A5).  On this stack (jax 0.8 →
+//! XLA-CPU, batch 32, the scaled models) the Table-A1 magnitudes (30–1000)
+//! destabilize training at low b_PIM, while η ≈ 1 trains every scheme — so
+//! `forward_eta` returns the values *tuned for this stack*, and
+//! `paper_eta` preserves Table A1 verbatim for reference/pinning.
+//! EXPERIMENTS.md §Deviations records the calibration sweep.
+
+use super::Scheme;
+
+/// η tuned for this reproduction stack (used by the trainer).
+pub fn forward_eta(scheme: Scheme, b_pim: u32) -> f32 {
+    match scheme {
+        // bit-serial at 7 bit keeps the paper's near-unity value; everything
+        // else trains best at 1.0 here.
+        Scheme::BitSerial if b_pim == 7 => 1.03,
+        _ => 1.0,
+    }
+}
+
+/// Table A1 verbatim (the paper's GTX-1080 stack), clamped like the python
+/// mirror in `compile/rescale.py`.
+pub fn paper_eta(scheme: Scheme, b_pim: u32) -> f32 {
+    let b = b_pim.clamp(3, 31);
+    match scheme {
+        Scheme::Native => match b {
+            3 => 100.0,
+            4 => 20.0,
+            _ => 1.0,
+        },
+        Scheme::Differential => match b {
+            3..=7 => 1000.0,
+            _ => 1.0,
+        },
+        Scheme::BitSerial => match b {
+            3 => 100.0,
+            4..=6 => 30.0,
+            7 => 1.03,
+            _ => 1.0,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_table_a1_values() {
+        assert_eq!(paper_eta(Scheme::Native, 3), 100.0);
+        assert_eq!(paper_eta(Scheme::Native, 4), 20.0);
+        assert_eq!(paper_eta(Scheme::Native, 5), 1.0);
+        assert_eq!(paper_eta(Scheme::Differential, 3), 1000.0);
+        assert_eq!(paper_eta(Scheme::Differential, 7), 1000.0);
+        assert_eq!(paper_eta(Scheme::BitSerial, 3), 100.0);
+        assert_eq!(paper_eta(Scheme::BitSerial, 4), 30.0);
+        assert_eq!(paper_eta(Scheme::BitSerial, 6), 30.0);
+        assert_eq!(paper_eta(Scheme::BitSerial, 7), 1.03);
+    }
+
+    #[test]
+    fn tuned_values_near_unity() {
+        for s in Scheme::ALL {
+            for b in 3..=10 {
+                let eta = forward_eta(s, b);
+                assert!((0.5..=2.0).contains(&eta), "{s} b{b}: {eta}");
+            }
+        }
+        assert_eq!(forward_eta(Scheme::BitSerial, 7), 1.03);
+    }
+
+    #[test]
+    fn paper_extremes() {
+        assert_eq!(paper_eta(Scheme::BitSerial, 10), 1.0);
+        assert_eq!(paper_eta(Scheme::BitSerial, 2), 100.0);
+        assert_eq!(paper_eta(Scheme::Differential, 8), 1.0);
+    }
+}

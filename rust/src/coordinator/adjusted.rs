@@ -1,0 +1,111 @@
+//! Adjusted-precision training search (§3.5, Fig. 4).
+//!
+//! For a target inference chip (resolution, noise), train candidate models
+//! at training resolutions around the chip's ENOB and pick the best
+//! chip-evaluated accuracy (with BN calibration, as the paper evaluates).
+
+use anyhow::Result;
+
+use crate::chip::{enob, ChipModel};
+use crate::config::JobConfig;
+use crate::nn::ExecSpec;
+use crate::train::network_from_ckpt;
+use crate::util::rng::Rng;
+
+use super::sweep::SweepRunner;
+
+/// One candidate's result.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub train_resolution: u32,
+    pub chip_acc: f64,
+}
+
+/// Search result for one (inference resolution, noise) cell of Fig. 4.
+#[derive(Debug, Clone)]
+pub struct AdjustedResult {
+    pub b_pim_infer: u32,
+    pub noise_lsb: f32,
+    pub enob_suggestion: u32,
+    pub candidates: Vec<Candidate>,
+}
+
+impl AdjustedResult {
+    pub fn best(&self) -> &Candidate {
+        self.candidates
+            .iter()
+            .max_by(|a, b| a.chip_acc.partial_cmp(&b.chip_acc).unwrap())
+            .expect("at least one candidate")
+    }
+}
+
+/// Candidate training resolutions for a chip: the ENOB suggestion, the
+/// inference resolution itself, and one below the suggestion (deduped,
+/// clamped to [3, b_pim]).
+pub fn candidate_resolutions(b_pim_infer: u32, noise_lsb: f32) -> Vec<u32> {
+    let sug = enob::suggested_training_resolution(b_pim_infer, noise_lsb);
+    let mut cands = vec![b_pim_infer, sug];
+    if sug < b_pim_infer {
+        // noise already reduced the ENOB — also probe one step lower
+        cands.push(sug.saturating_sub(1));
+    }
+    cands.retain(|&c| (3..=b_pim_infer).contains(&c));
+    cands.sort_unstable();
+    cands.dedup();
+    cands
+}
+
+/// Run the search for one Fig. 4 cell.
+pub fn search(
+    runner: &mut SweepRunner,
+    base: &JobConfig,
+    b_pim_infer: u32,
+    noise_lsb: f32,
+    calib_batches: usize,
+) -> Result<AdjustedResult> {
+    let sug = enob::suggested_training_resolution(b_pim_infer, noise_lsb);
+    let mut candidates = Vec::new();
+    for tr in candidate_resolutions(b_pim_infer, noise_lsb) {
+        let mut job = base.clone();
+        job.b_pim_train = tr;
+        let outcome = runner.run(&job)?;
+        // evaluate on the target chip with BN calibration (§3.4)
+        let chip = ChipModel::ideal(b_pim_infer).with_noise(noise_lsb);
+        let exec = ExecSpec::Pim {
+            scheme: job.scheme,
+            unit_channels: job.unit_channels,
+            chip: &chip,
+        };
+        let mut net = network_from_ckpt(runner.rt, &outcome.ckpt)?;
+        let (train_ds, test_ds) = {
+            let pair = runner.datasets(&job)?;
+            (pair.0.clone(), pair.1.clone())
+        };
+        let mut rng = Rng::new(0xADAB ^ tr as u64);
+        net.calibrate_bn(&train_ds, 32, calib_batches, &exec, &mut rng)?;
+        let acc = net.evaluate(&test_ds, 32, &exec, &mut rng)?;
+        candidates.push(Candidate { train_resolution: tr, chip_acc: acc });
+    }
+    Ok(AdjustedResult { b_pim_infer, noise_lsb, enob_suggestion: sug, candidates })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidates_sane() {
+        let c = candidate_resolutions(7, 0.0);
+        assert_eq!(c, vec![7]); // no noise → train at inference resolution
+        let c = candidate_resolutions(7, 2.0);
+        assert!(c.contains(&7));
+        assert!(c.iter().all(|&t| (3..=7).contains(&t)));
+        assert!(c.len() >= 2, "heavy noise must propose a lower resolution");
+    }
+
+    #[test]
+    fn candidates_low_resolution() {
+        let c = candidate_resolutions(3, 5.0);
+        assert_eq!(c, vec![3]);
+    }
+}

@@ -1,0 +1,213 @@
+//! Sweep runner: deterministic job queue + checkpoint cache.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::JobConfig;
+use crate::data::Dataset;
+use crate::runtime::Runtime;
+use crate::train::{self, Checkpoint, StepLog};
+
+/// Result of one job (trained or loaded from cache).
+pub struct JobOutcome {
+    pub job: JobConfig,
+    pub ckpt: Checkpoint,
+    pub software_acc: f64,
+    pub history: Vec<StepLog>,
+    pub cached: bool,
+    pub wall_s: f64,
+}
+
+/// Cache key: every field that changes the trained weights.
+pub fn fingerprint(job: &JobConfig) -> String {
+    let eta = job
+        .eta_override
+        .map(|e| format!("_eta{e}"))
+        .unwrap_or_default();
+    format!(
+        "{}_b{}_st{}_lr{}_seed{}_n{}{eta}",
+        job.artifact_name(),
+        job.b_pim_train,
+        job.steps,
+        job.lr,
+        job.seed,
+        job.train_size,
+    )
+}
+
+/// Runs jobs sequentially with dataset + checkpoint caching.
+pub struct SweepRunner<'a> {
+    pub rt: &'a Runtime,
+    pub ckpt_root: PathBuf,
+    pub verbose: bool,
+    datasets: HashMap<(usize, usize, usize, usize, u64), (Dataset, Dataset)>,
+}
+
+impl<'a> SweepRunner<'a> {
+    pub fn new(rt: &'a Runtime) -> Self {
+        let root = std::env::var_os("PIM_QAT_CKPTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("results/ckpts"));
+        SweepRunner { rt, ckpt_root: root, verbose: true, datasets: HashMap::new() }
+    }
+
+    /// Datasets are derived from the model geometry; cached per geometry.
+    pub fn datasets(&mut self, job: &JobConfig) -> Result<&(Dataset, Dataset)> {
+        let e = self.rt.manifest.model(&job.model)?;
+        let key = (e.image, e.classes, job.train_size, job.test_size, job.seed);
+        if !self.datasets.contains_key(&key) {
+            let pair = crate::data::load_default(
+                e.image,
+                e.classes,
+                job.train_size,
+                job.test_size,
+                0xDA7A ^ job.seed,
+            );
+            self.datasets.insert(key, pair);
+        }
+        Ok(self.datasets.get(&key).unwrap())
+    }
+
+    /// Train (or load from cache) one job.
+    pub fn run(&mut self, job: &JobConfig) -> Result<JobOutcome> {
+        let fp = fingerprint(job);
+        let dir = self.ckpt_root.join(&fp);
+        let t0 = Instant::now();
+        if dir.join("ckpt.json").exists() {
+            if let Ok(ckpt) = Checkpoint::load(&dir) {
+                let software_acc = ckpt
+                    .meta
+                    .get("software_acc")
+                    .and_then(|s| s.parse::<f64>().ok())
+                    .unwrap_or(f64::NAN);
+                if self.verbose {
+                    println!("[sweep] {fp}: cached (software {software_acc:.1}%)");
+                }
+                return Ok(JobOutcome {
+                    job: job.clone(),
+                    ckpt,
+                    software_acc,
+                    history: Vec::new(),
+                    cached: true,
+                    wall_s: 0.0,
+                });
+            }
+        }
+        let (train_ds, test_ds) = {
+            let pair = self.datasets(job)?;
+            (pair.0.clone(), pair.1.clone())
+        };
+        if self.verbose {
+            println!("[sweep] {fp}: training {} steps ...", job.steps);
+        }
+        let mut res = train::run_job(self.rt, job, &train_ds, &test_ds, 10)?;
+        res.ckpt
+            .meta
+            .insert("software_acc".into(), format!("{:.4}", res.software_acc));
+        res.ckpt.save(&dir)?;
+        let wall = t0.elapsed().as_secs_f64();
+        if self.verbose {
+            let last = res.history.last().map(|l| l.loss).unwrap_or(f32::NAN);
+            println!(
+                "[sweep] {fp}: done in {wall:.1}s, final loss {last:.3}, software {:.1}%",
+                res.software_acc
+            );
+        }
+        Ok(JobOutcome {
+            job: job.clone(),
+            ckpt: res.ckpt,
+            software_acc: res.software_acc,
+            history: res.history,
+            cached: false,
+            wall_s: wall,
+        })
+    }
+
+    /// Run a whole grid; failures are reported inline, not fatal.
+    pub fn run_all(&mut self, jobs: &[JobConfig]) -> Vec<Result<JobOutcome>> {
+        jobs.iter()
+            .enumerate()
+            .map(|(i, j)| {
+                if self.verbose {
+                    println!("[sweep] job {}/{}", i + 1, jobs.len());
+                }
+                self.run(j)
+            })
+            .collect()
+    }
+}
+
+/// Parse a sweep grid spec like
+/// `"b_pim=3,4,5;scheme=native,bit_serial;mode=ours,baseline"` into the
+/// cartesian product of job configs over a base config.
+pub fn parse_grid(base: &JobConfig, spec: &str) -> Result<Vec<JobConfig>, String> {
+    let mut axes: Vec<(String, Vec<String>)> = Vec::new();
+    for part in spec.split(';').filter(|s| !s.trim().is_empty()) {
+        let (key, vals) = part
+            .split_once('=')
+            .ok_or_else(|| format!("bad grid axis {part:?}"))?;
+        let vals: Vec<String> = if vals.contains("..") {
+            let (a, b) = vals.split_once("..").unwrap();
+            let a: i64 = a.trim().parse().map_err(|e| format!("{e}"))?;
+            let b: i64 = b.trim().parse().map_err(|e| format!("{e}"))?;
+            (a..=b).map(|v| v.to_string()).collect()
+        } else {
+            vals.split(',').map(|v| v.trim().to_string()).collect()
+        };
+        axes.push((key.trim().to_string(), vals));
+    }
+    let mut jobs = vec![base.clone()];
+    for (key, vals) in axes {
+        let mut next = Vec::with_capacity(jobs.len() * vals.len());
+        for j in &jobs {
+            for v in &vals {
+                let mut nj = j.clone();
+                nj.set(&key, v)?;
+                next.push(nj);
+            }
+        }
+        jobs = next;
+    }
+    Ok(jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_distinguishes_jobs() {
+        let a = JobConfig::default();
+        let mut b = a.clone();
+        b.b_pim_train = 5;
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+        let mut c = a.clone();
+        c.seed = 1;
+        assert_ne!(fingerprint(&a), fingerprint(&c));
+    }
+
+    #[test]
+    fn grid_cartesian_product() {
+        let base = JobConfig::default();
+        let jobs = parse_grid(&base, "b_pim=3,5,7;mode=ours,baseline").unwrap();
+        assert_eq!(jobs.len(), 6);
+        assert_eq!(jobs[0].b_pim_train, 3);
+        assert_eq!(jobs[5].b_pim_train, 7);
+        assert_eq!(jobs[5].mode, crate::config::Mode::Baseline);
+    }
+
+    #[test]
+    fn grid_range_syntax() {
+        let jobs = parse_grid(&JobConfig::default(), "b_pim=3..7").unwrap();
+        assert_eq!(jobs.len(), 5);
+    }
+
+    #[test]
+    fn grid_rejects_bad_axis() {
+        assert!(parse_grid(&JobConfig::default(), "nope=1").is_err());
+        assert!(parse_grid(&JobConfig::default(), "b_pim").is_err());
+    }
+}

@@ -1,0 +1,103 @@
+//! Real CIFAR-10 loader (binary version 1 format).
+//!
+//! Used automatically by `data::load_default` when
+//! `data/cifar-10-batches-bin/` exists — the reproduction then runs on the
+//! paper's actual dataset.  Each record is 1 label byte + 3072 CHW pixel
+//! bytes; we convert to NHWC f32 in [0,1].
+
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use super::Dataset;
+use crate::tensor::Tensor;
+
+const REC: usize = 1 + 3 * 32 * 32;
+
+fn load_file(path: &Path, images: &mut Vec<Tensor>, labels: &mut Vec<i32>) -> Result<()> {
+    let bytes = std::fs::read(path)?;
+    if bytes.len() % REC != 0 {
+        return Err(anyhow!("{}: size {} not a multiple of {REC}", path.display(), bytes.len()));
+    }
+    for rec in bytes.chunks_exact(REC) {
+        let label = rec[0] as i32;
+        if !(0..10).contains(&label) {
+            return Err(anyhow!("bad label {label}"));
+        }
+        let mut img = Tensor::zeros(&[32, 32, 3]);
+        // file is CHW (R plane, G plane, B plane)
+        for c in 0..3 {
+            for y in 0..32 {
+                for x in 0..32 {
+                    img.data[(y * 32 + x) * 3 + c] =
+                        rec[1 + c * 1024 + y * 32 + x] as f32 / 255.0;
+                }
+            }
+        }
+        images.push(img);
+        labels.push(label);
+    }
+    Ok(())
+}
+
+/// Load (train, test) from a cifar-10-batches-bin directory.
+pub fn load_cifar10(dir: &Path) -> Result<(Dataset, Dataset)> {
+    let mut tr_img = Vec::new();
+    let mut tr_lab = Vec::new();
+    for i in 1..=5 {
+        load_file(&dir.join(format!("data_batch_{i}.bin")), &mut tr_img, &mut tr_lab)?;
+    }
+    let mut te_img = Vec::new();
+    let mut te_lab = Vec::new();
+    load_file(&dir.join("test_batch.bin"), &mut te_img, &mut te_lab)?;
+    Ok((
+        Dataset { images: tr_img, labels: tr_lab, classes: 10 },
+        Dataset { images: te_img, labels: te_lab, classes: 10 },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_synthetic_record() {
+        let dir = std::env::temp_dir().join("pimqat_cifar_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rec = vec![0u8; REC * 2];
+        rec[0] = 3; // label
+        rec[1] = 255; // R(0,0)
+        rec[REC] = 9;
+        rec[REC + 1 + 2048] = 128; // B(0,0) of second record
+        for i in 1..=5 {
+            std::fs::write(dir.join(format!("data_batch_{i}.bin")), &rec).unwrap();
+        }
+        std::fs::write(dir.join("test_batch.bin"), &rec).unwrap();
+        let (tr, te) = load_cifar10(&dir).unwrap();
+        assert_eq!(tr.len(), 10);
+        assert_eq!(te.len(), 2);
+        assert_eq!(tr.labels[0], 3);
+        assert_eq!(tr.labels[1], 9);
+        assert!((tr.images[0].at4_free(0, 0, 0) - 1.0).abs() < 1e-6);
+        assert!((te.images[1].at4_free(0, 0, 2) - 128.0 / 255.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let dir = std::env::temp_dir().join("pimqat_cifar_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        for i in 1..=5 {
+            std::fs::write(dir.join(format!("data_batch_{i}.bin")), [0u8; 100]).unwrap();
+        }
+        std::fs::write(dir.join("test_batch.bin"), [0u8; 100]).unwrap();
+        assert!(load_cifar10(&dir).is_err());
+    }
+}
+
+#[cfg(test)]
+impl Tensor {
+    /// 3-D HWC accessor used only by the tests above.
+    fn at4_free(&self, h: usize, w: usize, c: usize) -> f32 {
+        self.data[(h * self.shape[1] + w) * self.shape[2] + c]
+    }
+}

@@ -1,0 +1,189 @@
+//! Dataset substrate (S6).
+//!
+//! The paper trains on CIFAR10/100; this testbed has no network access, so
+//! the default corpus is **synth-CIFAR**: a deterministic class-conditional
+//! image distribution (per-class smooth random Fourier templates + instance
+//! jitter, shift, flip and pixel noise) that a small CNN must genuinely
+//! learn (non-linearly separable, ~% accuracy tracks capacity) while staying
+//! cheap.  If a real CIFAR-10 binary set is present at `data/cifar-10-
+//! batches-bin`, it is used instead (same API).  See DESIGN.md
+//! §Substitutions.
+
+pub mod cifar;
+pub mod synth;
+
+use crate::tensor::Tensor;
+
+/// A labeled image batch, NHWC in [0,1].
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Tensor,
+    pub y: Vec<i32>,
+}
+
+/// An in-memory dataset of images [N,H,W,C] + labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub images: Vec<Tensor>,
+    pub labels: Vec<i32>,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+
+    /// Assemble a batch from indices, optionally with train-time
+    /// augmentation (random crop with 2px pad + horizontal flip — §A2.1
+    /// scaled to the small image).
+    pub fn batch(
+        &self,
+        idx: &[usize],
+        augment: bool,
+        rng: &mut crate::util::rng::Rng,
+    ) -> Batch {
+        let (h, w, c) = {
+            let s = &self.images[0].shape;
+            (s[0], s[1], s[2])
+        };
+        let mut x = Tensor::zeros(&[idx.len(), h, w, c]);
+        let mut y = Vec::with_capacity(idx.len());
+        for (bi, &i) in idx.iter().enumerate() {
+            let img = if augment {
+                augment_image(&self.images[i], rng)
+            } else {
+                self.images[i].clone()
+            };
+            let dst = &mut x.data[bi * h * w * c..(bi + 1) * h * w * c];
+            dst.copy_from_slice(&img.data);
+            y.push(self.labels[i]);
+        }
+        Batch { x, y }
+    }
+}
+
+/// Random crop (pad 2, shift), mirroring the paper's CIFAR augmentation at
+/// this image size.  NOTE: unlike CIFAR objects, the synthetic plaid
+/// classes are *not* mirror-invariant, so horizontal flips would relabel
+/// inputs inconsistently and poison training — flips are applied only when
+/// `flip` is requested (real-CIFAR path).
+pub fn augment_image(img: &Tensor, rng: &mut crate::util::rng::Rng) -> Tensor {
+    augment_image_opts(img, rng, false)
+}
+
+/// Augmentation with explicit flip control.
+pub fn augment_image_opts(
+    img: &Tensor,
+    rng: &mut crate::util::rng::Rng,
+    allow_flip: bool,
+) -> Tensor {
+    let (h, w, c) = (img.shape[0], img.shape[1], img.shape[2]);
+    let pad = 2usize;
+    let dy = rng.below(2 * pad + 1) as isize - pad as isize;
+    let dx = rng.below(2 * pad + 1) as isize - pad as isize;
+    let flip = allow_flip && rng.below(2) == 1;
+    let mut out = Tensor::zeros(&[h, w, c]);
+    for y in 0..h {
+        for x in 0..w {
+            let sy = y as isize + dy;
+            let sx = x as isize + dx;
+            if sy < 0 || sy >= h as isize || sx < 0 || sx >= w as isize {
+                continue;
+            }
+            let sx = if flip { w - 1 - sx as usize } else { sx as usize };
+            for ci in 0..c {
+                out.data[(y * w + x) * c + ci] = img.data[((sy as usize) * w + sx) * c + ci];
+            }
+        }
+    }
+    out
+}
+
+/// Epoch iterator: shuffled full batches of size `bs` (drops the ragged
+/// tail, like the training loader in the paper's setup).
+pub struct EpochIter {
+    order: Vec<usize>,
+    pos: usize,
+    bs: usize,
+}
+
+impl EpochIter {
+    pub fn new(n: usize, bs: usize, rng: &mut crate::util::rng::Rng) -> Self {
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        EpochIter { order, pos: 0, bs }
+    }
+
+    pub fn next_indices(&mut self) -> Option<&[usize]> {
+        if self.pos + self.bs > self.order.len() {
+            return None;
+        }
+        let s = &self.order[self.pos..self.pos + self.bs];
+        self.pos += self.bs;
+        Some(s)
+    }
+}
+
+/// Load the configured dataset: real CIFAR-10 when present, else synthetic.
+pub fn load_default(
+    image: usize,
+    classes: usize,
+    train_size: usize,
+    test_size: usize,
+    seed: u64,
+) -> (Dataset, Dataset) {
+    if classes == 10 && image == 32 {
+        if let Ok(ds) = cifar::load_cifar10(std::path::Path::new("data/cifar-10-batches-bin")) {
+            return ds;
+        }
+    }
+    (
+        synth::generate(image, classes, train_size, seed),
+        synth::generate(image, classes, test_size, seed ^ 0x5EED_7E57),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn batch_assembly() {
+        let ds = synth::generate(8, 4, 16, 0);
+        let mut rng = Rng::new(0);
+        let b = ds.batch(&[0, 3, 5], false, &mut rng);
+        assert_eq!(b.x.shape, vec![3, 8, 8, 3]);
+        assert_eq!(b.y.len(), 3);
+        assert_eq!(b.y[0], ds.labels[0]);
+    }
+
+    #[test]
+    fn augment_preserves_range_and_shape() {
+        let ds = synth::generate(8, 2, 4, 1);
+        let mut rng = Rng::new(2);
+        let a = augment_image(&ds.images[0], &mut rng);
+        assert_eq!(a.shape, ds.images[0].shape);
+        assert!(a.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn epoch_iter_covers_everything_once() {
+        let mut rng = Rng::new(3);
+        let mut it = EpochIter::new(10, 3, &mut rng);
+        let mut seen = Vec::new();
+        while let Some(ix) = it.next_indices() {
+            seen.extend_from_slice(ix);
+        }
+        assert_eq!(seen.len(), 9); // ragged tail dropped
+        let mut uniq = seen.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seen.len());
+    }
+}

@@ -1,0 +1,180 @@
+//! synth-CIFAR: deterministic class-conditional image corpus.
+//!
+//! All classes share one global pool of 2-D sinusoidal plaid components;
+//! a class is defined by its *mixing signs* over that pool.  Every class
+//! therefore has the same marginal spectrum — a classifier has to detect
+//! relative phase relationships, not just dominant frequencies — which
+//! keeps the task capacity/training-limited (like CIFAR at small scale)
+//! while remaining cheap and fully deterministic.  Instances get a random
+//! translation, per-component amplitude jitter, and pixel noise.
+//!
+//! `seed` controls only instance sampling; the component pool and class
+//! mixings are fixed global properties, so train/test splits drawn with
+//! different seeds share class definitions.  See DESIGN.md §Substitutions.
+
+use super::Dataset;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+const TEMPLATE_SEED: u64 = 0xC1A5_5E5;
+
+/// Pool size grows with class count so distinct sign patterns exist
+/// (2^{pool-1} usable signatures after negation-aliasing).
+fn pool_size(classes: usize) -> usize {
+    let mut p = 6usize;
+    while (1usize << (p - 1)) < 2 * classes {
+        p += 1;
+    }
+    p
+}
+
+/// Plaid component: frequency vector + per-channel phase.
+#[derive(Debug, Clone)]
+struct Plaid {
+    fx: f32,
+    fy: f32,
+    phase: [f32; 3],
+}
+
+fn component_pool(pool: usize) -> Vec<Plaid> {
+    let mut rng = Rng::new(TEMPLATE_SEED);
+    (0..pool)
+        .map(|_| {
+            let f = rng.uniform_in(1.0, 3.5);
+            let theta = rng.uniform_in(0.0, std::f32::consts::PI);
+            Plaid {
+                fx: f * theta.cos(),
+                fy: f * theta.sin(),
+                phase: [
+                    rng.uniform_in(0.0, std::f32::consts::TAU),
+                    rng.uniform_in(0.0, std::f32::consts::TAU),
+                    rng.uniform_in(0.0, std::f32::consts::TAU),
+                ],
+            }
+        })
+        .collect()
+}
+
+/// Class mixing signs over the pool: entries in {-1, +1} (never 0, so all
+/// classes carry energy in every component — only relative signs differ).
+fn class_mixing(classes: usize, pool: usize) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(TEMPLATE_SEED ^ 0xBEEF);
+    let mut seen: Vec<Vec<f32>> = Vec::new();
+    while seen.len() < classes {
+        let cand: Vec<f32> = (0..pool)
+            .map(|_| if rng.below(2) == 0 { -1.0 } else { 1.0 })
+            .collect();
+        // ensure distinct class signatures (and not the global negation of
+        // an existing one, which translation could alias)
+        let neg: Vec<f32> = cand.iter().map(|v| -v).collect();
+        if !seen.contains(&cand) && !seen.contains(&neg) {
+            seen.push(cand);
+        }
+    }
+    seen
+}
+
+/// Generate `n` samples of `classes` classes at `image`×`image`×3.
+pub fn generate(image: usize, classes: usize, n: usize, seed: u64) -> Dataset {
+    let psize = pool_size(classes);
+    let pool = component_pool(psize);
+    let mixing = class_mixing(classes, psize);
+    let mut rng = Rng::new(seed);
+    let mut images = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    let tau = std::f32::consts::TAU;
+    let amp = 0.13f32;
+    for i in 0..n {
+        let class = i % classes; // balanced
+        let shift_x = rng.uniform_in(0.0, 0.45);
+        let shift_y = rng.uniform_in(0.0, 0.45);
+        let jit: Vec<f32> = (0..psize).map(|_| rng.uniform_in(0.75, 1.25)).collect();
+        let noise = 0.16f32;
+        let mut img = Tensor::zeros(&[image, image, 3]);
+        for y in 0..image {
+            for x in 0..image {
+                let u = x as f32 / image as f32 + shift_x;
+                let v = y as f32 / image as f32 + shift_y;
+                for ch in 0..3 {
+                    let mut val = 0.5;
+                    for (p, plaid) in pool.iter().enumerate() {
+                        val += mixing[class][p]
+                            * jit[p]
+                            * amp
+                            * (tau * (plaid.fx * u + plaid.fy * v) + plaid.phase[ch]).sin();
+                    }
+                    val += rng.normal_in(0.0, noise);
+                    img.data[(y * image + x) * 3 + ch] = val.clamp(0.0, 1.0);
+                }
+            }
+        }
+        images.push(img);
+        labels.push(class as i32);
+    }
+    Dataset { images, labels, classes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = generate(8, 4, 8, 7);
+        let b = generate(8, 4, 8, 7);
+        for (x, y) in a.images.iter().zip(&b.images) {
+            assert_eq!(x.data, y.data);
+        }
+    }
+
+    #[test]
+    fn train_test_share_class_definitions() {
+        // same class, different seeds → images correlate above cross-class
+        let a = generate(16, 4, 40, 1);
+        let b = generate(16, 4, 40, 2);
+        let mean = |c: usize, ds: &Dataset| -> Vec<f32> {
+            let dim = ds.images[0].len();
+            let mut m = vec![0.0f32; dim];
+            let mut cnt = 0;
+            for (img, &l) in ds.images.iter().zip(&ds.labels) {
+                if l as usize == c {
+                    for (mi, &v) in m.iter_mut().zip(&img.data) {
+                        *mi += v;
+                    }
+                    cnt += 1;
+                }
+            }
+            m.iter().map(|v| v / cnt as f32).collect()
+        };
+        let dist = |x: &[f32], y: &[f32]| -> f32 {
+            x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum()
+        };
+        let same = dist(&mean(0, &a), &mean(0, &b));
+        let cross = dist(&mean(0, &a), &mean(1, &b));
+        assert!(same < cross, "same-class {same} should beat cross-class {cross}");
+    }
+
+    #[test]
+    fn balanced_labels() {
+        let ds = generate(8, 5, 50, 1);
+        for c in 0..5 {
+            assert_eq!(ds.labels.iter().filter(|&&l| l == c).count(), 10);
+        }
+    }
+
+    #[test]
+    fn values_in_unit_range() {
+        let ds = generate(16, 10, 20, 2);
+        for img in &ds.images {
+            assert!(img.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+    }
+
+    #[test]
+    fn supports_100_classes() {
+        let ds = generate(8, 100, 200, 3);
+        assert_eq!(ds.classes, 100);
+        let uniq: std::collections::BTreeSet<i32> = ds.labels.iter().cloned().collect();
+        assert_eq!(uniq.len(), 100);
+    }
+}

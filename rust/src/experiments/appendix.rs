@@ -1,0 +1,205 @@
+//! Appendix experiments: Table A2/Fig A4 (idealized bit-serial resolution
+//! sweep), Table A3/Fig A5 (rescaling ablation), Fig A6 (BN calibration
+//! ablation), Table A4/Fig A7 (gain & offset variation).
+
+use anyhow::Result;
+
+use crate::chip::curves::{synthesize_bank_with, CurveStats};
+use crate::chip::ChipModel;
+use crate::config::Scheme;
+use crate::coordinator::SweepRunner;
+use crate::report::{pct, Report};
+
+use super::common::{self, Scale};
+
+/// Table A2 / Fig. A4: ideal noiseless bit-serial PIM, b_PIM ∈ 3..10,
+/// baseline vs ours (no BN calibration, no noise — pure PIM-QAT effect).
+pub fn table_a2(runner: &mut SweepRunner, scale: Scale) -> Result<Report> {
+    let mut r = Report::new(
+        "tableA2",
+        "Idealized bit-serial PIM: baseline vs ours (paper Table A2)",
+        &["b_PIM", "Baseline", "Ours", "Paper (base/ours)"],
+    );
+    let paper: &[(u32, f64, f64)] = &[
+        (3, 10.0, 61.8),
+        (4, 10.2, 77.2),
+        (5, 11.0, 86.5),
+        (6, 41.1, 89.5),
+        (7, 85.8, 90.8),
+        (8, 90.3, 90.8),
+        (9, 91.2, 90.8),
+        (10, 91.6, 90.8),
+    ];
+    let grid: Vec<u32> = match scale {
+        Scale::Quick => vec![3, 5, 7, 9],
+        Scale::Full => paper.iter().map(|p| p.0).collect(),
+    };
+    let baseline = runner.run(&common::baseline_job("tiny", scale))?;
+    let n_test = scale.chip_test_size();
+    for &(b, pb, po) in paper.iter().filter(|p| grid.contains(&p.0)) {
+        let chip = ChipModel::ideal(b);
+        let acc_b = common::chip_eval(
+            runner, &baseline, Scheme::BitSerial, 8, &chip, false, 0, n_test,
+        )?;
+        let ours = runner.run(&common::ours_job("tiny", Scheme::BitSerial, 8, b, scale))?;
+        let acc_o =
+            common::chip_eval(runner, &ours, Scheme::BitSerial, 8, &chip, false, 0, n_test)?;
+        r.row(vec![b.to_string(), pct(acc_b), pct(acc_o), format!("{pb}/{po}")]);
+    }
+    r.note("shape: ours >> baseline below ~8 bits; baseline catches up (and may edge ahead) at 9-10 bits where PIM quantization is nearly lossless");
+    Ok(r)
+}
+
+/// Table A3 / Fig. A5: rescaling ablation — fwd/bwd rescaling on/off for
+/// bit-serial PIM-QAT.  (N/Y and Y/Y artifacts exist as lowered variants;
+/// N/N is `norescale`.)
+pub fn table_a3(runner: &mut SweepRunner, scale: Scale) -> Result<Report> {
+    let mut r = Report::new(
+        "tableA3",
+        "Rescaling ablation, bit-serial (paper Table A3)",
+        &["b_PIM", "Fwd", "Bwd", "Acc.", "Paper"],
+    );
+    let paper: &[(u32, [f64; 3])] = &[
+        (3, [10.0, 17.1, 61.8]),
+        (5, [10.3, 17.5, 86.5]),
+        (7, [88.8, 91.0, 90.8]),
+    ];
+    let grid: Vec<u32> = match scale {
+        Scale::Quick => vec![3, 7],
+        Scale::Full => vec![3, 5, 7],
+    };
+    let n_test = scale.chip_test_size();
+    for &(b, prow) in paper.iter().filter(|p| grid.contains(&p.0)) {
+        for (variant, fwd, bwd, pi) in
+            [("norescale", "N", "N", 0usize), ("nofwd", "N", "Y", 1), ("", "Y", "Y", 2)]
+        {
+            let mut job = common::ours_job("tiny", Scheme::BitSerial, 8, b, scale);
+            job.variant = variant.into();
+            let out = runner.run(&job)?;
+            let chip = ChipModel::ideal(b);
+            let acc = common::chip_eval(
+                runner, &out, Scheme::BitSerial, 8, &chip, false, 0, n_test,
+            )?;
+            r.row(vec![
+                b.to_string(),
+                fwd.into(),
+                bwd.into(),
+                pct(acc),
+                pct(prow[pi]),
+            ]);
+        }
+    }
+    r.note("shape: at low b_PIM training without rescaling is unstable (accuracy near chance); both techniques together recover it (paper Table A3 / Fig. A5)");
+    Ok(r)
+}
+
+/// Fig. A6: BN-calibration ablation on 7-bit ideal and real chips, for both
+/// the baseline and ours.
+pub fn fig_a6(runner: &mut SweepRunner, scale: Scale) -> Result<Report> {
+    let mut r = Report::new(
+        "figA6",
+        "BN calibration ablation, 7-bit bit-serial (paper Fig. A6)",
+        &["chip", "Method", "no calib", "with calib"],
+    );
+    let n_test = scale.chip_test_size();
+    let cb = scale.calib_batches();
+    // ENOB-matched chip resolution (see table4 / EXPERIMENTS.md §Deviations):
+    // the scaled models need a 4-bit chip to sit in the paper's 7-bit regime.
+    let b = 4u32;
+    let baseline = runner.run(&common::baseline_job("tiny", scale))?;
+    let ours = runner.run(&common::ours_job("tiny", Scheme::BitSerial, 8, b, scale))?;
+    let real = ChipModel {
+        b_pim: b,
+        noise_lsb: 0.35,
+        bank: Some(crate::chip::curves::synthesize_bank(b, 32, 0xC819)),
+        unit_out: 8,
+    };
+    for (label, chip) in [
+        ("ideal 4b + noise 0.35", ChipModel::ideal(b).with_noise(0.35)),
+        ("real curves (4b) + noise 0.35", real),
+    ] {
+        for (m, out) in [("Baseline", &baseline), ("Ours", &ours)] {
+            let acc0 = common::chip_eval(
+                runner, out, Scheme::BitSerial, 8, &chip, false, 0, n_test,
+            )?;
+            let acc1 = common::chip_eval(
+                runner, out, Scheme::BitSerial, 8, &chip, true, cb, n_test,
+            )?;
+            r.row(vec![label.into(), m.into(), pct(acc0), pct(acc1)]);
+        }
+    }
+    r.note("shape: calibration helps everywhere, most dramatically on the real chip; the calibrated baseline still trails ours by a wide margin (paper Fig. A6)");
+    Ok(r)
+}
+
+/// Table A4 / Fig. A7: idealized 7-bit curves with pre-calibration gain &
+/// offset variation (gain ~ N(1, 0.024), offset ~ N(0, 2.04) LSB) — BN
+/// calibration repairs the collapse without hardware trimming.
+pub fn table_a4(runner: &mut SweepRunner, scale: Scale) -> Result<Report> {
+    let mut r = Report::new(
+        "tableA4",
+        "Gain & offset variation + BN calibration (paper Table A4)",
+        &["Model", "N", "G&O var.", "BN calib", "Acc.", "Paper"],
+    );
+    let n_test = scale.chip_test_size();
+    let cb = scale.calib_batches();
+    // variation-only curve bank: gain/offset from the paper's Fig. A7, no INL
+    // ENOB-matched 4-bit chip (table4 rationale); gain/offset stats are the
+    // paper's measured pre-calibration variation.
+    let b = 4u32;
+    let mut stats = CurveStats::uncalibrated();
+    stats.inl_peak_lsb = 0.0;
+    let bank = synthesize_bank_with(b, 32, 0xA7, stats);
+    let vchip = ChipModel { b_pim: b, noise_lsb: 0.0, bank: Some(bank), unit_out: 8 };
+    let ichip = ChipModel::ideal(b);
+
+    struct Row {
+        model: &'static str,
+        standin: &'static str,
+        uc: usize,
+        paper: [f64; 3],
+    }
+    let rows = [
+        Row { model: "tiny", standin: "r20", uc: 8, paper: [91.2, 10.0, 90.7] },
+        Row { model: "small", standin: "r56", uc: 16, paper: [90.8, 10.0, 90.6] },
+    ];
+    for row in &rows {
+        let ours = runner.run(&common::ours_job(row.model, Scheme::BitSerial, row.uc, b, scale))?;
+        let n = row.uc * 9;
+        let acc_ideal = common::chip_eval(
+            runner, &ours, Scheme::BitSerial, row.uc, &ichip, false, 0, n_test,
+        )?;
+        r.row(vec![
+            format!("{} ({})", row.standin, row.model),
+            n.to_string(),
+            "N".into(),
+            "-".into(),
+            pct(acc_ideal),
+            pct(row.paper[0]),
+        ]);
+        let acc_raw = common::chip_eval(
+            runner, &ours, Scheme::BitSerial, row.uc, &vchip, false, 0, n_test,
+        )?;
+        r.row(vec![
+            format!("{} ({})", row.standin, row.model),
+            n.to_string(),
+            "Y".into(),
+            "N".into(),
+            pct(acc_raw),
+            pct(row.paper[1]),
+        ]);
+        let acc_cal = common::chip_eval(
+            runner, &ours, Scheme::BitSerial, row.uc, &vchip, true, cb, n_test,
+        )?;
+        r.row(vec![
+            format!("{} ({})", row.standin, row.model),
+            n.to_string(),
+            "Y".into(),
+            "Y".into(),
+            pct(acc_cal),
+            pct(row.paper[2]),
+        ]);
+    }
+    r.note("shape: raw gain/offset variation collapses accuracy to chance; BN calibration alone recovers it to within ~1 point of the variation-free chip (paper Table A4)");
+    Ok(r)
+}

@@ -1,0 +1,91 @@
+//! Fig. 4 (adjusted-precision training map) and Fig. 5 (three schemes ×
+//! resolution × noise, ours vs baseline+BN-calibration).
+
+use anyhow::Result;
+
+use crate::chip::{enob, ChipModel};
+use crate::config::Scheme;
+use crate::coordinator::{adjusted, SweepRunner};
+use crate::report::{pct, Report};
+
+use super::common::{self, Scale};
+
+/// Fig. 4: for each (inference resolution, noise) cell, search the training
+/// resolution (candidates from the ENOB rule) and report the winner.
+pub fn fig4(runner: &mut SweepRunner, scale: Scale) -> Result<Report> {
+    let mut r = Report::new(
+        "fig4",
+        "Adjusted-precision training: best TR per (IR, noise) (paper Fig. 4)",
+        &["IR (bits)", "noise (LSB)", "ENOB rule", "best TR", "acc @ best", "acc @ TR=IR"],
+    );
+    let (irs, noises): (&[u32], &[f32]) = match scale {
+        Scale::Quick => (&[5, 7], &[0.25, 1.0, 2.0]),
+        Scale::Full => (&[4, 5, 6, 7, 8], &[0.25, 0.5, 1.0, 1.5, 2.0]),
+    };
+    for &ir in irs {
+        for &noise in noises {
+            let base = common::ours_job("tiny", Scheme::BitSerial, 8, ir, scale);
+            let res = adjusted::search(runner, &base, ir, noise, scale.calib_batches())?;
+            let best = res.best();
+            let at_ir = res
+                .candidates
+                .iter()
+                .find(|c| c.train_resolution == ir)
+                .map(|c| c.chip_acc)
+                .unwrap_or(f64::NAN);
+            r.row(vec![
+                ir.to_string(),
+                format!("{noise}"),
+                format!("{:.2} -> {}", enob::enob(ir, noise), res.enob_suggestion),
+                best.train_resolution.to_string(),
+                pct(best.chip_acc),
+                pct(at_ir),
+            ]);
+        }
+    }
+    r.note("shape to reproduce: at low noise the best TR equals IR; as noise grows the optimum drops below IR, earlier for higher IR (paper Fig. 4)");
+    Ok(r)
+}
+
+/// Fig. 5: ours vs baseline(+BN calibration) on ideal PIM chips of every
+/// scheme, across resolution and noise.  N=9 native, N=72 for bit-serial /
+/// differential on the tiny model (the paper's 144 needs the w16 model —
+/// covered in table4).
+pub fn fig5(runner: &mut SweepRunner, scale: Scale) -> Result<Report> {
+    let mut r = Report::new(
+        "fig5",
+        "Ideal PIM, all schemes: ours vs baseline+BNcalib (paper Fig. 5)",
+        &["scheme", "b_PIM", "noise (LSB)", "Baseline+calib", "Ours"],
+    );
+    let schemes: &[(Scheme, usize)] =
+        &[(Scheme::Native, 1), (Scheme::BitSerial, 8), (Scheme::Differential, 8)];
+    let (bs_grid, noises): (&[u32], &[f32]) = match scale {
+        Scale::Quick => (&[4, 5, 7], &[0.0, 1.0]),
+        Scale::Full => (&[4, 5, 6, 7, 8], &[0.0, 0.5, 1.0]),
+    };
+    let n_test = scale.chip_test_size();
+    let cb = scale.calib_batches();
+    let baseline = runner.run(&common::baseline_job("tiny", scale))?;
+    for &(scheme, uc) in schemes {
+        for &b in bs_grid {
+            let ours = runner.run(&common::ours_job("tiny", scheme, uc, b, scale))?;
+            for &noise in noises {
+                let chip = ChipModel::ideal(b).with_noise(noise);
+                let acc_b = common::chip_eval(
+                    runner, &baseline, scheme, uc, &chip, true, cb, n_test,
+                )?;
+                let acc_o =
+                    common::chip_eval(runner, &ours, scheme, uc, &chip, true, cb, n_test)?;
+                r.row(vec![
+                    scheme.to_string(),
+                    b.to_string(),
+                    format!("{noise}"),
+                    pct(acc_b),
+                    pct(acc_o),
+                ]);
+            }
+        }
+    }
+    r.note("shape to reproduce: ours consistently above baseline+calib, with the margin largest at low resolution / high noise and for the bit-serial & differential schemes (paper Fig. 5)");
+    Ok(r)
+}

@@ -1,0 +1,97 @@
+//! Experiment registry: every table and figure of the paper's evaluation,
+//! regenerated end-to-end (DESIGN.md's per-experiment index).
+//!
+//! Each entry prints the paper's rows (our measurement next to the paper's
+//! number), saves CSV + JSON under `results/`, and is driven by
+//! `pim-qat experiment <id>` (or `all`).
+
+pub mod appendix;
+pub mod basic_tables;
+pub mod common;
+pub mod fig45;
+pub mod figures;
+pub mod table3;
+pub mod table4;
+
+pub use common::Scale;
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::SweepRunner;
+use crate::report::Report;
+use crate::runtime::Runtime;
+
+/// All experiment ids in paper order.
+pub const ALL: &[&str] = &[
+    "table1", "table2", "table3", "table4", "fig3", "fig4", "fig5", "figA2",
+    "figA3", "tableA2", "tableA3", "figA6", "tableA4",
+];
+
+/// Which experiments need the runtime (training) vs pure analysis.
+pub fn needs_runtime(id: &str) -> bool {
+    !matches!(id, "table1" | "table2" | "fig3" | "figA2" | "figA3")
+}
+
+/// Run one experiment by id.
+pub fn run_one(id: &str, rt: Option<&Runtime>, scale: Scale) -> Result<Report> {
+    let mut runner_slot;
+    let runner: Option<&mut SweepRunner> = match rt {
+        Some(rt) => {
+            runner_slot = SweepRunner::new(rt);
+            Some(&mut runner_slot)
+        }
+        None => None,
+    };
+    let need = needs_runtime(id);
+    let runner = match (need, runner) {
+        (true, Some(r)) => Some(r),
+        (true, None) => return Err(anyhow!("experiment {id} needs artifacts/runtime")),
+        (false, _) => None,
+    };
+    match id {
+        "table1" => basic_tables::table1(),
+        "table2" => basic_tables::table2(),
+        "table3" => table3::run(runner.unwrap(), scale),
+        "table4" => table4::run(runner.unwrap(), scale),
+        "fig3" => figures::fig3(),
+        "fig4" => fig45::fig4(runner.unwrap(), scale),
+        "fig5" => fig45::fig5(runner.unwrap(), scale),
+        "figA2" => figures::fig_a2(),
+        "figA3" => figures::fig_a3(),
+        "tableA2" => appendix::table_a2(runner.unwrap(), scale),
+        "tableA3" => appendix::table_a3(runner.unwrap(), scale),
+        "figA6" => appendix::fig_a6(runner.unwrap(), scale),
+        "tableA4" => appendix::table_a4(runner.unwrap(), scale),
+        _ => Err(anyhow!("unknown experiment {id:?}; known: {ALL:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_paper_exhibit() {
+        // main body: tables 1-4, figures 3-5; appendix: A2/A3 figures,
+        // A2/A3/A4 tables (A4/A5/A6/A7 figures are views of those tables)
+        assert_eq!(ALL.len(), 13);
+    }
+
+    #[test]
+    fn analysis_experiments_run_standalone() {
+        for id in ["table1", "table2", "figA3"] {
+            let r = run_one(id, None, Scale::Quick).unwrap();
+            assert!(!r.rows.is_empty());
+        }
+    }
+
+    #[test]
+    fn runtime_experiments_require_runtime() {
+        assert!(run_one("table3", None, Scale::Quick).is_err());
+    }
+
+    #[test]
+    fn unknown_id_rejected() {
+        assert!(run_one("table99", None, Scale::Quick).is_err());
+    }
+}

@@ -1,0 +1,110 @@
+//! Table 4: accuracy on the (simulated) 7-bit real chip, bit-serial scheme,
+//! with measured-curve non-linearity and 0.35 LSB thermal noise.
+//!
+//! Paper models → scaled stand-ins (EXPERIMENTS.md §Model mapping):
+//!   ResNet20 → tiny (r8 w8), ResNet44 → small (r8 w16), VGGNet11 → vgg11,
+//!   CIFAR100/ResNet20 → tiny100.  N ∈ {72, 144} where the model is wide
+//!   enough (w8 stages cap uc at 8 → N=72; the w16 model reaches N=144).
+//!
+//! Ours rows include BN calibration (§3.4 is part of the method); baseline
+//! rows are the paper's deploy-as-is failure mode.
+
+use anyhow::Result;
+
+use crate::chip::ChipModel;
+use crate::config::Scheme;
+use crate::coordinator::SweepRunner;
+use crate::report::{pct, Report};
+
+use super::common::{self, Scale};
+
+pub fn run(runner: &mut SweepRunner, scale: Scale) -> Result<Report> {
+    let mut r = Report::new(
+        "table4",
+        "Real chip (measured curves + 0.35 LSB noise), bit-serial (paper Table 4)",
+        &["Dataset", "Model", "Method", "N", "Acc.", "Paper"],
+    );
+    // ENOB matching (EXPERIMENTS.md §Deviations): the paper's 7-bit chip
+    // sits right at its ResNet20's failure threshold; our shallower scaled
+    // models tolerate 7-bit PIM quantization, so the equivalent regime here
+    // is a 4-bit chip — same relative severity, same qualitative story.
+    let b_chip = 4u32;
+    let chip = ChipModel {
+        b_pim: b_chip,
+        noise_lsb: 0.35,
+        bank: Some(crate::chip::curves::synthesize_bank(b_chip, 32, 0xC819)),
+        unit_out: 8,
+    };
+    let n_test = scale.chip_test_size();
+    let cb = scale.calib_batches();
+
+    // (dataset label, model key, paper stand-in, ucs, paper rows)
+    // paper rows: (software, baseline@72, baseline@144, ours@72, ours@144)
+    struct Row {
+        dataset: &'static str,
+        model: &'static str,
+        standin: &'static str,
+        ucs: &'static [usize],
+        paper: [f64; 5],
+    }
+    let rows = [
+        Row { dataset: "CIFAR10", model: "tiny", standin: "ResNet20", ucs: &[8],
+              paper: [91.6, 13.9, 10.9, 89.7, 89.1] },
+        Row { dataset: "CIFAR100", model: "tiny100", standin: "ResNet20", ucs: &[8],
+              paper: [67.0, 1.8, 1.3, 62.6, 61.8] },
+    ];
+    let rows_full = [
+        Row { dataset: "CIFAR10", model: "small", standin: "ResNet44", ucs: &[8, 16],
+              paper: [92.8, 10.5, 10.0, 90.6, 90.7] },
+        Row { dataset: "CIFAR10", model: "vgg11", standin: "VGGNet11", ucs: &[8],
+              paper: [93.7, 10.0, 9.9, 94.2, 94.0] },
+    ];
+    let rows: Vec<&Row> = match scale {
+        Scale::Quick => rows.iter().collect(),
+        Scale::Full => rows.iter().chain(rows_full.iter()).collect(),
+    };
+
+    for row in rows {
+        let baseline = runner.run(&common::baseline_job(row.model, scale))?;
+        r.row(vec![
+            row.dataset.into(),
+            format!("{} ({})", row.standin, row.model),
+            "Software".into(),
+            "-".into(),
+            pct(baseline.software_acc),
+            pct(row.paper[0]),
+        ]);
+        for (i, &uc) in row.ucs.iter().enumerate() {
+            let n = uc * 9;
+            // Baseline deployed as-is on the noisy, non-linear chip.
+            let acc_b = common::chip_eval(
+                runner, &baseline, Scheme::BitSerial, uc, &chip, false, 0, n_test,
+            )?;
+            r.row(vec![
+                row.dataset.into(),
+                format!("{} ({})", row.standin, row.model),
+                "Baseline".into(),
+                n.to_string(),
+                pct(acc_b),
+                pct(row.paper[1 + i]),
+            ]);
+            // Ours: PIM-QAT at the chip resolution + BN calibration.
+            let ours = common::ours_job(row.model, Scheme::BitSerial, uc, b_chip, scale);
+            let out = runner.run(&ours)?;
+            let acc_o = common::chip_eval(
+                runner, &out, Scheme::BitSerial, uc, &chip, true, cb, n_test,
+            )?;
+            r.row(vec![
+                row.dataset.into(),
+                format!("{} ({})", row.standin, row.model),
+                "Ours".into(),
+                n.to_string(),
+                pct(acc_o),
+                pct(row.paper[3 + i]),
+            ]);
+        }
+    }
+    r.note("shape to reproduce: baseline ≈ random guess on the real chip; ours recovers most of its software accuracy");
+    r.note("chip resolution 4 bit = the ENOB-matched equivalent of the paper's 7-bit chip for these scaled models (see EXPERIMENTS.md §Deviations); small/vgg11 rows run at --full scale");
+    Ok(r)
+}

@@ -1,0 +1,33 @@
+//! # PIM-QAT — neural network quantization for processing-in-memory systems
+//!
+//! Reproduction of Jin et al. (2022).  Three-layer architecture:
+//!
+//! * **L1/L2 (build time, python)** — Pallas PIM-MAC kernel + JAX quantized
+//!   model, AOT-lowered to HLO text under `artifacts/` (`make artifacts`).
+//! * **L3 (run time, this crate)** — training/experiment coordinator: loads
+//!   the HLO artifacts through the PJRT CPU client ([`runtime`]), drives
+//!   training ([`train`]), evaluates checkpoints on a bit-accurate chip
+//!   simulator ([`pim`], [`chip`], [`nn`]), and regenerates every table and
+//!   figure of the paper ([`experiments`]).
+//!
+//! Python never runs on the request path: once artifacts exist, the
+//! `pim-qat` binary is self-contained.  See DESIGN.md for the substrate
+//! inventory and the per-experiment index.
+
+pub mod chip;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod nn;
+pub mod pim;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+/// Crate version (CLI `--version`).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,320 @@
+//! `pim-qat` — leader binary: training, chip-sim evaluation, BN
+//! calibration, sweeps, and paper-reproduction experiments.
+//!
+//! The CLI parser is hand-rolled (clap is not in the offline crate cache);
+//! subcommands mirror DESIGN.md §CLI surface.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use anyhow::{anyhow, Result};
+
+use pim_qat::chip::{enob, ChipModel};
+use pim_qat::config::JobConfig;
+use pim_qat::coordinator::{sweep, SweepRunner};
+use pim_qat::experiments::{self, Scale};
+use pim_qat::nn::ExecSpec;
+use pim_qat::report;
+use pim_qat::runtime::Runtime;
+use pim_qat::train::{self, Checkpoint};
+use pim_qat::util::rng::Rng;
+
+const USAGE: &str = "\
+pim-qat — PIM-QAT reproduction (Jin et al. 2022)
+
+USAGE:
+  pim-qat train [key=val ...]                  one training job
+  pim-qat eval --ckpt DIR [--chip SPEC] [--calibrate] [key=val ...]
+  pim-qat sweep --grid \"k=v1,v2;k2=v3..v4\" [key=val ...]
+  pim-qat experiment <id|all> [--full]         regenerate paper tables/figures
+  pim-qat chip-info [--b-pim B] [--noise S]    curve bank + ENOB report
+  pim-qat list                                 artifacts in the manifest
+  pim-qat --version | --help
+
+Chip SPEC for eval:  ideal:<bits>[:noise]  |  real[:noise]  |  <curves.json>[:noise]
+Common keys: model, mode(ours|baseline|ams), scheme, uc, b_pim, steps, lr,
+seed, train_size, test_size.  Artifacts dir: $PIM_QAT_ARTIFACTS (default ./artifacts).
+Experiments: table1 table2 table3 table4 fig3 fig4 fig5 figA2 figA3 tableA2 tableA3 figA6 tableA4";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Split args into flags (`--x [val]`) and positional/key=value parts.
+struct Cli {
+    positional: Vec<String>,
+    kv: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+fn parse_cli(args: &[String]) -> Cli {
+    let mut cli = Cli { positional: vec![], kv: vec![], flags: vec![] };
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            let takes_value =
+                matches!(name, "grid" | "ckpt" | "chip" | "b-pim" | "noise" | "out");
+            if takes_value && i + 1 < args.len() {
+                cli.flags.push((name.to_string(), Some(args[i + 1].clone())));
+                i += 2;
+                continue;
+            }
+            cli.flags.push((name.to_string(), None));
+        } else if a.contains('=') {
+            cli.kv.push(a.clone());
+        } else {
+            cli.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    cli
+}
+
+impl Cli {
+    fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+    fn flag_value(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(n, _)| n == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+}
+
+fn open_runtime() -> Result<Runtime> {
+    pim_qat::runtime::open_default()
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first().map(|s| s.as_str()) else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let cli = parse_cli(&args[1..]);
+    match cmd {
+        "--help" | "help" | "-h" => println!("{USAGE}"),
+        "--version" | "version" => println!("pim-qat {}", pim_qat::version()),
+        "list" => cmd_list()?,
+        "train" => cmd_train(&cli)?,
+        "eval" => cmd_eval(&cli)?,
+        "sweep" => cmd_sweep(&cli)?,
+        "experiment" => cmd_experiment(&cli)?,
+        "chip-info" => cmd_chip_info(&cli)?,
+        other => return Err(anyhow!("unknown command {other:?}\n{USAGE}")),
+    }
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    let rt = open_runtime()?;
+    println!("platform: {}", rt.platform());
+    println!("models:");
+    for (k, m) in &rt.manifest.models {
+        println!(
+            "  {k}: {} depth_n={} width={} image={} classes={} ({} params)",
+            m.arch, m.depth_n, m.width, m.image, m.classes, m.param_count()
+        );
+    }
+    println!("artifacts:");
+    for name in rt.manifest.artifacts.keys() {
+        println!("  {name}");
+    }
+    Ok(())
+}
+
+fn job_from_cli(cli: &Cli) -> Result<JobConfig> {
+    let mut job = JobConfig::default();
+    job.apply_overrides(&cli.kv).map_err(|e| anyhow!(e))?;
+    Ok(job)
+}
+
+fn cmd_train(cli: &Cli) -> Result<()> {
+    let rt = open_runtime()?;
+    let job = job_from_cli(cli)?;
+    let mut runner = SweepRunner::new(&rt);
+    let out = runner.run(&job)?;
+    println!("checkpoint: {}", runner.ckpt_root.join(sweep::fingerprint(&job)).display());
+    println!("software accuracy: {:.2}%", out.software_acc);
+    for l in &out.history {
+        println!(
+            "  step {:>5}  lr {:<7} loss {:<8.4} batch-acc {:.1}%",
+            l.step, l.lr, l.loss, l.acc
+        );
+    }
+    Ok(())
+}
+
+fn parse_chip(spec: &str) -> Result<ChipModel> {
+    let mut parts = spec.split(':');
+    let head = parts.next().unwrap_or("ideal");
+    let chip = match head {
+        "ideal" => {
+            let b: u32 = parts
+                .next()
+                .ok_or_else(|| anyhow!("ideal:<bits>[:noise]"))?
+                .parse()?;
+            ChipModel::ideal(b)
+        }
+        "real" => ChipModel::real(0xC819),
+        path => {
+            let bank = pim_qat::chip::CurveBank::load(&PathBuf::from(path))?;
+            ChipModel { b_pim: bank.b_pim, noise_lsb: 0.0, bank: Some(bank), unit_out: 8 }
+        }
+    };
+    let chip = match parts.next() {
+        Some(n) => chip.with_noise(n.parse()?),
+        None => chip,
+    };
+    Ok(chip)
+}
+
+fn cmd_eval(cli: &Cli) -> Result<()> {
+    let rt = open_runtime()?;
+    let ckpt_dir = cli
+        .flag_value("ckpt")
+        .ok_or_else(|| anyhow!("--ckpt <dir> required"))?;
+    let ckpt = Checkpoint::load(&PathBuf::from(ckpt_dir))?;
+    let mut job = JobConfig::default();
+    job.model = ckpt.model.clone();
+    if let Some(s) = ckpt.meta.get("scheme") {
+        job.scheme = s.parse().map_err(|e: String| anyhow!(e))?;
+    }
+    if let Some(u) = ckpt.meta.get("unit_channels") {
+        job.unit_channels = u.parse()?;
+    }
+    job.apply_overrides(&cli.kv).map_err(|e| anyhow!(e))?;
+
+    let entry = rt.manifest.model(&job.model)?;
+    let (train_ds, test_ds) = pim_qat::data::load_default(
+        entry.image, entry.classes, job.train_size, job.test_size, 0xDA7A ^ job.seed,
+    );
+    let mut net = train::network_from_ckpt(&rt, &ckpt)?;
+    let mut rng = Rng::new(1);
+
+    let sw = train::eval_software(&rt, &ckpt, &test_ds)?;
+    println!("software (digital) accuracy: {sw:.2}%");
+
+    if let Some(spec) = cli.flag_value("chip") {
+        let chip = parse_chip(spec)?;
+        let exec = ExecSpec::Pim {
+            scheme: job.scheme,
+            unit_channels: job.unit_channels,
+            chip: &chip,
+        };
+        if cli.flag("calibrate") {
+            net.calibrate_bn(&train_ds, 32, 4, &exec, &mut rng)?;
+            println!("BN calibrated on 4 training batches under the target chip");
+        }
+        let acc = net.evaluate(&test_ds, 32, &exec, &mut rng)?;
+        println!(
+            "chip accuracy ({spec}, scheme {}, uc {}): {acc:.2}%",
+            job.scheme, job.unit_channels
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sweep(cli: &Cli) -> Result<()> {
+    let rt = open_runtime()?;
+    let grid = cli
+        .flag_value("grid")
+        .ok_or_else(|| anyhow!("--grid \"key=v1,v2;...\" required"))?;
+    let base = job_from_cli(cli)?;
+    let jobs = sweep::parse_grid(&base, grid).map_err(|e| anyhow!(e))?;
+    println!("sweep: {} jobs", jobs.len());
+    let mut runner = SweepRunner::new(&rt);
+    let outcomes = runner.run_all(&jobs);
+    let mut rep = report::Report::new(
+        "sweep",
+        &format!("sweep over {grid}"),
+        &["job", "software acc", "cached", "wall (s)"],
+    );
+    for (job, o) in jobs.iter().zip(outcomes) {
+        match o {
+            Ok(o) => rep.row(vec![
+                sweep::fingerprint(job),
+                format!("{:.2}", o.software_acc),
+                o.cached.to_string(),
+                format!("{:.1}", o.wall_s),
+            ]),
+            Err(e) => rep.row(vec![
+                sweep::fingerprint(job),
+                format!("FAILED: {e}"),
+                "-".into(),
+                "-".into(),
+            ]),
+        }
+    }
+    println!("{}", rep.render());
+    rep.save(&report::results_dir())?;
+    Ok(())
+}
+
+fn cmd_experiment(cli: &Cli) -> Result<()> {
+    let id = cli
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("experiment id required (or `all`)"))?;
+    let scale = if cli.flag("full") { Scale::Full } else { Scale::Quick };
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL.to_vec()
+    } else {
+        vec![id.as_str()]
+    };
+    let needs_rt = ids.iter().any(|i| experiments::needs_runtime(i));
+    let rt = if needs_rt { Some(open_runtime()?) } else { None };
+    for id in ids {
+        let t0 = std::time::Instant::now();
+        let rep = experiments::run_one(id, rt.as_ref(), scale)?;
+        println!("{}", rep.render());
+        println!("  [{} in {:.1}s]\n", id, t0.elapsed().as_secs_f64());
+        rep.save(&report::results_dir())?;
+    }
+    Ok(())
+}
+
+fn cmd_chip_info(cli: &Cli) -> Result<()> {
+    let b: u32 = cli.flag_value("b-pim").unwrap_or("7").parse()?;
+    let noise: f32 = cli.flag_value("noise").unwrap_or("0.35").parse()?;
+    let chip = ChipModel::real(0xC819).with_noise(noise);
+    println!("chip: b_PIM={b}, noise={noise} LSB, 32 synthesized measured curves");
+    println!(
+        "ENOB model: {:.2} bits (suggested training resolution {})",
+        enob::enob(b, noise),
+        enob::suggested_training_resolution(b, noise)
+    );
+    if let Some(bank) = &chip.bank {
+        let gains: Vec<f32> = bank.curves.iter().map(|c| c.gain).collect();
+        let offs: Vec<f32> = bank.curves.iter().map(|c| c.offset).collect();
+        let stat = |v: &[f32]| {
+            let m = v.iter().sum::<f32>() / v.len() as f32;
+            let s = (v.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / v.len() as f32).sqrt();
+            (m, s)
+        };
+        let (gm, gs) = stat(&gains);
+        let (om, os) = stat(&offs);
+        println!("curve bank: gain {gm:.4}±{gs:.4}, offset {om:.3}±{os:.3} LSB");
+        if let Some(out) = cli.flag_value("out") {
+            bank.save(&PathBuf::from(out))?;
+            println!("bank saved to {out}");
+        }
+    }
+    println!("\nerror-std ratio vs noise (Fig. 3 protocol):");
+    for s in [0.0f32, 0.2, 0.35, 0.5, 1.0] {
+        println!(
+            "  sigma={s:<5} ratio={:.3} ENOB={:.2}",
+            enob::error_std_ratio(b, s, 50_000, 7),
+            enob::enob(b, s)
+        );
+    }
+    Ok(())
+}

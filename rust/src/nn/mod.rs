@@ -1,0 +1,13 @@
+//! Quantized NN inference engine (S5): runs trained checkpoints on the
+//! digital path ("Software" rows) or on the PIM chip simulator (ideal or
+//! real-curve), and implements BN calibration (§3.4).
+//!
+//! The forward pass is a structural mirror of `python/compile/model.py`
+//! (layer placement per §A2.1: first conv / shortcuts / FC digital, all
+//! other convs PIM-mapped).  The `model_tiny.json` golden pins the two
+//! implementations against each other end-to-end.
+
+pub mod model;
+pub mod quant;
+
+pub use model::{ExecSpec, Network};

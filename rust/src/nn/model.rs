@@ -1,0 +1,554 @@
+//! The network: parameter container + forward pass + BN calibration.
+
+use std::collections::{BTreeMap, HashMap};
+
+use anyhow::{anyhow, Result};
+
+use crate::chip::ChipModel;
+use crate::config::Scheme;
+use crate::pim::{PimEngine, QuantBits};
+use crate::runtime::ModelEntry;
+use crate::tensor::ops;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::util::Welford;
+
+use super::quant;
+
+/// How to execute the PIM-mapped convolutions.
+#[derive(Clone)]
+pub enum ExecSpec<'a> {
+    /// Digital everywhere — the paper's "Software" rows (b_PIM = +∞).
+    Software,
+    /// PIM-mapped convs on the chip simulator.
+    Pim { scheme: Scheme, unit_channels: usize, chip: &'a ChipModel },
+}
+
+/// One conv's prepared weights.
+struct ConvW {
+    /// [C*k*k, O] digitally quantized & scaled (software path).
+    cols_scaled: Tensor,
+    /// [C*k*k, O] integer weights on the signed grid (PIM path).
+    cols_int: Tensor,
+    /// Eqn. A20b digital scale s.
+    scale: f32,
+    c_in: usize,
+    kernel: usize,
+}
+
+/// A loaded, executable network.
+pub struct Network {
+    pub entry: ModelEntry,
+    pub bits: QuantBits,
+    params: BTreeMap<String, Tensor>,
+    /// BN running stats, mutated by `calibrate_bn`.
+    bn_state: BTreeMap<String, (Vec<f32>, Vec<f32>)>,
+    convs: HashMap<String, ConvW>,
+    /// PIM engines cache, keyed by (scheme, uc, conv name).
+    engines: std::cell::RefCell<HashMap<(Scheme, usize, String), std::rc::Rc<PimEngine>>>,
+}
+
+impl Network {
+    /// Build from flat parameter/state maps (checkpoint or golden).
+    pub fn new(
+        entry: ModelEntry,
+        bits: QuantBits,
+        params: BTreeMap<String, Tensor>,
+        state: BTreeMap<String, Tensor>,
+    ) -> Result<Self> {
+        // fold state tensors into (mean, var) pairs per bn path
+        let mut bn_state = BTreeMap::new();
+        for (k, v) in &state {
+            if let Some(base) = k.strip_suffix("/mean") {
+                let var = state
+                    .get(&format!("{base}/var"))
+                    .ok_or_else(|| anyhow!("state {base}/var missing"))?;
+                bn_state.insert(base.to_string(), (v.data.clone(), var.data.clone()));
+            }
+        }
+        let mut net = Network {
+            entry,
+            bits,
+            params,
+            bn_state,
+            convs: HashMap::new(),
+            engines: Default::default(),
+        };
+        net.prepare_convs()?;
+        Ok(net)
+    }
+
+    fn prepare_convs(&mut self) -> Result<()> {
+        let names: Vec<String> = self
+            .params
+            .keys()
+            .filter(|k| k.ends_with("/w") && k.contains("conv"))
+            .cloned()
+            .collect();
+        for name in names {
+            let w = &self.params[&name];
+            if w.rank() != 4 {
+                continue;
+            }
+            let (kh, _kw, c, o) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+            let q_unit = quant::weight_quant_unit(w, &self.bits);
+            let scale = quant::weight_scale(&q_unit, o);
+            let cols_scaled = ops::weights_to_cols(&q_unit).map(|v| v * scale);
+            let q_int = quant::weight_quant_int(w, &self.bits);
+            let cols_int = ops::weights_to_cols(&q_int);
+            self.convs.insert(
+                name,
+                ConvW { cols_scaled, cols_int, scale, c_in: c, kernel: kh },
+            );
+        }
+        Ok(())
+    }
+
+    pub fn param(&self, name: &str) -> Result<&Tensor> {
+        self.params
+            .get(name)
+            .ok_or_else(|| anyhow!("param {name:?} missing"))
+    }
+
+    /// Replace BN running stats (used by BN calibration and tests).
+    pub fn set_bn_state(&mut self, name: &str, mean: Vec<f32>, var: Vec<f32>) {
+        self.bn_state.insert(name.to_string(), (mean, var));
+    }
+
+    pub fn bn_names(&self) -> Vec<String> {
+        self.bn_state.keys().cloned().collect()
+    }
+
+    /// Read a BN layer's running (mean, var) — experiments/tests/debugging.
+    pub fn bn_stats(&self, name: &str) -> Option<&(Vec<f32>, Vec<f32>)> {
+        self.bn_state.get(name)
+    }
+
+    // -- layer helpers ------------------------------------------------------
+
+    fn conv_digital(&self, x: &Tensor, name: &str, stride: usize) -> Result<Tensor> {
+        let cw = self.convs.get(name).ok_or_else(|| anyhow!("conv {name} missing"))?;
+        let (patches, oh, ow) = ops::im2col(x, cw.kernel, stride);
+        let m = patches.shape[0];
+        let o = cw.cols_scaled.shape[1];
+        let y = crate::tensor::gemm::gemm(m, patches.shape[1], o, &patches.data, &cw.cols_scaled.data);
+        Ok(Tensor::from_vec(&[x.shape[0], oh, ow, o], y))
+    }
+
+    fn conv_exec(
+        &self,
+        x: &Tensor,
+        name: &str,
+        stride: usize,
+        exec: &ExecSpec,
+        rng: &mut Rng,
+    ) -> Result<Tensor> {
+        match exec {
+            ExecSpec::Software => self.conv_digital(x, name, stride),
+            ExecSpec::Pim { scheme, unit_channels, chip } => {
+                let cw = self.convs.get(name).ok_or_else(|| anyhow!("conv {name} missing"))?;
+                let key = (*scheme, *unit_channels, name.to_string());
+                let engine = {
+                    let mut cache = self.engines.borrow_mut();
+                    cache
+                        .entry(key)
+                        .or_insert_with(|| {
+                            std::rc::Rc::new(PimEngine::prepare(
+                                *scheme,
+                                self.bits,
+                                &cw.cols_int,
+                                cw.c_in,
+                                cw.kernel,
+                                *unit_channels,
+                            ))
+                        })
+                        .clone()
+                };
+                let (patches, oh, ow) = ops::im2col(x, cw.kernel, stride);
+                // patches hold quantized activations in [0,1] — scale to ints
+                let al = self.bits.a_levels() as f32;
+                let pint = patches.map(|v| crate::chip::round_ties_even(v * al));
+                let y = engine.matmul(&pint, chip, rng);
+                let o = y.shape[1];
+                Ok(y
+                    .map(|v| v * cw.scale)
+                    .reshape(&[x.shape[0], oh, ow, o]))
+            }
+        }
+    }
+
+    fn bn(&self, x: Tensor, name: &str, collect: &mut Option<&mut BTreeMap<String, Welford3>>) -> Result<Tensor> {
+        let gamma = &self.param(&format!("{name}/gamma"))?.data;
+        let beta = &self.param(&format!("{name}/beta"))?.data;
+        if let Some(c) = collect.as_deref_mut() {
+            // Calibration pass (§3.4): run in *training-mode* BN — normalize
+            // with THIS batch's statistics while accumulating them.  Each
+            // layer's stats are then collected under already-consistent
+            // upstream normalization (replacing all running stats from a
+            // single eval-mode pass compounds stale-downstream error and
+            // wrecks accuracy).
+            c.entry(name.to_string()).or_default().push(&x);
+            let (mean, var) = ops::channel_stats(&x);
+            return Ok(ops::batch_norm(&x, gamma, beta, &mean, &var));
+        }
+        let (mean, var) = self
+            .bn_state
+            .get(name)
+            .ok_or_else(|| anyhow!("bn state {name:?} missing"))?;
+        Ok(ops::batch_norm(&x, gamma, beta, mean, var))
+    }
+
+    fn act(&self, x: Tensor) -> Tensor {
+        quant::act_quant(ops::relu(x), &self.bits)
+    }
+
+    // -- forward ------------------------------------------------------------
+
+    /// Full forward pass → logits [B, classes].
+    pub fn forward(&self, x: &Tensor, exec: &ExecSpec, rng: &mut Rng) -> Result<Tensor> {
+        self.forward_impl(x, exec, rng, &mut None)
+    }
+
+    fn forward_impl(
+        &self,
+        x: &Tensor,
+        exec: &ExecSpec,
+        rng: &mut Rng,
+        collect: &mut Option<&mut BTreeMap<String, Welford3>>,
+    ) -> Result<Tensor> {
+        match self.entry.arch.as_str() {
+            "resnet" => self.forward_resnet(x, exec, rng, collect),
+            "vgg11" => self.forward_vgg(x, exec, rng, collect),
+            a => Err(anyhow!("unknown arch {a:?}")),
+        }
+    }
+
+    fn forward_resnet(
+        &self,
+        x: &Tensor,
+        exec: &ExecSpec,
+        rng: &mut Rng,
+        collect: &mut Option<&mut BTreeMap<String, Welford3>>,
+    ) -> Result<Tensor> {
+        let e = &self.entry;
+        let mut h = quant::act_quant_bits(x.clone(), 8);
+        h = self.conv_digital(&h, "conv0/w", 1)?; // first layer: digital (§A2.1)
+        h = self.bn(h, "bn0", collect)?;
+        h = self.act(h);
+        let mut cin = e.width;
+        for s in 0..3 {
+            let cout = e.width * (1 << s);
+            for b in 0..e.depth_n {
+                let blk = format!("s{s}b{b}");
+                let stride = if s > 0 && b == 0 { 2 } else { 1 };
+                let mut z = self.conv_exec(&h, &format!("{blk}/conv1/w"), stride, exec, rng)?;
+                z = self.bn(z, &format!("{blk}/bn1"), collect)?;
+                z = self.act(z);
+                z = self.conv_exec(&z, &format!("{blk}/conv2/w"), 1, exec, rng)?;
+                z = self.bn(z, &format!("{blk}/bn2"), collect)?;
+                let sc = if cin != cout || stride != 1 {
+                    let s_ = self.conv_digital(&h, &format!("{blk}/convs/w"), stride)?;
+                    self.bn(s_, &format!("{blk}/bns"), collect)?
+                } else {
+                    h.clone()
+                };
+                h = self.act(z.zip(&sc, |a, b| a + b));
+                cin = cout;
+            }
+        }
+        let pooled = ops::global_avg_pool(&h);
+        self.fc(&pooled)
+    }
+
+    fn forward_vgg(
+        &self,
+        x: &Tensor,
+        exec: &ExecSpec,
+        rng: &mut Rng,
+        collect: &mut Option<&mut BTreeMap<String, Welford3>>,
+    ) -> Result<Tensor> {
+        let e = &self.entry;
+        let plan = vgg11_plan(e.width, e.image);
+        let mut h = quant::act_quant_bits(x.clone(), 8);
+        for (i, &(_cout, pool)) in plan.iter().enumerate() {
+            let name = format!("conv{i}/w");
+            h = if i == 0 {
+                self.conv_digital(&h, &name, 1)?
+            } else {
+                self.conv_exec(&h, &name, 1, exec, rng)?
+            };
+            h = self.bn(h, &format!("bn{i}"), collect)?;
+            h = self.act(h);
+            if pool {
+                h = ops::maxpool2(&h);
+            }
+        }
+        let pooled = ops::global_avg_pool(&h);
+        self.fc(&pooled)
+    }
+
+    fn fc(&self, x: &Tensor) -> Result<Tensor> {
+        let w = self.param("fc/w")?;
+        let b = self.param("fc/b")?;
+        let q_unit = quant::weight_quant_unit(w, &self.bits);
+        let s = quant::weight_scale(&q_unit, self.entry.classes);
+        let (m, k) = (x.shape[0], x.shape[1]);
+        let o = w.shape[1];
+        let wq: Vec<f32> = q_unit.data.iter().map(|v| v * s).collect();
+        let mut y = crate::tensor::gemm::gemm(m, k, o, &x.data, &wq);
+        for i in 0..m {
+            for j in 0..o {
+                y[i * o + j] += b.data[j];
+            }
+        }
+        Ok(Tensor::from_vec(&[m, o], y))
+    }
+
+    // -- evaluation & calibration -------------------------------------------
+
+    /// Top-1 accuracy over a dataset (full batches of `bs`).
+    pub fn evaluate(
+        &self,
+        ds: &crate::data::Dataset,
+        bs: usize,
+        exec: &ExecSpec,
+        rng: &mut Rng,
+    ) -> Result<f64> {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let n = ds.len() / bs * bs;
+        let mut drng = Rng::new(0);
+        for start in (0..n).step_by(bs) {
+            let idx: Vec<usize> = (start..start + bs).collect();
+            let batch = ds.batch(&idx, false, &mut drng);
+            let logits = self.forward(&batch.x, exec, rng)?;
+            for (p, &t) in ops::argmax_rows(&logits).iter().zip(&batch.y) {
+                correct += (*p == t as usize) as usize;
+                total += 1;
+            }
+        }
+        Ok(100.0 * correct as f64 / total.max(1) as f64)
+    }
+
+    /// BN calibration (§3.4): re-estimate every BN layer's running stats
+    /// from `batches` training batches executed with the *target* exec spec
+    /// (the same non-idealities used at inference), then overwrite the
+    /// running statistics.
+    pub fn calibrate_bn(
+        &mut self,
+        ds: &crate::data::Dataset,
+        bs: usize,
+        batches: usize,
+        exec: &ExecSpec,
+        rng: &mut Rng,
+    ) -> Result<()> {
+        let mut stats: BTreeMap<String, Welford3> = BTreeMap::new();
+        let mut drng = rng.fork(0xCA11B);
+        for bi in 0..batches {
+            let idx: Vec<usize> =
+                (0..bs).map(|_| drng.below(ds.len())).collect();
+            let batch = ds.batch(&idx, false, &mut drng);
+            let mut collect = Some(&mut stats);
+            let _ = self.forward_impl(&batch.x, exec, rng, &mut collect)?;
+            let _ = bi;
+        }
+        for (name, w) in stats {
+            let (mean, var) = w.finish();
+            self.bn_state.insert(name, (mean, var));
+        }
+        Ok(())
+    }
+}
+
+/// Per-channel Welford accumulator for BN calibration.
+#[derive(Default)]
+pub struct Welford3 {
+    per_channel: Vec<Welford>,
+}
+
+impl Welford3 {
+    fn push(&mut self, x: &Tensor) {
+        let c = *x.shape.last().unwrap();
+        if self.per_channel.is_empty() {
+            self.per_channel = vec![Welford::default(); c];
+        }
+        for (i, &v) in x.data.iter().enumerate() {
+            self.per_channel[i % c].push(v as f64);
+        }
+    }
+
+    fn finish(&self) -> (Vec<f32>, Vec<f32>) {
+        (
+            self.per_channel.iter().map(|w| w.mean as f32).collect(),
+            self.per_channel.iter().map(|w| w.var() as f32).collect(),
+        )
+    }
+}
+
+/// VGG11 plan mirror of python `vgg11_plan`: (out_channels, pool_after).
+pub fn vgg11_plan(width: usize, image: usize) -> Vec<(usize, bool)> {
+    let mults = [1, 2, 4, 4, 8, 8, 8, 8];
+    let max_pools = ((image as f64).log2() as isize - 1).max(2) as usize;
+    let pool_after = [0usize, 1, 3, 5, 7];
+    let mut pools = 0;
+    mults
+        .iter()
+        .enumerate()
+        .map(|(i, &m)| {
+            let do_pool = pool_after.contains(&i) && pools < max_pools;
+            pools += do_pool as usize;
+            (width * m, do_pool)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_entry() -> ModelEntry {
+        ModelEntry {
+            arch: "resnet".into(),
+            depth_n: 1,
+            width: 8,
+            image: 16,
+            classes: 10,
+            in_channels: 3,
+            param_paths: vec![],
+            param_shapes: vec![],
+            state_paths: vec![],
+            state_shapes: vec![],
+        }
+    }
+
+    /// Random-parameter network of the tiny geometry.
+    fn random_net(seed: u64) -> Network {
+        let mut rng = Rng::new(seed);
+        let mut params = BTreeMap::new();
+        let mut state = BTreeMap::new();
+        let mut conv = |name: &str, k: usize, ci: usize, co: usize, rng: &mut Rng| {
+            let t = Tensor::from_vec(
+                &[k, k, ci, co],
+                (0..k * k * ci * co)
+                    .map(|_| rng.normal_in(0.0, (2.0 / (k * k * ci) as f32).sqrt()))
+                    .collect(),
+            );
+            (name.to_string(), t)
+        };
+        let mut bn = |name: &str, c: usize| {
+            vec![
+                (format!("{name}/gamma"), Tensor::full(&[c], 1.0)),
+                (format!("{name}/beta"), Tensor::zeros(&[c])),
+            ]
+        };
+        let mut bn_st = |name: &str, c: usize| {
+            vec![
+                (format!("{name}/mean"), Tensor::zeros(&[c])),
+                (format!("{name}/var"), Tensor::full(&[c], 1.0)),
+            ]
+        };
+        let (k, mut add) = (3usize, |v: Vec<(String, Tensor)>, m: &mut BTreeMap<String, Tensor>| {
+            for (n, t) in v {
+                m.insert(n, t);
+            }
+        });
+        let w = 8usize;
+        params.extend([conv("conv0/w", k, 3, w, &mut rng)]);
+        add(bn("bn0", w), &mut params);
+        add(bn_st("bn0", w), &mut state);
+        let mut cin = w;
+        for s in 0..3 {
+            let cout = w * (1 << s);
+            let blk = format!("s{s}b0");
+            params.extend([conv(&format!("{blk}/conv1/w"), k, cin, cout, &mut rng)]);
+            params.extend([conv(&format!("{blk}/conv2/w"), k, cout, cout, &mut rng)]);
+            add(bn(&format!("{blk}/bn1"), cout), &mut params);
+            add(bn(&format!("{blk}/bn2"), cout), &mut params);
+            add(bn_st(&format!("{blk}/bn1"), cout), &mut state);
+            add(bn_st(&format!("{blk}/bn2"), cout), &mut state);
+            if cin != cout {
+                params.extend([conv(&format!("{blk}/convs/w"), 1, cin, cout, &mut rng)]);
+                add(bn(&format!("{blk}/bns"), cout), &mut params);
+                add(bn_st(&format!("{blk}/bns"), cout), &mut state);
+            }
+            cin = cout;
+        }
+        params.insert(
+            "fc/w".into(),
+            Tensor::from_vec(&[cin, 10], (0..cin * 10).map(|_| rng.normal_in(0.0, 0.25)).collect()),
+        );
+        params.insert("fc/b".into(), Tensor::zeros(&[10]));
+        Network::new(tiny_entry(), QuantBits::default(), params, state).unwrap()
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let net = random_net(1);
+        let mut rng = Rng::new(0);
+        let x = Tensor::full(&[2, 16, 16, 3], 0.5);
+        let y = net.forward(&x, &ExecSpec::Software, &mut rng).unwrap();
+        assert_eq!(y.shape, vec![2, 10]);
+        assert!(y.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn pim_high_resolution_close_to_software() {
+        let net = random_net(2);
+        let mut rng = Rng::new(0);
+        let x = Tensor::from_vec(
+            &[2, 16, 16, 3],
+            (0..2 * 16 * 16 * 3).map(|i| ((i * 37) % 256) as f32 / 255.0).collect(),
+        );
+        let sw = net.forward(&x, &ExecSpec::Software, &mut rng).unwrap();
+        let chip = ChipModel::ideal(16);
+        let pim = net
+            .forward(
+                &x,
+                &ExecSpec::Pim { scheme: Scheme::BitSerial, unit_channels: 8, chip: &chip },
+                &mut rng,
+            )
+            .unwrap();
+        // b_PIM=16 introduces tiny quantization; logits should agree closely
+        assert!(sw.max_abs_diff(&pim) < 0.05, "diff {}", sw.max_abs_diff(&pim));
+    }
+
+    #[test]
+    fn pim_low_resolution_differs() {
+        let net = random_net(3);
+        let mut rng = Rng::new(0);
+        let x = Tensor::full(&[1, 16, 16, 3], 0.4);
+        let sw = net.forward(&x, &ExecSpec::Software, &mut rng).unwrap();
+        let chip = ChipModel::ideal(3);
+        let pim = net
+            .forward(
+                &x,
+                &ExecSpec::Pim { scheme: Scheme::BitSerial, unit_channels: 8, chip: &chip },
+                &mut rng,
+            )
+            .unwrap();
+        assert!(sw.max_abs_diff(&pim) > 1e-3);
+    }
+
+    #[test]
+    fn calibration_changes_bn_stats_and_is_idempotentish() {
+        let mut net = random_net(4);
+        let ds = crate::data::synth::generate(16, 10, 64, 9);
+        let mut rng = Rng::new(1);
+        let chip = ChipModel::real(3);
+        let exec = ExecSpec::Pim { scheme: Scheme::BitSerial, unit_channels: 8, chip: &chip };
+        let before = net.bn_state.get("bn0").unwrap().clone();
+        net.calibrate_bn(&ds, 8, 4, &exec, &mut rng).unwrap();
+        let after = net.bn_state.get("bn0").unwrap().clone();
+        assert_ne!(before, after, "calibration must move the running stats");
+        // stats should be finite and variances positive
+        assert!(after.1.iter().all(|&v| v.is_finite() && v >= 0.0));
+    }
+
+    #[test]
+    fn vgg_plan_pools_bounded() {
+        let plan = vgg11_plan(8, 16);
+        let pools = plan.iter().filter(|(_, p)| *p).count();
+        assert_eq!(plan.len(), 8);
+        assert!(pools <= 3, "16px image must keep >=2px map, got {pools} pools");
+    }
+}

@@ -1,0 +1,112 @@
+//! Digital quantizers — rust mirror of `python/compile/quant.py`
+//! (modified DoReFa, Eqn. A20).  Pinned against the python implementation by
+//! the `quant.json` golden (rust/tests/golden_cross.rs).
+
+use crate::chip::round_ties_even;
+use crate::pim::QuantBits;
+use crate::tensor::Tensor;
+
+/// Weight quantization onto the [-1,1] grid (what the PIM array stores):
+/// round ties-to-even of (2^{b_w-1}-1)·tanh(w)/max|tanh(w)|.
+pub fn weight_quant_unit(w: &Tensor, bits: &QuantBits) -> Tensor {
+    let mut max_t = 0.0f32;
+    for &v in &w.data {
+        max_t = max_t.max(v.tanh().abs());
+    }
+    let denom = max_t + 1e-12;
+    let lv = bits.w_levels() as f32;
+    let mut out = w.clone();
+    for v in &mut out.data {
+        *v = round_ties_even(v.tanh() / denom * lv) / lv;
+    }
+    out
+}
+
+/// Integer weights on the signed grid (weight_quant_unit × w_levels).
+pub fn weight_quant_int(w: &Tensor, bits: &QuantBits) -> Tensor {
+    let lv = bits.w_levels() as f32;
+    let mut q = weight_quant_unit(w, bits);
+    for v in &mut q.data {
+        *v = round_ties_even(*v * lv);
+    }
+    q
+}
+
+/// The scale-adjusted-training factor s = 1/sqrt(n_out·VAR[q]) (Eqn. A20b).
+pub fn weight_scale(q_unit: &Tensor, n_out: usize) -> f32 {
+    let n = q_unit.len() as f64;
+    let mean: f64 = q_unit.data.iter().map(|&v| v as f64).sum::<f64>() / n;
+    let var: f64 =
+        q_unit.data.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / n;
+    (1.0 / (n_out as f64 * (var + 1e-12)).sqrt()) as f32
+}
+
+/// DoReFa activation quantizer onto {0, 1/a_levels, ..., 1}.
+pub fn act_quant(x: Tensor, bits: &QuantBits) -> Tensor {
+    let lv = bits.a_levels() as f32;
+    x.map(|v| round_ties_even(v.clamp(0.0, 1.0) * lv) / lv)
+}
+
+/// Integer activations on the [0, a_levels] grid (for the PIM engine).
+pub fn act_quant_int(x: &Tensor, bits: &QuantBits) -> Tensor {
+    let lv = bits.a_levels() as f32;
+    let mut out = x.clone();
+    for v in &mut out.data {
+        *v = round_ties_even(v.clamp(0.0, 1.0) * lv);
+    }
+    out
+}
+
+/// Explicit-bit-width activation quantizer (first layer: 8 bit).
+pub fn act_quant_bits(x: Tensor, bits: u32) -> Tensor {
+    let lv = ((1u64 << bits) - 1) as f32;
+    x.map(|v| round_ties_even(v.clamp(0.0, 1.0) * lv) / lv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bits() -> QuantBits {
+        QuantBits::default()
+    }
+
+    #[test]
+    fn weights_on_grid_and_bounded() {
+        let w = Tensor::from_vec(&[6], vec![0.3, -2.5, 0.1, 1.0, -0.2, 0.9]);
+        let q = weight_quant_unit(&w, &bits());
+        for &v in &q.data {
+            assert!((-1.0..=1.0).contains(&v));
+            let i = v * 7.0;
+            assert!((i - i.round()).abs() < 1e-5);
+        }
+        // max |tanh| element hits full scale
+        assert!((q.data[1].abs() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn int_matches_unit() {
+        let w = Tensor::from_vec(&[4], vec![0.5, -0.7, 0.05, 2.0]);
+        let qu = weight_quant_unit(&w, &bits());
+        let qi = weight_quant_int(&w, &bits());
+        for (u, i) in qu.data.iter().zip(&qi.data) {
+            assert!((u * 7.0 - i).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn act_quant_clips_and_grids() {
+        let x = Tensor::from_vec(&[4], vec![-0.5, 0.5, 1.5, 7.0 / 15.0]);
+        let q = act_quant(x, &bits());
+        assert_eq!(q.data[0], 0.0);
+        assert_eq!(q.data[2], 1.0);
+        assert!((q.data[3] - 7.0 / 15.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scale_formula() {
+        let q = Tensor::from_vec(&[4], vec![1.0, -1.0, 1.0, -1.0]);
+        // var = 1 → s = 1/sqrt(n_out)
+        assert!((weight_scale(&q, 16) - 0.25).abs() < 1e-6);
+    }
+}

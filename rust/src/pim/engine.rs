@@ -1,0 +1,372 @@
+//! The PIM MAC engine: plane decomposition → analog plane sums (GEMM) →
+//! ADC conversion (curve + noise) → digital recombination.
+//!
+//! Weights are prepared once per layer (`PimEngine::prepare`) into their
+//! decomposed form — bit planes for bit-serial, ±halves for differential —
+//! mirroring how a chip programs its cell array once and streams inputs.
+
+use crate::chip::ChipModel;
+use crate::config::Scheme;
+use crate::tensor::gemm::gemm_acc;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::layout::{plan_groups, GroupPlan};
+use super::{plane_full_scale, QuantBits};
+
+/// One layer's weights, decomposed for the configured scheme.
+#[derive(Debug, Clone)]
+enum GroupWeights {
+    /// [N, O] signed integer weights (native: multi-bit analog cells).
+    Native(Vec<f32>),
+    /// Positive and negative halves, each [N, O] of non-negative ints.
+    Differential(Vec<f32>, Vec<f32>),
+    /// b_w binary planes of [N, O] (bit-serial SRAM cells).
+    BitSerial(Vec<Vec<f32>>),
+}
+
+/// PIM execution engine for grouped matmuls of one geometry.
+#[derive(Debug, Clone)]
+pub struct PimEngine {
+    pub scheme: Scheme,
+    pub bits: QuantBits,
+    pub plan: GroupPlan,
+    pub out: usize,
+    fs: f32,
+    groups: Vec<GroupWeights>,
+}
+
+impl PimEngine {
+    /// Prepare integer weights `w_int` laid out [C*k*k, O] (im2col column
+    /// order) for execution. `unit_channels` is the requested group size.
+    pub fn prepare(
+        scheme: Scheme,
+        bits: QuantBits,
+        w_int: &Tensor,
+        c_in: usize,
+        kernel: usize,
+        unit_channels: usize,
+    ) -> Self {
+        assert_eq!(w_int.rank(), 2);
+        let cols = w_int.shape[0];
+        let out = w_int.shape[1];
+        assert_eq!(cols, c_in * kernel * kernel, "weight columns vs c_in*k*k");
+        let plan = plan_groups(c_in, kernel, unit_channels);
+        let n = plan.n;
+        let fs = plane_full_scale(scheme, &bits, n);
+        let b_w = bits.b_w;
+
+        let groups = (0..plan.groups)
+            .map(|g| {
+                let rows = g * n..(g + 1) * n;
+                match scheme {
+                    Scheme::Native => {
+                        let mut w = vec![0.0f32; n * out];
+                        for (ri, r) in rows.clone().enumerate() {
+                            w[ri * out..(ri + 1) * out]
+                                .copy_from_slice(&w_int.data[r * out..(r + 1) * out]);
+                        }
+                        GroupWeights::Native(w)
+                    }
+                    Scheme::Differential => {
+                        let mut wp = vec![0.0f32; n * out];
+                        let mut wn = vec![0.0f32; n * out];
+                        for (ri, r) in rows.clone().enumerate() {
+                            for o in 0..out {
+                                let v = w_int.data[r * out + o];
+                                if v > 0.0 {
+                                    wp[ri * out + o] = v;
+                                } else {
+                                    wn[ri * out + o] = -v;
+                                }
+                            }
+                        }
+                        GroupWeights::Differential(wp, wn)
+                    }
+                    Scheme::BitSerial => {
+                        let mut planes = vec![vec![0.0f32; n * out]; b_w as usize];
+                        for (ri, r) in rows.clone().enumerate() {
+                            for o in 0..out {
+                                let v = w_int.data[r * out + o] as i32;
+                                // two's complement over b_w bits
+                                let u = if v < 0 { v + (1 << b_w) } else { v } as u32;
+                                for (k, plane) in planes.iter_mut().enumerate() {
+                                    plane[ri * out + o] = ((u >> k) & 1) as f32;
+                                }
+                            }
+                        }
+                        GroupWeights::BitSerial(planes)
+                    }
+                }
+            })
+            .collect();
+
+        PimEngine { scheme, bits, plan, out, fs, groups }
+    }
+
+    /// Total MACs per output row (for throughput accounting).
+    pub fn macs_per_row(&self) -> usize {
+        self.plan.groups * self.plan.n * self.out
+    }
+
+    /// Execute the grouped PIM matmul over integer activation patches
+    /// [M, C*k*k] (values on the 0..a_levels integer grid, stored as f32).
+    /// Output [M, O] is in unit scale (estimate of Σ W̃ q̃).
+    pub fn matmul(&self, patches_int: &Tensor, chip: &ChipModel, rng: &mut Rng) -> Tensor {
+        let m = patches_int.shape[0];
+        let cols = patches_int.shape[1];
+        let n = self.plan.n;
+        assert_eq!(cols, self.plan.groups * n, "patch columns vs group plan");
+        let out = self.out;
+        let signed = matches!(self.scheme, Scheme::Native);
+        let n_slices = self.bits.n_slices();
+        let delta = self.bits.delta();
+
+        let conv = crate::chip::Converter::new(chip, self.fs);
+        let mut y = vec![0.0f32; m * out];
+        // scratch buffers reused across groups/planes (no alloc in hot loop)
+        let mut a_grp = vec![0.0f32; m * n];
+        let mut a_plane = vec![0.0f32; m * n];
+        let mut s = vec![0.0f32; m * out];
+
+        for (g, gw) in self.groups.iter().enumerate() {
+            // gather this group's patch columns into a contiguous block
+            for i in 0..m {
+                let src = &patches_int.data[i * cols + g * n..i * cols + (g + 1) * n];
+                a_grp[i * n..(i + 1) * n].copy_from_slice(src);
+            }
+            for l in 0..n_slices {
+                let slice_w = (delta as f32).powi(l as i32);
+                // input DAC plane: (a >> m*l) & (Δ-1), computed on integers
+                if n_slices == 1 {
+                    a_plane.copy_from_slice(&a_grp);
+                } else {
+                    let shift = (delta as f32).powi(l as i32);
+                    for (dst, &src) in a_plane.iter_mut().zip(&a_grp) {
+                        *dst = ((src / shift).floor()) % delta as f32;
+                    }
+                }
+                match gw {
+                    GroupWeights::Native(w) => {
+                        s.iter_mut().for_each(|v| *v = 0.0);
+                        gemm_acc(m, n, out, &a_plane, w, &mut s);
+                        for i in 0..m {
+                            for o in 0..out {
+                                y[i * out + o] += slice_w
+                                    * conv.convert(s[i * out + o], o, signed, rng);
+                            }
+                        }
+                    }
+                    GroupWeights::Differential(wp, wn) => {
+                        s.iter_mut().for_each(|v| *v = 0.0);
+                        gemm_acc(m, n, out, &a_plane, wp, &mut s);
+                        for i in 0..m {
+                            for o in 0..out {
+                                y[i * out + o] += slice_w
+                                    * conv.convert(s[i * out + o], o, false, rng);
+                            }
+                        }
+                        s.iter_mut().for_each(|v| *v = 0.0);
+                        gemm_acc(m, n, out, &a_plane, wn, &mut s);
+                        for i in 0..m {
+                            for o in 0..out {
+                                y[i * out + o] -= slice_w
+                                    * conv.convert(s[i * out + o], o, false, rng);
+                            }
+                        }
+                    }
+                    GroupWeights::BitSerial(planes) => {
+                        for (k, wp) in planes.iter().enumerate() {
+                            let sign = if k as u32 == self.bits.b_w - 1 { -1.0 } else { 1.0 };
+                            let bit_w = sign * (1u32 << k) as f32 * slice_w;
+                            s.iter_mut().for_each(|v| *v = 0.0);
+                            gemm_acc(m, n, out, &a_plane, wp, &mut s);
+                            for i in 0..m {
+                                for o in 0..out {
+                                    y[i * out + o] += bit_w
+                                        * conv.convert(s[i * out + o], o, false, rng);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        let denom = (self.bits.w_levels() * self.bits.a_levels()) as f32;
+        for v in &mut y {
+            *v /= denom;
+        }
+        Tensor::from_vec(&[m, out], y)
+    }
+}
+
+/// One-shot convenience: prepare + execute (tests, goldens).
+pub fn pim_grouped_matmul(
+    scheme: Scheme,
+    bits: QuantBits,
+    a_int: &Tensor, // [M, G*N]
+    w_int: &Tensor, // [G*N, O]
+    c_in: usize,
+    kernel: usize,
+    unit_channels: usize,
+    chip: &ChipModel,
+    rng: &mut Rng,
+) -> Tensor {
+    PimEngine::prepare(scheme, bits, w_int, c_in, kernel, unit_channels)
+        .matmul(a_int, chip, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bits() -> QuantBits {
+        QuantBits::default()
+    }
+
+    /// Loop-level reimplementation of one group/one output (the ref.py shape)
+    /// for an ideal chip — a second, independent implementation inside rust.
+    fn ref_one(a: &[f32], w: &[f32], scheme: Scheme, b_pim: u32, q: &QuantBits) -> f32 {
+        let n = a.len();
+        let levels = ((1u32 << b_pim) - 1) as f32;
+        let fs = plane_full_scale(scheme, q, n);
+        let lsb = fs / levels;
+        let adc = |s: f32| crate::chip::round_ties_even(s / lsb) * lsb;
+        let mut y = 0.0f32;
+        match scheme {
+            Scheme::Native => {
+                let s: f32 = a.iter().zip(w).map(|(x, y)| x * y).sum();
+                y += adc(s);
+            }
+            Scheme::Differential => {
+                let sp: f32 = a.iter().zip(w).map(|(x, y)| x * y.max(0.0)).sum();
+                let sn: f32 = a.iter().zip(w).map(|(x, y)| x * (-y).max(0.0)).sum();
+                y += adc(sp) - adc(sn);
+            }
+            Scheme::BitSerial => {
+                for k in 0..q.b_w {
+                    let sign = if k == q.b_w - 1 { -1.0 } else { 1.0 };
+                    let s: f32 = a
+                        .iter()
+                        .zip(w)
+                        .map(|(x, wv)| {
+                            let v = *wv as i32;
+                            let u = if v < 0 { v + (1 << q.b_w) } else { v } as u32;
+                            x * ((u >> k) & 1) as f32
+                        })
+                        .sum();
+                    y += sign * (1u32 << k) as f32 * adc(s);
+                }
+            }
+        }
+        y / (q.w_levels() * q.a_levels()) as f32
+    }
+
+    #[test]
+    fn engine_matches_inline_ref_all_schemes() {
+        let q = bits();
+        let mut rng = Rng::new(42);
+        for scheme in [Scheme::Native, Scheme::BitSerial, Scheme::Differential] {
+            for &b_pim in &[3u32, 5, 7] {
+                let (m, c, k, o, uc) = (5usize, 2usize, 3usize, 4usize, 2usize);
+                let n = uc * k * k;
+                let cols = c * k * k;
+                let a = Tensor::from_vec(
+                    &[m, cols],
+                    (0..m * cols).map(|_| rng.int_in(0, 15) as f32).collect(),
+                );
+                let w = Tensor::from_vec(
+                    &[cols, o],
+                    (0..cols * o).map(|_| rng.int_in(-7, 7) as f32).collect(),
+                );
+                let chip = ChipModel::ideal(b_pim);
+                let mut nrng = Rng::new(0);
+                let y = pim_grouped_matmul(scheme, q, &a, &w, c, k, uc, &chip, &mut nrng);
+                // independent reference, group by group
+                let groups = cols / n;
+                for i in 0..m {
+                    for oi in 0..o {
+                        let mut want = 0.0;
+                        for g in 0..groups {
+                            let arow: Vec<f32> =
+                                (0..n).map(|j| a.data[i * cols + g * n + j]).collect();
+                            let wcol: Vec<f32> =
+                                (0..n).map(|j| w.data[(g * n + j) * o + oi]).collect();
+                            want += ref_one(&arow, &wcol, scheme, b_pim, &q);
+                        }
+                        let got = y.data[i * o + oi];
+                        assert!(
+                            (got - want).abs() < 1e-5,
+                            "{scheme} b{b_pim} [{i},{oi}]: {got} vs {want}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn infinite_resolution_recovers_exact_product() {
+        let q = bits();
+        let mut rng = Rng::new(1);
+        let (m, c, k, o, uc) = (4usize, 4usize, 3usize, 3usize, 2usize);
+        let cols = c * k * k;
+        let a = Tensor::from_vec(
+            &[m, cols],
+            (0..m * cols).map(|_| rng.int_in(0, 15) as f32).collect(),
+        );
+        let w = Tensor::from_vec(
+            &[cols, o],
+            (0..cols * o).map(|_| rng.int_in(-7, 7) as f32).collect(),
+        );
+        let chip = ChipModel::ideal(24);
+        let mut nrng = Rng::new(0);
+        let y = pim_grouped_matmul(Scheme::BitSerial, q, &a, &w, c, k, uc, &chip, &mut nrng);
+        for i in 0..m {
+            for oi in 0..o {
+                let exact: f32 = (0..cols)
+                    .map(|j| a.data[i * cols + j] * w.data[j * o + oi])
+                    .sum::<f32>()
+                    / 105.0;
+                assert!((y.data[i * o + oi] - exact).abs() < 2e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn noise_changes_output_determinately() {
+        let q = bits();
+        let mut rng = Rng::new(2);
+        let a = Tensor::from_vec(&[2, 9], (0..18).map(|_| rng.int_in(0, 15) as f32).collect());
+        let w = Tensor::from_vec(&[9, 2], (0..18).map(|_| rng.int_in(-7, 7) as f32).collect());
+        let chip = ChipModel::ideal(7).with_noise(0.5);
+        let run = |seed| {
+            let mut r = Rng::new(seed);
+            pim_grouped_matmul(Scheme::BitSerial, q, &a, &w, 1, 3, 1, &chip, &mut r)
+        };
+        assert_eq!(run(3), run(3), "same seed, same output");
+        assert_ne!(run(3), run(4), "different noise stream differs");
+    }
+
+    #[test]
+    fn m1_dac_slices() {
+        // m=1 (binary DAC): 4 input planes; must still match high-res exact.
+        let q = QuantBits { b_w: 4, b_a: 4, m: 1 };
+        let mut rng = Rng::new(5);
+        let a = Tensor::from_vec(&[3, 9], (0..27).map(|_| rng.int_in(0, 15) as f32).collect());
+        let w = Tensor::from_vec(&[9, 2], (0..18).map(|_| rng.int_in(-7, 7) as f32).collect());
+        let chip = ChipModel::ideal(24);
+        let mut nrng = Rng::new(0);
+        let y = pim_grouped_matmul(Scheme::BitSerial, q, &a, &w, 1, 3, 1, &chip, &mut nrng);
+        for i in 0..3 {
+            for oi in 0..2 {
+                let exact: f32 = (0..9)
+                    .map(|j| a.data[i * 9 + j] * w.data[j * 2 + oi])
+                    .sum::<f32>()
+                    / 105.0;
+                assert!((y.data[i * 2 + oi] - exact).abs() < 2e-3);
+            }
+        }
+    }
+}

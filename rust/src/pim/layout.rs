@@ -1,0 +1,58 @@
+//! Channel-group layout — rust mirror of `python/compile/pim.py`'s
+//! grouped_patches/grouped_weights contract.
+//!
+//! With the channel-major im2col layout (`tensor::ops::im2col`), a PIM
+//! channel group of `uc` input channels occupies a *contiguous* run of
+//! ``n = uc * k * k`` columns, so grouping is pure index arithmetic.
+
+/// Largest uc ≤ `unit_channels` dividing `c` (mirror of python
+/// `effective_unit_channels`; a narrow early layer maps onto a smaller slice
+/// of the analog array).
+pub fn effective_unit_channels(c: usize, unit_channels: usize) -> usize {
+    let mut uc = unit_channels.min(c).max(1);
+    while c % uc != 0 {
+        uc -= 1;
+    }
+    uc
+}
+
+/// Group geometry of one conv layer on the PIM array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupPlan {
+    /// Channels per group actually used.
+    pub uc: usize,
+    /// Number of groups G.
+    pub groups: usize,
+    /// MACs per analog inner product: N = uc * k * k.
+    pub n: usize,
+}
+
+pub fn plan_groups(c_in: usize, kernel: usize, unit_channels: usize) -> GroupPlan {
+    let uc = effective_unit_channels(c_in, unit_channels);
+    GroupPlan { uc, groups: c_in / uc, n: uc * kernel * kernel }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mirrors_python() {
+        assert_eq!(effective_unit_channels(8, 16), 8);
+        assert_eq!(effective_unit_channels(32, 16), 16);
+        assert_eq!(effective_unit_channels(12, 8), 6);
+        assert_eq!(effective_unit_channels(7, 4), 1);
+        assert_eq!(effective_unit_channels(1, 1), 1);
+    }
+
+    #[test]
+    fn plan_n144() {
+        // the paper's N=144: unit channel 16, 3x3 kernel
+        let p = plan_groups(32, 3, 16);
+        assert_eq!(p, GroupPlan { uc: 16, groups: 2, n: 144 });
+        // N=72: unit channel 8
+        assert_eq!(plan_groups(16, 3, 8).n, 72);
+        // native: unit channel 1 → N=9 (matches Table 3)
+        assert_eq!(plan_groups(16, 3, 1).n, 9);
+    }
+}

@@ -1,0 +1,87 @@
+//! PIM MAC engine substrate (S3): the integer-exact model of Eqn. 1 /
+//! Appendix A1 that plays the role of the paper's prototype chip.
+//!
+//! The engine consumes integer activations/weights (the grids the digital
+//! quantizers produce), decomposes them per the configured scheme, forms the
+//! analog plane sums, pushes every partial sum through the ADC model
+//! (`crate::chip`), and recombines digitally.  With an ideal ADC and zero
+//! noise it agrees bit-exactly with the jnp/Pallas forward — pinned by the
+//! golden cross-tests (rust/tests/golden_cross.rs).
+
+pub mod engine;
+pub mod layout;
+
+pub use engine::{pim_grouped_matmul, PimEngine};
+
+use crate::config::Scheme;
+
+/// Quantization bit-widths (mirror of python QuantConfig).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantBits {
+    pub b_w: u32,
+    pub b_a: u32,
+    /// DAC resolution m (input slices of m bits, Eqn. A2).
+    pub m: u32,
+}
+
+impl Default for QuantBits {
+    fn default() -> Self {
+        QuantBits { b_w: 4, b_a: 4, m: 4 }
+    }
+}
+
+impl QuantBits {
+    /// Positive full-scale of the weight grid (2^{b_w-1} - 1).
+    pub fn w_levels(&self) -> i32 {
+        (1 << (self.b_w - 1)) - 1
+    }
+    /// Full-scale of the activation grid (2^{b_a} - 1).
+    pub fn a_levels(&self) -> i32 {
+        (1 << self.b_a) - 1
+    }
+    /// DAC radix Δ = 2^m.
+    pub fn delta(&self) -> i32 {
+        1 << self.m
+    }
+    /// Number of input planes b_a / m.
+    pub fn n_slices(&self) -> u32 {
+        self.b_a / self.m
+    }
+}
+
+/// Integer full-scale FS of one analog plane sum for a given scheme and
+/// group size N (see DESIGN.md): the ADC grid covers [0, FS] ([-FS, FS] for
+/// the signed native scheme).
+pub fn plane_full_scale(scheme: Scheme, bits: &QuantBits, n: usize) -> f32 {
+    let base = (n as i32 * (bits.delta() - 1)) as f32;
+    match scheme {
+        Scheme::BitSerial => base,
+        Scheme::Native | Scheme::Differential => base * bits.w_levels() as f32,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_helpers() {
+        let q = QuantBits::default();
+        assert_eq!(q.w_levels(), 7);
+        assert_eq!(q.a_levels(), 15);
+        assert_eq!(q.delta(), 16);
+        assert_eq!(q.n_slices(), 1);
+        let q2 = QuantBits { b_w: 4, b_a: 4, m: 1 };
+        assert_eq!(q2.delta(), 2);
+        assert_eq!(q2.n_slices(), 4);
+    }
+
+    #[test]
+    fn full_scale_matches_paper() {
+        let q = QuantBits::default();
+        // bit-serial N=144: plane sums in [0, 144*15] = [0, 2160] — the paper
+        // notes the analog-level count can far exceed the ADC levels (§2).
+        assert_eq!(plane_full_scale(Scheme::BitSerial, &q, 144), 2160.0);
+        assert_eq!(plane_full_scale(Scheme::Native, &q, 9), 9.0 * 15.0 * 7.0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Reporting substrate (S13): experiment records rendered as ASCII tables,
+//! saved as CSV + JSON under `results/`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+use crate::util::table::{to_csv, Table};
+
+/// One regenerated table/figure.
+pub struct Report {
+    /// Experiment id, e.g. "table3", "fig5".
+    pub id: String,
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Free-form notes (paper-vs-measured commentary).
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str, headers: &[&str]) -> Self {
+        Report {
+            id: id.to_string(),
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "report row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&self.headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        for r in &self.rows {
+            t.row(r);
+        }
+        let mut out = format!("== {} — {} ==\n{}\n", self.id, self.title, t.render());
+        for n in &self.notes {
+            out.push_str(&format!("  note: {n}\n"));
+        }
+        out
+    }
+
+    /// Write `<dir>/<id>.csv` and `<dir>/<id>.json`.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let headers: Vec<&str> = self.headers.iter().map(|s| s.as_str()).collect();
+        std::fs::write(dir.join(format!("{}.csv", self.id)), to_csv(&headers, &self.rows))?;
+        let j = Json::obj(vec![
+            ("id", Json::str(&self.id)),
+            ("title", Json::str(&self.title)),
+            (
+                "headers",
+                Json::Arr(self.headers.iter().map(|h| Json::str(h)).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| Json::str(c)).collect()))
+                        .collect(),
+                ),
+            ),
+            (
+                "notes",
+                Json::Arr(self.notes.iter().map(|n| Json::str(n)).collect()),
+            ),
+        ]);
+        std::fs::write(dir.join(format!("{}.json", self.id)), j.to_string())?;
+        Ok(())
+    }
+}
+
+/// Default results directory ($PIM_QAT_RESULTS or ./results).
+pub fn results_dir() -> PathBuf {
+    std::env::var_os("PIM_QAT_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("results"))
+}
+
+/// Format a float accuracy as the paper prints them.
+pub fn pct(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_and_save() {
+        let mut r = Report::new("test_exp", "demo", &["a", "b"]);
+        r.row(vec!["1".into(), "x".into()]);
+        r.note("shape holds");
+        let s = r.render();
+        assert!(s.contains("test_exp") && s.contains("shape holds"));
+        let dir = std::env::temp_dir().join("pimqat_report_test");
+        r.save(&dir).unwrap();
+        assert!(dir.join("test_exp.csv").exists());
+        let j = crate::util::json::parse_file(&dir.join("test_exp.json")).unwrap();
+        assert_eq!(j.get("rows").idx(0).idx(1).as_str(), Some("x"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn row_arity() {
+        Report::new("x", "y", &["a"]).row(vec![]);
+    }
+}

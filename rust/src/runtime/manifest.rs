@@ -1,0 +1,242 @@
+//! Artifact manifest — the contract written by `python/compile/aot.py`.
+//!
+//! The manifest pins parameter ordering (flatten_tree), input/output
+//! signatures and the model/quant/PIM configuration of every artifact; this
+//! module parses it into typed structs the trainer and registry consume.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{parse_file, Json};
+
+/// Tensor dtype in the artifact signature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// One input slot of an artifact.
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// Artifact kind (mirrors aot.py).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Init,
+    Train,
+    Eval,
+    PimEval,
+    Kernel,
+}
+
+/// One lowered HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: Kind,
+    pub model: String,
+    pub mode: Option<String>,
+    pub scheme: Option<String>,
+    pub unit_channels: Option<usize>,
+    pub batch: usize,
+    pub fwd_rescale: bool,
+    pub bwd_rescale: bool,
+    pub n_params: usize,
+    pub n_state: usize,
+    pub n_outputs: usize,
+    pub inputs: Vec<InputSpec>,
+}
+
+/// A model family's parameter layout.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub arch: String,
+    pub depth_n: usize,
+    pub width: usize,
+    pub image: usize,
+    pub classes: usize,
+    pub in_channels: usize,
+    pub param_paths: Vec<String>,
+    pub param_shapes: Vec<Vec<usize>>,
+    pub state_paths: Vec<String>,
+    pub state_shapes: Vec<Vec<usize>>,
+}
+
+impl ModelEntry {
+    pub fn param_count(&self) -> usize {
+        self.param_shapes.iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub b_w: u32,
+    pub b_a: u32,
+    pub m_dac: u32,
+    pub batch: usize,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn shapes(j: &Json) -> Vec<Vec<usize>> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(|s| s.as_usize_vec()).collect())
+        .unwrap_or_default()
+}
+
+fn strings(j: &Json) -> Vec<String> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = parse_file(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+
+        let q = j.get("quant");
+        let mut models = BTreeMap::new();
+        for (key, m) in j.get("models").as_obj().ok_or_else(|| anyhow!("models missing"))? {
+            models.insert(
+                key.clone(),
+                ModelEntry {
+                    arch: m.get("arch").as_str().unwrap_or("resnet").to_string(),
+                    depth_n: m.get("depth_n").as_usize().unwrap_or(1),
+                    width: m.get("width").as_usize().unwrap_or(8),
+                    image: m.get("image").as_usize().unwrap_or(16),
+                    classes: m.get("classes").as_usize().unwrap_or(10),
+                    in_channels: m.get("in_channels").as_usize().unwrap_or(3),
+                    param_paths: strings(m.get("param_paths")),
+                    param_shapes: shapes(m.get("param_shapes")),
+                    state_paths: strings(m.get("state_paths")),
+                    state_shapes: shapes(m.get("state_shapes")),
+                },
+            );
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for a in j.get("artifacts").as_arr().ok_or_else(|| anyhow!("artifacts missing"))? {
+            let name = a.get("name").as_str().ok_or_else(|| anyhow!("artifact name"))?;
+            let kind = match a.get("kind").as_str() {
+                Some("init") => Kind::Init,
+                Some("train") => Kind::Train,
+                Some("eval") => Kind::Eval,
+                Some("pimeval") => Kind::PimEval,
+                Some("kernel") => Kind::Kernel,
+                other => return Err(anyhow!("unknown kind {other:?} for {name}")),
+            };
+            let inputs = a
+                .get("inputs")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|i| InputSpec {
+                    name: i.get("name").as_str().unwrap_or("").to_string(),
+                    shape: i.get("shape").as_usize_vec().unwrap_or_default(),
+                    dtype: if i.get("dtype").as_str() == Some("i32") {
+                        DType::I32
+                    } else {
+                        DType::F32
+                    },
+                })
+                .collect();
+            artifacts.insert(
+                name.to_string(),
+                ArtifactSpec {
+                    name: name.to_string(),
+                    file: dir.join(a.get("file").as_str().unwrap_or("")),
+                    kind,
+                    model: a.get("model").as_str().unwrap_or("").to_string(),
+                    mode: a.get("mode").as_str().map(String::from),
+                    scheme: a.get("scheme").as_str().map(String::from),
+                    unit_channels: a.get("unit_channels").as_usize(),
+                    batch: a.get("batch").as_usize().unwrap_or(0),
+                    fwd_rescale: a.get("fwd_rescale").as_bool().unwrap_or(true),
+                    bwd_rescale: a.get("bwd_rescale").as_bool().unwrap_or(true),
+                    n_params: a.get("n_params").as_usize().unwrap_or(0),
+                    n_state: a.get("n_state").as_usize().unwrap_or(0),
+                    n_outputs: a.get("n_outputs").as_usize().unwrap_or(0),
+                    inputs,
+                },
+            );
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            b_w: q.get("b_w").as_i64().unwrap_or(4) as u32,
+            b_a: q.get("b_a").as_i64().unwrap_or(4) as u32,
+            m_dac: q.get("m").as_i64().unwrap_or(4) as u32,
+            batch: j.get("batch").as_usize().unwrap_or(32),
+            models,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact {name:?} not in manifest (have: {:?}); re-run `make artifacts`",
+                self.artifacts.keys().take(8).collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest"))
+    }
+}
+
+/// Default artifacts dir: $PIM_QAT_ARTIFACTS or ./artifacts.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("PIM_QAT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("pimqat_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = r#"{
+          "quant": {"b_w": 4, "b_a": 4, "m": 4},
+          "batch": 32,
+          "models": {"tiny": {"arch": "resnet", "depth_n": 1, "width": 8,
+            "image": 16, "classes": 10, "in_channels": 3,
+            "param_paths": ["conv0/w"], "param_shapes": [[3,3,3,8]],
+            "state_paths": ["bn0/mean"], "state_shapes": [[8]]}},
+          "artifacts": [{"name": "tiny_init", "file": "tiny_init.hlo.txt",
+            "kind": "init", "model": "tiny", "mode": null, "scheme": null,
+            "unit_channels": null, "batch": 32, "fwd_rescale": true,
+            "bwd_rescale": true, "n_params": 1, "n_state": 1, "n_outputs": 3,
+            "inputs": [{"name": "seed", "shape": [], "dtype": "i32"}]}]
+        }"#;
+        parse(text).unwrap(); // grammar sanity
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.b_w, 4);
+        let a = m.artifact("tiny_init").unwrap();
+        assert_eq!(a.kind, Kind::Init);
+        assert_eq!(a.inputs[0].dtype, DType::I32);
+        assert_eq!(m.model("tiny").unwrap().param_count(), 3 * 3 * 3 * 8);
+        assert!(m.artifact("nope").is_err());
+    }
+}

@@ -1,0 +1,137 @@
+//! PJRT runtime (S1): loads AOT-lowered HLO text artifacts and executes them
+//! on the CPU client — the only place the `xla` crate is touched.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO **text** → HloModuleProto
+//! → XlaComputation → compile → execute.  Outputs are lowered with
+//! `return_tuple=True`, so every execution returns one tuple literal that we
+//! decompose into the flat output list the manifest describes.
+
+pub mod literal;
+pub mod manifest;
+
+pub use manifest::{ArtifactSpec, DType, Kind, Manifest, ModelEntry};
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// The PJRT CPU runtime plus a compile cache.
+pub struct Runtime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: PjRtLoadedExecutable,
+}
+
+// SAFETY: PJRT clients and loaded executables are documented thread-safe in
+// XLA (the C++ objects are internally synchronized; IFRT/PJRT contract).
+// The rust wrapper types only miss the auto-markers because they hold raw
+// pointers.  We never expose interior mutation beyond the Mutex-guarded
+// compile cache.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Runtime {
+    /// Create the CPU client and load the manifest from `dir`.
+    pub fn new(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by manifest name (cached).
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let proto = HloModuleProto::from_text_file(&spec.file)
+            .map_err(|e| anyhow!("parsing HLO text {}: {e}", spec.file.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        let arc = std::sync::Arc::new(Executable { spec, exe });
+        self.cache.lock().unwrap().insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+}
+
+impl Executable {
+    /// Execute with the manifest-ordered input literals; returns the flat
+    /// output list (tuple decomposed).
+    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            return Err(anyhow!(
+                "{}: got {} inputs, artifact expects {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            ));
+        }
+        let bufs = self
+            .exe
+            .execute::<Literal>(inputs)
+            .map_err(|e| anyhow!("executing {}: {e}", self.spec.name))?;
+        let tuple = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e}", self.spec.name))?;
+        let outs = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("decomposing result tuple of {}: {e}", self.spec.name))?;
+        if outs.len() != self.spec.n_outputs {
+            return Err(anyhow!(
+                "{}: artifact produced {} outputs, manifest says {}",
+                self.spec.name,
+                outs.len(),
+                self.spec.n_outputs
+            ));
+        }
+        Ok(outs)
+    }
+
+    /// Validate a set of input literals against the manifest signature
+    /// (shape check); used by tests and the trainer's sanity pass.
+    pub fn check_inputs(&self, inputs: &[Literal]) -> Result<()> {
+        for (i, (lit, spec)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            let shape = lit
+                .array_shape()
+                .map_err(|e| anyhow!("input {i} ({}) shape: {e}", spec.name))?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            if dims != spec.shape {
+                return Err(anyhow!(
+                    "input {i} ({}): shape {dims:?} != manifest {:?}",
+                    spec.name,
+                    spec.shape
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Open the default runtime (artifacts dir from env / cwd).
+pub fn open_default() -> Result<Runtime> {
+    let dir = manifest::default_artifacts_dir();
+    Runtime::new(&dir).with_context(|| {
+        format!(
+            "opening artifacts at {} — run `make artifacts` first",
+            dir.display()
+        )
+    })
+}

@@ -1,0 +1,87 @@
+//! Small blocked GEMM used by the digital conv path and the PIM engine's
+//! plane sums.  Single-threaded (the testbed is 1 core); the blocking keeps
+//! the working set in L1/L2 which is what matters here (§Perf L3).
+
+/// C[m,n] += A[m,k] * B[k,n], row-major.
+pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    const BK: usize = 64;
+    const BN: usize = 256;
+    for k0 in (0..k).step_by(BK) {
+        let k1 = (k0 + BK).min(k);
+        for n0 in (0..n).step_by(BN) {
+            let n1 = (n0 + BN).min(n);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue; // bit-planes and ReLU outputs are sparse
+                    }
+                    let brow = &b[kk * n..(kk + 1) * n];
+                    for nn in n0..n1 {
+                        crow[nn] += aik * brow[nn];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// C = A * B (allocating convenience wrapper).
+pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut c = vec![0.0; m * n];
+    gemm_acc(m, k, n, a, b, &mut c);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gemm_naive(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive_small() {
+        let a = vec![1., 2., 3., 4.];
+        let b = vec![5., 6., 7., 8.];
+        assert_eq!(gemm(2, 2, 2, &a, &b), gemm_naive(2, 2, 2, &a, &b));
+    }
+
+    #[test]
+    fn matches_naive_random_sizes() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 7, 5), (17, 130, 9), (64, 72, 33), (5, 300, 300)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal_in(0.0, 1.0)).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal_in(0.0, 1.0)).collect();
+            let c1 = gemm(m, k, n, &a, &b);
+            let c2 = gemm_naive(m, k, n, &a, &b);
+            for (x, y) in c1.iter().zip(&c2) {
+                assert!((x - y).abs() < 1e-3, "({m},{k},{n}): {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn accumulates_into_c() {
+        let a = vec![1.0, 0.0, 0.0, 1.0];
+        let b = vec![2.0, 0.0, 0.0, 2.0];
+        let mut c = vec![1.0; 4];
+        gemm_acc(2, 2, 2, &a, &b, &mut c);
+        assert_eq!(c, vec![3.0, 1.0, 1.0, 3.0]);
+    }
+}

@@ -1,0 +1,133 @@
+//! Tensor substrate (S2): dense f32 tensors (NHWC for images) with the ops
+//! the chip-sim inference engine needs — im2col, GEMM, conv, pooling.
+//!
+//! This is deliberately a small, predictable library: the inference hot path
+//! (grouped integer MAC) lives in `crate::pim`; this module provides the
+//! digital layers (first conv, shortcuts, BN, FC) and the patch plumbing.
+
+pub mod gemm;
+pub mod ops;
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs data len {}",
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Reshape (must preserve element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {shape:?}",
+            self.shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 4-D index (NHWC).
+    #[inline]
+    pub fn at4(&self, n: usize, h: usize, w: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 4);
+        let (sh, sw, sc) = (self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((n * sh + h) * sw + w) * sc + c]
+    }
+
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Self {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+        self
+    }
+
+    /// Elementwise binary op with an equally-shaped tensor.
+    pub fn zip(mut self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Self {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a = f(*a, *b);
+        }
+        self
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_index() {
+        let t = Tensor::from_vec(&[1, 2, 2, 3], (0..12).map(|i| i as f32).collect());
+        assert_eq!(t.at4(0, 1, 0, 2), 8.0);
+        assert_eq!(t.at4(0, 0, 1, 0), 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn bad_shape_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).reshape(&[3, 2]);
+        assert_eq!(t.at2(2, 1), 6.0);
+    }
+
+    #[test]
+    fn map_zip() {
+        let a = Tensor::from_vec(&[3], vec![1., -2., 3.]);
+        let b = Tensor::from_vec(&[3], vec![1., 1., 1.]);
+        let c = a.map(f32::abs).zip(&b, |x, y| x + y);
+        assert_eq!(c.data, vec![2., 3., 4.]);
+    }
+}

@@ -1,0 +1,288 @@
+//! NN ops over `Tensor` (NHWC): im2col, conv, pooling, batch norm.
+//!
+//! The im2col patch layout is channel-major — column index
+//! ``c * kh*kw + (dy * kw + dx)`` — which makes a PIM channel-group of
+//! ``uc`` channels a *contiguous* run of ``uc * kh*kw`` columns.  This is the
+//! same layout contract as ``python/compile/pim.py::grouped_patches`` and is
+//! what lets `crate::pim` reuse these patches directly.
+
+use super::{gemm::gemm, Tensor};
+
+/// Extract SAME-padded conv patches: x [B,H,W,C] → ([M, C*k*k], out_h, out_w)
+/// with stride `s` and the channel-major layout documented above.
+pub fn im2col(x: &Tensor, k: usize, s: usize) -> (Tensor, usize, usize) {
+    assert_eq!(x.rank(), 4, "im2col expects NHWC");
+    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let pad = k / 2;
+    let oh = (h + 2 * pad - k) / s + 1;
+    let ow = (w + 2 * pad - k) / s + 1;
+    let cols = c * k * k;
+    let mut out = vec![0.0f32; b * oh * ow * cols];
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((bi * oh + oy) * ow + ox) * cols;
+                for dy in 0..k {
+                    let iy = (oy * s + dy) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for dx in 0..k {
+                        let ix = (ox * s + dx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((bi * h + iy as usize) * w + ix as usize) * c;
+                        let p = dy * k + dx;
+                        for ci in 0..c {
+                            out[row + ci * k * k + p] = x.data[src + ci];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (Tensor::from_vec(&[b * oh * ow, cols], out), oh, ow)
+}
+
+/// Reorder conv weights [kh,kw,C,O] (python HWIO) to the im2col column
+/// layout: [C*k*k, O].
+pub fn weights_to_cols(w: &Tensor) -> Tensor {
+    assert_eq!(w.rank(), 4);
+    let (kh, kw, c, o) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    let mut out = vec![0.0f32; kh * kw * c * o];
+    for dy in 0..kh {
+        for dx in 0..kw {
+            for ci in 0..c {
+                for oi in 0..o {
+                    let src = ((dy * kw + dx) * c + ci) * o + oi;
+                    let dst = (ci * kh * kw + dy * kw + dx) * o + oi;
+                    out[dst] = w.data[src];
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[c * kh * kw, o], out)
+}
+
+/// Digital SAME conv, NHWC × HWIO → NHWC.
+pub fn conv2d(x: &Tensor, w: &Tensor, stride: usize) -> Tensor {
+    let (patches, oh, ow) = im2col(x, w.shape[0], stride);
+    let wc = weights_to_cols(w);
+    let m = patches.shape[0];
+    let k = patches.shape[1];
+    let o = wc.shape[1];
+    let y = gemm(m, k, o, &patches.data, &wc.data);
+    Tensor::from_vec(&[x.shape[0], oh, ow, o], y)
+}
+
+/// 2×2 max pool, stride 2 (VGG path).
+pub fn maxpool2(x: &Tensor) -> Tensor {
+    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = Tensor::zeros(&[b, oh, ow, c]);
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ci in 0..c {
+                    let mut m = f32::NEG_INFINITY;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            m = m.max(x.at4(bi, 2 * oy + dy, 2 * ox + dx, ci));
+                        }
+                    }
+                    out.data[((bi * oh + oy) * ow + ox) * c + ci] = m;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Global average pool: [B,H,W,C] → [B,C].
+pub fn global_avg_pool(x: &Tensor) -> Tensor {
+    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = vec![0.0f32; b * c];
+    let inv = 1.0 / (h * w) as f32;
+    for bi in 0..b {
+        for hi in 0..h {
+            for wi in 0..w {
+                let src = ((bi * h + hi) * w + wi) * c;
+                for ci in 0..c {
+                    out[bi * c + ci] += x.data[src + ci] * inv;
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[b, c], out)
+}
+
+/// BatchNorm (inference): per-channel affine with given running stats.
+/// eps matches the jax model (1e-5).
+pub fn batch_norm(x: &Tensor, gamma: &[f32], beta: &[f32], mean: &[f32], var: &[f32]) -> Tensor {
+    let c = *x.shape.last().unwrap();
+    assert!(gamma.len() == c && beta.len() == c && mean.len() == c && var.len() == c);
+    let mut out = x.clone();
+    let inv: Vec<f32> = var.iter().map(|v| 1.0 / (v + 1e-5).sqrt()).collect();
+    for (i, v) in out.data.iter_mut().enumerate() {
+        let ci = i % c;
+        *v = gamma[ci] * (*v - mean[ci]) * inv[ci] + beta[ci];
+    }
+    out
+}
+
+/// Per-channel mean/variance over (B,H,W) — BN calibration's batch stats.
+pub fn channel_stats(x: &Tensor) -> (Vec<f32>, Vec<f32>) {
+    let c = *x.shape.last().unwrap();
+    let n = x.len() / c;
+    let mut mean = vec![0.0f64; c];
+    for (i, v) in x.data.iter().enumerate() {
+        mean[i % c] += *v as f64;
+    }
+    for m in &mut mean {
+        *m /= n as f64;
+    }
+    let mut var = vec![0.0f64; c];
+    for (i, v) in x.data.iter().enumerate() {
+        let d = *v as f64 - mean[i % c];
+        var[i % c] += d * d;
+    }
+    for v in &mut var {
+        *v /= n as f64;
+    }
+    (
+        mean.iter().map(|&m| m as f32).collect(),
+        var.iter().map(|&v| v as f32).collect(),
+    )
+}
+
+/// ReLU.
+pub fn relu(x: Tensor) -> Tensor {
+    x.map(|v| v.max(0.0))
+}
+
+/// Row-wise argmax of a [B, K] tensor.
+pub fn argmax_rows(x: &Tensor) -> Vec<usize> {
+    let (b, k) = (x.shape[0], x.shape[1]);
+    (0..b)
+        .map(|i| {
+            let row = &x.data[i * k..(i + 1) * k];
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        })
+        .collect()
+}
+
+/// Mean cross-entropy of logits [B,K] against labels.
+pub fn cross_entropy(logits: &Tensor, labels: &[usize]) -> f32 {
+    let (b, k) = (logits.shape[0], logits.shape[1]);
+    let mut total = 0.0f64;
+    for i in 0..b {
+        let row = &logits.data[i * k..(i + 1) * k];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let lse = row.iter().map(|&v| ((v - mx) as f64).exp()).sum::<f64>().ln() + mx as f64;
+        total += lse - row[labels[i]] as f64;
+    }
+    (total / b as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn conv_naive(x: &Tensor, w: &Tensor, s: usize) -> Tensor {
+        let (b, h, wd, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+        let (kh, kw, _, o) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+        let pad = kh / 2;
+        let oh = (h + 2 * pad - kh) / s + 1;
+        let ow = (wd + 2 * pad - kw) / s + 1;
+        let mut out = Tensor::zeros(&[b, oh, ow, o]);
+        for bi in 0..b {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for oi in 0..o {
+                        let mut acc = 0.0;
+                        for dy in 0..kh {
+                            for dx in 0..kw {
+                                let iy = (oy * s + dy) as isize - pad as isize;
+                                let ix = (ox * s + dx) as isize - pad as isize;
+                                if iy < 0 || ix < 0 || iy >= h as isize || ix >= wd as isize {
+                                    continue;
+                                }
+                                for ci in 0..c {
+                                    acc += x.at4(bi, iy as usize, ix as usize, ci)
+                                        * w.data[((dy * kw + dx) * c + ci) * o + oi];
+                                }
+                            }
+                        }
+                        out.data[((bi * oh + oy) * ow + ox) * o + oi] = acc;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn conv_matches_naive() {
+        let mut rng = Rng::new(2);
+        for &(h, c, o, k, s) in &[(6, 4, 3, 3, 1), (8, 8, 5, 3, 2), (5, 2, 2, 1, 1)] {
+            let x = Tensor::from_vec(
+                &[2, h, h, c],
+                (0..2 * h * h * c).map(|_| rng.normal_in(0.0, 1.0)).collect(),
+            );
+            let w = Tensor::from_vec(
+                &[k, k, c, o],
+                (0..k * k * c * o).map(|_| rng.normal_in(0.0, 1.0)).collect(),
+            );
+            let y1 = conv2d(&x, &w, s);
+            let y2 = conv_naive(&x, &w, s);
+            assert_eq!(y1.shape, y2.shape);
+            assert!(y1.max_abs_diff(&y2) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn im2col_group_contiguity() {
+        // a PIM channel group (uc channels) must be contiguous in the column.
+        let x = Tensor::from_vec(&[1, 2, 2, 4], (0..16).map(|i| i as f32).collect());
+        let (p, _, _) = im2col(&x, 1, 1);
+        // with k=1 the patch is just the channel vector
+        assert_eq!(p.shape, vec![4, 4]);
+        assert_eq!(&p.data[0..4], &[0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn maxpool_and_gap() {
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1., 2., 3., 4.]);
+        assert_eq!(maxpool2(&x).data, vec![4.0]);
+        assert_eq!(global_avg_pool(&x).data, vec![2.5]);
+    }
+
+    #[test]
+    fn bn_identity_when_normalized() {
+        let x = Tensor::from_vec(&[1, 1, 1, 2], vec![3.0, -1.0]);
+        let y = batch_norm(&x, &[1.0, 1.0], &[0.0, 0.0], &[3.0, -1.0], &[1.0, 1.0]);
+        assert!(y.data.iter().all(|v| v.abs() < 1e-6));
+    }
+
+    #[test]
+    fn channel_stats_simple() {
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1.0, 10.0, 3.0, 20.0]);
+        let (m, v) = channel_stats(&x);
+        assert_eq!(m, vec![2.0, 15.0]);
+        assert_eq!(v, vec![1.0, 25.0]);
+    }
+
+    #[test]
+    fn ce_and_argmax() {
+        let l = Tensor::from_vec(&[2, 3], vec![10., 0., 0., 0., 0., 5.]);
+        assert_eq!(argmax_rows(&l), vec![0, 2]);
+        assert!(cross_entropy(&l, &[0, 2]) < 0.01);
+        assert!(cross_entropy(&l, &[1, 0]) > 2.0);
+    }
+}

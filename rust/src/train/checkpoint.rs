@@ -1,0 +1,145 @@
+//! Checkpoint format: `<dir>/ckpt.json` (metadata + tensor index) +
+//! `<dir>/params.bin` (little-endian f32, concatenated in index order).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::{parse_file, Json};
+
+/// A trained model snapshot: parameters + BN running state.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub model: String,
+    /// Extra metadata recorded by the trainer (mode, scheme, b_pim, ...).
+    pub meta: BTreeMap<String, String>,
+    pub params: Vec<(String, Tensor)>,
+    pub state: Vec<(String, Tensor)>,
+}
+
+impl Checkpoint {
+    pub fn params_map(&self) -> BTreeMap<String, Tensor> {
+        self.params.iter().cloned().collect()
+    }
+
+    pub fn state_map(&self) -> BTreeMap<String, Tensor> {
+        self.state.iter().cloned().collect()
+    }
+
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut bin: Vec<u8> = Vec::new();
+        let mut index = Vec::new();
+        for (section, entries) in [("param", &self.params), ("state", &self.state)] {
+            for (name, t) in entries.iter() {
+                index.push(Json::obj(vec![
+                    ("section", Json::str(section)),
+                    ("name", Json::str(name)),
+                    ("shape", Json::usizes(&t.shape)),
+                    ("offset", Json::num((bin.len() / 4) as f64)),
+                ]));
+                for v in &t.data {
+                    bin.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        let meta = Json::Obj(
+            self.meta
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                .collect(),
+        );
+        let head = Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("meta", meta),
+            ("tensors", Json::Arr(index)),
+        ]);
+        std::fs::write(dir.join("ckpt.json"), head.to_string())?;
+        std::fs::write(dir.join("params.bin"), bin)?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> Result<Checkpoint> {
+        let head = parse_file(&dir.join("ckpt.json"))
+            .with_context(|| format!("loading checkpoint {}", dir.display()))?;
+        let bin = std::fs::read(dir.join("params.bin"))?;
+        let floats: Vec<f32> = bin
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let mut params = Vec::new();
+        let mut state = Vec::new();
+        for e in head.get("tensors").as_arr().ok_or_else(|| anyhow!("tensors missing"))? {
+            let shape = e.get("shape").as_usize_vec().ok_or_else(|| anyhow!("shape"))?;
+            let off = e.get("offset").as_usize().ok_or_else(|| anyhow!("offset"))?;
+            let n: usize = shape.iter().product();
+            if off + n > floats.len() {
+                return Err(anyhow!("checkpoint truncated"));
+            }
+            let t = Tensor::from_vec(&shape, floats[off..off + n].to_vec());
+            let name = e.get("name").as_str().unwrap_or("").to_string();
+            match e.get("section").as_str() {
+                Some("param") => params.push((name, t)),
+                Some("state") => state.push((name, t)),
+                s => return Err(anyhow!("bad section {s:?}")),
+            }
+        }
+        let meta = head
+            .get("meta")
+            .as_obj()
+            .map(|o| {
+                o.iter()
+                    .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(Checkpoint {
+            model: head.get("model").as_str().unwrap_or("").to_string(),
+            meta,
+            params,
+            state,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let ck = Checkpoint {
+            model: "tiny".into(),
+            meta: [("mode".to_string(), "ours".to_string())].into_iter().collect(),
+            params: vec![
+                ("conv0/w".into(), Tensor::from_vec(&[2, 2], vec![1.5, -2.0, 0.25, 4.0])),
+                ("fc/b".into(), Tensor::from_vec(&[3], vec![0.0, 1.0, -1.0])),
+            ],
+            state: vec![("bn0/mean".into(), Tensor::from_vec(&[2], vec![0.5, 0.75]))],
+        };
+        let dir = std::env::temp_dir().join("pimqat_ckpt_test");
+        ck.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir).unwrap();
+        assert_eq!(back.model, "tiny");
+        assert_eq!(back.meta.get("mode").unwrap(), "ours");
+        assert_eq!(back.params.len(), 2);
+        assert_eq!(back.params[0].1.data, ck.params[0].1.data);
+        assert_eq!(back.state[0].1.data, ck.state[0].1.data);
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let dir = std::env::temp_dir().join("pimqat_ckpt_trunc");
+        let ck = Checkpoint {
+            model: "t".into(),
+            meta: Default::default(),
+            params: vec![("w".into(), Tensor::from_vec(&[4], vec![1., 2., 3., 4.]))],
+            state: vec![],
+        };
+        ck.save(&dir).unwrap();
+        std::fs::write(dir.join("params.bin"), [0u8; 4]).unwrap();
+        assert!(Checkpoint::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,250 @@
+//! Training driver (S7): owns the training loop around the AOT HLO
+//! artifacts.  All compute (fwd/bwd/SGD) runs inside the lowered train-step
+//! executable; this module owns state, data, schedule, logging, and the
+//! checkpoint boundary to the chip simulator.
+
+pub mod checkpoint;
+pub mod schedule;
+
+pub use checkpoint::Checkpoint;
+
+use anyhow::{anyhow, Result};
+use xla::Literal;
+
+use crate::config::{rescale, JobConfig, Mode, Scheme};
+use crate::data::{Dataset, EpochIter};
+use crate::pim::QuantBits;
+use crate::runtime::literal::{
+    scalar_f32, scalar_i32, tensor_to_literal, to_scalar_f32, to_vec_f32, vec_i32,
+};
+use crate::runtime::{Kind, Runtime};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Per-step log record.
+#[derive(Debug, Clone, Copy)]
+pub struct StepLog {
+    pub step: usize,
+    pub loss: f32,
+    pub acc: f32,
+    pub lr: f32,
+}
+
+/// Result of one training job.
+pub struct TrainResult {
+    pub ckpt: Checkpoint,
+    pub history: Vec<StepLog>,
+    /// Digital ("Software") test accuracy via the eval artifact.
+    pub software_acc: f64,
+}
+
+/// The AMS additive-noise std (Rekhi et al. 2019) in unit output scale:
+/// the RMS of the ideal PIM quantization error of the recombined output,
+/// treated as one Gaussian source (their ENOB abstraction).
+pub fn ams_sigma(scheme: Scheme, bits: &QuantBits, n: usize, b_pim: u32) -> f32 {
+    let levels = ((1u64 << b_pim) - 1) as f64;
+    let delta = bits.delta() as f64;
+    let fs_base = n as f64 * (delta - 1.0);
+    let wl = bits.w_levels() as f64;
+    let al = bits.a_levels() as f64;
+    // sum over planes of (plane_weight · LSB/√12)²
+    let mut var = 0.0f64;
+    match scheme {
+        Scheme::BitSerial => {
+            let lsb = fs_base / levels;
+            for k in 0..bits.b_w {
+                for l in 0..bits.n_slices() {
+                    let pw = 2f64.powi(k as i32) * delta.powi(l as i32);
+                    var += (pw * lsb).powi(2) / 12.0;
+                }
+            }
+        }
+        Scheme::Native => {
+            let lsb = wl * fs_base / levels;
+            for l in 0..bits.n_slices() {
+                var += (delta.powi(l as i32) * lsb).powi(2) / 12.0;
+            }
+        }
+        Scheme::Differential => {
+            let lsb = wl * fs_base / levels;
+            for l in 0..bits.n_slices() {
+                // two independent conversions per slice
+                var += 2.0 * (delta.powi(l as i32) * lsb).powi(2) / 12.0;
+            }
+        }
+    }
+    (var.sqrt() / (wl * al)) as f32
+}
+
+/// Run one training job end-to-end.
+pub fn run_job(
+    rt: &Runtime,
+    job: &JobConfig,
+    train_ds: &Dataset,
+    test_ds: &Dataset,
+    log_every: usize,
+) -> Result<TrainResult> {
+    let entry = rt.manifest.model(&job.model)?.clone();
+    let bits = QuantBits { b_w: rt.manifest.b_w, b_a: rt.manifest.b_a, m: rt.manifest.m_dac };
+
+    let init = rt.load(&format!("{}_init", job.model))?;
+    let train = rt.load(&job.artifact_name())?;
+    let spec = train.spec.clone();
+    if spec.kind != Kind::Train {
+        return Err(anyhow!("{} is not a train artifact", spec.name));
+    }
+    let (n_p, n_s) = (spec.n_params, spec.n_state);
+    let bs = spec.batch;
+
+    // ---- init params/state/momentum inside the lowered init artifact
+    let outs = init.run(&[scalar_i32(job.seed as i32)])?;
+    if outs.len() != 2 * n_p + n_s {
+        return Err(anyhow!("init output arity {}", outs.len()));
+    }
+    let mut carry: Vec<Literal> = outs; // params ++ state ++ momentum
+
+    // ---- hyper-scalars
+    let levels = ((1u64 << job.b_pim_train) - 1) as f32;
+    let eta = job
+        .eta_override
+        .unwrap_or_else(|| rescale::forward_eta(job.scheme, job.b_pim_train));
+    // N of the widest PIM-mapped layer geometry (AMS noise scale)
+    let n_macs = crate::pim::layout::plan_groups(entry.width, 3, job.unit_channels).n;
+    let sigma = if job.mode == Mode::Ams {
+        ams_sigma(job.scheme, &bits, n_macs, job.b_pim_train)
+    } else {
+        0.0
+    };
+    let lr_sched = schedule::MultiStepLr::new(job.lr, job.milestones, job.steps);
+
+    // ---- training loop
+    let mut rng = Rng::new(job.seed ^ 0x7EAC);
+    let mut history = Vec::new();
+    let mut epoch = EpochIter::new(train_ds.len(), bs, &mut rng);
+    for step in 0..job.steps {
+        let idx: Vec<usize> = match epoch.next_indices() {
+            Some(ix) => ix.to_vec(),
+            None => {
+                epoch = EpochIter::new(train_ds.len(), bs, &mut rng);
+                epoch
+                    .next_indices()
+                    .ok_or_else(|| anyhow!("dataset smaller than one batch"))?
+                    .to_vec()
+            }
+        };
+        let batch = train_ds.batch(&idx, true, &mut rng);
+        let lr = lr_sched.at(step);
+
+        let mut inputs: Vec<Literal> = Vec::with_capacity(2 * n_p + n_s + 7);
+        inputs.extend(carry.drain(..));
+        inputs.push(tensor_to_literal(&batch.x)?);
+        inputs.push(vec_i32(&batch.y));
+        inputs.push(scalar_f32(lr));
+        inputs.push(scalar_f32(levels));
+        inputs.push(scalar_f32(eta));
+        inputs.push(scalar_f32(sigma));
+        inputs.push(scalar_i32(step as i32 ^ ((job.seed as i32) << 8)));
+
+        let mut outs = train.run(&inputs)?;
+        let acc_cnt = to_scalar_f32(&outs.pop().unwrap())?;
+        let loss = to_scalar_f32(&outs.pop().unwrap())?;
+        carry = outs;
+
+        if !loss.is_finite() {
+            // diverged (the rescaling-ablation rows do this) — record & stop
+            history.push(StepLog { step, loss, acc: 0.0, lr });
+            break;
+        }
+        if step % log_every == 0 || step + 1 == job.steps {
+            history.push(StepLog { step, loss, acc: 100.0 * acc_cnt / bs as f32, lr });
+        }
+    }
+
+    // ---- package checkpoint
+    let mut params = Vec::with_capacity(n_p);
+    for (i, name) in entry.param_paths.iter().enumerate() {
+        let t = Tensor::from_vec(&entry.param_shapes[i], to_vec_f32(&carry[i])?);
+        params.push((name.clone(), t));
+    }
+    let mut state = Vec::with_capacity(n_s);
+    for (i, name) in entry.state_paths.iter().enumerate() {
+        let t = Tensor::from_vec(&entry.state_shapes[i], to_vec_f32(&carry[n_p + i])?);
+        state.push((name.clone(), t));
+    }
+    let mut meta = std::collections::BTreeMap::new();
+    meta.insert("mode".into(), job.mode.to_string());
+    meta.insert("scheme".into(), job.scheme.to_string());
+    meta.insert("unit_channels".into(), job.unit_channels.to_string());
+    meta.insert("b_pim_train".into(), job.b_pim_train.to_string());
+    meta.insert("steps".into(), job.steps.to_string());
+    let ckpt = Checkpoint { model: job.model.clone(), meta, params, state };
+
+    // ---- software (digital) evaluation through the eval artifact
+    let software_acc = eval_software(rt, &ckpt, test_ds)?;
+
+    Ok(TrainResult { ckpt, history, software_acc })
+}
+
+/// Digital test accuracy of a checkpoint via the lowered eval artifact.
+pub fn eval_software(rt: &Runtime, ckpt: &Checkpoint, test_ds: &Dataset) -> Result<f64> {
+    let eval = rt.load(&format!("{}_eval", ckpt.model))?;
+    let bs = eval.spec.batch;
+    let mut correct = 0.0f64;
+    let mut total = 0usize;
+    let mut rng = Rng::new(0);
+    let n = test_ds.len() / bs * bs;
+    for start in (0..n).step_by(bs) {
+        let idx: Vec<usize> = (start..start + bs).collect();
+        let batch = test_ds.batch(&idx, false, &mut rng);
+        let mut inputs: Vec<Literal> = Vec::with_capacity(ckpt.params.len() + ckpt.state.len() + 4);
+        for (_, t) in ckpt.params.iter().chain(ckpt.state.iter()) {
+            inputs.push(tensor_to_literal(t)?);
+        }
+        inputs.push(tensor_to_literal(&batch.x)?);
+        inputs.push(vec_i32(&batch.y));
+        inputs.push(scalar_f32(((1u64 << 20) - 1) as f32));
+        inputs.push(scalar_f32(1.0));
+        let outs = eval.run(&inputs)?;
+        correct += to_scalar_f32(&outs[1])? as f64;
+        total += bs;
+    }
+    Ok(100.0 * correct / total.max(1) as f64)
+}
+
+/// Build an `nn::Network` from a checkpoint for chip-sim evaluation.
+pub fn network_from_ckpt(rt: &Runtime, ckpt: &Checkpoint) -> Result<crate::nn::Network> {
+    let entry = rt.manifest.model(&ckpt.model)?.clone();
+    let bits = QuantBits { b_w: rt.manifest.b_w, b_a: rt.manifest.b_a, m: rt.manifest.m_dac };
+    crate::nn::Network::new(entry, bits, ckpt.params_map(), ckpt.state_map())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ams_sigma_shrinks_with_resolution() {
+        let bits = QuantBits::default();
+        let s3 = ams_sigma(Scheme::BitSerial, &bits, 72, 3);
+        let s7 = ams_sigma(Scheme::BitSerial, &bits, 72, 7);
+        assert!(s3 > s7 * 10.0, "{s3} vs {s7}");
+        assert!(s7 > 0.0);
+    }
+
+    #[test]
+    fn ams_sigma_grows_with_n() {
+        let bits = QuantBits::default();
+        assert!(
+            ams_sigma(Scheme::BitSerial, &bits, 144, 5)
+                > ams_sigma(Scheme::BitSerial, &bits, 72, 5)
+        );
+    }
+
+    #[test]
+    fn ams_sigma_magnitude_sane() {
+        // at 7 bits the unit-scale MAC noise should be well below 1
+        let bits = QuantBits::default();
+        let s = ams_sigma(Scheme::Native, &bits, 9, 7);
+        assert!(s < 0.2, "{s}");
+    }
+}

@@ -1,0 +1,51 @@
+//! Learning-rate schedule (paper §A2.1: multi-step, ×0.1 at 50% and 75% of
+//! the budget — 100/150 of 200 epochs, expressed as fractions here so short
+//! reproduction schedules keep the same shape).
+
+/// Multi-step LR: `base` until `m1·steps`, ×0.1 until `m2·steps`, ×0.01 after.
+#[derive(Debug, Clone, Copy)]
+pub struct MultiStepLr {
+    pub base: f32,
+    pub m1: f64,
+    pub m2: f64,
+    pub steps: usize,
+}
+
+impl MultiStepLr {
+    pub fn new(base: f32, milestones: (f64, f64), steps: usize) -> Self {
+        MultiStepLr { base, m1: milestones.0, m2: milestones.1, steps }
+    }
+
+    pub fn at(&self, step: usize) -> f32 {
+        let f = step as f64 / self.steps.max(1) as f64;
+        if f < self.m1 {
+            self.base
+        } else if f < self.m2 {
+            self.base * 0.1
+        } else {
+            self.base * 0.01
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_shape() {
+        let s = MultiStepLr::new(0.1, (0.5, 0.75), 200);
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(99), 0.1);
+        assert!((s.at(100) - 0.01).abs() < 1e-9);
+        assert!((s.at(149) - 0.01).abs() < 1e-9);
+        assert!((s.at(150) - 0.001).abs() < 1e-9);
+        assert!((s.at(199) - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_steps_safe() {
+        let s = MultiStepLr::new(0.1, (0.5, 0.75), 0);
+        let _ = s.at(0);
+    }
+}

@@ -1,0 +1,133 @@
+//! Bench harness substrate (S12): criterion is not in the offline cache, so
+//! `cargo bench` targets (harness = false) use this minimal warmup + timed
+//! iteration harness with robust statistics.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p05_ns: f64,
+    pub p95_ns: f64,
+    /// Optional work units per iteration (e.g. MACs) for throughput lines.
+    pub work_per_iter: Option<f64>,
+}
+
+impl BenchStats {
+    pub fn throughput(&self) -> Option<f64> {
+        self.work_per_iter.map(|w| w / (self.mean_ns * 1e-9))
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<44} {:>10} iters  mean {:>12}  median {:>12}  [p05 {} .. p95 {}]",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p05_ns),
+            fmt_ns(self.p95_ns),
+        );
+        if let Some(t) = self.throughput() {
+            s.push_str(&format!("  ({:.3e} ops/s)", t));
+        }
+        s
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner: warm up for `warmup`, then time iterations until
+/// `measure` elapses (at least 5 iterations).
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: Duration::from_millis(300), measure: Duration::from_secs(2) }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup: Duration::from_millis(50), measure: Duration::from_millis(400) }
+    }
+
+    /// Run `f` repeatedly; `f` must do one unit of work per call.
+    pub fn run<F: FnMut()>(&self, name: &str, work_per_iter: Option<f64>, mut f: F) -> BenchStats {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure || samples_ns.len() < 5 {
+            let t0 = Instant::now();
+            f();
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+            if samples_ns.len() >= 1_000_000 {
+                break;
+            }
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let mean = samples_ns.iter().sum::<f64>() / n as f64;
+        let pct = |p: f64| samples_ns[((n as f64 - 1.0) * p) as usize];
+        BenchStats {
+            name: name.to_string(),
+            iters: n,
+            mean_ns: mean,
+            median_ns: pct(0.5),
+            p05_ns: pct(0.05),
+            p95_ns: pct(0.95),
+            work_per_iter,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_something() {
+        let b = Bencher { warmup: Duration::from_millis(5), measure: Duration::from_millis(30) };
+        let mut acc = 0u64;
+        let stats = b.run("spin", Some(1000.0), || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(stats.iters >= 5);
+        assert!(stats.mean_ns > 0.0);
+        assert!(stats.p05_ns <= stats.median_ns && stats.median_ns <= stats.p95_ns);
+        assert!(stats.throughput().unwrap() > 0.0);
+        std::hint::black_box(acc);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+    }
+}

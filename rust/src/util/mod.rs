@@ -1,0 +1,91 @@
+//! In-tree substrates replacing crates unavailable in the offline cache
+//! (DESIGN.md §Substrates S10–S13).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod table;
+
+/// Running mean/variance accumulator (Welford).  Used by BN calibration and
+/// the statistics in experiments.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    pub n: u64,
+    pub mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    /// Population variance (matches jnp.var / BN batch statistics).
+    pub fn var(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = (self.n + other.n) as f64;
+        let d = other.mean - self.mean;
+        self.mean += d * other.n as f64 / n;
+        self.m2 += other.m2 + d * d * self.n as f64 * other.n as f64 / n;
+        self.n += other.n;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 4.0, 8.0, 16.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!((w.mean - mean).abs() < 1e-12);
+        assert!((w.var() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_merge() {
+        let xs: Vec<f64> = (0..100).map(|i| (i as f64).sin() * 3.0).collect();
+        let mut a = Welford::default();
+        let mut b = Welford::default();
+        for &x in &xs[..37] {
+            a.push(x);
+        }
+        for &x in &xs[37..] {
+            b.push(x);
+        }
+        a.merge(&b);
+        let mut full = Welford::default();
+        for &x in &xs {
+            full.push(x);
+        }
+        assert!((a.mean - full.mean).abs() < 1e-10);
+        assert!((a.var() - full.var()).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,161 @@
+//! Golden cross-validation: the rust substrates must reproduce the python
+//! oracle bit-for-bit (PIM MAC, DoReFa quantizers) and the full model
+//! forward to float tolerance.  Goldens are emitted by `make artifacts`
+//! (python/compile/goldens.py).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use pim_qat::chip::ChipModel;
+use pim_qat::config::Scheme;
+use pim_qat::nn::{self, ExecSpec, Network};
+use pim_qat::pim::{pim_grouped_matmul, QuantBits};
+use pim_qat::runtime::ModelEntry;
+use pim_qat::tensor::Tensor;
+use pim_qat::util::json::{parse_file, Json};
+use pim_qat::util::rng::Rng;
+
+fn golden_dir() -> PathBuf {
+    let dir = pim_qat::runtime::manifest::default_artifacts_dir().join("golden");
+    assert!(
+        dir.exists(),
+        "goldens missing at {} — run `make artifacts` first",
+        dir.display()
+    );
+    dir
+}
+
+fn tensor_from(j: &Json, shape: &[usize]) -> Tensor {
+    Tensor::from_vec(shape, j.as_f32_vec().expect("numeric array"))
+}
+
+#[test]
+fn pim_mac_matches_python_oracle_exactly() {
+    for scheme in [Scheme::Native, Scheme::BitSerial, Scheme::Differential] {
+        let path = golden_dir().join(format!("pim_mac_{}.json", scheme.as_str()));
+        let j = parse_file(&path).expect("golden parse");
+        let bits = QuantBits {
+            b_w: j.get("b_w").as_i64().unwrap() as u32,
+            b_a: j.get("b_a").as_i64().unwrap() as u32,
+            m: j.get("m_dac").as_i64().unwrap() as u32,
+        };
+        for case in j.get("cases").as_arr().unwrap() {
+            let (m, g, n, o) = (
+                case.get("m").as_usize().unwrap(),
+                case.get("g").as_usize().unwrap(),
+                case.get("n").as_usize().unwrap(),
+                case.get("o").as_usize().unwrap(),
+            );
+            let b_pim = ((case.get("levels").as_f64().unwrap() + 1.0).log2()) as u32;
+            let a = tensor_from(case.get("a_int"), &[m, g * n]);
+            // python weights are [G, N, O] row-major == rust [G*N, O]
+            let w = tensor_from(case.get("w_int"), &[g * n, o]);
+            let want = tensor_from(case.get("y"), &[m, o]);
+            // geometry: treat each group as one "channel" of n columns with
+            // kernel 1 so plan_groups yields exactly g groups of n
+            let chip = ChipModel::ideal(b_pim);
+            let mut rng = Rng::new(0);
+            let got = pim_grouped_matmul(
+                scheme, bits, &a, &w, g * n, 1, n, &chip, &mut rng,
+            );
+            let diff = got.max_abs_diff(&want);
+            assert!(
+                diff < 2e-5,
+                "{scheme} levels={} diff={diff}",
+                case.get("levels").as_f64().unwrap()
+            );
+        }
+    }
+}
+
+#[test]
+fn dorefa_quant_matches_python() {
+    let j = parse_file(&golden_dir().join("quant.json")).unwrap();
+    let bits = QuantBits::default();
+    let shape = j.get("w_shape").as_usize_vec().unwrap();
+    let w = tensor_from(j.get("w"), &shape);
+    let want_q = tensor_from(j.get("q_unit"), &shape);
+    let got_q = nn::quant::weight_quant_unit(&w, &bits);
+    assert!(got_q.max_abs_diff(&want_q) < 1e-6, "weight quant mismatch");
+
+    let want_s = j.get("scale").as_f64().unwrap() as f32;
+    let got_s = nn::quant::weight_scale(&got_q, shape[3]);
+    assert!((got_s - want_s).abs() / want_s < 1e-4, "{got_s} vs {want_s}");
+
+    let x = tensor_from(j.get("x"), &[64]);
+    let want_a = tensor_from(j.get("q_act"), &[64]);
+    let got_a = nn::quant::act_quant(x, &bits);
+    assert!(got_a.max_abs_diff(&want_a) < 1e-6, "act quant mismatch");
+}
+
+fn load_golden_network(j: &Json) -> (Network, Tensor) {
+    let m = j.get("model");
+    let entry = ModelEntry {
+        arch: "resnet".into(),
+        depth_n: m.get("depth_n").as_usize().unwrap(),
+        width: m.get("width").as_usize().unwrap(),
+        image: m.get("image").as_usize().unwrap(),
+        classes: m.get("classes").as_usize().unwrap(),
+        in_channels: 3,
+        param_paths: vec![],
+        param_shapes: vec![],
+        state_paths: vec![],
+        state_shapes: vec![],
+    };
+    let shapes = j.get("param_shapes").as_obj().unwrap();
+    let mut params = BTreeMap::new();
+    for (k, v) in j.get("params").as_obj().unwrap() {
+        let shape = shapes.get(k).unwrap().as_usize_vec().unwrap();
+        params.insert(k.clone(), tensor_from(v, &shape));
+    }
+    let mut state = BTreeMap::new();
+    for (k, v) in j.get("state").as_obj().unwrap() {
+        let n = v.as_arr().unwrap().len();
+        state.insert(k.clone(), tensor_from(v, &[n]));
+    }
+    let img = entry.image;
+    let x = tensor_from(j.get("x"), &[4, img, img, 3]);
+    let net = Network::new(entry, QuantBits::default(), params, state).unwrap();
+    (net, x)
+}
+
+#[test]
+fn full_model_software_logits_match_jax() {
+    let j = parse_file(&golden_dir().join("model_tiny.json")).unwrap();
+    let (net, x) = load_golden_network(&j);
+    let mut rng = Rng::new(0);
+    let got = net.forward(&x, &ExecSpec::Software, &mut rng).unwrap();
+    let want = tensor_from(j.get("logits").get("software"), &[4, 10]);
+    let diff = got.max_abs_diff(&want);
+    assert!(diff < 2e-3, "software logits diff {diff}");
+}
+
+#[test]
+fn full_model_pim_logits_match_jax_all_schemes() {
+    let j = parse_file(&golden_dir().join("model_tiny.json")).unwrap();
+    let (net, x) = load_golden_network(&j);
+    for (scheme, uc) in [
+        (Scheme::Native, 1usize),
+        (Scheme::BitSerial, 8),
+        (Scheme::Differential, 8),
+    ] {
+        for b_pim in [5u32, 7] {
+            let key = format!("{}_uc{uc}_b{b_pim}", scheme.as_str());
+            let want = tensor_from(j.get("logits").get(&key), &[4, 10]);
+            let chip = ChipModel::ideal(b_pim);
+            let mut rng = Rng::new(0);
+            let got = net
+                .forward(
+                    &x,
+                    &ExecSpec::Pim { scheme, unit_channels: uc, chip: &chip },
+                    &mut rng,
+                )
+                .unwrap();
+            let diff = got.max_abs_diff(&want);
+            // ideal chip is deterministic; drift comes only from f32 op
+            // ordering in the digital layers. ADC tie flips can move one
+            // logit by ~1 LSB-equivalent, so tolerance is loose-ish.
+            assert!(diff < 5e-2, "{key}: logits diff {diff}");
+        }
+    }
+}
