@@ -1,17 +1,25 @@
 //! Bench: the PIM MAC engine's grouped matmul (the chip simulator's hot
-//! path) across schemes and ADC configurations.  Regenerates the
-//! throughput side of Table 1's story: how much work one conversion chain
-//! amortizes, and what the noise/curve models cost on top.
+//! path) across schemes, ADC configurations, and thread counts.
+//! Regenerates the throughput side of Table 1's story — how much work one
+//! conversion chain amortizes and what the noise/curve models cost — and
+//! emits `BENCH_pim_mac.json` so the perf trajectory is tracked across PRs
+//! (EXPERIMENTS.md §Perf).
+//!
+//! Set `PIM_QAT_BENCH_QUICK=1` for a fast smoke run.
 
 use pim_qat::chip::ChipModel;
 use pim_qat::config::Scheme;
 use pim_qat::pim::{PimEngine, QuantBits};
 use pim_qat::tensor::Tensor;
-use pim_qat::util::bench::Bencher;
+use pim_qat::util::bench::{save_json, Bencher};
 use pim_qat::util::rng::Rng;
 
 fn main() {
-    let b = Bencher::default();
+    let b = if std::env::var_os("PIM_QAT_BENCH_QUICK").is_some() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
     let bits = QuantBits::default();
     let mut rng = Rng::new(1);
     // one mid-size conv layer's worth of work: M=1024 rows, C=16, O=32
@@ -20,20 +28,49 @@ fn main() {
     let a = Tensor::from_vec(&[m, cols], (0..m * cols).map(|_| rng.int_in(0, 15) as f32).collect());
     let w = Tensor::from_vec(&[cols, o], (0..cols * o).map(|_| rng.int_in(-7, 7) as f32).collect());
     let macs = (m * cols * o) as f64;
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
 
-    println!("PIM MAC engine, {m}x{cols}x{o} grouped matmul (N = {})", uc * 9);
+    let mut all = Vec::new();
+    println!(
+        "PIM MAC engine, {m}x{cols}x{o} grouped matmul (N = {}), {cores} cores",
+        uc * 9
+    );
     for scheme in [Scheme::Native, Scheme::BitSerial, Scheme::Differential] {
-        let engine = PimEngine::prepare(scheme, bits, &w, c, k, uc);
         for (label, chip) in [
             ("ideal", ChipModel::ideal(7)),
             ("ideal+noise", ChipModel::ideal(7).with_noise(0.35)),
             ("real curves+noise", ChipModel::real(1).with_noise(0.35)),
         ] {
-            let mut nrng = Rng::new(2);
-            let stats = b.run(&format!("{scheme}/{label}"), Some(macs), || {
-                std::hint::black_box(engine.matmul(&a, &chip, &mut nrng));
-            });
-            println!("{}", stats.report());
+            for threads in [1usize, 0] {
+                // 0 = auto (all cores); skip the duplicate on 1-core hosts
+                if threads == 0 && cores <= 1 {
+                    continue;
+                }
+                let engine = PimEngine::prepare(scheme, bits, &w, c, k, uc).with_threads(threads);
+                let tlabel = if threads == 1 { "t1" } else { "tauto" };
+                let mut nrng = Rng::new(2);
+                let stats = b.run(&format!("{scheme}/{label}/{tlabel}"), Some(macs), || {
+                    std::hint::black_box(engine.matmul(&a, &chip, &mut nrng));
+                });
+                println!("{}", stats.report());
+                all.push(stats);
+            }
         }
+    }
+
+    let path = std::path::Path::new("BENCH_pim_mac.json");
+    match save_json(path, &all) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+
+    // single-thread vs auto summary for the headline config
+    let t1 = all.iter().find(|s| s.name == "bit_serial/ideal+noise/t1");
+    let ta = all.iter().find(|s| s.name == "bit_serial/ideal+noise/tauto");
+    if let (Some(t1), Some(ta)) = (t1, ta) {
+        println!(
+            "bit_serial/ideal+noise speedup (auto vs 1 thread): {:.2}x",
+            t1.mean_ns / ta.mean_ns
+        );
     }
 }

@@ -161,14 +161,14 @@ impl CurveBank {
         })
     }
 
-    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+    pub fn save(&self, path: &std::path::Path) -> crate::util::error::Result<()> {
         std::fs::write(path, self.to_json().to_string())?;
         Ok(())
     }
 
-    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+    pub fn load(path: &std::path::Path) -> crate::util::error::Result<Self> {
         let j = crate::util::json::parse_file(path)?;
-        Self::from_json(&j).ok_or_else(|| anyhow::anyhow!("malformed curve bank"))
+        Self::from_json(&j).ok_or_else(|| crate::anyhow!("malformed curve bank"))
     }
 }
 

@@ -17,7 +17,7 @@ pub mod enob;
 pub use curves::{AdcCurve, CurveBank};
 
 
-use crate::util::rng::Rng;
+use crate::util::rng::{CounterRng, Rng};
 
 /// A complete PIM chip configuration for inference.
 #[derive(Debug, Clone)]
@@ -86,11 +86,12 @@ impl ChipModel {
 }
 
 /// A conversion context prepared once per (layer, full-scale): hoists the
-/// LSB constants and tabulates each curve's INL at integer codes (linear
+/// LSB constants, tabulates each curve's INL at integer codes (linear
 /// interpolation between samples — the INL profile is a sum of ≤3 smooth
-/// sinusoids, so sub-LSB sampling error is ~1e-3 LSB).  §Perf L3: removes
-/// the per-element sin() calls and curve-index modulo from the hot loop
-/// (~1.9× on the real-curve path, see EXPERIMENTS.md §Perf).
+/// sinusoids, so sub-LSB sampling error is ~1e-3 LSB), and resolves the
+/// per-output-column curve assignment once instead of per element.  §Perf
+/// L3: removes the per-element sin() calls and curve-index modulo from the
+/// hot loop (see EXPERIMENTS.md §Perf).
 pub struct Converter<'a> {
     chip: &'a ChipModel,
     fs: f32,
@@ -99,54 +100,134 @@ pub struct Converter<'a> {
     levels: f32,
     /// Per-curve INL table sampled at codes 0..=levels (empty when ideal).
     inl_tables: Vec<Vec<f32>>,
+    /// Curve index per output column (hoisted `curve_index`; empty when
+    /// ideal).
+    col_curve: Vec<u32>,
 }
 
 impl<'a> Converter<'a> {
-    pub fn new(chip: &'a ChipModel, fs: f32) -> Self {
+    /// `out` is the layer's output-column count; it sizes the per-column
+    /// curve-assignment table.
+    pub fn new(chip: &'a ChipModel, fs: f32, out: usize) -> Self {
         let levels = chip.levels();
-        let inl_tables = match &chip.bank {
-            Some(bank) => bank
-                .curves
-                .iter()
-                .map(|c| {
-                    (0..=levels as usize)
-                        .map(|u| {
-                            // INL component only (gain/offset applied exactly)
-                            let x = u as f32;
-                            c.distort(x, levels, false) - c.gain * x - c.offset
-                        })
-                        .collect()
-                })
-                .collect(),
-            None => Vec::new(),
+        let (inl_tables, col_curve) = match &chip.bank {
+            Some(bank) => (
+                bank.curves
+                    .iter()
+                    .map(|c| {
+                        (0..=levels as usize)
+                            .map(|u| {
+                                // INL component only (gain/offset exact)
+                                let x = u as f32;
+                                c.distort(x, levels, false) - c.gain * x - c.offset
+                            })
+                            .collect()
+                    })
+                    .collect(),
+                (0..out).map(|o| chip.curve_index(o) as u32).collect(),
+            ),
+            None => (Vec::new(), Vec::new()),
         };
-        Converter { chip, fs, lsb: fs / levels, inv_lsb: levels / fs, levels, inl_tables }
+        Converter {
+            chip,
+            fs,
+            lsb: fs / levels,
+            inv_lsb: levels / fs,
+            levels,
+            inl_tables,
+            col_curve,
+        }
     }
 
-    /// Hot-path conversion; bit-compatible with `ChipModel::convert` up to
+    /// Scalar conversion; bit-compatible with `ChipModel::convert` up to
     /// the tabulated-INL approximation.
     #[inline]
     pub fn convert(&self, s: f32, oc: usize, signed: bool, rng: &mut Rng) -> f32 {
         let mut u = s * self.inv_lsb;
-        if let Some(bank) = &self.chip.bank {
-            let ci = self.chip.curve_index(oc);
-            let c = &bank.curves[ci];
-            let t = &self.inl_tables[ci];
-            let x = u.abs().min(self.levels);
-            let i = x as usize;
-            let frac = x - i as f32;
-            let inl = if i + 1 < t.len() {
-                t[i] + (t[i + 1] - t[i]) * frac
-            } else {
-                t[t.len() - 1]
-            };
-            u = c.gain * u + c.offset + inl;
+        if self.chip.bank.is_some() {
+            u = self.distort(u, oc);
         }
         if self.chip.noise_lsb > 0.0 {
             u += rng.normal_in(0.0, self.chip.noise_lsb);
         }
         let lo = if signed { -self.levels } else { 0.0 };
         round_ties_even(u).clamp(lo, self.levels) * self.lsb
+    }
+
+    /// Curve distortion of a continuous ideal code (gain/offset exact,
+    /// tabulated INL).  Caller must have checked `chip.bank.is_some()`.
+    #[inline]
+    fn distort(&self, u: f32, oc: usize) -> f32 {
+        let bank = self.chip.bank.as_ref().unwrap();
+        let ci = if self.col_curve.is_empty() {
+            self.chip.curve_index(oc)
+        } else {
+            self.col_curve[oc] as usize
+        };
+        let c = &bank.curves[ci];
+        let t = &self.inl_tables[ci];
+        let x = u.abs().min(self.levels);
+        let i = x as usize;
+        let frac = x - i as f32;
+        let inl = if i + 1 < t.len() {
+            t[i] + (t[i + 1] - t[i]) * frac
+        } else {
+            t[t.len() - 1]
+        };
+        c.gain * u + c.offset + inl
+    }
+
+    /// Row-batched conversion (§Perf): dequantize one row of integer plane
+    /// sums and accumulate `coef · adc(s)` into `y`.  `noise` carries the
+    /// position-addressed stream for this row plus the noise std in LSB;
+    /// draws are keyed by the output column, so results are independent of
+    /// how rows are partitioned across threads.  Bit-compatible with the
+    /// scalar `convert` path (identical arithmetic, hoisted constants).
+    pub fn convert_row(
+        &self,
+        s: &[i32],
+        signed: bool,
+        coef: f32,
+        noise: Option<(&CounterRng, f32)>,
+        y: &mut [f32],
+    ) {
+        assert_eq!(s.len(), y.len());
+        let levels = self.levels;
+        let lo = if signed { -levels } else { 0.0 };
+        let inv_lsb = self.inv_lsb;
+        let lsb = self.lsb;
+        let banked = self.chip.bank.is_some();
+        match (banked, noise) {
+            (false, None) => {
+                for (&si, yv) in s.iter().zip(y.iter_mut()) {
+                    let u = si as f32 * inv_lsb;
+                    let code = round_ties_even(u).clamp(lo, levels);
+                    *yv += coef * (code * lsb);
+                }
+            }
+            (true, None) => {
+                for (o, (&si, yv)) in s.iter().zip(y.iter_mut()).enumerate() {
+                    let u = self.distort(si as f32 * inv_lsb, o);
+                    let code = round_ties_even(u).clamp(lo, levels);
+                    *yv += coef * (code * lsb);
+                }
+            }
+            (false, Some((stream, sigma))) => {
+                for (o, (&si, yv)) in s.iter().zip(y.iter_mut()).enumerate() {
+                    let u = si as f32 * inv_lsb + sigma * stream.normal_at(o as u64) as f32;
+                    let code = round_ties_even(u).clamp(lo, levels);
+                    *yv += coef * (code * lsb);
+                }
+            }
+            (true, Some((stream, sigma))) => {
+                for (o, (&si, yv)) in s.iter().zip(y.iter_mut()).enumerate() {
+                    let u = self.distort(si as f32 * inv_lsb, o)
+                        + sigma * stream.normal_at(o as u64) as f32;
+                    let code = round_ties_even(u).clamp(lo, levels);
+                    *yv += coef * (code * lsb);
+                }
+            }
+        }
     }
 
     pub fn full_scale(&self) -> f32 {
@@ -223,6 +304,43 @@ mod tests {
             }
         }
         assert!(diff > 20, "noise should flip some codes, flipped {diff}");
+    }
+
+    #[test]
+    fn convert_row_matches_scalar() {
+        let mut rng = Rng::new(0);
+        for chip in [ChipModel::ideal(5), ChipModel::real(7).with_noise(0.0)] {
+            let out = 40;
+            let conv = Converter::new(&chip, 2160.0, out);
+            for signed in [false, true] {
+                let s: Vec<i32> = (0..out as i32).map(|o| (o * 137) % 2300 - 600).collect();
+                let mut y = vec![0.0f32; out];
+                conv.convert_row(&s, signed, 2.0, None, &mut y);
+                for o in 0..out {
+                    let want = 2.0 * conv.convert(s[o] as f32, o, signed, &mut rng);
+                    assert_eq!(y[o], want, "col {o} signed={signed}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn convert_row_noise_is_positional() {
+        let chip = ChipModel::ideal(7).with_noise(0.5);
+        let out = 64;
+        let conv = Converter::new(&chip, 2160.0, out);
+        let field = CounterRng::new(9);
+        let s: Vec<i32> = (0..out as i32).map(|i| i * 30).collect();
+        let st = field.stream3(0, 1, 2);
+        let mut y1 = vec![0.0f32; out];
+        let mut y2 = vec![0.0f32; out];
+        conv.convert_row(&s, false, 1.0, Some((&st, chip.noise_lsb)), &mut y1);
+        conv.convert_row(&s, false, 1.0, Some((&st, chip.noise_lsb)), &mut y2);
+        assert_eq!(y1, y2, "same position, same noise draws");
+        let st2 = field.stream3(0, 1, 3);
+        let mut y3 = vec![0.0f32; out];
+        conv.convert_row(&s, false, 1.0, Some((&st2, chip.noise_lsb)), &mut y3);
+        assert_ne!(y1, y3, "different row stream, different draws");
     }
 
     #[test]

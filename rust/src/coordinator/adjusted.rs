@@ -4,7 +4,7 @@
 //! at training resolutions around the chip's ENOB and pick the best
 //! chip-evaluated accuracy (with BN calibration, as the paper evaluates).
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::chip::{enob, ChipModel};
 use crate::config::JobConfig;

@@ -4,7 +4,7 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::time::Instant;
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::config::JobConfig;
 use crate::data::Dataset;

@@ -7,7 +7,7 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 
 use super::Dataset;
 use crate::tensor::Tensor;

@@ -2,7 +2,7 @@
 //! sweep), Table A3/Fig A5 (rescaling ablation), Fig A6 (BN calibration
 //! ablation), Table A4/Fig A7 (gain & offset variation).
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::chip::curves::{synthesize_bank_with, CurveStats};
 use crate::chip::ChipModel;

@@ -1,6 +1,6 @@
 //! Table 1 (hardware efficiency) and Table 2 (method applicability).
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::chip::energy;
 use crate::report::Report;

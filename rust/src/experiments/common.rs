@@ -1,6 +1,6 @@
 //! Shared machinery for the paper-reproduction experiments.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::chip::ChipModel;
 use crate::config::{JobConfig, Mode, Scheme};

@@ -1,7 +1,7 @@
 //! Fig. 4 (adjusted-precision training map) and Fig. 5 (three schemes ×
 //! resolution × noise, ours vs baseline+BN-calibration).
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::chip::{enob, ChipModel};
 use crate::config::Scheme;

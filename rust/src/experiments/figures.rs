@@ -2,7 +2,7 @@
 //! Fig. A3 (non-ideality impact on BN statistics) — the analysis figures
 //! that need no training.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::chip::{enob, ChipModel};
 use crate::config::Scheme;

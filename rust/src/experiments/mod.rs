@@ -15,7 +15,7 @@ pub mod table4;
 
 pub use common::Scale;
 
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 
 use crate::coordinator::SweepRunner;
 use crate::report::Report;

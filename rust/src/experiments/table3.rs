@@ -5,7 +5,7 @@
 //! of each resolution (that is exactly the deployment the paper warns
 //! about); AMS and Ours are trained per-resolution.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::chip::ChipModel;
 use crate::config::{Mode, Scheme};

@@ -9,7 +9,7 @@
 //! Ours rows include BN calibration (§3.4 is part of the method); baseline
 //! rows are the paper's deploy-as-is failure mode.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use crate::chip::ChipModel;
 use crate::config::Scheme;

@@ -12,7 +12,13 @@
 //!
 //! Python never runs on the request path: once artifacts exist, the
 //! `pim-qat` binary is self-contained.  See DESIGN.md for the substrate
-//! inventory and the per-experiment index.
+//! inventory and the per-experiment index, and EXPERIMENTS.md §Perf for the
+//! engine's performance trajectory.
+//!
+//! The PJRT client is gated behind the off-by-default `pjrt` cargo feature
+//! (the `xla` bindings are not in the offline crate cache); the default
+//! build has zero external dependencies and covers the chip simulator, the
+//! PIM MAC engine, and the analysis experiments.
 
 pub mod chip;
 pub mod config;

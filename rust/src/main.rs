@@ -7,7 +7,7 @@
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use anyhow::{anyhow, Result};
+use pim_qat::util::error::{anyhow, Result};
 
 use pim_qat::chip::{enob, ChipModel};
 use pim_qat::config::JobConfig;

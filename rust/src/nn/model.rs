@@ -2,7 +2,7 @@
 
 use std::collections::{BTreeMap, HashMap};
 
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 
 use crate::chip::ChipModel;
 use crate::config::Scheme;
@@ -126,12 +126,26 @@ impl Network {
 
     // -- layer helpers ------------------------------------------------------
 
-    fn conv_digital(&self, x: &Tensor, name: &str, stride: usize) -> Result<Tensor> {
+    /// `sparse_input`: the input carries many exact zeros (post-ReLU
+    /// quantized activations — shortcut convs), so the zero-skip GEMM wins;
+    /// dense inputs (the raw-image first layer) use the blocked kernel.
+    fn conv_digital(
+        &self,
+        x: &Tensor,
+        name: &str,
+        stride: usize,
+        sparse_input: bool,
+    ) -> Result<Tensor> {
         let cw = self.convs.get(name).ok_or_else(|| anyhow!("conv {name} missing"))?;
-        let (patches, oh, ow) = ops::im2col(x, cw.kernel, stride);
+        let (patches, oh, ow) = ops::im2col_threaded(x, cw.kernel, stride, 0);
         let m = patches.shape[0];
+        let k = patches.shape[1];
         let o = cw.cols_scaled.shape[1];
-        let y = crate::tensor::gemm::gemm(m, patches.shape[1], o, &patches.data, &cw.cols_scaled.data);
+        let y = if sparse_input {
+            crate::tensor::gemm::gemm_sparse(m, k, o, &patches.data, &cw.cols_scaled.data)
+        } else {
+            crate::tensor::gemm::gemm(m, k, o, &patches.data, &cw.cols_scaled.data)
+        };
         Ok(Tensor::from_vec(&[x.shape[0], oh, ow, o], y))
     }
 
@@ -144,7 +158,7 @@ impl Network {
         rng: &mut Rng,
     ) -> Result<Tensor> {
         match exec {
-            ExecSpec::Software => self.conv_digital(x, name, stride),
+            ExecSpec::Software => self.conv_digital(x, name, stride, true),
             ExecSpec::Pim { scheme, unit_channels, chip } => {
                 let cw = self.convs.get(name).ok_or_else(|| anyhow!("conv {name} missing"))?;
                 let key = (*scheme, *unit_channels, name.to_string());
@@ -164,7 +178,7 @@ impl Network {
                         })
                         .clone()
                 };
-                let (patches, oh, ow) = ops::im2col(x, cw.kernel, stride);
+                let (patches, oh, ow) = ops::im2col_threaded(x, cw.kernel, stride, 0);
                 // patches hold quantized activations in [0,1] — scale to ints
                 let al = self.bits.a_levels() as f32;
                 let pint = patches.map(|v| crate::chip::round_ties_even(v * al));
@@ -232,7 +246,7 @@ impl Network {
     ) -> Result<Tensor> {
         let e = &self.entry;
         let mut h = quant::act_quant_bits(x.clone(), 8);
-        h = self.conv_digital(&h, "conv0/w", 1)?; // first layer: digital (§A2.1)
+        h = self.conv_digital(&h, "conv0/w", 1, false)?; // first layer: digital (§A2.1)
         h = self.bn(h, "bn0", collect)?;
         h = self.act(h);
         let mut cin = e.width;
@@ -247,7 +261,7 @@ impl Network {
                 z = self.conv_exec(&z, &format!("{blk}/conv2/w"), 1, exec, rng)?;
                 z = self.bn(z, &format!("{blk}/bn2"), collect)?;
                 let sc = if cin != cout || stride != 1 {
-                    let s_ = self.conv_digital(&h, &format!("{blk}/convs/w"), stride)?;
+                    let s_ = self.conv_digital(&h, &format!("{blk}/convs/w"), stride, true)?;
                     self.bn(s_, &format!("{blk}/bns"), collect)?
                 } else {
                     h.clone()
@@ -273,7 +287,7 @@ impl Network {
         for (i, &(_cout, pool)) in plan.iter().enumerate() {
             let name = format!("conv{i}/w");
             h = if i == 0 {
-                self.conv_digital(&h, &name, 1)?
+                self.conv_digital(&h, &name, 1, false)?
             } else {
                 self.conv_exec(&h, &name, 1, exec, rng)?
             };

@@ -1,39 +1,111 @@
-//! The PIM MAC engine: plane decomposition → analog plane sums (GEMM) →
-//! ADC conversion (curve + noise) → digital recombination.
+//! The PIM MAC engine: plane decomposition → analog plane sums (integer
+//! GEMM) → ADC conversion (curve + noise) → digital recombination.
 //!
 //! Weights are prepared once per layer (`PimEngine::prepare`) into their
 //! decomposed form — bit planes for bit-serial, ±halves for differential —
 //! mirroring how a chip programs its cell array once and streams inputs.
+//!
+//! §Perf (EXPERIMENTS.md): the execution path is integer-native and
+//! multi-threaded.  Activations live on the u8 grid inside the engine, DAC
+//! input planes are extracted with shifts/masks, plane sums accumulate in
+//! i32 (exact, so bit-identical to the seed float path), conversion runs
+//! row-batched through `Converter::convert_row`, and rows are partitioned
+//! across scoped threads with per-thread scratch buffers from a reusable
+//! arena.  Thermal noise comes from a counter-based RNG addressed by
+//! (group, plane, row, column) — see DESIGN.md §RNG contract — which is
+//! what makes the output bit-identical at any thread count.
 
-use crate::chip::ChipModel;
+use std::fmt;
+use std::sync::Mutex;
+
+use crate::chip::{ChipModel, Converter};
 use crate::config::Scheme;
-use crate::tensor::gemm::gemm_acc;
+use crate::tensor::gemm::{gemm_acc_u8_bin, gemm_acc_u8_i16};
 use crate::tensor::Tensor;
-use crate::util::rng::Rng;
+use crate::util::rng::{CounterRng, Rng};
 
 use super::layout::{plan_groups, GroupPlan};
 use super::{plane_full_scale, QuantBits};
 
-/// One layer's weights, decomposed for the configured scheme.
+/// One layer's weights, decomposed for the configured scheme, on integer
+/// grids (i16 analog cells, u8 bit planes).
 #[derive(Debug, Clone)]
 enum GroupWeights {
     /// [N, O] signed integer weights (native: multi-bit analog cells).
-    Native(Vec<f32>),
+    Native(Vec<i16>),
     /// Positive and negative halves, each [N, O] of non-negative ints.
-    Differential(Vec<f32>, Vec<f32>),
+    Differential(Vec<i16>, Vec<i16>),
     /// b_w binary planes of [N, O] (bit-serial SRAM cells).
-    BitSerial(Vec<Vec<f32>>),
+    BitSerial(Vec<Vec<u8>>),
+}
+
+/// Reusable per-thread scratch: group activations, one DAC plane, and the
+/// i32 plane-sum block.  Pooled on the engine so repeated `matmul` calls
+/// (training-scale evaluation) do not reallocate.
+#[derive(Default)]
+struct Scratch {
+    a_grp: Vec<u8>,
+    a_plane: Vec<u8>,
+    s: Vec<i32>,
+}
+
+struct ScratchPool(Mutex<Vec<Scratch>>);
+
+impl ScratchPool {
+    fn new() -> Self {
+        ScratchPool(Mutex::new(Vec::new()))
+    }
+
+    fn take(&self) -> Scratch {
+        self.0.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn put(&self, s: Scratch) {
+        self.0.lock().unwrap().push(s);
+    }
 }
 
 /// PIM execution engine for grouped matmuls of one geometry.
-#[derive(Debug, Clone)]
 pub struct PimEngine {
     pub scheme: Scheme,
     pub bits: QuantBits,
     pub plan: GroupPlan,
     pub out: usize,
     fs: f32,
+    /// Worker threads for `matmul`: 0 = auto ($PIM_QAT_THREADS or the
+    /// available parallelism).
+    threads: usize,
     groups: Vec<GroupWeights>,
+    scratch: ScratchPool,
+}
+
+impl Clone for PimEngine {
+    fn clone(&self) -> Self {
+        PimEngine {
+            scheme: self.scheme,
+            bits: self.bits,
+            plan: self.plan,
+            out: self.out,
+            fs: self.fs,
+            threads: self.threads,
+            groups: self.groups.clone(),
+            scratch: ScratchPool::new(),
+        }
+    }
+}
+
+impl fmt::Debug for PimEngine {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("PimEngine")
+            .field("scheme", &self.scheme)
+            .field("bits", &self.bits)
+            .field("plan", &self.plan)
+            .field("out", &self.out)
+            .field("fs", &self.fs)
+            .field("threads", &self.threads)
+            .field("groups", &self.groups.len())
+            .finish()
+    }
 }
 
 impl PimEngine {
@@ -51,6 +123,7 @@ impl PimEngine {
         let cols = w_int.shape[0];
         let out = w_int.shape[1];
         assert_eq!(cols, c_in * kernel * kernel, "weight columns vs c_in*k*k");
+        assert!(bits.b_a <= 8, "u8 activation grid needs b_a <= 8");
         let plan = plan_groups(c_in, kernel, unit_channels);
         let n = plan.n;
         let fs = plane_full_scale(scheme, &bits, n);
@@ -58,40 +131,41 @@ impl PimEngine {
 
         let groups = (0..plan.groups)
             .map(|g| {
-                let rows = g * n..(g + 1) * n;
+                let rows = plan.col_range(g);
                 match scheme {
                     Scheme::Native => {
-                        let mut w = vec![0.0f32; n * out];
+                        let mut w = vec![0i16; n * out];
                         for (ri, r) in rows.clone().enumerate() {
-                            w[ri * out..(ri + 1) * out]
-                                .copy_from_slice(&w_int.data[r * out..(r + 1) * out]);
+                            for o in 0..out {
+                                w[ri * out + o] = w_int.data[r * out + o] as i16;
+                            }
                         }
                         GroupWeights::Native(w)
                     }
                     Scheme::Differential => {
-                        let mut wp = vec![0.0f32; n * out];
-                        let mut wn = vec![0.0f32; n * out];
+                        let mut wp = vec![0i16; n * out];
+                        let mut wn = vec![0i16; n * out];
                         for (ri, r) in rows.clone().enumerate() {
                             for o in 0..out {
                                 let v = w_int.data[r * out + o];
                                 if v > 0.0 {
-                                    wp[ri * out + o] = v;
+                                    wp[ri * out + o] = v as i16;
                                 } else {
-                                    wn[ri * out + o] = -v;
+                                    wn[ri * out + o] = (-v) as i16;
                                 }
                             }
                         }
                         GroupWeights::Differential(wp, wn)
                     }
                     Scheme::BitSerial => {
-                        let mut planes = vec![vec![0.0f32; n * out]; b_w as usize];
+                        let mut planes = vec![vec![0u8; n * out]; b_w as usize];
                         for (ri, r) in rows.clone().enumerate() {
                             for o in 0..out {
                                 let v = w_int.data[r * out + o] as i32;
                                 // two's complement over b_w bits
                                 let u = if v < 0 { v + (1 << b_w) } else { v } as u32;
                                 for (k, plane) in planes.iter_mut().enumerate() {
-                                    plane[ri * out + o] = ((u >> k) & 1) as f32;
+                                    plane[ri * out + o] = ((u >> k) & 1) as u8;
                                 }
                             }
                         }
@@ -101,7 +175,23 @@ impl PimEngine {
             })
             .collect();
 
-        PimEngine { scheme, bits, plan, out, fs, groups }
+        PimEngine {
+            scheme,
+            bits,
+            plan,
+            out,
+            fs,
+            threads: 0,
+            groups,
+            scratch: ScratchPool::new(),
+        }
+    }
+
+    /// Pin the worker-thread count (0 = auto).  Outputs are bit-identical
+    /// at every thread count; this only controls the row partitioning.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
     }
 
     /// Total MACs per output row (for throughput accounting).
@@ -109,88 +199,47 @@ impl PimEngine {
         self.plan.groups * self.plan.n * self.out
     }
 
+    fn effective_threads(&self, rows: usize) -> usize {
+        crate::tensor::ops::resolve_threads(self.threads).min(rows).max(1)
+    }
+
     /// Execute the grouped PIM matmul over integer activation patches
     /// [M, C*k*k] (values on the 0..a_levels integer grid, stored as f32).
     /// Output [M, O] is in unit scale (estimate of Σ W̃ q̃).
+    ///
+    /// `rng` seeds the thermal-noise field: when the chip has noise, one
+    /// draw is taken and every noise sample becomes a pure function of
+    /// (that seed, group, plane, row, column).  Same seed → same output,
+    /// for any thread count.
     pub fn matmul(&self, patches_int: &Tensor, chip: &ChipModel, rng: &mut Rng) -> Tensor {
         let m = patches_int.shape[0];
         let cols = patches_int.shape[1];
-        let n = self.plan.n;
-        assert_eq!(cols, self.plan.groups * n, "patch columns vs group plan");
+        assert_eq!(cols, self.plan.cols(), "patch columns vs group plan");
         let out = self.out;
-        let signed = matches!(self.scheme, Scheme::Native);
-        let n_slices = self.bits.n_slices();
-        let delta = self.bits.delta();
 
-        let conv = crate::chip::Converter::new(chip, self.fs);
+        let conv = Converter::new(chip, self.fs, out);
+        let noise = if chip.noise_lsb > 0.0 {
+            Some((CounterRng::new(rng.next_u64()), chip.noise_lsb))
+        } else {
+            None
+        };
+
         let mut y = vec![0.0f32; m * out];
-        // scratch buffers reused across groups/planes (no alloc in hot loop)
-        let mut a_grp = vec![0.0f32; m * n];
-        let mut a_plane = vec![0.0f32; m * n];
-        let mut s = vec![0.0f32; m * out];
-
-        for (g, gw) in self.groups.iter().enumerate() {
-            // gather this group's patch columns into a contiguous block
-            for i in 0..m {
-                let src = &patches_int.data[i * cols + g * n..i * cols + (g + 1) * n];
-                a_grp[i * n..(i + 1) * n].copy_from_slice(src);
-            }
-            for l in 0..n_slices {
-                let slice_w = (delta as f32).powi(l as i32);
-                // input DAC plane: (a >> m*l) & (Δ-1), computed on integers
-                if n_slices == 1 {
-                    a_plane.copy_from_slice(&a_grp);
-                } else {
-                    let shift = (delta as f32).powi(l as i32);
-                    for (dst, &src) in a_plane.iter_mut().zip(&a_grp) {
-                        *dst = ((src / shift).floor()) % delta as f32;
-                    }
+        let threads = self.effective_threads(m);
+        if threads <= 1 {
+            self.run_rows(patches_int, 0, m, &conv, noise.as_ref(), &mut y);
+        } else {
+            let chunk = (m + threads - 1) / threads;
+            std::thread::scope(|sc| {
+                for (ti, ych) in y.chunks_mut(chunk * out).enumerate() {
+                    let conv = &conv;
+                    let noise = noise.as_ref();
+                    sc.spawn(move || {
+                        let rows = ych.len() / out;
+                        self.run_rows(patches_int, ti * chunk, rows, conv, noise, ych);
+                    });
                 }
-                match gw {
-                    GroupWeights::Native(w) => {
-                        s.iter_mut().for_each(|v| *v = 0.0);
-                        gemm_acc(m, n, out, &a_plane, w, &mut s);
-                        for i in 0..m {
-                            for o in 0..out {
-                                y[i * out + o] += slice_w
-                                    * conv.convert(s[i * out + o], o, signed, rng);
-                            }
-                        }
-                    }
-                    GroupWeights::Differential(wp, wn) => {
-                        s.iter_mut().for_each(|v| *v = 0.0);
-                        gemm_acc(m, n, out, &a_plane, wp, &mut s);
-                        for i in 0..m {
-                            for o in 0..out {
-                                y[i * out + o] += slice_w
-                                    * conv.convert(s[i * out + o], o, false, rng);
-                            }
-                        }
-                        s.iter_mut().for_each(|v| *v = 0.0);
-                        gemm_acc(m, n, out, &a_plane, wn, &mut s);
-                        for i in 0..m {
-                            for o in 0..out {
-                                y[i * out + o] -= slice_w
-                                    * conv.convert(s[i * out + o], o, false, rng);
-                            }
-                        }
-                    }
-                    GroupWeights::BitSerial(planes) => {
-                        for (k, wp) in planes.iter().enumerate() {
-                            let sign = if k as u32 == self.bits.b_w - 1 { -1.0 } else { 1.0 };
-                            let bit_w = sign * (1u32 << k) as f32 * slice_w;
-                            s.iter_mut().for_each(|v| *v = 0.0);
-                            gemm_acc(m, n, out, &a_plane, wp, &mut s);
-                            for i in 0..m {
-                                for o in 0..out {
-                                    y[i * out + o] += bit_w
-                                        * conv.convert(s[i * out + o], o, false, rng);
-                                }
-                            }
-                        }
-                    }
-                }
-            }
+            });
         }
 
         let denom = (self.bits.w_levels() * self.bits.a_levels()) as f32;
@@ -199,9 +248,147 @@ impl PimEngine {
         }
         Tensor::from_vec(&[m, out], y)
     }
+
+    /// Process rows [row0, row0+rows): gather each group's columns onto the
+    /// u8 grid, extract DAC planes with shift/mask, form i32 plane sums,
+    /// and convert row-batched.  One thread's worth of work.
+    fn run_rows(
+        &self,
+        patches: &Tensor,
+        row0: usize,
+        rows: usize,
+        conv: &Converter,
+        noise: Option<&(CounterRng, f32)>,
+        y: &mut [f32],
+    ) {
+        let n = self.plan.n;
+        let out = self.out;
+        let cols = self.plan.cols();
+        let n_slices = self.bits.n_slices();
+        let delta = self.bits.delta();
+        let mask = (delta - 1) as u8;
+
+        let mut sc = self.scratch.take();
+        sc.a_grp.clear();
+        sc.a_grp.resize(rows * n, 0);
+        sc.a_plane.clear();
+        sc.a_plane.resize(rows * n, 0);
+        sc.s.clear();
+        sc.s.resize(rows * out, 0);
+
+        for (g, gw) in self.groups.iter().enumerate() {
+            let crange = self.plan.col_range(g);
+            // gather this group's patch columns, quantized to the u8 grid
+            for i in 0..rows {
+                let base = (row0 + i) * cols;
+                let src = &patches.data[base + crange.start..base + crange.end];
+                for (d, &v) in sc.a_grp[i * n..(i + 1) * n].iter_mut().zip(src) {
+                    *d = v as u8;
+                }
+            }
+            for l in 0..n_slices {
+                let slice_w = (delta as f32).powi(l as i32);
+                // input DAC plane: (a >> m·l) & (Δ-1), pure shift/mask
+                if n_slices == 1 {
+                    sc.a_plane.copy_from_slice(&sc.a_grp);
+                } else {
+                    let shift = self.bits.m * l;
+                    for (d, &v) in sc.a_plane.iter_mut().zip(&sc.a_grp) {
+                        *d = (v >> shift) & mask;
+                    }
+                }
+                match gw {
+                    GroupWeights::Native(w) => {
+                        sc.s.fill(0);
+                        gemm_acc_u8_i16(rows, n, out, &sc.a_plane, w, &mut sc.s);
+                        self.convert_block(
+                            conv, noise, g, l as usize, row0, rows, &sc.s, slice_w, true, y,
+                        );
+                    }
+                    GroupWeights::Differential(wp, wn) => {
+                        sc.s.fill(0);
+                        gemm_acc_u8_i16(rows, n, out, &sc.a_plane, wp, &mut sc.s);
+                        self.convert_block(
+                            conv,
+                            noise,
+                            g,
+                            2 * l as usize,
+                            row0,
+                            rows,
+                            &sc.s,
+                            slice_w,
+                            false,
+                            y,
+                        );
+                        sc.s.fill(0);
+                        gemm_acc_u8_i16(rows, n, out, &sc.a_plane, wn, &mut sc.s);
+                        self.convert_block(
+                            conv,
+                            noise,
+                            g,
+                            2 * l as usize + 1,
+                            row0,
+                            rows,
+                            &sc.s,
+                            -slice_w,
+                            false,
+                            y,
+                        );
+                    }
+                    GroupWeights::BitSerial(planes) => {
+                        for (k, wp) in planes.iter().enumerate() {
+                            let sign = if k as u32 == self.bits.b_w - 1 { -1.0 } else { 1.0 };
+                            let bit_w = sign * (1u32 << k) as f32 * slice_w;
+                            sc.s.fill(0);
+                            gemm_acc_u8_bin(rows, n, out, &sc.a_plane, wp, &mut sc.s);
+                            let plane = l as usize * self.bits.b_w as usize + k;
+                            self.convert_block(
+                                conv, noise, g, plane, row0, rows, &sc.s, bit_w, false, y,
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        self.scratch.put(sc);
+    }
+
+    /// Convert a [rows, out] block of plane sums, accumulating
+    /// `coef · adc(s)` into `y`.  `plane` is the conversion's index within
+    /// the group (unique per DAC slice / bit plane / differential half), so
+    /// the noise position key (group, plane, absolute row, column) never
+    /// collides.
+    #[allow(clippy::too_many_arguments)]
+    fn convert_block(
+        &self,
+        conv: &Converter,
+        noise: Option<&(CounterRng, f32)>,
+        g: usize,
+        plane: usize,
+        row0: usize,
+        rows: usize,
+        s: &[i32],
+        coef: f32,
+        signed: bool,
+        y: &mut [f32],
+    ) {
+        let out = self.out;
+        for i in 0..rows {
+            let srow = &s[i * out..(i + 1) * out];
+            let yrow = &mut y[i * out..(i + 1) * out];
+            match noise {
+                Some((field, sigma)) => {
+                    let stream = field.stream3(g as u64, plane as u64, (row0 + i) as u64);
+                    conv.convert_row(srow, signed, coef, Some((&stream, *sigma)), yrow);
+                }
+                None => conv.convert_row(srow, signed, coef, None, yrow),
+            }
+        }
+    }
 }
 
 /// One-shot convenience: prepare + execute (tests, goldens).
+#[allow(clippy::too_many_arguments)]
 pub fn pim_grouped_matmul(
     scheme: Scheme,
     bits: QuantBits,
@@ -368,5 +555,22 @@ mod tests {
                 assert!((y.data[i * 2 + oi] - exact).abs() < 2e-3);
             }
         }
+    }
+
+    #[test]
+    fn scratch_arena_reuses_buffers() {
+        let q = bits();
+        let mut rng = Rng::new(6);
+        let a = Tensor::from_vec(&[4, 18], (0..72).map(|_| rng.int_in(0, 15) as f32).collect());
+        let w = Tensor::from_vec(&[18, 3], (0..54).map(|_| rng.int_in(-7, 7) as f32).collect());
+        let engine =
+            PimEngine::prepare(Scheme::BitSerial, q, &w, 2, 3, 1).with_threads(1);
+        let chip = ChipModel::ideal(7);
+        let mut nrng = Rng::new(0);
+        let y1 = engine.matmul(&a, &chip, &mut nrng);
+        // second call pops the pooled scratch; results must be unchanged
+        let y2 = engine.matmul(&a, &chip, &mut nrng);
+        assert_eq!(y1.data, y2.data);
+        assert_eq!(engine.scratch.0.lock().unwrap().len(), 1);
     }
 }

@@ -27,6 +27,19 @@ pub struct GroupPlan {
     pub n: usize,
 }
 
+impl GroupPlan {
+    /// Total patch columns G·N.
+    pub fn cols(&self) -> usize {
+        self.groups * self.n
+    }
+
+    /// The contiguous im2col column range of group `g`.
+    pub fn col_range(&self, g: usize) -> std::ops::Range<usize> {
+        debug_assert!(g < self.groups);
+        g * self.n..(g + 1) * self.n
+    }
+}
+
 pub fn plan_groups(c_in: usize, kernel: usize, unit_channels: usize) -> GroupPlan {
     let uc = effective_unit_channels(c_in, unit_channels);
     GroupPlan { uc, groups: c_in / uc, n: uc * kernel * kernel }
@@ -43,6 +56,14 @@ mod tests {
         assert_eq!(effective_unit_channels(12, 8), 6);
         assert_eq!(effective_unit_channels(7, 4), 1);
         assert_eq!(effective_unit_channels(1, 1), 1);
+    }
+
+    #[test]
+    fn col_ranges_tile_the_patch() {
+        let p = plan_groups(32, 3, 16);
+        assert_eq!(p.cols(), 288);
+        assert_eq!(p.col_range(0), 0..144);
+        assert_eq!(p.col_range(1), 144..288);
     }
 
     #[test]

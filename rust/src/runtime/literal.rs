@@ -1,64 +1,124 @@
 //! Literal ⇄ Tensor conversions at the PJRT boundary.
+//!
+//! With the `pjrt` feature the [`Literal`] type is `xla::Literal`; without
+//! it, a zero-size stub keeps every caller (trainer, benches) compiling
+//! while the conversion helpers return a descriptive error at runtime.
 
-use anyhow::{anyhow, Result};
-use xla::{ArrayElement, Literal};
+#[cfg(feature = "pjrt")]
+mod imp {
+    use crate::util::error::{anyhow, Result};
+    use xla::ArrayElement;
+    pub use xla::Literal;
 
-use crate::tensor::Tensor;
+    use crate::tensor::Tensor;
 
-/// f32 tensor → literal with the tensor's shape.
-pub fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
-    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
-    Literal::vec1(&t.data)
-        .reshape(&dims)
-        .map_err(|e| anyhow!("literal reshape {:?}: {e}", t.shape))
+    /// f32 tensor → literal with the tensor's shape.
+    pub fn tensor_to_literal(t: &Tensor) -> Result<Literal> {
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        Literal::vec1(&t.data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("literal reshape {:?}: {e}", t.shape))
+    }
+
+    /// f32 literal → tensor (shape taken from the literal).
+    pub fn literal_to_tensor(l: &Literal) -> Result<Tensor> {
+        let shape = l.array_shape().map_err(|e| anyhow!("literal shape: {e}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = l.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e}"))?;
+        Ok(Tensor::from_vec(&dims, data))
+    }
+
+    /// Scalar literals.
+    pub fn scalar_f32(v: f32) -> Literal {
+        Literal::scalar(v)
+    }
+
+    pub fn scalar_i32(v: i32) -> Literal {
+        Literal::scalar(v)
+    }
+
+    /// i32 vector literal (labels).
+    pub fn vec_i32(v: &[i32]) -> Literal {
+        Literal::vec1(v)
+    }
+
+    /// Extract a scalar from a literal.
+    pub fn to_scalar_f32(l: &Literal) -> Result<f32> {
+        l.get_first_element::<f32>()
+            .map_err(|e| anyhow!("scalar f32: {e}"))
+    }
+
+    /// Raw f32 data of a literal (flat).
+    pub fn to_vec_f32(l: &Literal) -> Result<Vec<f32>> {
+        l.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))
+    }
+
+    /// Element count sanity helper.
+    pub fn element_count(l: &Literal) -> usize {
+        l.element_count()
+    }
+
+    /// Build a literal of an arbitrary supported dtype from f32-ish data
+    /// (artifact inputs are all f32 or i32 per the manifest).
+    pub fn from_spec_data<T: ArrayElement + xla::NativeType>(
+        data: &[T],
+        shape: &[usize],
+    ) -> Result<Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        Literal::vec1(data)
+            .reshape(&dims)
+            .map_err(|e| anyhow!("literal reshape {shape:?}: {e}"))
+    }
 }
 
-/// f32 literal → tensor (shape taken from the literal).
-pub fn literal_to_tensor(l: &Literal) -> Result<Tensor> {
-    let shape = l.array_shape().map_err(|e| anyhow!("literal shape: {e}"))?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    let data = l.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e}"))?;
-    Ok(Tensor::from_vec(&dims, data))
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use crate::tensor::Tensor;
+    use crate::util::error::{anyhow, Error, Result};
+
+    /// Stub literal; carries no data.  Conversions error at runtime.
+    #[derive(Debug, Clone, Default)]
+    pub struct Literal;
+
+    fn disabled(what: &str) -> Error {
+        anyhow!("{what}: built without the `pjrt` feature (see rust/Cargo.toml)")
+    }
+
+    pub fn tensor_to_literal(_t: &Tensor) -> Result<Literal> {
+        Err(disabled("tensor_to_literal"))
+    }
+
+    pub fn literal_to_tensor(_l: &Literal) -> Result<Tensor> {
+        Err(disabled("literal_to_tensor"))
+    }
+
+    pub fn scalar_f32(_v: f32) -> Literal {
+        Literal
+    }
+
+    pub fn scalar_i32(_v: i32) -> Literal {
+        Literal
+    }
+
+    pub fn vec_i32(_v: &[i32]) -> Literal {
+        Literal
+    }
+
+    pub fn to_scalar_f32(_l: &Literal) -> Result<f32> {
+        Err(disabled("to_scalar_f32"))
+    }
+
+    pub fn to_vec_f32(_l: &Literal) -> Result<Vec<f32>> {
+        Err(disabled("to_vec_f32"))
+    }
+
+    pub fn element_count(_l: &Literal) -> usize {
+        0
+    }
+
+    pub fn from_spec_data<T>(_data: &[T], _shape: &[usize]) -> Result<Literal> {
+        Err(disabled("from_spec_data"))
+    }
 }
 
-/// Scalar literals.
-pub fn scalar_f32(v: f32) -> Literal {
-    Literal::scalar(v)
-}
-
-pub fn scalar_i32(v: i32) -> Literal {
-    Literal::scalar(v)
-}
-
-/// i32 vector literal (labels).
-pub fn vec_i32(v: &[i32]) -> Literal {
-    Literal::vec1(v)
-}
-
-/// Extract a scalar from a literal.
-pub fn to_scalar_f32(l: &Literal) -> Result<f32> {
-    l.get_first_element::<f32>()
-        .map_err(|e| anyhow!("scalar f32: {e}"))
-}
-
-/// Raw f32 data of a literal (flat).
-pub fn to_vec_f32(l: &Literal) -> Result<Vec<f32>> {
-    l.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))
-}
-
-/// Element count sanity helper.
-pub fn element_count(l: &Literal) -> usize {
-    l.element_count()
-}
-
-/// Build a literal of an arbitrary supported dtype from f32-ish data
-/// (artifact inputs are all f32 or i32 per the manifest).
-pub fn from_spec_data<T: ArrayElement + xla::NativeType>(
-    data: &[T],
-    shape: &[usize],
-) -> Result<Literal> {
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Literal::vec1(data)
-        .reshape(&dims)
-        .map_err(|e| anyhow!("literal reshape {shape:?}: {e}"))
-}
+pub use imp::*;

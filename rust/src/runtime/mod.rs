@@ -5,125 +5,188 @@
 //! → XlaComputation → compile → execute.  Outputs are lowered with
 //! `return_tuple=True`, so every execution returns one tuple literal that we
 //! decompose into the flat output list the manifest describes.
+//!
+//! The whole client is gated behind the off-by-default `pjrt` cargo feature
+//! (the `xla` bindings crate is not in the offline crate cache).  Without
+//! it, [`Runtime`] still loads manifests — so the chip simulator, sweeps
+//! over cached checkpoints, and analysis experiments work — but `load`
+//! returns an error instead of compiling artifacts.
 
 pub mod literal;
 pub mod manifest;
 
 pub use manifest::{ArtifactSpec, DType, Kind, Manifest, ModelEntry};
 
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
+mod client {
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+    use crate::util::error::{anyhow, Result};
+    use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
-/// The PJRT CPU runtime plus a compile cache.
-pub struct Runtime {
-    client: PjRtClient,
-    pub manifest: Manifest,
-    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
-}
+    use super::manifest::{ArtifactSpec, Manifest};
 
-/// A compiled artifact ready to execute.
-pub struct Executable {
-    pub spec: ArtifactSpec,
-    exe: PjRtLoadedExecutable,
-}
-
-// SAFETY: PJRT clients and loaded executables are documented thread-safe in
-// XLA (the C++ objects are internally synchronized; IFRT/PJRT contract).
-// The rust wrapper types only miss the auto-markers because they hold raw
-// pointers.  We never expose interior mutation beyond the Mutex-guarded
-// compile cache.
-unsafe impl Send for Runtime {}
-unsafe impl Sync for Runtime {}
-unsafe impl Send for Executable {}
-unsafe impl Sync for Executable {}
-
-impl Runtime {
-    /// Create the CPU client and load the manifest from `dir`.
-    pub fn new(dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(dir)?;
-        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
-        Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    /// The PJRT CPU runtime plus a compile cache.
+    pub struct Runtime {
+        client: PjRtClient,
+        pub manifest: Manifest,
+        cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// A compiled artifact ready to execute.
+    pub struct Executable {
+        pub spec: ArtifactSpec,
+        exe: PjRtLoadedExecutable,
     }
 
-    /// Load + compile an artifact by manifest name (cached).
-    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
-            return Ok(e.clone());
+    // SAFETY: PJRT clients and loaded executables are documented thread-safe
+    // in XLA (the C++ objects are internally synchronized; IFRT/PJRT
+    // contract).  The rust wrapper types only miss the auto-markers because
+    // they hold raw pointers.  We never expose interior mutation beyond the
+    // Mutex-guarded compile cache.
+    unsafe impl Send for Runtime {}
+    unsafe impl Sync for Runtime {}
+    unsafe impl Send for Executable {}
+    unsafe impl Sync for Executable {}
+
+    impl Runtime {
+        /// Create the CPU client and load the manifest from `dir`.
+        pub fn new(dir: &Path) -> Result<Self> {
+            let manifest = Manifest::load(dir)?;
+            let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+            Ok(Runtime { client, manifest, cache: Mutex::new(HashMap::new()) })
         }
-        let spec = self.manifest.artifact(name)?.clone();
-        let proto = HloModuleProto::from_text_file(&spec.file)
-            .map_err(|e| anyhow!("parsing HLO text {}: {e}", spec.file.display()))?;
-        let comp = XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
-        let arc = std::sync::Arc::new(Executable { spec, exe });
-        self.cache.lock().unwrap().insert(name.to_string(), arc.clone());
-        Ok(arc)
-    }
-}
 
-impl Executable {
-    /// Execute with the manifest-ordered input literals; returns the flat
-    /// output list (tuple decomposed).
-    pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
-        if inputs.len() != self.spec.inputs.len() {
-            return Err(anyhow!(
-                "{}: got {} inputs, artifact expects {}",
-                self.spec.name,
-                inputs.len(),
-                self.spec.inputs.len()
-            ));
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        let bufs = self
-            .exe
-            .execute::<Literal>(inputs)
-            .map_err(|e| anyhow!("executing {}: {e}", self.spec.name))?;
-        let tuple = bufs[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result of {}: {e}", self.spec.name))?;
-        let outs = tuple
-            .to_tuple()
-            .map_err(|e| anyhow!("decomposing result tuple of {}: {e}", self.spec.name))?;
-        if outs.len() != self.spec.n_outputs {
-            return Err(anyhow!(
-                "{}: artifact produced {} outputs, manifest says {}",
-                self.spec.name,
-                outs.len(),
-                self.spec.n_outputs
-            ));
+
+        /// Load + compile an artifact by manifest name (cached).
+        pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+            if let Some(e) = self.cache.lock().unwrap().get(name) {
+                return Ok(e.clone());
+            }
+            let spec = self.manifest.artifact(name)?.clone();
+            let proto = HloModuleProto::from_text_file(&spec.file)
+                .map_err(|e| anyhow!("parsing HLO text {}: {e}", spec.file.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+            let arc = std::sync::Arc::new(Executable { spec, exe });
+            self.cache.lock().unwrap().insert(name.to_string(), arc.clone());
+            Ok(arc)
         }
-        Ok(outs)
     }
 
-    /// Validate a set of input literals against the manifest signature
-    /// (shape check); used by tests and the trainer's sanity pass.
-    pub fn check_inputs(&self, inputs: &[Literal]) -> Result<()> {
-        for (i, (lit, spec)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
-            let shape = lit
-                .array_shape()
-                .map_err(|e| anyhow!("input {i} ({}) shape: {e}", spec.name))?;
-            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-            if dims != spec.shape {
+    impl Executable {
+        /// Execute with the manifest-ordered input literals; returns the
+        /// flat output list (tuple decomposed).
+        pub fn run(&self, inputs: &[Literal]) -> Result<Vec<Literal>> {
+            if inputs.len() != self.spec.inputs.len() {
                 return Err(anyhow!(
-                    "input {i} ({}): shape {dims:?} != manifest {:?}",
-                    spec.name,
-                    spec.shape
+                    "{}: got {} inputs, artifact expects {}",
+                    self.spec.name,
+                    inputs.len(),
+                    self.spec.inputs.len()
                 ));
             }
+            let bufs = self
+                .exe
+                .execute::<Literal>(inputs)
+                .map_err(|e| anyhow!("executing {}: {e}", self.spec.name))?;
+            let tuple = bufs[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetching result of {}: {e}", self.spec.name))?;
+            let outs = tuple
+                .to_tuple()
+                .map_err(|e| anyhow!("decomposing result tuple of {}: {e}", self.spec.name))?;
+            if outs.len() != self.spec.n_outputs {
+                return Err(anyhow!(
+                    "{}: artifact produced {} outputs, manifest says {}",
+                    self.spec.name,
+                    outs.len(),
+                    self.spec.n_outputs
+                ));
+            }
+            Ok(outs)
         }
-        Ok(())
+
+        /// Validate a set of input literals against the manifest signature
+        /// (shape check); used by tests and the trainer's sanity pass.
+        pub fn check_inputs(&self, inputs: &[Literal]) -> Result<()> {
+            for (i, (lit, spec)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+                let shape = lit
+                    .array_shape()
+                    .map_err(|e| anyhow!("input {i} ({}) shape: {e}", spec.name))?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                if dims != spec.shape {
+                    return Err(anyhow!(
+                        "input {i} ({}): shape {dims:?} != manifest {:?}",
+                        spec.name,
+                        spec.shape
+                    ));
+                }
+            }
+            Ok(())
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod client {
+    use std::path::Path;
+
+    use super::literal::Literal;
+    use super::manifest::{ArtifactSpec, Manifest};
+    use crate::util::error::{anyhow, Result};
+
+    /// Offline stand-in for the PJRT runtime: the manifest loads (so model
+    /// geometry, sweeps over cached checkpoints, and chip-sim evaluation
+    /// work), but artifact compilation needs the `pjrt` feature.
+    pub struct Runtime {
+        pub manifest: Manifest,
+    }
+
+    /// Stub executable; never constructed without the `pjrt` feature.
+    pub struct Executable {
+        pub spec: ArtifactSpec,
+    }
+
+    impl Runtime {
+        pub fn new(dir: &Path) -> Result<Self> {
+            Ok(Runtime { manifest: Manifest::load(dir)? })
+        }
+
+        pub fn platform(&self) -> String {
+            "none (built without the `pjrt` feature)".to_string()
+        }
+
+        pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+            Err(anyhow!(
+                "cannot compile artifact {name:?}: built without the `pjrt` feature \
+                 (enable it and provide the `xla` crate — see rust/Cargo.toml)"
+            ))
+        }
+    }
+
+    impl Executable {
+        pub fn run(&self, _inputs: &[Literal]) -> Result<Vec<Literal>> {
+            Err(anyhow!("{}: built without the `pjrt` feature", self.spec.name))
+        }
+
+        pub fn check_inputs(&self, _inputs: &[Literal]) -> Result<()> {
+            Err(anyhow!("{}: built without the `pjrt` feature", self.spec.name))
+        }
+    }
+}
+
+pub use client::{Executable, Runtime};
+
+use crate::util::error::{Context, Result};
 
 /// Open the default runtime (artifacts dir from env / cwd).
 pub fn open_default() -> Result<Runtime> {

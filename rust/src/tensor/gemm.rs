@@ -1,40 +1,151 @@
-//! Small blocked GEMM used by the digital conv path and the PIM engine's
-//! plane sums.  Single-threaded (the testbed is 1 core); the blocking keeps
-//! the working set in L1/L2 which is what matters here (§Perf L3).
+//! GEMM microkernels for the digital conv path and the PIM engine's plane
+//! sums (§Perf L3).
+//!
+//! Four variants, all single-call (threading happens above, across batch
+//! rows, in `crate::pim::engine`):
+//!
+//! * [`gemm_acc`] — dense f32, register-blocked (4-wide k unroll).  The old
+//!   per-element `aik == 0.0` skip is gone: on dense native-scheme planes it
+//!   cost a branch per element and defeated vectorization.
+//! * [`gemm_acc_sparse`] — f32 with the zero-skip, for genuinely sparse
+//!   inputs (post-ReLU quantized activation patches).
+//! * [`gemm_acc_u8_i16`] — the integer-native plane kernel: u8 DAC-plane
+//!   activations × i16 weights accumulated in i32.  Plane sums are exact
+//!   integers, so any accumulation order is bit-identical to the float
+//!   reference (all magnitudes ≤ 2^24).
+//! * [`gemm_acc_u8_bin`] — binary-plane specialization (bit-serial weights
+//!   w ∈ {0,1} stored as u8): half the weight-memory traffic of the i16
+//!   kernel, and it keeps the zero-skip on activations, which pays off for
+//!   m=1 DAC slicing where activation planes are ~half zeros.
 
-/// C[m,n] += A[m,k] * B[k,n], row-major.
+/// C[m,n] += A[m,k] * B[k,n], row-major, dense f32.
 pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(c.len(), m * n);
-    const BK: usize = 64;
-    const BN: usize = 256;
-    for k0 in (0..k).step_by(BK) {
-        let k1 = (k0 + BK).min(k);
-        for n0 in (0..n).step_by(BN) {
-            let n1 = (n0 + BN).min(n);
-            for i in 0..m {
-                let arow = &a[i * k..(i + 1) * k];
-                let crow = &mut c[i * n..(i + 1) * n];
-                for kk in k0..k1 {
-                    let aik = arow[kk];
-                    if aik == 0.0 {
-                        continue; // bit-planes and ReLU outputs are sparse
-                    }
-                    let brow = &b[kk * n..(kk + 1) * n];
-                    for nn in n0..n1 {
-                        crow[nn] += aik * brow[nn];
-                    }
-                }
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut kk = 0;
+        // register-blocked: 4 rows of B share one pass over the C row
+        while kk + 4 <= k {
+            let a0 = arow[kk];
+            let a1 = arow[kk + 1];
+            let a2 = arow[kk + 2];
+            let a3 = arow[kk + 3];
+            let b0 = &b[kk * n..kk * n + n];
+            let b1 = &b[(kk + 1) * n..(kk + 1) * n + n];
+            let b2 = &b[(kk + 2) * n..(kk + 2) * n + n];
+            let b3 = &b[(kk + 3) * n..(kk + 3) * n + n];
+            for j in 0..n {
+                crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let aik = arow[kk];
+            let brow = &b[kk * n..kk * n + n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+            kk += 1;
+        }
+    }
+}
+
+/// Dense-accumulate variant with a per-element zero skip.  Only worth it on
+/// sparse inputs (ReLU outputs, binary planes); on dense inputs the branch
+/// costs more than the multiplies it saves.
+pub fn gemm_acc_sparse(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..kk * n + n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
             }
         }
     }
 }
 
-/// C = A * B (allocating convenience wrapper).
+/// Integer plane kernel: C[m,n] += A[m,k] * B[k,n] with u8 activations,
+/// i16 weights, i32 accumulators.
+pub fn gemm_acc_u8_i16(m: usize, k: usize, n: usize, a: &[u8], b: &[i16], c: &mut [i32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut kk = 0;
+        while kk + 4 <= k {
+            let a0 = arow[kk] as i32;
+            let a1 = arow[kk + 1] as i32;
+            let a2 = arow[kk + 2] as i32;
+            let a3 = arow[kk + 3] as i32;
+            let b0 = &b[kk * n..kk * n + n];
+            let b1 = &b[(kk + 1) * n..(kk + 1) * n + n];
+            let b2 = &b[(kk + 2) * n..(kk + 2) * n + n];
+            let b3 = &b[(kk + 3) * n..(kk + 3) * n + n];
+            for j in 0..n {
+                crow[j] +=
+                    a0 * b0[j] as i32 + a1 * b1[j] as i32 + a2 * b2[j] as i32 + a3 * b3[j] as i32;
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let aik = arow[kk] as i32;
+            let brow = &b[kk * n..kk * n + n];
+            for j in 0..n {
+                crow[j] += aik * brow[j] as i32;
+            }
+            kk += 1;
+        }
+    }
+}
+
+/// Binary-plane kernel: weights are bit-serial planes in {0, 1} stored as
+/// u8.  Keeps the activation zero-skip (the sparse variant of the integer
+/// path — DAC planes under m=1 slicing are ~half zeros).
+pub fn gemm_acc_u8_bin(m: usize, k: usize, n: usize, a: &[u8], b: &[u8], c: &mut [i32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0 {
+                continue;
+            }
+            let av = aik as i32;
+            let brow = &b[kk * n..kk * n + n];
+            for j in 0..n {
+                crow[j] += av * brow[j] as i32;
+            }
+        }
+    }
+}
+
+/// C = A * B (allocating convenience wrapper, dense).
 pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
     let mut c = vec![0.0; m * n];
     gemm_acc(m, k, n, a, b, &mut c);
+    c
+}
+
+/// C = A * B via the sparse kernel (digital conv path: A is post-ReLU
+/// quantized patches, which carry many exact zeros).
+pub fn gemm_sparse(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut c = vec![0.0; m * n];
+    gemm_acc_sparse(m, k, n, a, b, &mut c);
     c
 }
 
@@ -74,6 +185,55 @@ mod tests {
                 assert!((x - y).abs() < 1e-3, "({m},{k},{n}): {x} vs {y}");
             }
         }
+    }
+
+    #[test]
+    fn sparse_matches_dense() {
+        let mut rng = Rng::new(2);
+        for &(m, k, n) in &[(4, 9, 6), (7, 65, 12)] {
+            // ~60% zeros, like quantized ReLU activations
+            let a: Vec<f32> = (0..m * k)
+                .map(|_| if rng.below(5) < 3 { 0.0 } else { rng.int_in(1, 15) as f32 })
+                .collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.int_in(-7, 7) as f32).collect();
+            assert_eq!(gemm(m, k, n, &a, &b), gemm_sparse(m, k, n, &a, &b));
+        }
+    }
+
+    #[test]
+    fn integer_kernels_match_float() {
+        let mut rng = Rng::new(3);
+        for &(m, k, n) in &[(1, 1, 1), (5, 9, 4), (6, 73, 17), (3, 144, 32)] {
+            let a_u8: Vec<u8> = (0..m * k).map(|_| rng.int_in(0, 15) as u8).collect();
+            let w_i16: Vec<i16> = (0..k * n).map(|_| rng.int_in(-7, 7) as i16).collect();
+            let w_bin: Vec<u8> = (0..k * n).map(|_| rng.below(2) as u8).collect();
+            let af: Vec<f32> = a_u8.iter().map(|&v| v as f32).collect();
+
+            let mut ci = vec![0i32; m * n];
+            gemm_acc_u8_i16(m, k, n, &a_u8, &w_i16, &mut ci);
+            let wf: Vec<f32> = w_i16.iter().map(|&v| v as f32).collect();
+            let cf = gemm_naive(m, k, n, &af, &wf);
+            for (x, y) in ci.iter().zip(&cf) {
+                assert_eq!(*x as f32, *y);
+            }
+
+            let mut cb = vec![0i32; m * n];
+            gemm_acc_u8_bin(m, k, n, &a_u8, &w_bin, &mut cb);
+            let wbf: Vec<f32> = w_bin.iter().map(|&v| v as f32).collect();
+            let cbf = gemm_naive(m, k, n, &af, &wbf);
+            for (x, y) in cb.iter().zip(&cbf) {
+                assert_eq!(*x as f32, *y);
+            }
+        }
+    }
+
+    #[test]
+    fn integer_kernels_accumulate() {
+        let a = vec![1u8, 0, 0, 1];
+        let b = vec![2i16, 0, 0, 2];
+        let mut c = vec![1i32; 4];
+        gemm_acc_u8_i16(2, 2, 2, &a, &b, &mut c);
+        assert_eq!(c, vec![3, 1, 1, 3]);
     }
 
     #[test]

@@ -11,38 +11,82 @@ use super::{gemm::gemm, Tensor};
 /// Extract SAME-padded conv patches: x [B,H,W,C] → ([M, C*k*k], out_h, out_w)
 /// with stride `s` and the channel-major layout documented above.
 pub fn im2col(x: &Tensor, k: usize, s: usize) -> (Tensor, usize, usize) {
+    im2col_threaded(x, k, s, 1)
+}
+
+/// `im2col` with the per-image work split across `threads` scoped threads
+/// (0 = auto: $PIM_QAT_THREADS or the available parallelism).  Every patch
+/// row is a pure function of the input, so the output is bit-identical to
+/// the single-threaded path for any thread count.
+pub fn im2col_threaded(x: &Tensor, k: usize, s: usize, threads: usize) -> (Tensor, usize, usize) {
     assert_eq!(x.rank(), 4, "im2col expects NHWC");
     let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let pad = k / 2;
     let oh = (h + 2 * pad - k) / s + 1;
     let ow = (w + 2 * pad - k) / s + 1;
     let cols = c * k * k;
-    let mut out = vec![0.0f32; b * oh * ow * cols];
-    for bi in 0..b {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let row = ((bi * oh + oy) * ow + ox) * cols;
-                for dy in 0..k {
-                    let iy = (oy * s + dy) as isize - pad as isize;
-                    if iy < 0 || iy >= h as isize {
+    let img = oh * ow * cols;
+    let mut out = vec![0.0f32; b * img];
+    let threads = resolve_threads(threads).min(b.max(1)).max(1);
+    if threads <= 1 {
+        for (bi, chunk) in out.chunks_mut(img).enumerate() {
+            im2col_image(x, bi, k, s, oh, ow, chunk);
+        }
+    } else {
+        let per = (b + threads - 1) / threads;
+        std::thread::scope(|sc| {
+            for (ti, block) in out.chunks_mut(per * img).enumerate() {
+                let x = &*x;
+                sc.spawn(move || {
+                    for (off, chunk) in block.chunks_mut(img).enumerate() {
+                        im2col_image(x, ti * per + off, k, s, oh, ow, chunk);
+                    }
+                });
+            }
+        });
+    }
+    (Tensor::from_vec(&[b * oh * ow, cols], out), oh, ow)
+}
+
+/// Patch extraction of one image into its [oh*ow, cols] output block.
+fn im2col_image(x: &Tensor, bi: usize, k: usize, s: usize, oh: usize, ow: usize, out: &mut [f32]) {
+    let (h, w, c) = (x.shape[1], x.shape[2], x.shape[3]);
+    let pad = k / 2;
+    let cols = c * k * k;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = (oy * ow + ox) * cols;
+            for dy in 0..k {
+                let iy = (oy * s + dy) as isize - pad as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for dx in 0..k {
+                    let ix = (ox * s + dx) as isize - pad as isize;
+                    if ix < 0 || ix >= w as isize {
                         continue;
                     }
-                    for dx in 0..k {
-                        let ix = (ox * s + dx) as isize - pad as isize;
-                        if ix < 0 || ix >= w as isize {
-                            continue;
-                        }
-                        let src = ((bi * h + iy as usize) * w + ix as usize) * c;
-                        let p = dy * k + dx;
-                        for ci in 0..c {
-                            out[row + ci * k * k + p] = x.data[src + ci];
-                        }
+                    let src = ((bi * h + iy as usize) * w + ix as usize) * c;
+                    let p = dy * k + dx;
+                    for ci in 0..c {
+                        out[row + ci * k * k + p] = x.data[src + ci];
                     }
                 }
             }
         }
     }
-    (Tensor::from_vec(&[b * oh * ow, cols], out), oh, ow)
+}
+
+/// Thread-count resolution shared by the threaded ops (0 = auto).
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    std::env::var("PIM_QAT_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&t| t > 0)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
 }
 
 /// Reorder conv weights [kh,kw,C,O] (python HWIO) to the im2col column
@@ -243,6 +287,23 @@ mod tests {
             let y2 = conv_naive(&x, &w, s);
             assert_eq!(y1.shape, y2.shape);
             assert!(y1.max_abs_diff(&y2) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn im2col_threaded_bit_identical() {
+        let mut rng = Rng::new(9);
+        let x = Tensor::from_vec(
+            &[5, 6, 6, 3],
+            (0..5 * 6 * 6 * 3).map(|_| rng.normal_in(0.0, 1.0)).collect(),
+        );
+        for &(k, s) in &[(3usize, 1usize), (3, 2), (1, 1)] {
+            let (p1, oh, ow) = im2col_threaded(&x, k, s, 1);
+            for t in [2usize, 3, 8] {
+                let (pt, oht, owt) = im2col_threaded(&x, k, s, t);
+                assert_eq!((oh, ow), (oht, owt));
+                assert_eq!(p1.data, pt.data, "k={k} s={s} t={t}");
+            }
         }
     }
 

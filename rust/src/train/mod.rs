@@ -8,8 +8,8 @@ pub mod schedule;
 
 pub use checkpoint::Checkpoint;
 
-use anyhow::{anyhow, Result};
-use xla::Literal;
+use crate::util::error::{anyhow, Result};
+use crate::runtime::literal::Literal;
 
 use crate::config::{rescale, JobConfig, Mode, Scheme};
 use crate::data::{Dataset, EpochIter};

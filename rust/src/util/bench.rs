@@ -22,6 +22,22 @@ impl BenchStats {
         self.work_per_iter.map(|w| w / (self.mean_ns * 1e-9))
     }
 
+    /// Machine-readable record for the BENCH_*.json perf-trajectory files.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut fields = vec![
+            ("name", Json::str(&self.name)),
+            ("iters", Json::num(self.iters as f64)),
+            ("ns_per_iter", Json::num(self.mean_ns)),
+            ("median_ns", Json::num(self.median_ns)),
+        ];
+        if let Some(t) = self.throughput() {
+            fields.push(("ops_per_s", Json::num(t)));
+            fields.push(("gmacs_per_s", Json::num(t / 1e9)));
+        }
+        Json::obj(fields)
+    }
+
     pub fn report(&self) -> String {
         let mut s = format!(
             "{:<44} {:>10} iters  mean {:>12}  median {:>12}  [p05 {} .. p95 {}]",
@@ -103,6 +119,20 @@ impl Bencher {
     }
 }
 
+/// Write `BENCH_<name>.json` next to the working directory so the perf
+/// trajectory is tracked across PRs (consumed by CI / tooling; schema:
+/// `{"benches": [{name, iters, ns_per_iter, median_ns, ops_per_s,
+/// gmacs_per_s}]}`).
+pub fn save_json(path: &std::path::Path, stats: &[BenchStats]) -> crate::util::error::Result<()> {
+    use crate::util::json::Json;
+    let j = Json::obj(vec![(
+        "benches",
+        Json::Arr(stats.iter().map(|s| s.to_json()).collect()),
+    )]);
+    std::fs::write(path, j.to_string())?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,5 +159,26 @@ mod tests {
         assert!(fmt_ns(12_000.0).contains("µs"));
         assert!(fmt_ns(12_000_000.0).contains("ms"));
         assert!(fmt_ns(2e9).contains(" s"));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let stats = BenchStats {
+            name: "case".into(),
+            iters: 10,
+            mean_ns: 1_000.0,
+            median_ns: 900.0,
+            p05_ns: 800.0,
+            p95_ns: 1_200.0,
+            work_per_iter: Some(2_000_000.0),
+        };
+        let path = std::env::temp_dir().join("BENCH_test.json");
+        save_json(&path, &[stats]).unwrap();
+        let j = crate::util::json::parse_file(&path).unwrap();
+        let b = j.get("benches").idx(0);
+        assert_eq!(b.get("name").as_str(), Some("case"));
+        assert_eq!(b.get("ns_per_iter").as_f64(), Some(1_000.0));
+        // 2e6 ops in 1µs = 2e15 ops/s = 2e6 GMAC/s
+        assert!((b.get("gmacs_per_s").as_f64().unwrap() - 2e6).abs() < 1e-3);
     }
 }

@@ -1,0 +1,122 @@
+//! Error substrate (S14): a minimal `anyhow`-compatible error type.
+//!
+//! The offline crate cache has no `anyhow`, and the default build must link
+//! with zero external dependencies (DESIGN.md §Substrates), so the crate
+//! carries the subset of the `anyhow` API it actually uses: a formatted
+//! string error, the `anyhow!` macro, `Result<T>`, and the `Context`
+//! extension trait.  Like `anyhow::Error`, this type deliberately does NOT
+//! implement `std::error::Error` — that is what makes the blanket
+//! `From<E: std::error::Error>` conversion (the `?` operator) coherent.
+
+use std::fmt;
+
+/// A formatted diagnostic error (message-only; the crate's errors are
+/// human-readable strings, not matchable variants).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(&e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or any `Display` value,
+/// mirroring `anyhow::anyhow!`.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err)
+    };
+}
+
+pub use crate::anyhow;
+
+/// Attach context to an error, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(&ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        Err(anyhow!("broke at step {}", 3))
+    }
+
+    #[test]
+    fn macro_forms() {
+        assert_eq!(fails().unwrap_err().to_string(), "broke at step 3");
+        let n = 7;
+        assert_eq!(anyhow!("n={n}").to_string(), "n=7");
+        assert_eq!(anyhow!(String::from("owned")).to_string(), "owned");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn context_wraps() {
+        let e: Result<()> = Err(anyhow!("inner")).context("outer");
+        assert_eq!(e.unwrap_err().to_string(), "outer: inner");
+        let e: Result<()> = Err(anyhow!("inner")).with_context(|| format!("job {}", 2));
+        assert_eq!(e.unwrap_err().to_string(), "job 2: inner");
+        let v: Result<i32> = None.context("missing");
+        assert_eq!(v.unwrap_err().to_string(), "missing");
+    }
+}

@@ -107,12 +107,19 @@ impl Json {
 // Parser
 // ---------------------------------------------------------------------------
 
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 struct Parser<'a> {
     b: &'a [u8],
@@ -306,9 +313,9 @@ pub fn parse(text: &str) -> Result<Json, ParseError> {
 }
 
 /// Parse a JSON file.
-pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Json> {
+pub fn parse_file(path: &std::path::Path) -> crate::util::error::Result<Json> {
     let text = std::fs::read_to_string(path)
-        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        .map_err(|e| crate::anyhow!("reading {}: {e}", path.display()))?;
     Ok(parse(&text)?)
 }
 

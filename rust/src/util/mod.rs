@@ -2,6 +2,7 @@
 //! (DESIGN.md §Substrates S10–S13).
 
 pub mod bench;
+pub mod error;
 pub mod json;
 pub mod rng;
 pub mod table;

@@ -1,10 +1,17 @@
-//! RNG substrate (S11): SplitMix64 + xoshiro256** + Box–Muller normal.
+//! RNG substrate (S11): SplitMix64 + xoshiro256** + Box–Muller normal, plus
+//! a counter-based generator for order-independent noise sampling.
 //!
 //! The offline crate cache has no `rand`; the simulator needs deterministic,
 //! seedable randomness for thermal noise, curve synthesis, the synthetic
 //! dataset, and property tests.  xoshiro256** is the same generator family
 //! the `rand_xoshiro` crate ships; SplitMix64 seeds it per Blackman &
 //! Vigna's recommendation.
+//!
+//! [`CounterRng`] is the engine-facing generator (DESIGN.md §RNG contract):
+//! every draw is a pure function of `(seed, coordinates, counter)` — a
+//! Philox-style construction built from the SplitMix64 finalizer — so the
+//! PIM engine's thermal-noise draws do not depend on execution order or
+//! thread partitioning.
 
 /// xoshiro256** with Box–Muller Gaussian sampling.
 #[derive(Debug, Clone)]
@@ -110,6 +117,72 @@ impl Rng {
     }
 }
 
+const GOLDEN: u64 = 0x9E3779B97F4A7C15;
+
+/// SplitMix64 finalizer: full-avalanche 64-bit mix.
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Counter-based RNG: stateless draws addressed by coordinates.
+///
+/// Unlike [`Rng`], a `CounterRng` has no mutable stream — `u64_at(i)` /
+/// `normal_at(i)` are pure functions of the (absorbed) seed and the counter,
+/// so two threads sampling disjoint coordinate ranges produce exactly the
+/// values a single thread would.  This is what makes the multi-threaded PIM
+/// engine bit-identical at any thread count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterRng {
+    state: u64,
+}
+
+impl CounterRng {
+    pub fn new(seed: u64) -> Self {
+        CounterRng { state: mix(seed.wrapping_add(GOLDEN)) }
+    }
+
+    /// Derive the substream for one coordinate (group, plane, row, ...).
+    #[inline]
+    pub fn stream(&self, coord: u64) -> CounterRng {
+        CounterRng {
+            state: mix(self.state ^ coord.wrapping_mul(GOLDEN).wrapping_add(0xD1B54A32D192ED03)),
+        }
+    }
+
+    /// Absorb three coordinates at once (the engine's (group, plane, row)).
+    #[inline]
+    pub fn stream3(&self, a: u64, b: u64, c: u64) -> CounterRng {
+        self.stream(a).stream(b).stream(c)
+    }
+
+    /// Raw 64-bit draw at counter `i`.
+    #[inline]
+    pub fn u64_at(&self, i: u64) -> u64 {
+        mix(self.state ^ i.wrapping_mul(GOLDEN))
+    }
+
+    /// Uniform f64 in [0, 1) at counter `i`.
+    #[inline]
+    pub fn uniform_at(&self, i: u64) -> f64 {
+        (self.u64_at(i) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal at counter `i` (Box–Muller, cosine branch only — no
+    /// pair caching, so the draw stays a pure function of position).
+    #[inline]
+    pub fn normal_at(&self, i: u64) -> f64 {
+        let r1 = self.u64_at(i);
+        let r2 = mix(r1 ^ GOLDEN);
+        // u1 in (0, 1] so ln() is finite; u2 in [0, 1)
+        let u1 = ((r1 >> 11) as f64 + 1.0) * (1.0 / (1u64 << 53) as f64);
+        let u2 = (r2 >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,5 +262,42 @@ mod tests {
         let mut f1 = base.fork(1);
         let mut f2 = base.fork(2);
         assert_ne!(f1.next_u64(), f2.next_u64());
+    }
+
+    #[test]
+    fn counter_rng_is_positional() {
+        let a = CounterRng::new(5);
+        let b = CounterRng::new(5);
+        // same position, same draw — regardless of access order
+        assert_eq!(a.u64_at(1000), b.u64_at(1000));
+        assert_eq!(a.stream3(1, 2, 3).normal_at(4), b.stream3(1, 2, 3).normal_at(4));
+        assert_ne!(a.u64_at(0), a.u64_at(1));
+        assert_ne!(CounterRng::new(5).u64_at(0), CounterRng::new(6).u64_at(0));
+        assert_ne!(a.stream3(1, 2, 3).u64_at(0), a.stream3(3, 2, 1).u64_at(0));
+    }
+
+    #[test]
+    fn counter_normal_moments() {
+        let r = CounterRng::new(13);
+        let n = 50_000u64;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for i in 0..n {
+            let z = r.normal_at(i);
+            s1 += z;
+            s2 += z * z;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn counter_uniform_range() {
+        let r = CounterRng::new(21);
+        for i in 0..5_000 {
+            let u = r.uniform_at(i);
+            assert!((0.0..1.0).contains(&u));
+        }
     }
 }

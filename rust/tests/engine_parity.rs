@@ -1,0 +1,236 @@
+//! Engine parity suite (no external goldens needed):
+//!
+//! 1. The integer-native plane-extraction path must match the seed float
+//!    path (float `div/floor/mod` slicing + f32 plane GEMM + scalar
+//!    conversion) **bit-for-bit** on every scheme, since integer plane sums
+//!    are exactly representable in f32.
+//! 2. The multi-threaded engine must be bit-identical at 1, 2, and N
+//!    threads for every scheme with thermal noise enabled — the counter-
+//!    based noise RNG is addressed by position, not by draw order.
+
+use pim_qat::chip::{ChipModel, Converter};
+use pim_qat::config::Scheme;
+use pim_qat::pim::layout::plan_groups;
+use pim_qat::pim::{plane_full_scale, PimEngine, QuantBits};
+use pim_qat::tensor::Tensor;
+use pim_qat::util::rng::Rng;
+
+/// The seed implementation's execution path, kept as the float oracle:
+/// DAC planes via `(a / Δ^l).floor() % Δ`, f32 plane GEMM, scalar
+/// conversion.  Noiseless chips only (the seed consumed a sequential RNG;
+/// the rewrite uses a positional one, so noisy streams differ by design).
+#[allow(clippy::too_many_arguments)]
+fn float_reference_matmul(
+    scheme: Scheme,
+    bits: QuantBits,
+    a: &Tensor,
+    w: &Tensor,
+    c_in: usize,
+    kernel: usize,
+    unit_channels: usize,
+    chip: &ChipModel,
+) -> Tensor {
+    assert_eq!(chip.noise_lsb, 0.0, "float oracle is noiseless");
+    let m = a.shape[0];
+    let cols = a.shape[1];
+    let out = w.shape[1];
+    let plan = plan_groups(c_in, kernel, unit_channels);
+    let n = plan.n;
+    assert_eq!(cols, plan.groups * n);
+    let fs = plane_full_scale(scheme, &bits, n);
+    let conv = Converter::new(chip, fs, out);
+    let mut rng = Rng::new(0); // unused: noiseless
+    let n_slices = bits.n_slices();
+    let delta = bits.delta();
+    let signed = matches!(scheme, Scheme::Native);
+
+    let mut y = vec![0.0f32; m * out];
+    let mut a_plane = vec![0.0f32; m * n];
+    let mut s = vec![0.0f32; m * out];
+    let gemm = |a_plane: &[f32], wg: &[f32], s: &mut [f32]| {
+        s.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..m {
+            for kk in 0..n {
+                let aik = a_plane[i * n + kk];
+                for o in 0..out {
+                    s[i * out + o] += aik * wg[kk * out + o];
+                }
+            }
+        }
+    };
+
+    for g in 0..plan.groups {
+        // group weights, float-decomposed as in the seed
+        let wg: Vec<f32> = (g * n..(g + 1) * n)
+            .flat_map(|r| w.data[r * out..(r + 1) * out].to_vec())
+            .collect();
+        for l in 0..n_slices {
+            let slice_w = (delta as f32).powi(l as i32);
+            if n_slices == 1 {
+                for i in 0..m {
+                    a_plane[i * n..(i + 1) * n]
+                        .copy_from_slice(&a.data[i * cols + g * n..i * cols + (g + 1) * n]);
+                }
+            } else {
+                let shift = (delta as f32).powi(l as i32);
+                for i in 0..m {
+                    for j in 0..n {
+                        let src = a.data[i * cols + g * n + j];
+                        a_plane[i * n + j] = ((src / shift).floor()) % delta as f32;
+                    }
+                }
+            }
+            match scheme {
+                Scheme::Native => {
+                    gemm(&a_plane, &wg, &mut s);
+                    for i in 0..m {
+                        for o in 0..out {
+                            y[i * out + o] +=
+                                slice_w * conv.convert(s[i * out + o], o, signed, &mut rng);
+                        }
+                    }
+                }
+                Scheme::Differential => {
+                    let wp: Vec<f32> = wg.iter().map(|&v| v.max(0.0)).collect();
+                    let wn: Vec<f32> = wg.iter().map(|&v| (-v).max(0.0)).collect();
+                    gemm(&a_plane, &wp, &mut s);
+                    for i in 0..m {
+                        for o in 0..out {
+                            y[i * out + o] +=
+                                slice_w * conv.convert(s[i * out + o], o, false, &mut rng);
+                        }
+                    }
+                    gemm(&a_plane, &wn, &mut s);
+                    for i in 0..m {
+                        for o in 0..out {
+                            y[i * out + o] -=
+                                slice_w * conv.convert(s[i * out + o], o, false, &mut rng);
+                        }
+                    }
+                }
+                Scheme::BitSerial => {
+                    for k in 0..bits.b_w {
+                        let plane: Vec<f32> = wg
+                            .iter()
+                            .map(|&v| {
+                                let vi = v as i32;
+                                let u = if vi < 0 { vi + (1 << bits.b_w) } else { vi } as u32;
+                                ((u >> k) & 1) as f32
+                            })
+                            .collect();
+                        let sign = if k == bits.b_w - 1 { -1.0 } else { 1.0 };
+                        let bit_w = sign * (1u32 << k) as f32 * slice_w;
+                        gemm(&a_plane, &plane, &mut s);
+                        for i in 0..m {
+                            for o in 0..out {
+                                y[i * out + o] +=
+                                    bit_w * conv.convert(s[i * out + o], o, false, &mut rng);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let denom = (bits.w_levels() * bits.a_levels()) as f32;
+    for v in &mut y {
+        *v /= denom;
+    }
+    Tensor::from_vec(&[m, out], y)
+}
+
+fn random_case(bits: &QuantBits, seed: u64) -> (Tensor, Tensor, usize, usize, usize) {
+    let mut rng = Rng::new(seed);
+    let (m, c, k, o, uc) = (7usize, 4usize, 3usize, 5usize, 2usize);
+    let cols = c * k * k;
+    let al = bits.a_levels() as i64;
+    let wl = bits.w_levels() as i64;
+    let a = Tensor::from_vec(
+        &[m, cols],
+        (0..m * cols).map(|_| rng.int_in(0, al) as f32).collect(),
+    );
+    let w = Tensor::from_vec(
+        &[cols, o],
+        (0..cols * o).map(|_| rng.int_in(-wl, wl) as f32).collect(),
+    );
+    (a, w, c, k, uc)
+}
+
+#[test]
+fn integer_path_matches_seed_float_path_bitwise() {
+    for bits in [QuantBits::default(), QuantBits { b_w: 4, b_a: 4, m: 1 }] {
+        let (a, w, c, k, uc) = random_case(&bits, 31 + bits.m as u64);
+        for scheme in [Scheme::Native, Scheme::BitSerial, Scheme::Differential] {
+            for chip in [
+                ChipModel::ideal(5),
+                ChipModel::ideal(7),
+                ChipModel::real(3).with_noise(0.0),
+            ] {
+                let want = float_reference_matmul(scheme, bits, &a, &w, c, k, uc, &chip);
+                let engine = PimEngine::prepare(scheme, bits, &w, c, k, uc).with_threads(1);
+                let mut rng = Rng::new(0);
+                let got = engine.matmul(&a, &chip, &mut rng);
+                assert_eq!(
+                    got.data, want.data,
+                    "{scheme} m={} b_pim={} integer path diverged from float path",
+                    bits.m, chip.b_pim
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn threaded_engine_bit_identical_all_schemes_with_noise() {
+    for bits in [QuantBits::default(), QuantBits { b_w: 4, b_a: 4, m: 1 }] {
+        let (a, w, c, k, uc) = random_case(&bits, 77 + bits.m as u64);
+        for scheme in [Scheme::Native, Scheme::BitSerial, Scheme::Differential] {
+            for chip in [
+                ChipModel::ideal(7).with_noise(0.5),
+                ChipModel::real(9), // measured curves + 0.35 LSB noise
+            ] {
+                let run = |threads: usize| {
+                    let engine =
+                        PimEngine::prepare(scheme, bits, &w, c, k, uc).with_threads(threads);
+                    let mut rng = Rng::new(11);
+                    engine.matmul(&a, &chip, &mut rng)
+                };
+                let y1 = run(1);
+                for threads in [2usize, 3, 8] {
+                    let yt = run(threads);
+                    assert_eq!(
+                        y1.data, yt.data,
+                        "{scheme} m={} noise={} not bit-identical at {threads} threads",
+                        bits.m, chip.noise_lsb
+                    );
+                }
+                // sanity: the noise field actually perturbed something
+                let noiseless = {
+                    let engine =
+                        PimEngine::prepare(scheme, bits, &w, c, k, uc).with_threads(1);
+                    let mut rng = Rng::new(11);
+                    engine.matmul(&a, &ChipModel::ideal(chip.b_pim), &mut rng)
+                };
+                assert_ne!(y1.data, noiseless.data, "{scheme}: noise had no effect");
+            }
+        }
+    }
+}
+
+#[test]
+fn dac_plane_shift_mask_matches_float_slicing() {
+    // the satellite parity check at the formula level: (a >> m·l) & (Δ-1)
+    // must equal floor(a / Δ^l) mod Δ on the whole activation grid.
+    for m in [1u32, 2, 4] {
+        let bits = QuantBits { b_w: 4, b_a: 4, m };
+        let delta = bits.delta();
+        for l in 0..bits.n_slices() {
+            let shift_f = (delta as f32).powi(l as i32);
+            for v in 0..=bits.a_levels() as u32 {
+                let float_way = ((v as f32 / shift_f).floor()) % delta as f32;
+                let int_way = ((v >> (m * l)) & (delta - 1) as u32) as f32;
+                assert_eq!(float_way, int_way, "m={m} l={l} v={v}");
+            }
+        }
+    }
+}

@@ -2,8 +2,10 @@
 //! train / eval, and prove the training loop learns.  Also exercises the
 //! Pallas-lowered kernel artifact (interpret-mode Pallas → HLO → PJRT).
 //!
-//! Requires `make artifacts`.  All tests share one Runtime (one PJRT client
+//! Requires `make artifacts` and the `pjrt` cargo feature (the default
+//! build has no XLA client).  All tests share one Runtime (one PJRT client
 //! per process) via a lazily-initialized static.
+#![cfg(feature = "pjrt")]
 
 use std::sync::OnceLock;
 
