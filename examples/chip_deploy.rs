@@ -4,21 +4,23 @@
 //! showing where accuracy is lost and how much BN calibration (§3.4)
 //! recovers at each stage.
 //!
-//!     make artifacts && cargo run --release --example chip_deploy
+//!     cargo run --release --example chip_deploy
+//!
+//! Runs on the native backend by default (no artifacts needed).
 
 use pim_qat::chip::curves::{synthesize_bank_with, CurveStats};
 use pim_qat::chip::ChipModel;
 use pim_qat::config::{JobConfig, Mode, Scheme};
 use pim_qat::coordinator::SweepRunner;
 use pim_qat::nn::ExecSpec;
-use pim_qat::runtime;
-use pim_qat::train::network_from_ckpt;
+use pim_qat::train::{self, network_from_ckpt};
+use pim_qat::util::error::Result;
 use pim_qat::util::rng::Rng;
 use pim_qat::util::table::Table;
 
-fn main() -> anyhow::Result<()> {
-    let rt = runtime::open_default()?;
-    let mut runner = SweepRunner::new(&rt);
+fn main() -> Result<()> {
+    let backend = train::open_default_backend()?;
+    let mut runner = SweepRunner::new(backend.as_ref());
     let job = JobConfig {
         model: "tiny".into(),
         mode: Mode::Ours,
@@ -57,9 +59,9 @@ fn main() -> anyhow::Result<()> {
             chip,
         };
         let mut rng = Rng::new(1);
-        let net = network_from_ckpt(&rt, &out.ckpt)?;
+        let net = network_from_ckpt(runner.manifest(), &out.ckpt)?;
         let raw = net.evaluate(&test_ds, 32, &exec, &mut rng)?;
-        let mut net = network_from_ckpt(&rt, &out.ckpt)?;
+        let mut net = network_from_ckpt(runner.manifest(), &out.ckpt)?;
         net.calibrate_bn(&train_ds, 32, 4, &exec, &mut rng)?;
         let cal = net.evaluate(&test_ds, 32, &exec, &mut rng)?;
         t.row(&[label.to_string(), format!("{raw:.1}"), format!("{cal:.1}")]);

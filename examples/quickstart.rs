@@ -1,23 +1,26 @@
-//! Quickstart: load the runtime, train a small PIM-QAT model for a few
-//! steps, and deploy it on the simulated 7-bit chip.
+//! Quickstart: open the default (native, zero-dependency) backend, train a
+//! small PIM-QAT model for a few steps, and deploy it on the simulated
+//! 7-bit chip.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 //!
-//! This touches every layer of the stack: HLO artifacts through PJRT (L2/L1
-//! lowered), the rust training loop, and the chip simulator.
+//! No artifacts needed: the native backend trains with the hand-rolled
+//! forward/backward and the built-in model registry.  With `make
+//! artifacts` and `--features pjrt`, the same code runs through the
+//! AOT-lowered HLO executables instead (`PIM_QAT_BACKEND=pjrt`).
 
 use pim_qat::chip::ChipModel;
 use pim_qat::config::{JobConfig, Mode, Scheme};
 use pim_qat::data::synth;
 use pim_qat::nn::ExecSpec;
-use pim_qat::runtime;
-use pim_qat::train;
+use pim_qat::train::{self, Backend};
+use pim_qat::util::error::Result;
 use pim_qat::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
-    // 1. open the artifacts produced by `make artifacts`
-    let rt = runtime::open_default()?;
-    println!("PJRT platform: {}", rt.platform());
+fn main() -> Result<()> {
+    // 1. open the training backend (native unless PIM_QAT_BACKEND says else)
+    let backend = train::open_default_backend()?;
+    println!("backend: {} — {}", backend.name(), backend.platform());
 
     // 2. a small PIM-QAT training job: bit-serial scheme, N = 72, b_PIM = 7
     let job = JobConfig {
@@ -35,14 +38,14 @@ fn main() -> anyhow::Result<()> {
     let test_ds = synth::generate(16, 10, job.test_size, 2);
 
     println!("training {} for {} steps ...", job.artifact_name(), job.steps);
-    let res = train::run_job(&rt, &job, &train_ds, &test_ds, 20)?;
+    let res = backend.train_job(&job, &train_ds, &test_ds, 20)?;
     for l in &res.history {
         println!("  step {:>4} loss {:.3} batch-acc {:.1}%", l.step, l.loss, l.acc);
     }
     println!("software (digital) test accuracy: {:.1}%", res.software_acc);
 
     // 3. deploy the checkpoint on the chip simulator: ideal and real
-    let net = train::network_from_ckpt(&rt, &res.ckpt)?;
+    let net = train::network_from_ckpt(backend.manifest(), &res.ckpt)?;
     let mut rng = Rng::new(0);
     for (label, chip) in [
         ("ideal 7-bit chip", ChipModel::ideal(7)),
@@ -58,7 +61,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // 4. BN calibration (§3.4) recovers real-chip accuracy
-    let mut net = train::network_from_ckpt(&rt, &res.ckpt)?;
+    let mut net = train::network_from_ckpt(backend.manifest(), &res.ckpt)?;
     let chip = ChipModel::real(0xC819).with_noise(0.35);
     let exec = ExecSpec::Pim { scheme: job.scheme, unit_channels: job.unit_channels, chip: &chip };
     net.calibrate_bn(&train_ds, 32, 4, &exec, &mut rng)?;

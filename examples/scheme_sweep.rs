@@ -2,20 +2,22 @@
 //! under all three PIM decomposition schemes and compare their robustness
 //! to ADC resolution, via the coordinator's grid machinery.
 //!
-//!     make artifacts && cargo run --release --example scheme_sweep
+//!     cargo run --release --example scheme_sweep
+//!
+//! Runs on the native backend by default (no artifacts needed).
 
 use pim_qat::chip::ChipModel;
 use pim_qat::config::{JobConfig, Scheme};
 use pim_qat::coordinator::{sweep, SweepRunner};
 use pim_qat::nn::ExecSpec;
-use pim_qat::runtime;
-use pim_qat::train::network_from_ckpt;
+use pim_qat::train::{self, network_from_ckpt};
+use pim_qat::util::error::{anyhow, Result};
 use pim_qat::util::rng::Rng;
 use pim_qat::util::table::Table;
 
-fn main() -> anyhow::Result<()> {
-    let rt = runtime::open_default()?;
-    let mut runner = SweepRunner::new(&rt);
+fn main() -> Result<()> {
+    let backend = train::open_default_backend()?;
+    let mut runner = SweepRunner::new(backend.as_ref());
     let base = JobConfig {
         model: "tiny".into(),
         steps: 300,
@@ -31,7 +33,7 @@ fn main() -> anyhow::Result<()> {
         let uc = if scheme == Scheme::Native { 1 } else { 8 };
         for grid_job in
             sweep::parse_grid(&base, &format!("scheme={scheme};uc={uc};b_pim=4,5,7"))
-                .map_err(anyhow::Error::msg)?
+                .map_err(|e| anyhow!(e))?
         {
             jobs.push(grid_job);
         }
@@ -48,7 +50,7 @@ fn main() -> anyhow::Result<()> {
         let mut accs = Vec::new();
         for noise in [0.0f32, 0.5] {
             let chip = ChipModel::ideal(job.b_pim_train).with_noise(noise);
-            let mut net = network_from_ckpt(&rt, &out.ckpt)?;
+            let mut net = network_from_ckpt(runner.manifest(), &out.ckpt)?;
             let exec = ExecSpec::Pim {
                 scheme: job.scheme,
                 unit_channels: job.unit_channels,

@@ -3,26 +3,27 @@
 //! logs loss curves, and reports the Table-3-style comparison on ideal PIM
 //! chips at several resolutions.  Takes a few minutes on one core.
 //!
-//!     make artifacts && cargo run --release --example train_pim_qat [-- steps]
+//!     cargo run --release --example train_pim_qat [-- steps]
 //!
-//! The run is recorded in EXPERIMENTS.md §End-to-end.
+//! Runs on the native backend by default (no artifacts needed).  The run
+//! is recorded in EXPERIMENTS.md §End-to-end.
 
 use pim_qat::chip::ChipModel;
 use pim_qat::config::{JobConfig, Mode, Scheme};
 use pim_qat::coordinator::SweepRunner;
 use pim_qat::nn::ExecSpec;
-use pim_qat::runtime;
-use pim_qat::train::network_from_ckpt;
+use pim_qat::train::{self, network_from_ckpt};
+use pim_qat::util::error::Result;
 use pim_qat::util::rng::Rng;
 use pim_qat::util::table::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let steps: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(400);
-    let rt = runtime::open_default()?;
-    let mut runner = SweepRunner::new(&rt);
+    let backend = train::open_default_backend()?;
+    let mut runner = SweepRunner::new(backend.as_ref());
 
     let base = JobConfig {
         model: "tiny".into(),
@@ -65,7 +66,7 @@ fn main() -> anyhow::Result<()> {
         let mut accs = Vec::new();
         for b in [7u32, 5, 4] {
             let chip = ChipModel::ideal(b);
-            let net = network_from_ckpt(&rt, &out.ckpt)?;
+            let net = network_from_ckpt(runner.manifest(), &out.ckpt)?;
             let mut rng = Rng::new(0);
             let test = {
                 let pair = runner.datasets(job)?;

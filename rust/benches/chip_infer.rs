@@ -5,22 +5,14 @@ use pim_qat::chip::ChipModel;
 use pim_qat::config::Scheme;
 use pim_qat::data::synth;
 use pim_qat::nn::ExecSpec;
-use pim_qat::runtime::Runtime;
-use pim_qat::train::network_from_ckpt;
-use pim_qat::train::Checkpoint;
+use pim_qat::train::{network_from_ckpt, Backend, Checkpoint, NativeBackend};
 use pim_qat::util::bench::Bencher;
 use pim_qat::util::rng::Rng;
 
 fn main() {
-    // needs artifacts (for the manifest/model entry) and one checkpoint;
-    // trains a tiny 20-step one if no cache exists.
-    let rt = match Runtime::new(std::path::Path::new("artifacts")) {
-        Ok(rt) => rt,
-        Err(e) => {
-            println!("skipping chip_infer bench (no artifacts): {e}");
-            return;
-        }
-    };
+    // trains a tiny 20-step checkpoint on the native backend if no cache
+    // exists (no artifacts required).
+    let backend = NativeBackend::open_default().unwrap();
     let dir = std::path::Path::new("results/bench_ckpt");
     let ckpt = if dir.join("ckpt.json").exists() {
         Checkpoint::load(dir).unwrap()
@@ -33,11 +25,11 @@ fn main() {
         };
         let tr = synth::generate(16, 10, 128, 1);
         let te = synth::generate(16, 10, 64, 2);
-        let res = pim_qat::train::run_job(&rt, &job, &tr, &te, 10).unwrap();
+        let res = backend.train_job(&job, &tr, &te, 10).unwrap();
         res.ckpt.save(dir).unwrap();
         res.ckpt
     };
-    let net = network_from_ckpt(&rt, &ckpt).unwrap();
+    let net = network_from_ckpt(backend.manifest(), &ckpt).unwrap();
     let ds = synth::generate(16, 10, 32, 3);
     let batch = {
         let mut r = Rng::new(0);

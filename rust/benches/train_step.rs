@@ -1,0 +1,60 @@
+//! Bench: one native-backend train step (fwd + bwd + SGD) on the tiny
+//! model — the end-to-end training hot loop the repo now owns.  Covers the
+//! digital baseline and PIM-QAT (`mode=ours`, bit-serial b_PIM=7, where
+//! every step runs the integer PIM engine forward plus the exact digital
+//! twin for the ξ rescale).  Emits `BENCH_train_step.json` so the perf
+//! trajectory is tracked across PRs (EXPERIMENTS.md §Perf).
+//!
+//! Set `PIM_QAT_BENCH_QUICK=1` for a fast smoke run.
+
+use pim_qat::config::{JobConfig, Mode, Scheme};
+use pim_qat::data::synth;
+use pim_qat::runtime::Manifest;
+use pim_qat::train::native::NativeTrainer;
+use pim_qat::util::bench::{save_json, Bencher};
+use pim_qat::util::rng::Rng;
+
+fn main() {
+    let b = if std::env::var_os("PIM_QAT_BENCH_QUICK").is_some() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+    let manifest = Manifest::builtin();
+    let bs = manifest.batch;
+    let ds = synth::generate(16, 10, bs.max(64), 1);
+    let mut drng = Rng::new(0);
+    let batch = ds.batch(&(0..bs).collect::<Vec<_>>(), false, &mut drng);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("native train step, tiny model, batch {bs}, {cores} cores");
+
+    let mut all = Vec::new();
+    for (label, mode, scheme) in [
+        ("baseline/digital", Mode::Baseline, Scheme::BitSerial),
+        ("ours/bit_serial_b7", Mode::Ours, Scheme::BitSerial),
+        ("ours/native_b7", Mode::Ours, Scheme::Native),
+    ] {
+        let job = JobConfig {
+            model: "tiny".into(),
+            mode,
+            scheme,
+            unit_channels: if scheme == Scheme::Native { 1 } else { 8 },
+            b_pim_train: 7,
+            ..Default::default()
+        };
+        let mut trainer = NativeTrainer::new(&manifest, &job).unwrap();
+        let mut rng = Rng::new(2);
+        let stats = b.run(label, Some(bs as f64), || {
+            std::hint::black_box(
+                trainer.train_step(&batch.x, &batch.y, 0.05, &mut rng).unwrap(),
+            );
+        });
+        println!("{}", stats.report());
+        all.push(stats);
+    }
+    let path = std::path::Path::new("BENCH_train_step.json");
+    match save_json(path, &all) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

@@ -1,4 +1,13 @@
-//! Forward-rescaling constants η (paper Table A1, §3.3).
+//! Forward-rescaling constants η (paper Table A1, §3.3 — see PAPER.md).
+//!
+//! Rescaling is half of the PIM-QAT training recipe: the forward output of
+//! every PIM-mapped matmul is scaled by η (this table) to keep activation
+//! statistics in the BN-friendly range despite coarse ADC quantization,
+//! and the backward pass is scaled by `ξ = sqrt(VAR[y_PIM]/VAR[y])`
+//! (Eqn. 8, computed per layer per step by the backends — see
+//! `crate::nn::grad` / `crate::train::native` for the native
+//! implementation).  Table A3 ablates both knobs via the job `variant`
+//! field ("nofwd", "norescale").
 //!
 //! The paper states outright that the best η "can even be different for
 //! different software package versions" (§A5).  On this stack (jax 0.8 →

@@ -76,7 +76,7 @@ pub fn search(
             unit_channels: job.unit_channels,
             chip: &chip,
         };
-        let mut net = network_from_ckpt(runner.rt, &outcome.ckpt)?;
+        let mut net = network_from_ckpt(runner.manifest(), &outcome.ckpt)?;
         let (train_ds, test_ds) = {
             let pair = runner.datasets(&job)?;
             (pair.0.clone(), pair.1.clone())

@@ -1,13 +1,13 @@
 //! Coordinator (S8): sweep scheduling and the adjusted-precision-training
 //! search (§3.5).
 //!
-//! The PJRT CPU client is not Sync-shareable across threads through our
-//! wrapper, and this testbed is single-core anyway, so the scheduler runs
-//! jobs *sequentially* through a deterministic work queue with dependency-
-//! free ordering, progress reporting, and a result cache keyed by job
-//! fingerprint (a sweep re-run only trains what changed).  The queueing /
-//! caching machinery is exercised by unit tests with mock runners; real
-//! sweeps go through `run_sweep`.
+//! Jobs run *sequentially* through a deterministic work queue on any
+//! [`crate::train::Backend`] — the native trainer parallelizes inside a
+//! step (im2col / plane GEMMs / col2im across worker threads), so running
+//! jobs concurrently would only fight it for cores, and the PJRT client is
+//! not Sync-shareable through our wrapper anyway.  The queue has
+//! dependency-free ordering, progress reporting, and a result cache keyed
+//! by job fingerprint (a sweep re-run only trains what changed).
 
 pub mod adjusted;
 pub mod sweep;

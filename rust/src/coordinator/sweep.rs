@@ -8,8 +8,8 @@ use crate::util::error::Result;
 
 use crate::config::JobConfig;
 use crate::data::Dataset;
-use crate::runtime::Runtime;
-use crate::train::{self, Checkpoint, StepLog};
+use crate::runtime::Manifest;
+use crate::train::{Backend, Checkpoint, StepLog};
 
 /// Result of one job (trained or loaded from cache).
 pub struct JobOutcome {
@@ -38,25 +38,31 @@ pub fn fingerprint(job: &JobConfig) -> String {
     )
 }
 
-/// Runs jobs sequentially with dataset + checkpoint caching.
+/// Runs jobs sequentially with dataset + checkpoint caching, on any
+/// training [`Backend`] (native by default, PJRT behind the feature).
 pub struct SweepRunner<'a> {
-    pub rt: &'a Runtime,
+    pub backend: &'a dyn Backend,
     pub ckpt_root: PathBuf,
     pub verbose: bool,
     datasets: HashMap<(usize, usize, usize, usize, u64), (Dataset, Dataset)>,
 }
 
 impl<'a> SweepRunner<'a> {
-    pub fn new(rt: &'a Runtime) -> Self {
+    pub fn new(backend: &'a dyn Backend) -> Self {
         let root = std::env::var_os("PIM_QAT_CKPTS")
             .map(PathBuf::from)
             .unwrap_or_else(|| PathBuf::from("results/ckpts"));
-        SweepRunner { rt, ckpt_root: root, verbose: true, datasets: HashMap::new() }
+        SweepRunner { backend, ckpt_root: root, verbose: true, datasets: HashMap::new() }
+    }
+
+    /// The backend's model registry.
+    pub fn manifest(&self) -> &Manifest {
+        self.backend.manifest()
     }
 
     /// Datasets are derived from the model geometry; cached per geometry.
     pub fn datasets(&mut self, job: &JobConfig) -> Result<&(Dataset, Dataset)> {
-        let e = self.rt.manifest.model(&job.model)?;
+        let e = self.backend.manifest().model(&job.model)?;
         let key = (e.image, e.classes, job.train_size, job.test_size, job.seed);
         if !self.datasets.contains_key(&key) {
             let pair = crate::data::load_default(
@@ -78,22 +84,37 @@ impl<'a> SweepRunner<'a> {
         let t0 = Instant::now();
         if dir.join("ckpt.json").exists() {
             if let Ok(ckpt) = Checkpoint::load(&dir) {
-                let software_acc = ckpt
+                // the fingerprint does not encode the backend; never hand a
+                // checkpoint trained by one backend out as the other's result
+                let same_backend = ckpt
                     .meta
-                    .get("software_acc")
-                    .and_then(|s| s.parse::<f64>().ok())
-                    .unwrap_or(f64::NAN);
-                if self.verbose {
-                    println!("[sweep] {fp}: cached (software {software_acc:.1}%)");
+                    .get("backend")
+                    .map(|b| b == self.backend.name())
+                    .unwrap_or(false);
+                if same_backend {
+                    let software_acc = ckpt
+                        .meta
+                        .get("software_acc")
+                        .and_then(|s| s.parse::<f64>().ok())
+                        .unwrap_or(f64::NAN);
+                    if self.verbose {
+                        println!("[sweep] {fp}: cached (software {software_acc:.1}%)");
+                    }
+                    return Ok(JobOutcome {
+                        job: job.clone(),
+                        ckpt,
+                        software_acc,
+                        history: Vec::new(),
+                        cached: true,
+                        wall_s: 0.0,
+                    });
+                } else if self.verbose {
+                    println!(
+                        "[sweep] {fp}: cached checkpoint is from backend {:?}, retraining on {}",
+                        ckpt.meta.get("backend").map(String::as_str).unwrap_or("unknown"),
+                        self.backend.name()
+                    );
                 }
-                return Ok(JobOutcome {
-                    job: job.clone(),
-                    ckpt,
-                    software_acc,
-                    history: Vec::new(),
-                    cached: true,
-                    wall_s: 0.0,
-                });
             }
         }
         let (train_ds, test_ds) = {
@@ -103,7 +124,7 @@ impl<'a> SweepRunner<'a> {
         if self.verbose {
             println!("[sweep] {fp}: training {} steps ...", job.steps);
         }
-        let mut res = train::run_job(self.rt, job, &train_ds, &test_ds, 10)?;
+        let mut res = self.backend.train_job(job, &train_ds, &test_ds, 10)?;
         res.ckpt
             .meta
             .insert("software_acc".into(), format!("{:.4}", res.software_acc));

@@ -71,7 +71,7 @@ pub fn chip_eval(
     calib_batches: usize,
     test_size: usize,
 ) -> Result<f64> {
-    let mut net = network_from_ckpt(runner.rt, &outcome.ckpt)?;
+    let mut net = network_from_ckpt(runner.manifest(), &outcome.ckpt)?;
     let (train_ds, test_ds) = {
         let pair = runner.datasets(&outcome.job)?;
         (pair.0.clone(), pair.1.clone())

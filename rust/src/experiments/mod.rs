@@ -19,7 +19,7 @@ use crate::util::error::{anyhow, Result};
 
 use crate::coordinator::SweepRunner;
 use crate::report::Report;
-use crate::runtime::Runtime;
+use crate::train::Backend;
 
 /// All experiment ids in paper order.
 pub const ALL: &[&str] = &[
@@ -27,17 +27,18 @@ pub const ALL: &[&str] = &[
     "figA3", "tableA2", "tableA3", "figA6", "tableA4",
 ];
 
-/// Which experiments need the runtime (training) vs pure analysis.
+/// Which experiments need a training backend vs pure analysis.
 pub fn needs_runtime(id: &str) -> bool {
     !matches!(id, "table1" | "table2" | "fig3" | "figA2" | "figA3")
 }
 
-/// Run one experiment by id.
-pub fn run_one(id: &str, rt: Option<&Runtime>, scale: Scale) -> Result<Report> {
+/// Run one experiment by id.  Training-dependent experiments run on any
+/// [`Backend`] (native by default — no artifacts required).
+pub fn run_one(id: &str, backend: Option<&dyn Backend>, scale: Scale) -> Result<Report> {
     let mut runner_slot;
-    let runner: Option<&mut SweepRunner> = match rt {
-        Some(rt) => {
-            runner_slot = SweepRunner::new(rt);
+    let runner: Option<&mut SweepRunner> = match backend {
+        Some(b) => {
+            runner_slot = SweepRunner::new(b);
             Some(&mut runner_slot)
         }
         None => None,
@@ -45,7 +46,7 @@ pub fn run_one(id: &str, rt: Option<&Runtime>, scale: Scale) -> Result<Report> {
     let need = needs_runtime(id);
     let runner = match (need, runner) {
         (true, Some(r)) => Some(r),
-        (true, None) => return Err(anyhow!("experiment {id} needs artifacts/runtime")),
+        (true, None) => return Err(anyhow!("experiment {id} needs a training backend")),
         (false, _) => None,
     };
     match id {

@@ -1,24 +1,28 @@
 //! # PIM-QAT — neural network quantization for processing-in-memory systems
 //!
-//! Reproduction of Jin et al. (2022).  Three-layer architecture:
+//! Reproduction of Jin et al. (2022).  The default build is a complete,
+//! zero-dependency PIM-QAT system: training, chip-sim evaluation, and
+//! every paper experiment run natively in this crate.
 //!
-//! * **L1/L2 (build time, python)** — Pallas PIM-MAC kernel + JAX quantized
-//!   model, AOT-lowered to HLO text under `artifacts/` (`make artifacts`).
-//! * **L3 (run time, this crate)** — training/experiment coordinator: loads
-//!   the HLO artifacts through the PJRT CPU client ([`runtime`]), drives
-//!   training ([`train`]), evaluates checkpoints on a bit-accurate chip
-//!   simulator ([`pim`], [`chip`], [`nn`]), and regenerates every table and
-//!   figure of the paper ([`experiments`]).
+//! * **Training** ([`train`]) — jobs run behind the [`train::Backend`]
+//!   trait.  The default [`train::NativeBackend`] hand-rolls the quantized
+//!   forward + backward ([`nn::grad`]): PIM-mapped convs execute the
+//!   integer MAC engine at the training resolution with the generalized
+//!   STE backward (Theorem 1, Eqn. 8), plus forward rescaling η, BN
+//!   calibration, and adjusted-precision training.  The alternative PJRT
+//!   backend ([`runtime`], behind the off-by-default `pjrt` feature)
+//!   executes AOT-lowered HLO artifacts built by the python layer
+//!   (`make artifacts`).
+//! * **Chip simulator** ([`pim`], [`chip`], [`nn`]) — bit-accurate
+//!   integer-native model of Eqn. 1 / Appendix A1: decomposition schemes,
+//!   DAC slicing, measured ADC curves, thermal noise, BN calibration.
+//! * **Experiments** ([`experiments`]) — regenerates every table and
+//!   figure of the paper's evaluation via the [`coordinator`].
 //!
-//! Python never runs on the request path: once artifacts exist, the
-//! `pim-qat` binary is self-contained.  See DESIGN.md for the substrate
-//! inventory and the per-experiment index, and EXPERIMENTS.md §Perf for the
-//! engine's performance trajectory.
-//!
-//! The PJRT client is gated behind the off-by-default `pjrt` cargo feature
-//! (the `xla` bindings are not in the offline crate cache); the default
-//! build has zero external dependencies and covers the chip simulator, the
-//! PIM MAC engine, and the analysis experiments.
+//! Python never runs on the request path; with the native backend it never
+//! runs at all.  See DESIGN.md for the substrate inventory and the
+//! per-experiment index, and EXPERIMENTS.md §Perf for the performance
+//! trajectory.
 
 pub mod chip;
 pub mod config;

@@ -15,8 +15,7 @@ use pim_qat::coordinator::{sweep, SweepRunner};
 use pim_qat::experiments::{self, Scale};
 use pim_qat::nn::ExecSpec;
 use pim_qat::report;
-use pim_qat::runtime::Runtime;
-use pim_qat::train::{self, Checkpoint};
+use pim_qat::train::{self, Backend, BackendChoice, Checkpoint};
 use pim_qat::util::rng::Rng;
 
 const USAGE: &str = "\
@@ -28,9 +27,12 @@ USAGE:
   pim-qat sweep --grid \"k=v1,v2;k2=v3..v4\" [key=val ...]
   pim-qat experiment <id|all> [--full]         regenerate paper tables/figures
   pim-qat chip-info [--b-pim B] [--noise S]    curve bank + ENOB report
-  pim-qat list                                 artifacts in the manifest
+  pim-qat list                                 models + artifacts in the manifest
   pim-qat --version | --help
 
+Global: --backend auto|native|pjrt (or $PIM_QAT_BACKEND).  `native` is the
+zero-dependency in-crate trainer (default); `pjrt` executes AOT HLO
+artifacts and needs the `pjrt` cargo feature plus `make artifacts`.
 Chip SPEC for eval:  ideal:<bits>[:noise]  |  real[:noise]  |  <curves.json>[:noise]
 Common keys: model, mode(ours|baseline|ams), scheme, uc, b_pim, steps, lr,
 seed, train_size, test_size.  Artifacts dir: $PIM_QAT_ARTIFACTS (default ./artifacts).
@@ -61,7 +63,7 @@ fn parse_cli(args: &[String]) -> Cli {
         let a = &args[i];
         if let Some(name) = a.strip_prefix("--") {
             let takes_value =
-                matches!(name, "grid" | "ckpt" | "chip" | "b-pim" | "noise" | "out");
+                matches!(name, "grid" | "ckpt" | "chip" | "b-pim" | "noise" | "out" | "backend");
             if takes_value && i + 1 < args.len() {
                 cli.flags.push((name.to_string(), Some(args[i + 1].clone())));
                 i += 2;
@@ -90,8 +92,16 @@ impl Cli {
     }
 }
 
-fn open_runtime() -> Result<Runtime> {
-    pim_qat::runtime::open_default()
+/// Open the training backend: `--backend` flag > `PIM_QAT_BACKEND` env >
+/// auto (PJRT when compiled in with artifacts present, else native).
+fn open_backend(cli: &Cli) -> Result<Box<dyn Backend>> {
+    match cli.flag_value("backend") {
+        Some(v) => {
+            let choice: BackendChoice = v.parse().map_err(|e: String| anyhow!(e))?;
+            train::open_backend(choice)
+        }
+        None => train::open_default_backend(),
+    }
 }
 
 fn run(args: &[String]) -> Result<()> {
@@ -103,7 +113,7 @@ fn run(args: &[String]) -> Result<()> {
     match cmd {
         "--help" | "help" | "-h" => println!("{USAGE}"),
         "--version" | "version" => println!("pim-qat {}", pim_qat::version()),
-        "list" => cmd_list()?,
+        "list" => cmd_list(&cli)?,
         "train" => cmd_train(&cli)?,
         "eval" => cmd_eval(&cli)?,
         "sweep" => cmd_sweep(&cli)?,
@@ -114,19 +124,23 @@ fn run(args: &[String]) -> Result<()> {
     Ok(())
 }
 
-fn cmd_list() -> Result<()> {
-    let rt = open_runtime()?;
-    println!("platform: {}", rt.platform());
+fn cmd_list(cli: &Cli) -> Result<()> {
+    let backend = open_backend(cli)?;
+    println!("backend: {} — {}", backend.name(), backend.platform());
     println!("models:");
-    for (k, m) in &rt.manifest.models {
+    for (k, m) in &backend.manifest().models {
         println!(
             "  {k}: {} depth_n={} width={} image={} classes={} ({} params)",
             m.arch, m.depth_n, m.width, m.image, m.classes, m.param_count()
         );
     }
-    println!("artifacts:");
-    for name in rt.manifest.artifacts.keys() {
-        println!("  {name}");
+    if backend.manifest().artifacts.is_empty() {
+        println!("artifacts: (none — built-in model registry)");
+    } else {
+        println!("artifacts:");
+        for name in backend.manifest().artifacts.keys() {
+            println!("  {name}");
+        }
     }
     Ok(())
 }
@@ -138,9 +152,9 @@ fn job_from_cli(cli: &Cli) -> Result<JobConfig> {
 }
 
 fn cmd_train(cli: &Cli) -> Result<()> {
-    let rt = open_runtime()?;
+    let backend = open_backend(cli)?;
     let job = job_from_cli(cli)?;
-    let mut runner = SweepRunner::new(&rt);
+    let mut runner = SweepRunner::new(backend.as_ref());
     let out = runner.run(&job)?;
     println!("checkpoint: {}", runner.ckpt_root.join(sweep::fingerprint(&job)).display());
     println!("software accuracy: {:.2}%", out.software_acc);
@@ -178,7 +192,7 @@ fn parse_chip(spec: &str) -> Result<ChipModel> {
 }
 
 fn cmd_eval(cli: &Cli) -> Result<()> {
-    let rt = open_runtime()?;
+    let backend = open_backend(cli)?;
     let ckpt_dir = cli
         .flag_value("ckpt")
         .ok_or_else(|| anyhow!("--ckpt <dir> required"))?;
@@ -193,14 +207,14 @@ fn cmd_eval(cli: &Cli) -> Result<()> {
     }
     job.apply_overrides(&cli.kv).map_err(|e| anyhow!(e))?;
 
-    let entry = rt.manifest.model(&job.model)?;
+    let entry = backend.manifest().model(&job.model)?;
     let (train_ds, test_ds) = pim_qat::data::load_default(
         entry.image, entry.classes, job.train_size, job.test_size, 0xDA7A ^ job.seed,
     );
-    let mut net = train::network_from_ckpt(&rt, &ckpt)?;
+    let mut net = train::network_from_ckpt(backend.manifest(), &ckpt)?;
     let mut rng = Rng::new(1);
 
-    let sw = train::eval_software(&rt, &ckpt, &test_ds)?;
+    let sw = backend.eval_software(&ckpt, &test_ds)?;
     println!("software (digital) accuracy: {sw:.2}%");
 
     if let Some(spec) = cli.flag_value("chip") {
@@ -224,14 +238,14 @@ fn cmd_eval(cli: &Cli) -> Result<()> {
 }
 
 fn cmd_sweep(cli: &Cli) -> Result<()> {
-    let rt = open_runtime()?;
+    let backend = open_backend(cli)?;
     let grid = cli
         .flag_value("grid")
         .ok_or_else(|| anyhow!("--grid \"key=v1,v2;...\" required"))?;
     let base = job_from_cli(cli)?;
     let jobs = sweep::parse_grid(&base, grid).map_err(|e| anyhow!(e))?;
     println!("sweep: {} jobs", jobs.len());
-    let mut runner = SweepRunner::new(&rt);
+    let mut runner = SweepRunner::new(backend.as_ref());
     let outcomes = runner.run_all(&jobs);
     let mut rep = report::Report::new(
         "sweep",
@@ -270,11 +284,11 @@ fn cmd_experiment(cli: &Cli) -> Result<()> {
     } else {
         vec![id.as_str()]
     };
-    let needs_rt = ids.iter().any(|i| experiments::needs_runtime(i));
-    let rt = if needs_rt { Some(open_runtime()?) } else { None };
+    let needs_backend = ids.iter().any(|i| experiments::needs_runtime(i));
+    let backend = if needs_backend { Some(open_backend(cli)?) } else { None };
     for id in ids {
         let t0 = std::time::Instant::now();
-        let rep = experiments::run_one(id, rt.as_ref(), scale)?;
+        let rep = experiments::run_one(id, backend.as_deref(), scale)?;
         println!("{}", rep.render());
         println!("  [{} in {:.1}s]\n", id, t0.elapsed().as_secs_f64());
         rep.save(&report::results_dir())?;

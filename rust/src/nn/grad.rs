@@ -1,0 +1,411 @@
+//! Backward passes for the native training backend (paper §3, Appendix A4).
+//!
+//! Every quantizer in the forward pass is a straight-through estimator:
+//! the digital weight/activation quantizers of `super::quant` use the plain
+//! STE (GSTE with ξ = 1, Eqn. A20), while the PIM quantized matmul uses the
+//! generalized STE of Theorem 1 — its backward is the exact-matmul backward
+//! scaled by η·ξ with `ξ = sqrt(VAR[y_PIM]/VAR[y])` (Eqn. 8); that scaling is
+//! applied by the trainer (`crate::train::native`), which owns the PIM
+//! forward.  This module provides the differentiable layer primitives:
+//!
+//! * [`conv_cols_fwd`]/[`conv_cols_bwd`] — im2col conv and its adjoint
+//!   (`tensor::ops::col2im` + transposed GEMMs);
+//! * [`weight_quant_fwd`]/[`weight_quant_bwd`] — the modified-DoReFa weight
+//!   quantizer with the STE through the round and the analytic gradient of
+//!   the tanh normalization (including the max-|tanh| path);
+//! * [`bn_train_fwd`]/[`bn_train_bwd`] — training-mode batch norm over
+//!   batch statistics;
+//! * [`act_fwd`]/[`act_bwd`] — ReLU → DoReFa activation quantizer with the
+//!   clip-range STE mask;
+//! * pooling backwards and the fused softmax + cross-entropy gradient.
+//!
+//! All of these are finite-difference-checked (against the smooth STE
+//! surrogates where a round is involved) in `rust/tests/grad_check.rs`.
+
+use crate::chip::round_ties_even;
+use crate::pim::QuantBits;
+use crate::tensor::gemm::{gemm, gemm_nt, gemm_tn};
+use crate::tensor::{ops, Tensor};
+
+// ---------------------------------------------------------------------------
+// Weight quantizer (modified DoReFa, Eqn. A20) with STE backward
+// ---------------------------------------------------------------------------
+
+/// Saved forward state of one weight quantization (per layer per step).
+pub struct WQuantCtx {
+    /// tanh(w), flattened in `w`'s layout.
+    t: Vec<f32>,
+    /// max|tanh(w)| + 1e-12.
+    denom: f32,
+    /// Index of the max-|tanh| element (the normalization's argmax path).
+    imax: usize,
+    /// Eqn. A20b digital scale `s = 1/sqrt(n_out*VAR[q])` — stop-gradient.
+    pub scale: f32,
+    /// Quantized weights on the [-1, 1] grid, same layout as `w`.
+    pub q_unit: Tensor,
+}
+
+/// Forward of the modified-DoReFa weight quantizer, keeping what the
+/// backward needs.  `q_unit` is bit-identical to
+/// [`super::quant::weight_quant_unit`]; `scale` to
+/// [`super::quant::weight_scale`].
+pub fn weight_quant_fwd(w: &Tensor, bits: &QuantBits, n_out: usize) -> WQuantCtx {
+    let mut t = Vec::with_capacity(w.len());
+    let mut max_t = 0.0f32;
+    let mut imax = 0usize;
+    for (i, &v) in w.data.iter().enumerate() {
+        let tv = v.tanh();
+        if tv.abs() > max_t {
+            max_t = tv.abs();
+            imax = i;
+        }
+        t.push(tv);
+    }
+    let denom = max_t + 1e-12;
+    let lv = bits.w_levels() as f32;
+    let mut q = w.clone();
+    for (qv, &tv) in q.data.iter_mut().zip(&t) {
+        *qv = round_ties_even(tv / denom * lv) / lv;
+    }
+    let scale = super::quant::weight_scale(&q, n_out);
+    WQuantCtx { t, denom, imax, scale, q_unit: q }
+}
+
+/// Backward of the weight quantizer: given dL/dq_unit, return dL/dw.
+///
+/// The round is an STE (identity gradient); tanh and the max-normalization
+/// are differentiated analytically.  With t = tanh(w), D = max|t| + ε and
+/// the surrogate q̃ᵢ = tᵢ/D:
+///
+/// dL/dwⱼ = gⱼ·(1-tⱼ²)/D − [j = argmax] · sign(t*)·(1-t*²)·(Σᵢ gᵢtᵢ)/D²
+///
+/// The scale s is a stop-gradient (Eqn. A20b), so it never enters here —
+/// callers fold it into `g_q`.
+pub fn weight_quant_bwd(ctx: &WQuantCtx, g_q: &Tensor) -> Tensor {
+    assert_eq!(g_q.len(), ctx.t.len());
+    let d = ctx.denom;
+    let mut dot = 0.0f64;
+    for (g, t) in g_q.data.iter().zip(&ctx.t) {
+        dot += (*g as f64) * (*t as f64);
+    }
+    let mut out = g_q.clone();
+    for (i, o) in out.data.iter_mut().enumerate() {
+        let ti = ctx.t[i];
+        *o *= (1.0 - ti * ti) / d;
+    }
+    let ts = ctx.t[ctx.imax];
+    let sgn = if ts >= 0.0 { 1.0f32 } else { -1.0 };
+    out.data[ctx.imax] -= sgn * (1.0 - ts * ts) * (dot / ((d as f64) * (d as f64))) as f32;
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Convolution via im2col columns
+// ---------------------------------------------------------------------------
+
+/// Saved forward state of one conv (the patches are reused by the PIM path
+/// and by the backward).
+pub struct ConvCtx {
+    /// im2col patches [B·oh·ow, C·k·k].
+    pub patches: Tensor,
+    pub oh: usize,
+    pub ow: usize,
+}
+
+/// Forward conv from precomputed column weights [C·k·k, O]: returns the
+/// NHWC output and the saved context.  The caller applies any scalar
+/// coefficient (digital scale s, forward rescale η) to the result.
+pub fn conv_cols_fwd(x: &Tensor, wcols: &Tensor, k: usize, stride: usize) -> (Tensor, ConvCtx) {
+    let (patches, oh, ow) = ops::im2col_threaded(x, k, stride, 0);
+    let m = patches.shape[0];
+    let kc = patches.shape[1];
+    let o = wcols.shape[1];
+    let y = gemm(m, kc, o, &patches.data, &wcols.data);
+    let out = Tensor::from_vec(&[x.shape[0], oh, ow, o], y);
+    (out, ConvCtx { patches, oh, ow })
+}
+
+/// Backward of [`conv_cols_fwd`]: given dL/dy (NHWC, already multiplied by
+/// any scalar backward coefficient), return (dL/dx, dL/dwcols).
+pub fn conv_cols_bwd(
+    ctx: &ConvCtx,
+    wcols: &Tensor,
+    x_shape: &[usize],
+    k: usize,
+    stride: usize,
+    dy: &Tensor,
+) -> (Tensor, Tensor) {
+    let m = ctx.patches.shape[0];
+    let kc = ctx.patches.shape[1];
+    let o = wcols.shape[1];
+    assert_eq!(dy.len(), m * o, "conv output gradient size");
+    let dwcols = gemm_tn(m, kc, o, &ctx.patches.data, &dy.data);
+    let dpatches = gemm_nt(m, o, kc, &dy.data, &wcols.data);
+    let dx = ops::col2im(&Tensor::from_vec(&[m, kc], dpatches), x_shape, k, stride);
+    (dx, Tensor::from_vec(&[kc, o], dwcols))
+}
+
+// ---------------------------------------------------------------------------
+// Batch norm (training mode: batch statistics)
+// ---------------------------------------------------------------------------
+
+/// Saved forward state of one training-mode BN layer.
+pub struct BnCtx {
+    /// This batch's per-channel mean (feeds the running-stat update).
+    pub mean: Vec<f32>,
+    /// This batch's per-channel biased variance.
+    pub var: Vec<f32>,
+    inv: Vec<f32>,
+    xhat: Tensor,
+}
+
+/// Training-mode batch norm: normalize with THIS batch's statistics
+/// (biased variance over B·H·W, eps 1e-5 — the jax model's convention).
+pub fn bn_train_fwd(x: &Tensor, gamma: &[f32], beta: &[f32]) -> (Tensor, BnCtx) {
+    let c = *x.shape.last().unwrap();
+    assert!(gamma.len() == c && beta.len() == c);
+    let (mean, var) = ops::channel_stats(x);
+    let inv: Vec<f32> = var.iter().map(|v| 1.0 / (v + 1e-5).sqrt()).collect();
+    let mut xhat = x.clone();
+    for (i, v) in xhat.data.iter_mut().enumerate() {
+        let ci = i % c;
+        *v = (*v - mean[ci]) * inv[ci];
+    }
+    let mut y = xhat.clone();
+    for (i, v) in y.data.iter_mut().enumerate() {
+        let ci = i % c;
+        *v = gamma[ci] * *v + beta[ci];
+    }
+    (y, BnCtx { mean, var, inv, xhat })
+}
+
+/// Backward of training-mode BN: returns (dx, dgamma, dbeta).  Standard
+/// batch-statistics backward: with N = B·H·W per channel and x̂ the
+/// normalized input,
+/// dx = γ·inv/N · (N·dy − Σdy − x̂·Σ(dy·x̂)).
+pub fn bn_train_bwd(ctx: &BnCtx, gamma: &[f32], dy: &Tensor) -> (Tensor, Vec<f32>, Vec<f32>) {
+    let c = *dy.shape.last().unwrap();
+    assert_eq!(gamma.len(), c);
+    let n = (dy.len() / c) as f32;
+    let mut dbeta = vec![0.0f32; c];
+    let mut dgamma = vec![0.0f32; c];
+    for (i, &g) in dy.data.iter().enumerate() {
+        let ci = i % c;
+        dbeta[ci] += g;
+        dgamma[ci] += g * ctx.xhat.data[i];
+    }
+    let mut dx = dy.clone();
+    for (i, v) in dx.data.iter_mut().enumerate() {
+        let ci = i % c;
+        *v = gamma[ci] * ctx.inv[ci] / n
+            * (n * dy.data[i] - dbeta[ci] - ctx.xhat.data[i] * dgamma[ci]);
+    }
+    (dx, dgamma, dbeta)
+}
+
+// ---------------------------------------------------------------------------
+// Activation: ReLU → DoReFa quantizer with the clip-range STE mask
+// ---------------------------------------------------------------------------
+
+/// Forward of `act_quant(relu(x))` saving the STE mask: the gradient is 1
+/// exactly where the pre-activation is in (0, 1] (ReLU passes and the clip
+/// does not saturate), else 0.
+pub fn act_fwd(x: &Tensor, bits: &QuantBits) -> (Tensor, Vec<u8>) {
+    let lv = bits.a_levels() as f32;
+    let mut mask = vec![0u8; x.len()];
+    let mut y = x.clone();
+    for (i, v) in y.data.iter_mut().enumerate() {
+        let xi = *v;
+        mask[i] = (xi > 0.0 && xi <= 1.0) as u8;
+        *v = round_ties_even(xi.clamp(0.0, 1.0) * lv) / lv;
+    }
+    (y, mask)
+}
+
+/// Backward of [`act_fwd`]: dy masked by the saved STE mask.
+pub fn act_bwd(mask: &[u8], dy: &Tensor) -> Tensor {
+    assert_eq!(mask.len(), dy.len());
+    let mut dx = dy.clone();
+    for (i, v) in dx.data.iter_mut().enumerate() {
+        if mask[i] == 0 {
+            *v = 0.0;
+        }
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------------
+// Pooling
+// ---------------------------------------------------------------------------
+
+/// 2×2 max pool saving per-output argmax indices into `x.data`.
+pub fn maxpool2_fwd(x: &Tensor) -> (Tensor, Vec<u32>) {
+    let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (oh, ow) = (h / 2, w / 2);
+    let mut out = Tensor::zeros(&[b, oh, ow, c]);
+    let mut idx = vec![0u32; b * oh * ow * c];
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for ci in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut bat = 0usize;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let src = ((bi * h + 2 * oy + dy) * w + 2 * ox + dx) * c + ci;
+                            if x.data[src] > best {
+                                best = x.data[src];
+                                bat = src;
+                            }
+                        }
+                    }
+                    let dst = ((bi * oh + oy) * ow + ox) * c + ci;
+                    out.data[dst] = best;
+                    idx[dst] = bat as u32;
+                }
+            }
+        }
+    }
+    (out, idx)
+}
+
+/// Backward of [`maxpool2_fwd`]: route each output gradient to its argmax.
+pub fn maxpool2_bwd(idx: &[u32], x_shape: &[usize], dy: &Tensor) -> Tensor {
+    assert_eq!(idx.len(), dy.len());
+    let mut dx = Tensor::zeros(x_shape);
+    for (i, &g) in dy.data.iter().enumerate() {
+        dx.data[idx[i] as usize] += g;
+    }
+    dx
+}
+
+/// Backward of [`ops::global_avg_pool`]: broadcast dY[B,C]/(H·W).
+pub fn global_avg_pool_bwd(x_shape: &[usize], dy: &Tensor) -> Tensor {
+    let (b, h, w, c) = (x_shape[0], x_shape[1], x_shape[2], x_shape[3]);
+    assert_eq!(dy.shape, vec![b, c]);
+    let inv = 1.0 / (h * w) as f32;
+    let mut dx = Tensor::zeros(x_shape);
+    for bi in 0..b {
+        for hi in 0..h {
+            for wi in 0..w {
+                let dst = ((bi * h + hi) * w + wi) * c;
+                for ci in 0..c {
+                    dx.data[dst + ci] = dy.data[bi * c + ci] * inv;
+                }
+            }
+        }
+    }
+    dx
+}
+
+// ---------------------------------------------------------------------------
+// Loss
+// ---------------------------------------------------------------------------
+
+/// Fused softmax + mean cross-entropy: returns (mean loss, correct count,
+/// dL/dlogits = (softmax − onehot)/B).
+pub fn softmax_xent(logits: &Tensor, labels: &[i32]) -> (f32, usize, Tensor) {
+    let (b, k) = (logits.shape[0], logits.shape[1]);
+    assert_eq!(labels.len(), b);
+    let mut dl = logits.clone();
+    let mut total = 0.0f64;
+    let mut correct = 0usize;
+    for i in 0..b {
+        let row = &logits.data[i * k..(i + 1) * k];
+        let mut mx = f32::NEG_INFINITY;
+        let mut arg = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > mx {
+                mx = v;
+                arg = j;
+            }
+        }
+        let y = labels[i] as usize;
+        correct += (arg == y) as usize;
+        let mut denom = 0.0f64;
+        for &v in row {
+            denom += ((v - mx) as f64).exp();
+        }
+        total += denom.ln() + mx as f64 - row[y] as f64;
+        let drow = &mut dl.data[i * k..(i + 1) * k];
+        for (j, v) in drow.iter_mut().enumerate() {
+            let p = ((*v - mx) as f64).exp() / denom;
+            *v = (p as f32 - (j == y) as usize as f32) / b as f32;
+        }
+    }
+    ((total / b as f64) as f32, correct, dl)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn weight_quant_fwd_matches_quantizer() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::from_vec(&[3, 3, 2, 4], (0..72).map(|_| rng.normal_in(0.0, 0.7)).collect());
+        let bits = QuantBits::default();
+        let ctx = weight_quant_fwd(&w, &bits, 4);
+        let q = super::super::quant::weight_quant_unit(&w, &bits);
+        assert_eq!(ctx.q_unit.data, q.data);
+        let s = super::super::quant::weight_scale(&q, 4);
+        assert!((ctx.scale - s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn softmax_xent_matches_cross_entropy() {
+        let logits = Tensor::from_vec(&[2, 3], vec![2.0, -1.0, 0.5, 0.0, 3.0, 1.0]);
+        let (loss, correct, dl) = softmax_xent(&logits, &[0, 1]);
+        let want = ops::cross_entropy(&logits, &[0, 1]);
+        assert!((loss - want).abs() < 1e-5);
+        assert_eq!(correct, 2);
+        // gradient rows sum to zero (softmax minus onehot)
+        for i in 0..2 {
+            let s: f32 = dl.data[i * 3..(i + 1) * 3].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn maxpool_bwd_routes_to_argmax() {
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1.0, 5.0, 2.0, 3.0]);
+        let (y, idx) = maxpool2_fwd(&x);
+        assert_eq!(y.data, vec![5.0]);
+        let dy = Tensor::from_vec(&[1, 1, 1, 1], vec![2.5]);
+        let dx = maxpool2_bwd(&idx, &x.shape, &dy);
+        assert_eq!(dx.data, vec![0.0, 2.5, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn act_mask_zeroes_saturated_and_negative() {
+        let x = Tensor::from_vec(&[4], vec![-0.3, 0.4, 0.9, 1.7]);
+        let (_, mask) = act_fwd(&x, &QuantBits::default());
+        assert_eq!(mask, vec![0, 1, 1, 0]);
+        let dy = Tensor::from_vec(&[4], vec![1.0; 4]);
+        assert_eq!(act_bwd(&mask, &dy).data, vec![0.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn bn_bwd_zero_mean_gradient() {
+        // BN output is invariant to adding a constant per channel, so dx
+        // must sum to ~0 per channel.
+        let mut rng = Rng::new(3);
+        let x = Tensor::from_vec(&[2, 3, 3, 2], (0..36).map(|_| rng.normal_in(0.5, 2.0)).collect());
+        let gamma = vec![1.3, 0.7];
+        let beta = vec![0.1, -0.2];
+        let (_, ctx) = bn_train_fwd(&x, &gamma, &beta);
+        let dy = Tensor::from_vec(&x.shape, (0..36).map(|_| rng.normal_in(0.0, 1.0)).collect());
+        let (dx, _, _) = bn_train_bwd(&ctx, &gamma, &dy);
+        for ci in 0..2 {
+            let s: f32 = dx
+                .data
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i % 2 == ci)
+                .map(|(_, v)| v)
+                .sum();
+            assert!(s.abs() < 1e-3, "channel {ci} dx sum {s}");
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Parameter/state layout and initialization for the native training
+//! backend — the rust twin of `python/compile/model.py::model_init`
+//! (Kaiming conv init, unit BN affine, zero bias).
+//!
+//! The PJRT path gets its initialization from the lowered `init` artifact;
+//! the native backend initializes here, with the crate RNG.  The (name,
+//! shape) listing doubles as the parameter contract for the built-in
+//! manifest entries ([`crate::runtime::Manifest::builtin`]).
+
+use std::collections::BTreeMap;
+
+use crate::runtime::ModelEntry;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// (path, shape) listings for a model family: `(params, state)`, sorted by
+/// path — the same depth-first sorted order as python `flatten_tree`.
+pub fn param_specs(e: &ModelEntry) -> (Vec<(String, Vec<usize>)>, Vec<(String, Vec<usize>)>) {
+    let mut params: Vec<(String, Vec<usize>)> = Vec::new();
+    let mut state: Vec<(String, Vec<usize>)> = Vec::new();
+    type Specs = Vec<(String, Vec<usize>)>;
+    let bn = |name: &str, c: usize, params: &mut Specs, state: &mut Specs| {
+        params.push((format!("{name}/gamma"), vec![c]));
+        params.push((format!("{name}/beta"), vec![c]));
+        state.push((format!("{name}/mean"), vec![c]));
+        state.push((format!("{name}/var"), vec![c]));
+    };
+    match e.arch.as_str() {
+        "resnet" => {
+            params.push(("conv0/w".into(), vec![3, 3, e.in_channels, e.width]));
+            bn("bn0", e.width, &mut params, &mut state);
+            let mut cin = e.width;
+            for s in 0..3 {
+                let cout = e.width * (1 << s);
+                for b in 0..e.depth_n {
+                    let blk = format!("s{s}b{b}");
+                    params.push((format!("{blk}/conv1/w"), vec![3, 3, cin, cout]));
+                    bn(&format!("{blk}/bn1"), cout, &mut params, &mut state);
+                    params.push((format!("{blk}/conv2/w"), vec![3, 3, cout, cout]));
+                    bn(&format!("{blk}/bn2"), cout, &mut params, &mut state);
+                    if cin != cout {
+                        params.push((format!("{blk}/convs/w"), vec![1, 1, cin, cout]));
+                        bn(&format!("{blk}/bns"), cout, &mut params, &mut state);
+                    }
+                    cin = cout;
+                }
+            }
+            params.push(("fc/w".into(), vec![cin, e.classes]));
+            params.push(("fc/b".into(), vec![e.classes]));
+        }
+        "vgg11" => {
+            let plan = super::vgg11_plan(e.width, e.image);
+            let mut cin = e.in_channels;
+            for (i, &(cout, _)) in plan.iter().enumerate() {
+                params.push((format!("conv{i}/w"), vec![3, 3, cin, cout]));
+                bn(&format!("bn{i}"), cout, &mut params, &mut state);
+                cin = cout;
+            }
+            params.push(("fc/w".into(), vec![cin, e.classes]));
+            params.push(("fc/b".into(), vec![e.classes]));
+        }
+        a => panic!("unknown arch {a:?}"),
+    }
+    params.sort_by(|a, b| a.0.cmp(&b.0));
+    state.sort_by(|a, b| a.0.cmp(&b.0));
+    (params, state)
+}
+
+/// Initialize parameters and BN state for a model family (Kaiming conv
+/// weights, γ=1/β=0, zero FC bias, mean=0/var=1 running stats).
+/// Deterministic per seed; different seeds give different weights.
+pub fn init_params(
+    e: &ModelEntry,
+    seed: u64,
+) -> (BTreeMap<String, Tensor>, BTreeMap<String, Tensor>) {
+    let (pspecs, sspecs) = param_specs(e);
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E3779B97F4A7C15) ^ 0x1217);
+    let mut params = BTreeMap::new();
+    for (name, shape) in pspecs {
+        let n: usize = shape.iter().product();
+        let t = if name.ends_with("/w") {
+            // Kaiming: fan_in = k·k·c_in for convs, c_in for the FC matrix.
+            let fan_in: usize = shape[..shape.len() - 1].iter().product();
+            let std = (2.0 / fan_in as f32).sqrt();
+            Tensor::from_vec(&shape, (0..n).map(|_| rng.normal_in(0.0, std)).collect())
+        } else if name.ends_with("/gamma") {
+            Tensor::full(&shape, 1.0)
+        } else {
+            Tensor::zeros(&shape)
+        };
+        params.insert(name, t);
+    }
+    let mut state = BTreeMap::new();
+    for (name, shape) in sspecs {
+        let t = if name.ends_with("/var") {
+            Tensor::full(&shape, 1.0)
+        } else {
+            Tensor::zeros(&shape)
+        };
+        state.insert(name, t);
+    }
+    (params, state)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(arch: &str) -> ModelEntry {
+        ModelEntry {
+            arch: arch.into(),
+            depth_n: 1,
+            width: 8,
+            image: 16,
+            classes: 10,
+            in_channels: 3,
+            param_paths: vec![],
+            param_shapes: vec![],
+            state_paths: vec![],
+            state_shapes: vec![],
+        }
+    }
+
+    #[test]
+    fn resnet_specs_cover_forward_names() {
+        let (p, s) = param_specs(&entry("resnet"));
+        let names: Vec<&str> = p.iter().map(|(n, _)| n.as_str()).collect();
+        for want in [
+            "conv0/w", "bn0/gamma", "bn0/beta", "fc/w", "fc/b", "s0b0/conv1/w", "s0b0/conv2/w",
+            "s1b0/convs/w", "s2b0/bns/gamma",
+        ] {
+            assert!(names.contains(&want), "{want} missing");
+        }
+        // s0b0 keeps cin == cout: no shortcut conv
+        assert!(!names.contains(&"s0b0/convs/w"));
+        assert!(s.iter().any(|(n, _)| n == "s1b0/bns/mean"));
+        // sorted order (the flatten_tree contract)
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+    }
+
+    #[test]
+    fn init_is_seeded_and_shaped() {
+        let e = entry("resnet");
+        let (p1, s1) = init_params(&e, 7);
+        let (p2, _) = init_params(&e, 7);
+        let (p3, _) = init_params(&e, 8);
+        assert_eq!(p1["conv0/w"].data, p2["conv0/w"].data);
+        assert_ne!(p1["conv0/w"].data, p3["conv0/w"].data);
+        assert_eq!(p1["conv0/w"].shape, vec![3, 3, 3, 8]);
+        assert!(p1["bn0/gamma"].data.iter().all(|&v| v == 1.0));
+        assert!(s1["bn0/var"].data.iter().all(|&v| v == 1.0));
+        assert!(s1["bn0/mean"].data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn vgg_specs_shaped() {
+        let (p, _) = param_specs(&entry("vgg11"));
+        assert!(p.iter().any(|(n, s)| n == "conv0/w" && s == &vec![3, 3, 3, 8]));
+        assert!(p.iter().any(|(n, s)| n == "conv7/w" && s == &vec![3, 3, 64, 64]));
+        assert!(p.iter().any(|(n, s)| n == "fc/w" && s == &vec![64, 10]));
+    }
+}

@@ -1,13 +1,23 @@
-//! Quantized NN inference engine (S5): runs trained checkpoints on the
-//! digital path ("Software" rows) or on the PIM chip simulator (ideal or
-//! real-curve), and implements BN calibration (§3.4).
+//! Quantized NN engine (S5): inference, BN calibration, and the
+//! differentiable layer primitives of the native trainer.
 //!
-//! The forward pass is a structural mirror of `python/compile/model.py`
-//! (layer placement per §A2.1: first conv / shortcuts / FC digital, all
-//! other convs PIM-mapped).  The `model_tiny.json` golden pins the two
-//! implementations against each other end-to-end.
+//! * [`model`] — runs trained checkpoints on the digital path ("Software"
+//!   rows) or on the PIM chip simulator (ideal or real-curve), and
+//!   implements BN calibration (§3.4).  The forward pass is a structural
+//!   mirror of `python/compile/model.py` (layer placement per §A2.1: first
+//!   conv / shortcuts / FC digital, all other convs PIM-mapped); the
+//!   `model_tiny.json` golden pins the two implementations against each
+//!   other end-to-end.
+//! * [`quant`] — the modified-DoReFa digital quantizers (Eqn. A20).
+//! * [`grad`] — hand-rolled backward passes (conv/BN/FC/pooling/loss) with
+//!   straight-through-estimator gradients for every quantizer; used by
+//!   [`crate::train::NativeBackend`].
+//! * [`init`] — Kaiming parameter initialization (the native twin of the
+//!   lowered `init` artifact).
 
+pub mod grad;
+pub mod init;
 pub mod model;
 pub mod quant;
 
-pub use model::{ExecSpec, Network};
+pub use model::{vgg11_plan, ExecSpec, Network};

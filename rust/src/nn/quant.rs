@@ -32,7 +32,7 @@ pub fn weight_quant_int(w: &Tensor, bits: &QuantBits) -> Tensor {
     q
 }
 
-/// The scale-adjusted-training factor s = 1/sqrt(n_out·VAR[q]) (Eqn. A20b).
+/// The scale-adjusted-training factor `s = 1/sqrt(n_out*VAR[q])` (Eqn. A20b).
 pub fn weight_scale(q_unit: &Tensor, n_out: usize) -> f32 {
     let n = q_unit.len() as f64;
     let mean: f64 = q_unit.data.iter().map(|&v| v as f64).sum::<f64>() / n;

@@ -184,6 +184,59 @@ impl Manifest {
         })
     }
 
+    /// The built-in model registry used when no `manifest.json` exists:
+    /// the native backend needs only model geometry (no lowered artifacts),
+    /// so the default zero-dependency build can train without ever running
+    /// `make artifacts`.  Quant config and model shapes mirror
+    /// `python/compile/configs.py` / the experiment registry.
+    pub fn builtin() -> Manifest {
+        let mut models = BTreeMap::new();
+        for (key, arch, depth_n, width, image, classes) in [
+            ("tiny", "resnet", 1usize, 8usize, 16usize, 10usize),
+            ("tiny100", "resnet", 1, 8, 16, 100),
+            ("small", "resnet", 1, 16, 16, 10),
+            ("vgg11", "vgg11", 1, 8, 16, 10),
+        ] {
+            let mut e = ModelEntry {
+                arch: arch.to_string(),
+                depth_n,
+                width,
+                image,
+                classes,
+                in_channels: 3,
+                param_paths: vec![],
+                param_shapes: vec![],
+                state_paths: vec![],
+                state_shapes: vec![],
+            };
+            let (pspecs, sspecs) = crate::nn::init::param_specs(&e);
+            e.param_paths = pspecs.iter().map(|(n, _)| n.clone()).collect();
+            e.param_shapes = pspecs.into_iter().map(|(_, s)| s).collect();
+            e.state_paths = sspecs.iter().map(|(n, _)| n.clone()).collect();
+            e.state_shapes = sspecs.into_iter().map(|(_, s)| s).collect();
+            models.insert(key.to_string(), e);
+        }
+        Manifest {
+            dir: PathBuf::from("builtin"),
+            b_w: 4,
+            b_a: 4,
+            m_dac: 4,
+            batch: 32,
+            models,
+            artifacts: BTreeMap::new(),
+        }
+    }
+
+    /// Load `<dir>/manifest.json` when present, else fall back to the
+    /// built-in registry (the native backend's default path).
+    pub fn load_or_builtin(dir: &Path) -> Result<Manifest> {
+        if dir.join("manifest.json").exists() {
+            Manifest::load(dir)
+        } else {
+            Ok(Manifest::builtin())
+        }
+    }
+
     pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts.get(name).ok_or_else(|| {
             anyhow!(
@@ -238,5 +291,28 @@ mod tests {
         assert_eq!(a.inputs[0].dtype, DType::I32);
         assert_eq!(m.model("tiny").unwrap().param_count(), 3 * 3 * 3 * 8);
         assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn builtin_models_are_complete() {
+        let m = Manifest::builtin();
+        for key in ["tiny", "tiny100", "small", "vgg11"] {
+            let e = m.model(key).unwrap();
+            assert!(!e.param_paths.is_empty(), "{key} params");
+            assert_eq!(e.param_paths.len(), e.param_shapes.len());
+            assert_eq!(e.state_paths.len(), e.state_shapes.len());
+            assert!(e.param_count() > 0);
+        }
+        assert_eq!(m.model("tiny100").unwrap().classes, 100);
+        assert_eq!(m.model("small").unwrap().width, 16);
+        assert!(m.artifacts.is_empty());
+    }
+
+    #[test]
+    fn load_or_builtin_falls_back() {
+        let dir = std::env::temp_dir().join("pimqat_manifest_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        let m = Manifest::load_or_builtin(&dir).unwrap();
+        assert!(m.model("tiny").is_ok());
     }
 }

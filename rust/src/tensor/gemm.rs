@@ -141,6 +141,51 @@ pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
     c
 }
 
+/// C[m,n] = A[m,p] · B[n,p]ᵀ (both row-major).  The data-gradient pass of
+/// the native trainer: dPatches[M,K] = dY[M,O] · W[K,O]ᵀ.  Dot-product
+/// form — both operands stream row-wise.
+pub fn gemm_nt(m: usize, p: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    assert_eq!(a.len(), m * p);
+    assert_eq!(b.len(), n * p);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * p..(i + 1) * p];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * p..(j + 1) * p];
+            let mut s = 0.0f32;
+            for q in 0..p {
+                s += arow[q] * brow[q];
+            }
+            crow[j] = s;
+        }
+    }
+    c
+}
+
+/// C[m,n] = A[p,m]ᵀ · B[p,n] (both row-major).  The weight-gradient pass:
+/// dW[K,O] = patches[M,K]ᵀ · dY[M,O].  Keeps the zero-skip on A — patch
+/// rows are post-ReLU quantized activations, which carry many exact zeros.
+pub fn gemm_tn(p: usize, m: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    assert_eq!(a.len(), p * m);
+    assert_eq!(b.len(), p * n);
+    let mut c = vec![0.0f32; m * n];
+    for q in 0..p {
+        let arow = &a[q * m..(q + 1) * m];
+        let brow = &b[q * n..(q + 1) * n];
+        for (i, &aq) in arow.iter().enumerate() {
+            if aq == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aq * brow[j];
+            }
+        }
+    }
+    c
+}
+
 /// C = A * B via the sparse kernel (digital conv path: A is post-ReLU
 /// quantized patches, which carry many exact zeros).
 pub fn gemm_sparse(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
@@ -183,6 +228,41 @@ mod tests {
             let c2 = gemm_naive(m, k, n, &a, &b);
             for (x, y) in c1.iter().zip(&c2) {
                 assert!((x - y).abs() < 1e-3, "({m},{k},{n}): {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn transposed_kernels_match_naive() {
+        let mut rng = Rng::new(7);
+        for &(m, p, n) in &[(1usize, 1usize, 1usize), (4, 9, 6), (7, 30, 12)] {
+            let a: Vec<f32> = (0..m * p).map(|_| rng.normal_in(0.0, 1.0)).collect();
+            let b: Vec<f32> = (0..n * p).map(|_| rng.normal_in(0.0, 1.0)).collect();
+            // A·Bᵀ against explicit transposition + plain gemm
+            let mut bt = vec![0.0f32; p * n];
+            for j in 0..n {
+                for q in 0..p {
+                    bt[q * n + j] = b[j * p + q];
+                }
+            }
+            let c1 = gemm_nt(m, p, n, &a, &b);
+            let c2 = gemm_naive(m, p, n, &a, &bt);
+            for (x, y) in c1.iter().zip(&c2) {
+                assert!((x - y).abs() < 1e-4, "nt ({m},{p},{n}): {x} vs {y}");
+            }
+            // Aᵀ·B against explicit transposition (reuse a as the [p,m] side)
+            let a2: Vec<f32> = (0..p * m).map(|_| rng.normal_in(0.0, 1.0)).collect();
+            let b2: Vec<f32> = (0..p * n).map(|_| rng.normal_in(0.0, 1.0)).collect();
+            let mut a2t = vec![0.0f32; m * p];
+            for q in 0..p {
+                for i in 0..m {
+                    a2t[i * p + q] = a2[q * m + i];
+                }
+            }
+            let c3 = gemm_tn(p, m, n, &a2, &b2);
+            let c4 = gemm_naive(m, p, n, &a2t, &b2);
+            for (x, y) in c3.iter().zip(&c4) {
+                assert!((x - y).abs() < 1e-4, "tn ({p},{m},{n}): {x} vs {y}");
             }
         }
     }

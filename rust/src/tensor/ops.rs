@@ -89,6 +89,82 @@ pub fn resolve_threads(requested: usize) -> usize {
         .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
 }
 
+/// Adjoint of [`im2col`]: scatter-add patch-row gradients [B*oh*ow, C*k*k]
+/// back into an input-shaped [B,H,W,C] tensor (the data-gradient pass of a
+/// SAME conv — "conv transpose" in backprop terms).  Images are disjoint
+/// output slices, so the work is split per-image across scoped threads with
+/// bit-identical results at any thread count.
+pub fn col2im(dpatches: &Tensor, x_shape: &[usize], k: usize, s: usize) -> Tensor {
+    assert_eq!(x_shape.len(), 4, "col2im expects an NHWC target shape");
+    let (b, h, w, c) = (x_shape[0], x_shape[1], x_shape[2], x_shape[3]);
+    let pad = k / 2;
+    let oh = (h + 2 * pad - k) / s + 1;
+    let ow = (w + 2 * pad - k) / s + 1;
+    let cols = c * k * k;
+    assert_eq!(dpatches.shape, vec![b * oh * ow, cols], "patch gradient shape");
+    let img = h * w * c;
+    let mut out = vec![0.0f32; b * img];
+    let threads = resolve_threads(0).min(b.max(1)).max(1);
+    if threads <= 1 {
+        for (bi, chunk) in out.chunks_mut(img).enumerate() {
+            col2im_image(dpatches, bi, h, w, c, k, s, oh, ow, chunk);
+        }
+    } else {
+        let per = (b + threads - 1) / threads;
+        std::thread::scope(|sc| {
+            for (ti, block) in out.chunks_mut(per * img).enumerate() {
+                let dp = &*dpatches;
+                sc.spawn(move || {
+                    for (off, chunk) in block.chunks_mut(img).enumerate() {
+                        col2im_image(dp, ti * per + off, h, w, c, k, s, oh, ow, chunk);
+                    }
+                });
+            }
+        });
+    }
+    Tensor::from_vec(&[b, h, w, c], out)
+}
+
+/// Scatter one image's patch gradients into its [h*w*c] output block.
+#[allow(clippy::too_many_arguments)]
+fn col2im_image(
+    dp: &Tensor,
+    bi: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    s: usize,
+    oh: usize,
+    ow: usize,
+    out: &mut [f32],
+) {
+    let pad = k / 2;
+    let cols = c * k * k;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = ((bi * oh + oy) * ow + ox) * cols;
+            for dy in 0..k {
+                let iy = (oy * s + dy) as isize - pad as isize;
+                if iy < 0 || iy >= h as isize {
+                    continue;
+                }
+                for dx in 0..k {
+                    let ix = (ox * s + dx) as isize - pad as isize;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let dst = ((iy as usize) * w + ix as usize) * c;
+                    let p = dy * k + dx;
+                    for ci in 0..c {
+                        out[dst + ci] += dp.data[row + ci * k * k + p];
+                    }
+                }
+            }
+        }
+    }
+}
+
 /// Reorder conv weights [kh,kw,C,O] (python HWIO) to the im2col column
 /// layout: [C*k*k, O].
 pub fn weights_to_cols(w: &Tensor) -> Tensor {
@@ -107,6 +183,25 @@ pub fn weights_to_cols(w: &Tensor) -> Tensor {
         }
     }
     Tensor::from_vec(&[c * kh * kw, o], out)
+}
+
+/// Inverse of [`weights_to_cols`]: fold an im2col-layout gradient
+/// [C*k*k, O] back to HWIO [kh,kw,C,O] (the weight-gradient pass).
+pub fn cols_to_weights(g: &Tensor, kh: usize, kw: usize, c: usize, o: usize) -> Tensor {
+    assert_eq!(g.shape, vec![c * kh * kw, o], "cols gradient shape");
+    let mut out = vec![0.0f32; kh * kw * c * o];
+    for dy in 0..kh {
+        for dx in 0..kw {
+            for ci in 0..c {
+                for oi in 0..o {
+                    let src = (ci * kh * kw + dy * kw + dx) * o + oi;
+                    let dst = ((dy * kw + dx) * c + ci) * o + oi;
+                    out[dst] = g.data[src];
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[kh, kw, c, o], out)
 }
 
 /// Digital SAME conv, NHWC × HWIO → NHWC.
@@ -315,6 +410,43 @@ mod tests {
         // with k=1 the patch is just the channel vector
         assert_eq!(p.shape, vec![4, 4]);
         assert_eq!(&p.data[0..4], &[0.0, 1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn col2im_is_im2col_adjoint() {
+        // ⟨G, im2col(x)⟩ == ⟨col2im(G), x⟩ for all x, G — the defining
+        // property of the conv data-gradient.
+        let mut rng = Rng::new(11);
+        for &(h, c, k, s) in &[(6usize, 3usize, 3usize, 1usize), (7, 2, 3, 2), (5, 4, 1, 1)] {
+            let x = Tensor::from_vec(
+                &[2, h, h, c],
+                (0..2 * h * h * c).map(|_| rng.normal_in(0.0, 1.0)).collect(),
+            );
+            let (p, _, _) = im2col(&x, k, s);
+            let g = Tensor::from_vec(
+                &p.shape,
+                (0..p.len()).map(|_| rng.normal_in(0.0, 1.0)).collect(),
+            );
+            let lhs: f64 = g.data.iter().zip(&p.data).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+            let dx = col2im(&g, &x.shape, k, s);
+            assert_eq!(dx.shape, x.shape);
+            let rhs: f64 =
+                dx.data.iter().zip(&x.data).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+            assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "k={k} s={s}: {lhs} vs {rhs}");
+        }
+    }
+
+    #[test]
+    fn cols_to_weights_roundtrip() {
+        let mut rng = Rng::new(12);
+        let w = Tensor::from_vec(
+            &[3, 3, 4, 5],
+            (0..3 * 3 * 4 * 5).map(|_| rng.normal_in(0.0, 1.0)).collect(),
+        );
+        let cols = weights_to_cols(&w);
+        let back = cols_to_weights(&cols, 3, 3, 4, 5);
+        assert_eq!(back.shape, w.shape);
+        assert_eq!(back.data, w.data);
     }
 
     #[test]

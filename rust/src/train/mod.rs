@@ -1,12 +1,37 @@
-//! Training driver (S7): owns the training loop around the AOT HLO
-//! artifacts.  All compute (fwd/bwd/SGD) runs inside the lowered train-step
-//! executable; this module owns state, data, schedule, logging, and the
-//! checkpoint boundary to the chip simulator.
+//! Training driver (S7): runs PIM-QAT training jobs end-to-end behind the
+//! [`Backend`] abstraction.
+//!
+//! The paper's algorithm (§3) trains *through* the PIM forward model:
+//! every PIM-mapped conv executes the quantized grouped MAC of Eqn. 4a at
+//! the training resolution `b_pim_train`, the backward pass is the
+//! generalized straight-through estimator of Theorem 1 with the backward
+//! rescaling `ξ = sqrt(VAR[y_PIM]/VAR[y])` (Eqn. 8), the forward is scaled by η
+//! (Table A1, mirrored in [`crate::config::rescale`]), and BN calibration
+//! (§3.4) re-estimates running statistics under the deployment chip.
+//! Adjusted-precision training (§3.5) is just a `b_pim_train` below the
+//! inference resolution.
+//!
+//! Two interchangeable backends implement [`Backend`]:
+//!
+//! * [`NativeBackend`] (default, zero dependencies) — hand-rolled forward
+//!   + backward in [`crate::train::native`] / [`crate::nn::grad`], SGD with
+//!   Nesterov momentum, multi-threaded through the same scoped-thread
+//!   machinery as the chip simulator.  Works without any artifacts: model
+//!   geometry comes from [`crate::runtime::Manifest::builtin`].
+//! * the PJRT [`Runtime`] (behind the off-by-default `pjrt` cargo feature)
+//!   — all compute (fwd/bwd/SGD) runs inside the AOT-lowered train-step
+//!   executable; this module keeps state, data, schedule and logging.
+//!
+//! Select with `pim-qat --backend native|pjrt|auto` or the
+//! `PIM_QAT_BACKEND` env var (see DESIGN.md §CLI surface); `auto` prefers
+//! PJRT when it is compiled in *and* artifacts exist, else native.
 
 pub mod checkpoint;
+pub mod native;
 pub mod schedule;
 
 pub use checkpoint::Checkpoint;
+pub use native::NativeBackend;
 
 use crate::util::error::{anyhow, Result};
 use crate::runtime::literal::Literal;
@@ -17,7 +42,7 @@ use crate::pim::QuantBits;
 use crate::runtime::literal::{
     scalar_f32, scalar_i32, tensor_to_literal, to_scalar_f32, to_vec_f32, vec_i32,
 };
-use crate::runtime::{Kind, Runtime};
+use crate::runtime::{Kind, Manifest, Runtime};
 use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
@@ -36,6 +61,120 @@ pub struct TrainResult {
     pub history: Vec<StepLog>,
     /// Digital ("Software") test accuracy via the eval artifact.
     pub software_acc: f64,
+}
+
+/// A training backend: everything the coordinator, the experiments and the
+/// CLI need to run a [`JobConfig`] end-to-end.  Implemented by
+/// [`NativeBackend`] (default) and the PJRT [`Runtime`].
+pub trait Backend {
+    /// Short identifier ("native" / "pjrt"), recorded in checkpoints.
+    fn name(&self) -> &'static str;
+    /// Human-readable execution-platform line for `pim-qat list`.
+    fn platform(&self) -> String;
+    /// Model registry (geometry + parameter layout).
+    fn manifest(&self) -> &Manifest;
+    /// Train one job end-to-end (init → SGD loop → checkpoint → software
+    /// eval).
+    fn train_job(
+        &self,
+        job: &JobConfig,
+        train_ds: &Dataset,
+        test_ds: &Dataset,
+        log_every: usize,
+    ) -> Result<TrainResult>;
+    /// Digital ("Software") test accuracy of a checkpoint.
+    fn eval_software(&self, ckpt: &Checkpoint, test_ds: &Dataset) -> Result<f64>;
+}
+
+impl Backend for Runtime {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn platform(&self) -> String {
+        Runtime::platform(self)
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn train_job(
+        &self,
+        job: &JobConfig,
+        train_ds: &Dataset,
+        test_ds: &Dataset,
+        log_every: usize,
+    ) -> Result<TrainResult> {
+        run_job(self, job, train_ds, test_ds, log_every)
+    }
+
+    fn eval_software(&self, ckpt: &Checkpoint, test_ds: &Dataset) -> Result<f64> {
+        eval_software(self, ckpt, test_ds)
+    }
+}
+
+/// Which backend to open (CLI `--backend`, `PIM_QAT_BACKEND`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendChoice {
+    /// PJRT when compiled in and artifacts exist, else native.
+    #[default]
+    Auto,
+    Native,
+    Pjrt,
+}
+
+impl std::str::FromStr for BackendChoice {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "auto" => Ok(BackendChoice::Auto),
+            "native" => Ok(BackendChoice::Native),
+            "pjrt" => Ok(BackendChoice::Pjrt),
+            _ => Err(format!("unknown backend {s:?} (auto|native|pjrt)")),
+        }
+    }
+}
+
+/// Open a training backend.  `Auto` resolves to PJRT only when the `pjrt`
+/// feature is compiled in *and* lowered artifacts are present; otherwise
+/// the zero-dependency native backend.
+pub fn open_backend(choice: BackendChoice) -> Result<Box<dyn Backend>> {
+    let choice = match choice {
+        BackendChoice::Auto => {
+            let dir = crate::runtime::manifest::default_artifacts_dir();
+            if cfg!(feature = "pjrt") && dir.join("manifest.json").exists() {
+                BackendChoice::Pjrt
+            } else {
+                BackendChoice::Native
+            }
+        }
+        c => c,
+    };
+    match choice {
+        BackendChoice::Native => Ok(Box::new(NativeBackend::open_default()?)),
+        BackendChoice::Pjrt => {
+            if !cfg!(feature = "pjrt") {
+                return Err(anyhow!(
+                    "backend \"pjrt\" requested but this binary was built without the \
+                     `pjrt` cargo feature — rebuild with --features pjrt (see rust/Cargo.toml), \
+                     or use --backend native"
+                ));
+            }
+            Ok(Box::new(crate::runtime::open_default()?))
+        }
+        BackendChoice::Auto => unreachable!("resolved above"),
+    }
+}
+
+/// Open the default backend: `PIM_QAT_BACKEND` env var when set, else
+/// [`BackendChoice::Auto`].
+pub fn open_default_backend() -> Result<Box<dyn Backend>> {
+    let choice = match std::env::var("PIM_QAT_BACKEND") {
+        Ok(v) => v.parse().map_err(|e: String| anyhow!(e))?,
+        Err(_) => BackendChoice::Auto,
+    };
+    open_backend(choice)
 }
 
 /// The AMS additive-noise std (Rekhi et al. 2019) in unit output scale:
@@ -172,6 +311,7 @@ pub fn run_job(
         state.push((name.clone(), t));
     }
     let mut meta = std::collections::BTreeMap::new();
+    meta.insert("backend".into(), "pjrt".to_string());
     meta.insert("mode".into(), job.mode.to_string());
     meta.insert("scheme".into(), job.scheme.to_string());
     meta.insert("unit_channels".into(), job.unit_channels.to_string());
@@ -212,9 +352,9 @@ pub fn eval_software(rt: &Runtime, ckpt: &Checkpoint, test_ds: &Dataset) -> Resu
 }
 
 /// Build an `nn::Network` from a checkpoint for chip-sim evaluation.
-pub fn network_from_ckpt(rt: &Runtime, ckpt: &Checkpoint) -> Result<crate::nn::Network> {
-    let entry = rt.manifest.model(&ckpt.model)?.clone();
-    let bits = QuantBits { b_w: rt.manifest.b_w, b_a: rt.manifest.b_a, m: rt.manifest.m_dac };
+pub fn network_from_ckpt(manifest: &Manifest, ckpt: &Checkpoint) -> Result<crate::nn::Network> {
+    let entry = manifest.model(&ckpt.model)?.clone();
+    let bits = QuantBits { b_w: manifest.b_w, b_a: manifest.b_a, m: manifest.m_dac };
     crate::nn::Network::new(entry, bits, ckpt.params_map(), ckpt.state_map())
 }
 

@@ -1,0 +1,829 @@
+//! The native training backend: hand-rolled forward + backward for the
+//! `nn::Network` topologies, zero external dependencies.
+//!
+//! This is the default implementation of [`super::Backend`].  One train
+//! step mirrors `python/compile/train.py::make_train_step` exactly:
+//!
+//! * forward in training mode — digital first conv / shortcuts / FC
+//!   (modified DoReFa, Eqn. A20), PIM-mapped convs through the integer
+//!   [`PimEngine`] at the training resolution (`mode=ours`, Eqn. 4a) or the
+//!   digital product (`baseline`; `ams` adds the Rekhi-et-al additive
+//!   Gaussian), batch-statistics BN with running-stat momentum updates;
+//! * backward — straight-through estimators for every quantizer
+//!   ([`crate::nn::grad`]); the PIM matmul uses the generalized STE of
+//!   Theorem 1: the exact-matmul backward scaled by η·ξ with
+//!   `ξ = sqrt(VAR[y_PIM]/VAR[y])` (Eqn. 8, recomputed per layer per step);
+//! * update — SGD with Nesterov momentum 0.9, weight decay 1e-4, and the
+//!   multi-step LR schedule owned by the caller.
+//!
+//! Heavy ops (im2col/col2im, the PIM plane GEMMs) run multi-threaded via
+//! the scoped-thread machinery in `tensor::ops` and `pim::engine`; set
+//! `PIM_QAT_THREADS` to pin the worker count.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::{anyhow, Result};
+
+use crate::chip::ChipModel;
+use crate::config::{rescale, JobConfig, Mode, Scheme};
+use crate::data::{Dataset, EpochIter};
+use crate::nn::{grad, init, quant, vgg11_plan, ExecSpec};
+use crate::pim::{PimEngine, QuantBits};
+use crate::runtime::Manifest;
+use crate::runtime::ModelEntry;
+use crate::tensor::gemm::{gemm, gemm_nt, gemm_tn};
+use crate::tensor::{ops, Tensor};
+use crate::util::rng::Rng;
+
+use super::{schedule, Backend, Checkpoint, StepLog, TrainResult};
+
+/// The zero-dependency training backend (default).  Holds only the model
+/// registry; per-job state lives in [`NativeTrainer`].
+pub struct NativeBackend {
+    manifest: Manifest,
+}
+
+impl NativeBackend {
+    pub fn new(manifest: Manifest) -> Self {
+        NativeBackend { manifest }
+    }
+
+    /// Open with the artifact manifest when present (`$PIM_QAT_ARTIFACTS`
+    /// or `./artifacts`), else the built-in model registry — the native
+    /// backend needs geometry only, never lowered HLO.
+    pub fn open_default() -> Result<Self> {
+        let dir = crate::runtime::manifest::default_artifacts_dir();
+        Ok(NativeBackend { manifest: Manifest::load_or_builtin(&dir)? })
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn platform(&self) -> String {
+        "native (in-crate fwd/bwd, zero dependencies)".to_string()
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn train_job(
+        &self,
+        job: &JobConfig,
+        train_ds: &Dataset,
+        test_ds: &Dataset,
+        log_every: usize,
+    ) -> Result<TrainResult> {
+        run_job_native(&self.manifest, job, train_ds, test_ds, log_every)
+    }
+
+    fn eval_software(&self, ckpt: &Checkpoint, test_ds: &Dataset) -> Result<f64> {
+        eval_software_native(&self.manifest, ckpt, test_ds)
+    }
+}
+
+/// Run one training job on the native backend (the native twin of
+/// [`super::run_job`]).
+pub fn run_job_native(
+    manifest: &Manifest,
+    job: &JobConfig,
+    train_ds: &Dataset,
+    test_ds: &Dataset,
+    log_every: usize,
+) -> Result<TrainResult> {
+    let log_every = log_every.max(1);
+    let mut trainer = NativeTrainer::new(manifest, job)?;
+    let bs = manifest.batch.max(1);
+    let lr_sched = schedule::MultiStepLr::new(job.lr, job.milestones, job.steps);
+
+    let mut rng = Rng::new(job.seed ^ 0x7EAC);
+    let mut history = Vec::new();
+    let mut epoch = EpochIter::new(train_ds.len(), bs, &mut rng);
+    for step in 0..job.steps {
+        let idx: Vec<usize> = match epoch.next_indices() {
+            Some(ix) => ix.to_vec(),
+            None => {
+                epoch = EpochIter::new(train_ds.len(), bs, &mut rng);
+                epoch
+                    .next_indices()
+                    .ok_or_else(|| anyhow!("dataset smaller than one batch"))?
+                    .to_vec()
+            }
+        };
+        let batch = train_ds.batch(&idx, true, &mut rng);
+        let lr = lr_sched.at(step);
+        // per-step noise stream (AMS mode), mirroring the per-step seed of
+        // the lowered train artifact
+        let mut srng = Rng::new((step as u64) ^ (job.seed << 8) ^ 0x5EED);
+        let (loss, correct) = trainer.train_step(&batch.x, &batch.y, lr, &mut srng)?;
+
+        if !loss.is_finite() {
+            // diverged (the rescaling-ablation rows do this) — record & stop
+            history.push(StepLog { step, loss, acc: 0.0, lr });
+            break;
+        }
+        if step % log_every == 0 || step + 1 == job.steps {
+            history.push(StepLog { step, loss, acc: 100.0 * correct as f32 / bs as f32, lr });
+        }
+    }
+
+    let ckpt = trainer.into_checkpoint(job);
+    let software_acc = eval_software_native(manifest, &ckpt, test_ds)?;
+    Ok(TrainResult { ckpt, history, software_acc })
+}
+
+/// Digital test accuracy of a checkpoint on the native path (the
+/// `ExecSpec::Software` forward — the b_PIM = +∞ limit the eval artifact
+/// approximates with `levels = 2^20 - 1`).
+pub fn eval_software_native(
+    manifest: &Manifest,
+    ckpt: &Checkpoint,
+    test_ds: &Dataset,
+) -> Result<f64> {
+    let net = super::network_from_ckpt(manifest, ckpt)?;
+    let bs = manifest.batch.max(1).min(test_ds.len().max(1));
+    let mut rng = Rng::new(0);
+    net.evaluate(test_ds, bs, &ExecSpec::Software, &mut rng)
+}
+
+// ---------------------------------------------------------------------------
+// Per-layer tapes
+// ---------------------------------------------------------------------------
+
+/// Saved forward state of one conv (digital or PIM-mapped): everything the
+/// backward needs.  Digital and PIM convs share the same backward — they
+/// differ only in `coef_bwd` (s vs η·ξ·s, Theorem 1).
+struct ConvTape {
+    name: String,
+    kernel: usize,
+    stride: usize,
+    x_shape: Vec<usize>,
+    w_shape: Vec<usize>,
+    ctx: grad::ConvCtx,
+    /// Quantized unit-grid weights in im2col column layout [C·k·k, O].
+    cols_unit: Tensor,
+    wq: grad::WQuantCtx,
+    coef_bwd: f32,
+}
+
+struct BnTape {
+    name: String,
+    ctx: grad::BnCtx,
+}
+
+struct FcTape {
+    x: Tensor,
+    wq: grad::WQuantCtx,
+}
+
+struct BlockTape {
+    t1: ConvTape,
+    tb1: BnTape,
+    m1: Vec<u8>,
+    t2: ConvTape,
+    tb2: BnTape,
+    /// Projection shortcut (conv + BN) when cin ≠ cout.
+    sc: Option<(ConvTape, BnTape)>,
+    /// Mask of the post-add activation.
+    ma: Vec<u8>,
+}
+
+struct VggTape {
+    conv: ConvTape,
+    bn: BnTape,
+    mask: Vec<u8>,
+    /// (argmax indices, pre-pool shape) when the plan pools here.
+    pool: Option<(Vec<u32>, Vec<usize>)>,
+}
+
+/// Biased variance of a slice, in f64 (the jnp.var convention of Eqn. 8).
+fn variance(v: &[f32]) -> f64 {
+    let n = v.len().max(1) as f64;
+    let mean = v.iter().map(|&x| x as f64).sum::<f64>() / n;
+    v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n
+}
+
+// ---------------------------------------------------------------------------
+// The trainer
+// ---------------------------------------------------------------------------
+
+/// Per-job training state of the native backend: parameters, SGD momentum,
+/// BN running statistics, and the resolved hyper-parameters.  Public so
+/// benches can time a single [`NativeTrainer::train_step`].
+pub struct NativeTrainer {
+    entry: ModelEntry,
+    bits: QuantBits,
+    mode: Mode,
+    scheme: Scheme,
+    unit_channels: usize,
+    /// Forward rescale η (1.0 unless mode=ours with fwd rescaling, §3.3).
+    eta: f32,
+    /// Apply the backward rescaling ξ of Eqn. 8 (Table A3 ablation knob).
+    bwd_rescale: bool,
+    /// AMS additive-noise std (mode=ams only).
+    sigma: f32,
+    /// The training-resolution chip (ideal, noiseless — Eqn. 4a).
+    chip: ChipModel,
+    momentum: f32,
+    weight_decay: f32,
+    nesterov: bool,
+    bn_momentum: f32,
+    params: BTreeMap<String, Tensor>,
+    vel: BTreeMap<String, Tensor>,
+    bn_state: BTreeMap<String, (Vec<f32>, Vec<f32>)>,
+}
+
+impl NativeTrainer {
+    /// Initialize a job: Kaiming parameters (seeded), zero momentum, unit
+    /// BN state, hyper-parameters resolved from the job config exactly as
+    /// the lowered artifacts bake them in.
+    pub fn new(manifest: &Manifest, job: &JobConfig) -> Result<NativeTrainer> {
+        let entry = manifest.model(&job.model)?.clone();
+        let bits = QuantBits { b_w: manifest.b_w, b_a: manifest.b_a, m: manifest.m_dac };
+        let (fwd_rescale, bwd_rescale) = match job.variant.as_str() {
+            "" => (true, true),
+            "nofwd" => (false, true),
+            "norescale" => (false, false),
+            v => return Err(anyhow!("unknown rescaling variant {v:?}")),
+        };
+        let eta = if job.mode == Mode::Ours && fwd_rescale {
+            job.eta_override
+                .unwrap_or_else(|| rescale::forward_eta(job.scheme, job.b_pim_train))
+        } else {
+            1.0
+        };
+        let n_macs = crate::pim::layout::plan_groups(entry.width, 3, job.unit_channels).n;
+        let sigma = if job.mode == Mode::Ams {
+            super::ams_sigma(job.scheme, &bits, n_macs, job.b_pim_train)
+        } else {
+            0.0
+        };
+        let (params, state) = init::init_params(&entry, job.seed);
+        let vel: BTreeMap<String, Tensor> =
+            params.iter().map(|(k, t)| (k.clone(), Tensor::zeros(&t.shape))).collect();
+        let mut bn_state = BTreeMap::new();
+        for (k, v) in &state {
+            if let Some(base) = k.strip_suffix("/mean") {
+                let var = state
+                    .get(&format!("{base}/var"))
+                    .ok_or_else(|| anyhow!("state {base}/var missing"))?;
+                bn_state.insert(base.to_string(), (v.data.clone(), var.data.clone()));
+            }
+        }
+        Ok(NativeTrainer {
+            entry,
+            bits,
+            mode: job.mode,
+            scheme: job.scheme,
+            unit_channels: job.unit_channels,
+            eta,
+            bwd_rescale,
+            sigma,
+            chip: ChipModel::ideal(job.b_pim_train),
+            momentum: 0.9,
+            weight_decay: 1e-4,
+            nesterov: true,
+            bn_momentum: 0.1,
+            params,
+            vel,
+            bn_state,
+        })
+    }
+
+    /// One SGD step on a batch: forward, backward, BN running-stat update,
+    /// Nesterov-momentum parameter update.  Returns (mean loss, correct
+    /// predictions in the batch).
+    pub fn train_step(
+        &mut self,
+        x: &Tensor,
+        y: &[i32],
+        lr: f32,
+        rng: &mut Rng,
+    ) -> Result<(f32, usize)> {
+        let (loss, correct, grads, stats) = match self.entry.arch.as_str() {
+            "resnet" => self.resnet_step(x, y, rng)?,
+            "vgg11" => self.vgg_step(x, y, rng)?,
+            a => return Err(anyhow!("unknown arch {a:?}")),
+        };
+
+        // BN running statistics: (1-m)·old + m·batch (training-mode BN)
+        let mom = self.bn_momentum;
+        for (name, (bm, bv)) in stats {
+            let ent = self
+                .bn_state
+                .get_mut(&name)
+                .ok_or_else(|| anyhow!("bn state {name:?} missing"))?;
+            for (o, n) in ent.0.iter_mut().zip(&bm) {
+                *o = (1.0 - mom) * *o + mom * *n;
+            }
+            for (o, n) in ent.1.iter_mut().zip(&bv) {
+                *o = (1.0 - mom) * *o + mom * *n;
+            }
+        }
+
+        // SGD with Nesterov momentum + weight decay (TrainConfig defaults)
+        for (name, g) in grads {
+            let p = self
+                .params
+                .get_mut(&name)
+                .ok_or_else(|| anyhow!("param {name:?} missing"))?;
+            let v = self
+                .vel
+                .get_mut(&name)
+                .ok_or_else(|| anyhow!("momentum {name:?} missing"))?;
+            for i in 0..g.data.len() {
+                let gi = g.data[i] + self.weight_decay * p.data[i];
+                let m = self.momentum * v.data[i] + gi;
+                v.data[i] = m;
+                let upd = if self.nesterov { gi + self.momentum * m } else { m };
+                p.data[i] -= lr * upd;
+            }
+        }
+        Ok((loss, correct))
+    }
+
+    /// Consume the trainer into a checkpoint (params + BN running state).
+    pub fn into_checkpoint(self, job: &JobConfig) -> Checkpoint {
+        let params: Vec<(String, Tensor)> = self.params.into_iter().collect();
+        let mut state = Vec::new();
+        for (name, (mean, var)) in self.bn_state {
+            let c = mean.len();
+            state.push((format!("{name}/mean"), Tensor::from_vec(&[c], mean)));
+            state.push((format!("{name}/var"), Tensor::from_vec(&[c], var)));
+        }
+        let mut meta = BTreeMap::new();
+        meta.insert("mode".to_string(), job.mode.to_string());
+        meta.insert("scheme".to_string(), job.scheme.to_string());
+        meta.insert("unit_channels".to_string(), job.unit_channels.to_string());
+        meta.insert("b_pim_train".to_string(), job.b_pim_train.to_string());
+        meta.insert("steps".to_string(), job.steps.to_string());
+        meta.insert("backend".to_string(), "native".to_string());
+        Checkpoint { model: job.model.clone(), meta, params, state }
+    }
+
+    // -- layers -------------------------------------------------------------
+
+    fn param(&self, name: &str) -> Result<&Tensor> {
+        self.params.get(name).ok_or_else(|| anyhow!("param {name:?} missing"))
+    }
+
+    /// Digital-system conv (first layer / shortcuts): quantized weights,
+    /// exact accumulation, plain STE backward.
+    fn conv_digital_fwd(
+        &self,
+        x: &Tensor,
+        name: &str,
+        stride: usize,
+    ) -> Result<(Tensor, ConvTape)> {
+        let w = self.param(name)?;
+        let (kh, o) = (w.shape[0], w.shape[3]);
+        let wq = grad::weight_quant_fwd(w, &self.bits, o);
+        let cols = ops::weights_to_cols(&wq.q_unit);
+        let (mut y, ctx) = grad::conv_cols_fwd(x, &cols, kh, stride);
+        let s = wq.scale;
+        for v in &mut y.data {
+            *v *= s;
+        }
+        Ok((
+            y,
+            ConvTape {
+                name: name.to_string(),
+                kernel: kh,
+                stride,
+                x_shape: x.shape.clone(),
+                w_shape: w.shape.clone(),
+                ctx,
+                cols_unit: cols,
+                wq,
+                coef_bwd: s,
+            },
+        ))
+    }
+
+    /// A PIM-mapped conv in training mode.  `mode=ours` executes the
+    /// grouped quantized MAC (Eqn. 4a) on the ideal training-resolution
+    /// chip, scaled by η; its backward coefficient carries the GSTE ξ
+    /// (Eqn. 8).  `baseline` is the digital product; `ams` adds the
+    /// additive-Gaussian AMS model during training.
+    fn conv_pim_fwd(
+        &self,
+        x: &Tensor,
+        name: &str,
+        stride: usize,
+        rng: &mut Rng,
+    ) -> Result<(Tensor, ConvTape)> {
+        let w = self.param(name)?;
+        let (kh, c_in, o) = (w.shape[0], w.shape[2], w.shape[3]);
+        let wq = grad::weight_quant_fwd(w, &self.bits, o);
+        let cols = ops::weights_to_cols(&wq.q_unit);
+        let (patches, oh, ow) = ops::im2col_threaded(x, kh, stride, 0);
+        let m = patches.shape[0];
+        let kc = patches.shape[1];
+        let (y, coef_bwd) = match self.mode {
+            Mode::Ours => {
+                let wl = self.bits.w_levels() as f32;
+                let al = self.bits.a_levels() as f32;
+                let cols_int = cols.clone().map(|v| crate::chip::round_ties_even(v * wl));
+                let engine = PimEngine::prepare(
+                    self.scheme,
+                    self.bits,
+                    &cols_int,
+                    c_in,
+                    kh,
+                    self.unit_channels,
+                );
+                let pint = patches.clone().map(|v| crate::chip::round_ties_even(v * al));
+                let y_pim = engine.matmul(&pint, &self.chip, rng);
+                let xi = if self.bwd_rescale {
+                    let y_ex = gemm(m, kc, o, &patches.data, &cols.data);
+                    ((variance(&y_pim.data) + 1e-12) / (variance(&y_ex) + 1e-12)).sqrt() as f32
+                } else {
+                    1.0
+                };
+                let cf = self.eta * wq.scale;
+                let mut y = y_pim.data;
+                for v in &mut y {
+                    *v *= cf;
+                }
+                (y, self.eta * xi * wq.scale)
+            }
+            Mode::Baseline | Mode::Ams => {
+                let mut y = gemm(m, kc, o, &patches.data, &cols.data);
+                if self.mode == Mode::Ams && self.sigma > 0.0 {
+                    for v in &mut y {
+                        *v += self.sigma * rng.normal() as f32;
+                    }
+                }
+                let s = wq.scale;
+                for v in &mut y {
+                    *v *= s;
+                }
+                (y, wq.scale)
+            }
+        };
+        let out = Tensor::from_vec(&[x.shape[0], oh, ow, o], y);
+        Ok((
+            out,
+            ConvTape {
+                name: name.to_string(),
+                kernel: kh,
+                stride,
+                x_shape: x.shape.clone(),
+                w_shape: w.shape.clone(),
+                ctx: grad::ConvCtx { patches, oh, ow },
+                cols_unit: cols,
+                wq,
+                coef_bwd,
+            },
+        ))
+    }
+
+    /// Shared conv backward (digital and PIM — Theorem 1 makes them the
+    /// same up to `coef_bwd`).  Accumulates dW into `grads`, returns dx.
+    fn conv_bwd(
+        &self,
+        tape: &ConvTape,
+        dy: &Tensor,
+        grads: &mut BTreeMap<String, Tensor>,
+    ) -> Tensor {
+        let mut dy2 = dy.clone();
+        for v in &mut dy2.data {
+            *v *= tape.coef_bwd;
+        }
+        let (dx, dwcols) = grad::conv_cols_bwd(
+            &tape.ctx,
+            &tape.cols_unit,
+            &tape.x_shape,
+            tape.kernel,
+            tape.stride,
+            &dy2,
+        );
+        let (kh, kw, c, o) =
+            (tape.w_shape[0], tape.w_shape[1], tape.w_shape[2], tape.w_shape[3]);
+        let dq = ops::cols_to_weights(&dwcols, kh, kw, c, o);
+        let dw = grad::weight_quant_bwd(&tape.wq, &dq);
+        grads.insert(tape.name.clone(), dw);
+        dx
+    }
+
+    /// Weight-gradient-only conv backward for the network's first layer:
+    /// the input gradient is never used there, and skipping it saves a
+    /// full GEMM + col2im on the largest feature map every step.
+    fn conv_bwd_w_only(
+        &self,
+        tape: &ConvTape,
+        dy: &Tensor,
+        grads: &mut BTreeMap<String, Tensor>,
+    ) {
+        let mut dy2 = dy.clone();
+        for v in &mut dy2.data {
+            *v *= tape.coef_bwd;
+        }
+        let m = tape.ctx.patches.shape[0];
+        let kc = tape.ctx.patches.shape[1];
+        let o = tape.cols_unit.shape[1];
+        let dwcols = gemm_tn(m, kc, o, &tape.ctx.patches.data, &dy2.data);
+        let (kh, kw, c, ocnt) =
+            (tape.w_shape[0], tape.w_shape[1], tape.w_shape[2], tape.w_shape[3]);
+        let dq = ops::cols_to_weights(&Tensor::from_vec(&[kc, o], dwcols), kh, kw, c, ocnt);
+        let dw = grad::weight_quant_bwd(&tape.wq, &dq);
+        grads.insert(tape.name.clone(), dw);
+    }
+
+    fn bn_fwd(
+        &self,
+        x: &Tensor,
+        name: &str,
+        stats: &mut Vec<(String, (Vec<f32>, Vec<f32>))>,
+    ) -> Result<(Tensor, BnTape)> {
+        let gamma = self.param(&format!("{name}/gamma"))?;
+        let beta = self.param(&format!("{name}/beta"))?;
+        let (y, ctx) = grad::bn_train_fwd(x, &gamma.data, &beta.data);
+        stats.push((name.to_string(), (ctx.mean.clone(), ctx.var.clone())));
+        Ok((y, BnTape { name: name.to_string(), ctx }))
+    }
+
+    fn bn_bwd(&self, tape: &BnTape, dy: &Tensor, grads: &mut BTreeMap<String, Tensor>) -> Tensor {
+        let gamma = self
+            .params
+            .get(&format!("{}/gamma", tape.name))
+            .expect("bn gamma vanished mid-step");
+        let (dx, dgamma, dbeta) = grad::bn_train_bwd(&tape.ctx, &gamma.data, dy);
+        let c = dgamma.len();
+        grads.insert(format!("{}/gamma", tape.name), Tensor::from_vec(&[c], dgamma));
+        grads.insert(format!("{}/beta", tape.name), Tensor::from_vec(&[c], dbeta));
+        dx
+    }
+
+    fn fc_fwd(&self, x: &Tensor) -> Result<(Tensor, FcTape)> {
+        let w = self.param("fc/w")?;
+        let b = self.param("fc/b")?;
+        let (bsz, cin) = (x.shape[0], x.shape[1]);
+        let o = w.shape[1];
+        let wq = grad::weight_quant_fwd(w, &self.bits, o);
+        let s = wq.scale;
+        let mut y = gemm(bsz, cin, o, &x.data, &wq.q_unit.data);
+        for i in 0..bsz {
+            for j in 0..o {
+                y[i * o + j] = y[i * o + j] * s + b.data[j];
+            }
+        }
+        Ok((Tensor::from_vec(&[bsz, o], y), FcTape { x: x.clone(), wq }))
+    }
+
+    fn fc_bwd(&self, tape: &FcTape, dy: &Tensor, grads: &mut BTreeMap<String, Tensor>) -> Tensor {
+        let (bsz, cin) = (tape.x.shape[0], tape.x.shape[1]);
+        let o = dy.shape[1];
+        let s = tape.wq.scale;
+        let mut db = vec![0.0f32; o];
+        for i in 0..bsz {
+            for j in 0..o {
+                db[j] += dy.data[i * o + j];
+            }
+        }
+        grads.insert("fc/b".to_string(), Tensor::from_vec(&[o], db));
+        let mut dq = gemm_tn(bsz, cin, o, &tape.x.data, &dy.data);
+        for v in &mut dq {
+            *v *= s;
+        }
+        let dw = grad::weight_quant_bwd(&tape.wq, &Tensor::from_vec(&[cin, o], dq));
+        grads.insert("fc/w".to_string(), dw);
+        let mut dx = gemm_nt(bsz, o, cin, &dy.data, &tape.wq.q_unit.data);
+        for v in &mut dx {
+            *v *= s;
+        }
+        Tensor::from_vec(&[bsz, cin], dx)
+    }
+
+    // -- full model steps ---------------------------------------------------
+
+    #[allow(clippy::type_complexity)]
+    fn resnet_step(
+        &self,
+        x: &Tensor,
+        y_lab: &[i32],
+        rng: &mut Rng,
+    ) -> Result<(f32, usize, BTreeMap<String, Tensor>, Vec<(String, (Vec<f32>, Vec<f32>))>)> {
+        let e = self.entry.clone();
+        let mut stats = Vec::new();
+        let mut grads = BTreeMap::new();
+
+        // ---- forward
+        let x8 = quant::act_quant_bits(x.clone(), 8); // 8-bit first-layer inputs (§A2.1)
+        let (h, t_c0) = self.conv_digital_fwd(&x8, "conv0/w", 1)?;
+        let (h, t_b0) = self.bn_fwd(&h, "bn0", &mut stats)?;
+        let (mut h, m_a0) = grad::act_fwd(&h, &self.bits);
+        let mut blocks: Vec<BlockTape> = Vec::new();
+        let mut cin = e.width;
+        for s in 0..3 {
+            let cout = e.width * (1 << s);
+            for b in 0..e.depth_n {
+                let blk = format!("s{s}b{b}");
+                let stride = if s > 0 && b == 0 { 2 } else { 1 };
+                let x_in = h.clone();
+                let (z, t1) = self.conv_pim_fwd(&x_in, &format!("{blk}/conv1/w"), stride, rng)?;
+                let (z, tb1) = self.bn_fwd(&z, &format!("{blk}/bn1"), &mut stats)?;
+                let (z, m1) = grad::act_fwd(&z, &self.bits);
+                let (z, t2) = self.conv_pim_fwd(&z, &format!("{blk}/conv2/w"), 1, rng)?;
+                let (z, tb2) = self.bn_fwd(&z, &format!("{blk}/bn2"), &mut stats)?;
+                let (sc_out, sc) = if cin != cout || stride != 1 {
+                    let name = format!("{blk}/convs/w");
+                    let (sraw, ts) = self.conv_digital_fwd(&x_in, &name, stride)?;
+                    let (sbn, tbs) = self.bn_fwd(&sraw, &format!("{blk}/bns"), &mut stats)?;
+                    (sbn, Some((ts, tbs)))
+                } else {
+                    (x_in, None)
+                };
+                let sum = z.zip(&sc_out, |a, b| a + b);
+                let (hn, ma) = grad::act_fwd(&sum, &self.bits);
+                blocks.push(BlockTape { t1, tb1, m1, t2, tb2, sc, ma });
+                h = hn;
+                cin = cout;
+            }
+        }
+        let h_shape = h.shape.clone();
+        let pooled = ops::global_avg_pool(&h);
+        let (logits, fct) = self.fc_fwd(&pooled)?;
+        let (loss, correct, dlogits) = grad::softmax_xent(&logits, y_lab);
+
+        // ---- backward
+        let dpooled = self.fc_bwd(&fct, &dlogits, &mut grads);
+        let mut dh = grad::global_avg_pool_bwd(&h_shape, &dpooled);
+        for bt in blocks.iter().rev() {
+            let dsum = grad::act_bwd(&bt.ma, &dh);
+            let dz = self.bn_bwd(&bt.tb2, &dsum, &mut grads);
+            let dz = self.conv_bwd(&bt.t2, &dz, &mut grads);
+            let dz = grad::act_bwd(&bt.m1, &dz);
+            let dz = self.bn_bwd(&bt.tb1, &dz, &mut grads);
+            let dx_main = self.conv_bwd(&bt.t1, &dz, &mut grads);
+            let dx_sc = match &bt.sc {
+                Some((ts, tbs)) => {
+                    let d = self.bn_bwd(tbs, &dsum, &mut grads);
+                    self.conv_bwd(ts, &d, &mut grads)
+                }
+                None => dsum,
+            };
+            dh = dx_main.zip(&dx_sc, |a, b| a + b);
+        }
+        let dh = grad::act_bwd(&m_a0, &dh);
+        let dh = self.bn_bwd(&t_b0, &dh, &mut grads);
+        self.conv_bwd_w_only(&t_c0, &dh, &mut grads); // input gradient unused
+        Ok((loss, correct, grads, stats))
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn vgg_step(
+        &self,
+        x: &Tensor,
+        y_lab: &[i32],
+        rng: &mut Rng,
+    ) -> Result<(f32, usize, BTreeMap<String, Tensor>, Vec<(String, (Vec<f32>, Vec<f32>))>)> {
+        let e = self.entry.clone();
+        let plan = vgg11_plan(e.width, e.image);
+        let mut stats = Vec::new();
+        let mut grads = BTreeMap::new();
+
+        // ---- forward
+        let mut h = quant::act_quant_bits(x.clone(), 8);
+        let mut tapes: Vec<VggTape> = Vec::new();
+        for (i, &(_cout, pool)) in plan.iter().enumerate() {
+            let name = format!("conv{i}/w");
+            let (z, conv) = if i == 0 {
+                self.conv_digital_fwd(&h, &name, 1)?
+            } else {
+                self.conv_pim_fwd(&h, &name, 1, rng)?
+            };
+            let (z, bn) = self.bn_fwd(&z, &format!("bn{i}"), &mut stats)?;
+            let (z, mask) = grad::act_fwd(&z, &self.bits);
+            let (z, pool_tape) = if pool {
+                let pre_shape = z.shape.clone();
+                let (p, idx) = grad::maxpool2_fwd(&z);
+                (p, Some((idx, pre_shape)))
+            } else {
+                (z, None)
+            };
+            tapes.push(VggTape { conv, bn, mask, pool: pool_tape });
+            h = z;
+        }
+        let h_shape = h.shape.clone();
+        let pooled = ops::global_avg_pool(&h);
+        let (logits, fct) = self.fc_fwd(&pooled)?;
+        let (loss, correct, dlogits) = grad::softmax_xent(&logits, y_lab);
+
+        // ---- backward
+        let dpooled = self.fc_bwd(&fct, &dlogits, &mut grads);
+        let mut dh = grad::global_avg_pool_bwd(&h_shape, &dpooled);
+        for (li, t) in tapes.iter().enumerate().rev() {
+            if let Some((idx, pre_shape)) = &t.pool {
+                dh = grad::maxpool2_bwd(idx, pre_shape, &dh);
+            }
+            let d = grad::act_bwd(&t.mask, &dh);
+            let d = self.bn_bwd(&t.bn, &d, &mut grads);
+            if li == 0 {
+                // first layer: input gradient unused
+                self.conv_bwd_w_only(&t.conv, &d, &mut grads);
+            } else {
+                dh = self.conv_bwd(&t.conv, &d, &mut grads);
+            }
+        }
+        Ok((loss, correct, grads, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    /// A down-scaled resnet geometry so debug-mode tests stay fast.
+    fn micro_manifest() -> Manifest {
+        let mut m = Manifest::builtin();
+        let mut e = m.models.get("tiny").unwrap().clone();
+        e.width = 4;
+        e.image = 8;
+        e.classes = 4;
+        m.models.insert("micro".to_string(), e);
+        m.batch = 8;
+        m
+    }
+
+    fn micro_job(mode: Mode, steps: usize) -> JobConfig {
+        JobConfig {
+            model: "micro".to_string(),
+            mode,
+            scheme: Scheme::BitSerial,
+            unit_channels: 8,
+            b_pim_train: 7,
+            steps,
+            lr: 0.05,
+            train_size: 64,
+            test_size: 32,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn trainer_initializes_all_layers() {
+        let m = micro_manifest();
+        let t = NativeTrainer::new(&m, &micro_job(Mode::Ours, 1)).unwrap();
+        assert!(t.params.contains_key("conv0/w"));
+        assert!(t.params.contains_key("s2b0/convs/w"));
+        assert!(t.bn_state.contains_key("bn0"));
+        assert_eq!(t.params.len(), t.vel.len());
+        assert!((t.eta - rescale::forward_eta(Scheme::BitSerial, 7)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn one_step_produces_finite_loss_and_moves_params() {
+        let m = micro_manifest();
+        let job = micro_job(Mode::Ours, 1);
+        let mut t = NativeTrainer::new(&m, &job).unwrap();
+        let before = t.params.get("s0b0/conv1/w").unwrap().clone();
+        let ds = synth::generate(8, 4, 16, 1);
+        let mut rng = Rng::new(0);
+        let batch = ds.batch(&(0..8).collect::<Vec<_>>(), false, &mut rng);
+        let (loss, correct) = t.train_step(&batch.x, &batch.y, 0.05, &mut rng).unwrap();
+        assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+        assert!(correct <= 8);
+        let after = t.params.get("s0b0/conv1/w").unwrap();
+        assert_ne!(before.data, after.data, "PIM conv weights must receive gradient");
+        // BN running stats moved off the init values
+        let (mean, _) = t.bn_state.get("bn0").unwrap();
+        assert!(mean.iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn ablation_variants_resolve() {
+        let m = micro_manifest();
+        let mut job = micro_job(Mode::Ours, 1);
+        job.variant = "norescale".to_string();
+        let t = NativeTrainer::new(&m, &job).unwrap();
+        assert_eq!(t.eta, 1.0);
+        assert!(!t.bwd_rescale);
+        job.variant = "bogus".to_string();
+        assert!(NativeTrainer::new(&m, &job).is_err());
+    }
+
+    #[test]
+    fn run_job_native_baseline_end_to_end() {
+        let m = micro_manifest();
+        let job = micro_job(Mode::Baseline, 6);
+        let tr = synth::generate(8, 4, 64, 1);
+        let te = synth::generate(8, 4, 32, 2);
+        let res = run_job_native(&m, &job, &tr, &te, 2).unwrap();
+        assert!(!res.history.is_empty());
+        assert!(res.history.iter().all(|l| l.loss.is_finite()));
+        assert!(res.software_acc.is_finite());
+        assert_eq!(res.ckpt.meta.get("backend").unwrap(), "native");
+        // checkpoint rebuilds into a Network (all params/state present)
+        let net = super::super::network_from_ckpt(&m, &res.ckpt).unwrap();
+        let mut rng = Rng::new(1);
+        let logits = net
+            .forward(&te.batch(&[0, 1], false, &mut rng).x, &ExecSpec::Software, &mut rng)
+            .unwrap();
+        assert_eq!(logits.shape, vec![2, 4]);
+    }
+}

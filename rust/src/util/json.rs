@@ -76,7 +76,7 @@ impl Json {
     pub fn is_null(&self) -> bool {
         matches!(self, Json::Null)
     }
-    /// Convenience: a numeric array as Vec<f32>.
+    /// Convenience: a numeric array as `Vec<f32>`.
     pub fn as_f32_vec(&self) -> Option<Vec<f32>> {
         self.as_arr()
             .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|f| f as f32).collect())

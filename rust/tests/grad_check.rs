@@ -1,0 +1,364 @@
+//! Finite-difference checks of the native backward (conv, BN, FC,
+//! quantizer STEs) and a training smoke test on the native backend.
+//!
+//! Quantizer rounds are straight-through estimators, so their gradients
+//! are checked against the *smooth STE surrogate* (round removed, scale s
+//! frozen — exactly what the backward claims to differentiate), computed
+//! in f64 inside the test.  Differentiable ops (conv, BN, pooling chains)
+//! are checked against their actual forward.  Acceptance bar: ≤ 1e-2
+//! relative error per sampled coordinate.
+
+use pim_qat::config::{JobConfig, Mode, Scheme};
+use pim_qat::data::synth;
+use pim_qat::nn::grad;
+use pim_qat::nn::ExecSpec;
+use pim_qat::pim::QuantBits;
+use pim_qat::runtime::Manifest;
+use pim_qat::tensor::gemm::{gemm, gemm_nt, gemm_tn};
+use pim_qat::tensor::Tensor;
+use pim_qat::train::native::run_job_native;
+use pim_qat::train::network_from_ckpt;
+use pim_qat::util::rng::Rng;
+
+/// allclose with 1e-2 relative tolerance (the acceptance bar) plus a small
+/// absolute floor for near-zero coordinates, where f32 forward roundoff
+/// dominates the finite difference.
+fn assert_close(fd: f64, analytic: f64, what: &str) {
+    let tol = 1e-2 * fd.abs().max(analytic.abs()) + 5e-3;
+    assert!(
+        (fd - analytic).abs() <= tol,
+        "{what}: fd {fd} vs analytic {analytic}"
+    );
+}
+
+fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> Tensor {
+    let n: usize = shape.iter().product();
+    Tensor::from_vec(shape, (0..n).map(|_| rng.normal_in(0.0, std)).collect())
+}
+
+/// ⟨G, y⟩ in f64.
+fn dot_loss(g: &Tensor, y: &Tensor) -> f64 {
+    g.data.iter().zip(&y.data).map(|(a, b)| (*a as f64) * (*b as f64)).sum()
+}
+
+#[test]
+fn conv_backward_matches_finite_difference() {
+    let mut rng = Rng::new(41);
+    for &(h, c, o, k, s) in &[(5usize, 3usize, 4usize, 3usize, 1usize), (6, 4, 3, 3, 2)] {
+        let x = randn(&[2, h, h, c], 1.0, &mut rng);
+        let wcols = randn(&[c * k * k, o], 0.5, &mut rng);
+        let (y, ctx) = grad::conv_cols_fwd(&x, &wcols, k, s);
+        let g = randn(&y.shape, 1.0, &mut rng);
+        let (dx, dw) = grad::conv_cols_bwd(&ctx, &wcols, &x.shape, k, s, &g);
+
+        let loss = |x: &Tensor, w: &Tensor| -> f64 {
+            let (y, _) = grad::conv_cols_fwd(x, w, k, s);
+            dot_loss(&g, &y)
+        };
+        let eps = 1e-2f32;
+        // sample input coordinates
+        for t in 0..20 {
+            let i = (t * 7919) % x.len();
+            let mut xp = x.clone();
+            xp.data[i] += eps;
+            let mut xm = x.clone();
+            xm.data[i] -= eps;
+            let fd = (loss(&xp, &wcols) - loss(&xm, &wcols)) / (2.0 * eps as f64);
+            assert_close(fd, dx.data[i] as f64, &format!("conv dx[{i}] (k={k},s={s})"));
+        }
+        // sample weight coordinates
+        for t in 0..20 {
+            let i = (t * 104729) % wcols.len();
+            let mut wp = wcols.clone();
+            wp.data[i] += eps;
+            let mut wm = wcols.clone();
+            wm.data[i] -= eps;
+            let fd = (loss(&x, &wp) - loss(&x, &wm)) / (2.0 * eps as f64);
+            assert_close(fd, dw.data[i] as f64, &format!("conv dw[{i}] (k={k},s={s})"));
+        }
+    }
+}
+
+#[test]
+fn bn_backward_matches_finite_difference() {
+    let mut rng = Rng::new(42);
+    let x = randn(&[2, 4, 4, 3], 1.5, &mut rng);
+    let gamma: Vec<f32> = vec![1.2, 0.8, 1.5];
+    let beta: Vec<f32> = vec![0.1, -0.3, 0.2];
+    let (y, ctx) = grad::bn_train_fwd(&x, &gamma, &beta);
+    let g = randn(&y.shape, 1.0, &mut rng);
+    let (dx, dgamma, dbeta) = grad::bn_train_bwd(&ctx, &gamma, &g);
+
+    let loss = |x: &Tensor, gamma: &[f32], beta: &[f32]| -> f64 {
+        let (y, _) = grad::bn_train_fwd(x, gamma, beta);
+        dot_loss(&g, &y)
+    };
+    let eps = 3e-3f32;
+    for t in 0..24 {
+        let i = (t * 7919) % x.len();
+        let mut xp = x.clone();
+        xp.data[i] += eps;
+        let mut xm = x.clone();
+        xm.data[i] -= eps;
+        let fd = (loss(&xp, &gamma, &beta) - loss(&xm, &gamma, &beta)) / (2.0 * eps as f64);
+        assert_close(fd, dx.data[i] as f64, &format!("bn dx[{i}]"));
+    }
+    for ci in 0..3 {
+        let mut gp = gamma.clone();
+        gp[ci] += eps;
+        let mut gm = gamma.clone();
+        gm[ci] -= eps;
+        let fd = (loss(&x, &gp, &beta) - loss(&x, &gm, &beta)) / (2.0 * eps as f64);
+        assert_close(fd, dgamma[ci] as f64, &format!("bn dgamma[{ci}]"));
+
+        let mut bp = beta.clone();
+        bp[ci] += eps;
+        let mut bm = beta.clone();
+        bm[ci] -= eps;
+        let fd = (loss(&x, &gamma, &bp) - loss(&x, &gamma, &bm)) / (2.0 * eps as f64);
+        assert_close(fd, dbeta[ci] as f64, &format!("bn dbeta[{ci}]"));
+    }
+}
+
+/// The STE surrogate of the weight quantizer: tanh(w)/D(w) with the round
+/// removed (what the backward claims to differentiate), in f64.
+fn wq_surrogate_loss(w: &Tensor, g_q: &Tensor) -> f64 {
+    let t: Vec<f64> = w.data.iter().map(|&v| (v as f64).tanh()).collect();
+    let d = t.iter().fold(0.0f64, |a, &v| a.max(v.abs())) + 1e-12;
+    g_q.data.iter().zip(&t).map(|(g, tv)| (*g as f64) * tv / d).sum()
+}
+
+#[test]
+fn weight_quantizer_ste_matches_surrogate_fd() {
+    let mut rng = Rng::new(43);
+    let mut w = randn(&[3, 3, 2, 4], 0.7, &mut rng);
+    // make the argmax unambiguous so the surrogate stays smooth under FD
+    w.data[17] = 4.0;
+    let bits = QuantBits::default();
+    let ctx = grad::weight_quant_fwd(&w, &bits, 4);
+    let g_q = randn(&w.shape, 1.0, &mut rng);
+    let dw = grad::weight_quant_bwd(&ctx, &g_q);
+
+    let eps = 1e-4f32;
+    let mut checked_argmax = false;
+    for t in 0..24 {
+        let i = if t == 23 {
+            checked_argmax = true;
+            17 // the argmax path must be covered explicitly
+        } else {
+            (t * 7919) % w.len()
+        };
+        let mut wp = w.clone();
+        wp.data[i] += eps;
+        let mut wm = w.clone();
+        wm.data[i] -= eps;
+        let fd = (wq_surrogate_loss(&wp, &g_q) - wq_surrogate_loss(&wm, &g_q)) / (2.0 * eps as f64);
+        assert_close(fd, dw.data[i] as f64, &format!("quantizer dw[{i}]"));
+    }
+    assert!(checked_argmax);
+}
+
+#[test]
+fn fc_backward_matches_surrogate_fd() {
+    // FC layer: y = x·(s·q_unit(w)) + b with s frozen (stop-grad) and the
+    // round removed in the surrogate — the exact STE contract.
+    let mut rng = Rng::new(44);
+    let (bsz, cin, o) = (4usize, 6usize, 3usize);
+    let x = randn(&[bsz, cin], 1.0, &mut rng);
+    let w = randn(&[cin, o], 0.6, &mut rng);
+    let bits = QuantBits::default();
+    let ctx = grad::weight_quant_fwd(&w, &bits, o);
+    let s0 = ctx.scale;
+    let g = randn(&[bsz, o], 1.0, &mut rng);
+
+    // analytic backward, mirroring NativeTrainer::fc_bwd
+    let mut dq = gemm_tn(bsz, cin, o, &x.data, &g.data);
+    for v in &mut dq {
+        *v *= s0;
+    }
+    let dw = grad::weight_quant_bwd(&ctx, &Tensor::from_vec(&[cin, o], dq));
+    let mut dx = gemm_nt(bsz, o, cin, &g.data, &ctx.q_unit.data);
+    for v in &mut dx {
+        *v *= s0;
+    }
+
+    let surrogate = |w: &Tensor, x: &Tensor| -> f64 {
+        let t: Vec<f64> = w.data.iter().map(|&v| (v as f64).tanh()).collect();
+        let d = t.iter().fold(0.0f64, |a, &v| a.max(v.abs())) + 1e-12;
+        let mut l = 0.0f64;
+        for i in 0..bsz {
+            for j in 0..o {
+                let mut acc = 0.0f64;
+                for c in 0..cin {
+                    acc += (x.data[i * cin + c] as f64) * t[c * o + j] / d;
+                }
+                l += (g.data[i * o + j] as f64) * acc * s0 as f64;
+            }
+        }
+        l
+    };
+    let eps = 1e-4f32;
+    for i in 0..w.len() {
+        let mut wp = w.clone();
+        wp.data[i] += eps;
+        let mut wm = w.clone();
+        wm.data[i] -= eps;
+        let fd = (surrogate(&wp, &x) - surrogate(&wm, &x)) / (2.0 * eps as f64);
+        assert_close(fd, dw.data[i] as f64, &format!("fc dw[{i}]"));
+    }
+    // dx: the quantized forward is linear in x (q_unit does not depend on
+    // x), so FD against the real quantized product is exact.
+    let qloss = |x: &Tensor| -> f64 {
+        let y = gemm(bsz, cin, o, &x.data, &ctx.q_unit.data);
+        y.iter()
+            .zip(&g.data)
+            .map(|(yv, gv)| (*yv as f64) * (s0 as f64) * (*gv as f64))
+            .sum()
+    };
+    let eps = 1e-2f32;
+    for i in 0..x.len() {
+        let mut xp = x.clone();
+        xp.data[i] += eps;
+        let mut xm = x.clone();
+        xm.data[i] -= eps;
+        let fd = (qloss(&xp) - qloss(&xm)) / (2.0 * eps as f64);
+        assert_close(fd, dx[i] as f64, &format!("fc dx[{i}]"));
+    }
+}
+
+#[test]
+fn activation_ste_matches_surrogate_fd() {
+    // points safely away from the 0 / 1 kinks
+    let x = Tensor::from_vec(&[6], vec![-0.6, 0.2, 0.45, 0.8, 1.3, 0.95]);
+    let bits = QuantBits::default();
+    let (_, mask) = grad::act_fwd(&x, &bits);
+    let g = Tensor::from_vec(&[6], vec![1.0, -2.0, 0.5, 1.5, 3.0, -1.0]);
+    let dx = grad::act_bwd(&mask, &g);
+    let surrogate = |x: &Tensor| -> f64 {
+        x.data
+            .iter()
+            .zip(&g.data)
+            .map(|(&v, &gv)| (gv as f64) * (v.clamp(0.0, 1.0) as f64))
+            .sum()
+    };
+    let eps = 1e-3f32;
+    for i in 0..x.len() {
+        let mut xp = x.clone();
+        xp.data[i] += eps;
+        let mut xm = x.clone();
+        xm.data[i] -= eps;
+        let fd = (surrogate(&xp) - surrogate(&xm)) / (2.0 * eps as f64);
+        assert_close(fd, dx.data[i] as f64, &format!("act dx[{i}]"));
+    }
+}
+
+#[test]
+fn pim_gste_xi_tracks_scale_enlargement() {
+    // Eqn. 8 / Appendix A3: at very low b_PIM the PIM output variance is
+    // enlarged, so ξ = √(VAR[y_PIM]/VAR[y]) > 1 — the quantity the native
+    // backward folds into its coefficient.
+    let mut rng = Rng::new(45);
+    let (m, c, k, o, uc) = (32usize, 8usize, 3usize, 16usize, 8usize);
+    let cols = c * k * k;
+    let a = Tensor::from_vec(&[m, cols], (0..m * cols).map(|_| rng.int_in(0, 15) as f32).collect());
+    let w = Tensor::from_vec(&[cols, o], (0..cols * o).map(|_| rng.int_in(-7, 7) as f32).collect());
+    let chip = pim_qat::chip::ChipModel::ideal(3);
+    let mut nrng = Rng::new(0);
+    let y_pim = pim_qat::pim::pim_grouped_matmul(
+        Scheme::BitSerial,
+        QuantBits::default(),
+        &a,
+        &w,
+        c,
+        k,
+        uc,
+        &chip,
+        &mut nrng,
+    );
+    // exact product in unit scale
+    let au: Vec<f32> = a.data.iter().map(|&v| v / 15.0).collect();
+    let wu: Vec<f32> = w.data.iter().map(|&v| v / 7.0).collect();
+    let y_ex = gemm(m, cols, o, &au, &wu);
+    let var = |v: &[f32]| -> f64 {
+        let n = v.len() as f64;
+        let mean = v.iter().map(|&x| x as f64).sum::<f64>() / n;
+        v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n
+    };
+    let xi = (var(&y_pim.data) / var(&y_ex)).sqrt();
+    assert!(xi > 1.2, "xi at b_PIM=3 should enlarge the scale, got {xi}");
+}
+
+// ---------------------------------------------------------------------------
+// Training smoke on the native backend
+// ---------------------------------------------------------------------------
+
+/// A down-scaled geometry so debug-mode tests stay fast.
+fn micro_manifest() -> Manifest {
+    let mut m = Manifest::builtin();
+    let mut e = m.models.get("tiny").unwrap().clone();
+    e.width = 4;
+    e.image = 8;
+    e.classes = 4;
+    m.models.insert("micro".to_string(), e);
+    m.batch = 8;
+    m
+}
+
+#[test]
+fn native_baseline_training_reduces_loss() {
+    let m = micro_manifest();
+    let job = JobConfig {
+        model: "micro".to_string(),
+        mode: Mode::Baseline,
+        steps: 30,
+        lr: 0.1,
+        train_size: 96,
+        test_size: 32,
+        ..Default::default()
+    };
+    let tr = synth::generate(8, 4, job.train_size, 1);
+    let te = synth::generate(8, 4, job.test_size, 2);
+    let res = run_job_native(&m, &job, &tr, &te, 1).unwrap();
+    assert!(res.history.iter().all(|l| l.loss.is_finite()));
+    let first = res.history.first().unwrap().loss;
+    let best = res.history.iter().map(|l| l.loss).fold(f32::INFINITY, f32::min);
+    assert!(best < first, "loss should decrease: first {first}, best {best}");
+}
+
+#[test]
+fn native_pim_qat_training_end_to_end_on_chip() {
+    // The acceptance path in miniature: train mode=ours on the native
+    // backend, rebuild the network from the checkpoint, evaluate on an
+    // ideal 7-bit chip.
+    let m = micro_manifest();
+    let job = JobConfig {
+        model: "micro".to_string(),
+        mode: Mode::Ours,
+        scheme: Scheme::BitSerial,
+        unit_channels: 8,
+        b_pim_train: 7,
+        steps: 10,
+        lr: 0.05,
+        train_size: 64,
+        test_size: 16,
+        ..Default::default()
+    };
+    let tr = synth::generate(8, 4, job.train_size, 3);
+    let te = synth::generate(8, 4, job.test_size, 4);
+    let res = run_job_native(&m, &job, &tr, &te, 2).unwrap();
+    assert!(res.history.iter().all(|l| l.loss.is_finite()));
+    assert!(res.software_acc.is_finite());
+
+    let net = network_from_ckpt(&m, &res.ckpt).unwrap();
+    let chip = pim_qat::chip::ChipModel::ideal(7);
+    let mut rng = Rng::new(5);
+    let acc = net
+        .evaluate(
+            &te,
+            8,
+            &ExecSpec::Pim { scheme: Scheme::BitSerial, unit_channels: 8, chip: &chip },
+            &mut rng,
+        )
+        .unwrap();
+    assert!((0.0..=100.0).contains(&acc), "chip accuracy {acc}");
+}

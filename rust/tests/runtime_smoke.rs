@@ -165,7 +165,7 @@ fn training_learns_and_deploys_to_chip() {
 
     // chip-sim evaluation at the training resolution should be in the same
     // ballpark as software for 7-bit ideal chips
-    let net = train::network_from_ckpt(rt(), &res.ckpt).unwrap();
+    let net = train::network_from_ckpt(&rt().manifest, &res.ckpt).unwrap();
     let chip = pim_qat::chip::ChipModel::ideal(7);
     let mut rng = Rng::new(3);
     let acc = net
@@ -235,7 +235,7 @@ fn pimeval_artifact_matches_chip_sim() {
     let outs = ev.run(&inputs).unwrap();
     let jax_correct = to_scalar_f32(&outs[1]).unwrap();
 
-    let net = train::network_from_ckpt(rt(), &res.ckpt).unwrap();
+    let net = train::network_from_ckpt(&rt().manifest, &res.ckpt).unwrap();
     let chip = pim_qat::chip::ChipModel::ideal(7);
     let mut rng = Rng::new(0);
     let logits = net
