@@ -3,7 +3,10 @@
 //! Regenerates the throughput side of Table 1's story — how much work one
 //! conversion chain amortizes and what the noise/curve models cost — and
 //! emits `BENCH_pim_mac.json` so the perf trajectory is tracked across PRs
-//! (EXPERIMENTS.md §Perf).
+//! (EXPERIMENTS.md §Perf); CI gates it against
+//! `baselines/BENCH_pim_mac.json` via `bench_check`.  Multi-threaded cases
+//! run on the persistent worker pool (`util::pool`), so thread startup is
+//! paid once per process, not per matmul.
 //!
 //! Set `PIM_QAT_BENCH_QUICK=1` for a fast smoke run.
 

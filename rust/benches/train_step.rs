@@ -1,9 +1,13 @@
 //! Bench: one native-backend train step (fwd + bwd + SGD) on the tiny
 //! model — the end-to-end training hot loop the repo now owns.  Covers the
 //! digital baseline and PIM-QAT (`mode=ours`, bit-serial b_PIM=7, where
-//! every step runs the integer PIM engine forward plus the exact digital
-//! twin for the ξ rescale).  Emits `BENCH_train_step.json` so the perf
-//! trajectory is tracked across PRs (EXPERIMENTS.md §Perf).
+//! every step runs the integer PIM engine forward plus the fused ξ digital
+//! twin).  Because the trainer keeps per-layer engines and the step arena
+//! alive across iterations (§Perf L3.5), the warmup phase doubles as the
+//! grow-once pass and the measured iterations are the steady state the
+//! trainer actually runs in.  Emits `BENCH_train_step.json` so the perf
+//! trajectory is tracked across PRs (EXPERIMENTS.md §Perf); CI gates it
+//! against `baselines/BENCH_train_step.json` via `bench_check`.
 //!
 //! Set `PIM_QAT_BENCH_QUICK=1` for a fast smoke run.
 

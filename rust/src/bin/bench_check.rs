@@ -1,0 +1,90 @@
+//! Bench-regression gate: compare a fresh `BENCH_*.json` against the
+//! committed baseline and fail when any case's `ns_per_iter` regressed by
+//! more than the allowed factor (ROADMAP.md records the baseline
+//! convention; the CI `rust` job's bench-regression gate step runs this
+//! after its quick-mode bench pass).
+//!
+//! Usage: `bench_check <baseline.json> <current.json> [max_ratio]`
+//! (default max_ratio 1.3).  Cases present on only one side are reported
+//! and skipped.  Exits 1 on regression, 2 on usage/parse errors.
+
+use std::process::exit;
+
+use pim_qat::util::json::{self, Json};
+
+fn cases(j: &Json) -> Vec<(String, f64)> {
+    let mut v = Vec::new();
+    if let Some(arr) = j.get("benches").as_arr() {
+        for b in arr {
+            if let (Some(name), Some(ns)) = (b.get("name").as_str(), b.get("ns_per_iter").as_f64())
+            {
+                v.push((name.to_string(), ns));
+            }
+        }
+    }
+    v
+}
+
+fn load(path: &str) -> Json {
+    match json::parse_file(std::path::Path::new(path)) {
+        Ok(j) => j,
+        Err(e) => {
+            eprintln!("bench_check: cannot read {path}: {e}");
+            exit(2);
+        }
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    if args.len() < 3 {
+        eprintln!("usage: bench_check <baseline.json> <current.json> [max_ratio]");
+        exit(2);
+    }
+    let max_ratio: f64 = match args.get(3) {
+        Some(s) => s.parse().unwrap_or_else(|_| {
+            eprintln!("bench_check: bad max_ratio {s:?}");
+            exit(2);
+        }),
+        None => 1.3,
+    };
+    let base_cases = cases(&load(&args[1]));
+    let cur_cases = cases(&load(&args[2]));
+    let mut failed = false;
+    let mut matched = 0usize;
+    for (name, ns) in &cur_cases {
+        match base_cases.iter().find(|(n, _)| n == name) {
+            Some((_, base_ns)) if *base_ns > 0.0 => {
+                matched += 1;
+                let ratio = ns / base_ns;
+                let flag = if ratio > max_ratio {
+                    failed = true;
+                    "REGRESSED"
+                } else {
+                    "ok"
+                };
+                println!(
+                    "{name:<44} base {base_ns:>14.0} ns  now {ns:>14.0} ns  \
+                     ratio {ratio:>5.2}  {flag}"
+                );
+            }
+            _ => println!("{name:<44} (no baseline — skipped)"),
+        }
+    }
+    for (name, _) in &base_cases {
+        if !cur_cases.iter().any(|(n, _)| n == name) {
+            println!("{name:<44} (baseline case missing from current run)");
+        }
+    }
+    if failed {
+        eprintln!("bench regression: ns_per_iter worse than {max_ratio}x the committed baseline");
+        exit(1);
+    }
+    if matched == 0 && !base_cases.is_empty() {
+        // zero overlap would make the gate vacuous — treat renamed/drifted
+        // case names as an error, not a silent pass
+        eprintln!("bench_check: no case names matched the baseline — refresh the baseline");
+        exit(2);
+    }
+    println!("bench_check: {matched} case(s) within {max_ratio}x of baseline");
+}

@@ -24,7 +24,8 @@
 
 use crate::chip::round_ties_even;
 use crate::pim::QuantBits;
-use crate::tensor::gemm::{gemm, gemm_nt, gemm_tn};
+use crate::tensor::arena::BufPool;
+use crate::tensor::gemm::{gemm, gemm_nt_into, gemm_tn_into};
 use crate::tensor::{ops, Tensor};
 
 // ---------------------------------------------------------------------------
@@ -114,35 +115,71 @@ pub struct ConvCtx {
 
 /// Forward conv from precomputed column weights [C·k·k, O]: returns the
 /// NHWC output and the saved context.  The caller applies any scalar
-/// coefficient (digital scale s, forward rescale η) to the result.
-pub fn conv_cols_fwd(x: &Tensor, wcols: &Tensor, k: usize, stride: usize) -> (Tensor, ConvCtx) {
-    let (patches, oh, ow) = ops::im2col_threaded(x, k, stride, 0);
+/// coefficient (digital scale s, forward rescale η) to the result.  The
+/// patch buffer comes from the arena `pool`; ownership transfers into the
+/// returned [`ConvCtx`] and is reclaimed when the caller consumes the tape
+/// (DESIGN.md §Arena).
+pub fn conv_cols_fwd(
+    x: &Tensor,
+    wcols: &Tensor,
+    k: usize,
+    stride: usize,
+    pool: &mut BufPool,
+) -> (Tensor, ConvCtx) {
+    let kc = wcols.shape[0];
+    let (patches, oh, ow) = pooled_im2col(x, k, stride, kc, pool);
     let m = patches.shape[0];
-    let kc = patches.shape[1];
     let o = wcols.shape[1];
     let y = gemm(m, kc, o, &patches.data, &wcols.data);
     let out = Tensor::from_vec(&[x.shape[0], oh, ow, o], y);
     (out, ConvCtx { patches, oh, ow })
 }
 
-/// Backward of [`conv_cols_fwd`]: given dL/dy (NHWC, already multiplied by
-/// any scalar backward coefficient), return (dL/dx, dL/dwcols).
+/// im2col into an arena buffer: patches [B·oh·ow, kc] whose storage comes
+/// from `pool`.  Ownership of the buffer transfers into the returned
+/// tensor — it is expected to ride a tape and be `put_f32`-returned by
+/// whoever consumes that tape (DESIGN.md §Arena).  `kc` must equal C·k²
+/// for `x`'s channel count (checked by the tensor constructor).
+pub fn pooled_im2col(
+    x: &Tensor,
+    k: usize,
+    stride: usize,
+    kc: usize,
+    pool: &mut BufPool,
+) -> (Tensor, usize, usize) {
+    let (b, h, w) = (x.shape[0], x.shape[1], x.shape[2]);
+    let (eh, ew) = ops::conv_out_dims(h, w, k, stride);
+    let mut pbuf = pool.take_f32(b * eh * ew * kc);
+    let (oh, ow) = ops::im2col_into(x, k, stride, 0, &mut pbuf);
+    (Tensor::from_vec(&[b * oh * ow, kc], pbuf), oh, ow)
+}
+
+/// Backward of [`conv_cols_fwd`]: `dy` is the flat [M·O] output gradient,
+/// already multiplied by any scalar backward coefficient.  Returns dL/dx
+/// and writes dL/dwcols into `dwcols` ([K·O], cleared and resized); the
+/// patch-gradient intermediate lives in a pooled buffer and never escapes.
+#[allow(clippy::too_many_arguments)]
 pub fn conv_cols_bwd(
     ctx: &ConvCtx,
     wcols: &Tensor,
     x_shape: &[usize],
     k: usize,
     stride: usize,
-    dy: &Tensor,
-) -> (Tensor, Tensor) {
+    dy: &[f32],
+    pool: &mut BufPool,
+    dwcols: &mut Vec<f32>,
+) -> Tensor {
     let m = ctx.patches.shape[0];
     let kc = ctx.patches.shape[1];
     let o = wcols.shape[1];
     assert_eq!(dy.len(), m * o, "conv output gradient size");
-    let dwcols = gemm_tn(m, kc, o, &ctx.patches.data, &dy.data);
-    let dpatches = gemm_nt(m, o, kc, &dy.data, &wcols.data);
-    let dx = ops::col2im(&Tensor::from_vec(&[m, kc], dpatches), x_shape, k, stride);
-    (dx, Tensor::from_vec(&[kc, o], dwcols))
+    gemm_tn_into(m, kc, o, &ctx.patches.data, dy, dwcols);
+    let mut dpatches = pool.take_f32(m * kc);
+    gemm_nt_into(m, o, kc, dy, &wcols.data, &mut dpatches);
+    let mut dxbuf = Vec::new();
+    ops::col2im_into(&dpatches, x_shape, k, stride, &mut dxbuf);
+    pool.put_f32(dpatches);
+    Tensor::from_vec(x_shape, dxbuf)
 }
 
 // ---------------------------------------------------------------------------

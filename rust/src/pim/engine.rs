@@ -6,14 +6,20 @@
 //! mirroring how a chip programs its cell array once and streams inputs.
 //!
 //! §Perf (EXPERIMENTS.md): the execution path is integer-native and
-//! multi-threaded.  Activations live on the u8 grid inside the engine, DAC
-//! input planes are extracted with shifts/masks, plane sums accumulate in
-//! i32 (exact, so bit-identical to the seed float path), conversion runs
-//! row-batched through `Converter::convert_row`, and rows are partitioned
-//! across scoped threads with per-thread scratch buffers from a reusable
-//! arena.  Thermal noise comes from a counter-based RNG addressed by
-//! (group, plane, row, column) — see DESIGN.md §RNG contract — which is
+//! multi-threaded.  Activations arrive on the u8 grid
+//! ([`PimEngine::matmul_u8_into`]), DAC input planes are extracted with
+//! shifts/masks, plane sums accumulate in i32 (exact, so bit-identical to
+//! the seed float path), conversion runs row-batched through
+//! `Converter::convert_row`, and rows are partitioned across the shared
+//! worker pool (`util::pool`) with per-thread scratch buffers from a
+//! reusable arena.  Thermal noise comes from a counter-based RNG addressed
+//! by (group, plane, row, column) — see DESIGN.md §RNG contract — which is
 //! what makes the output bit-identical at any thread count.
+//!
+//! Engines are persistent: [`PimEngine::prepare`] decomposes the weights
+//! once, and [`PimEngine::reprogram`] rewrites the group buffers in place
+//! on later steps, skipping groups whose integer weights did not change —
+//! the engine-cache half of §Perf L3.5.
 
 use std::fmt;
 use std::sync::Mutex;
@@ -76,6 +82,9 @@ pub struct PimEngine {
     /// available parallelism).
     threads: usize,
     groups: Vec<GroupWeights>,
+    /// The raw integer weights last programmed, flat [cols·out] — what
+    /// `reprogram` compares against to skip unchanged groups.
+    w_cache: Vec<i16>,
     scratch: ScratchPool,
 }
 
@@ -89,6 +98,7 @@ impl Clone for PimEngine {
             fs: self.fs,
             threads: self.threads,
             groups: self.groups.clone(),
+            w_cache: self.w_cache.clone(),
             scratch: ScratchPool::new(),
         }
     }
@@ -120,62 +130,39 @@ impl PimEngine {
         unit_channels: usize,
     ) -> Self {
         assert_eq!(w_int.rank(), 2);
-        let cols = w_int.shape[0];
-        let out = w_int.shape[1];
-        assert_eq!(cols, c_in * kernel * kernel, "weight columns vs c_in*k*k");
+        assert_eq!(w_int.shape[0], c_in * kernel * kernel, "weight columns vs c_in*k*k");
+        Self::prepare_cols(scheme, bits, &w_int.data, w_int.shape[1], c_in, kernel, unit_channels)
+    }
+
+    /// [`PimEngine::prepare`] from a raw row-major [C·k·k, O] slice —
+    /// arena callers keep the quantized weights in a pooled buffer instead
+    /// of building a `Tensor`.
+    pub fn prepare_cols(
+        scheme: Scheme,
+        bits: QuantBits,
+        w_int: &[f32],
+        out: usize,
+        c_in: usize,
+        kernel: usize,
+        unit_channels: usize,
+    ) -> Self {
         assert!(bits.b_a <= 8, "u8 activation grid needs b_a <= 8");
         let plan = plan_groups(c_in, kernel, unit_channels);
+        assert_eq!(w_int.len(), plan.cols() * out, "weight size vs group plan");
         let n = plan.n;
         let fs = plane_full_scale(scheme, &bits, n);
-        let b_w = bits.b_w;
-
         let groups = (0..plan.groups)
-            .map(|g| {
-                let rows = plan.col_range(g);
-                match scheme {
-                    Scheme::Native => {
-                        let mut w = vec![0i16; n * out];
-                        for (ri, r) in rows.clone().enumerate() {
-                            for o in 0..out {
-                                w[ri * out + o] = w_int.data[r * out + o] as i16;
-                            }
-                        }
-                        GroupWeights::Native(w)
-                    }
-                    Scheme::Differential => {
-                        let mut wp = vec![0i16; n * out];
-                        let mut wn = vec![0i16; n * out];
-                        for (ri, r) in rows.clone().enumerate() {
-                            for o in 0..out {
-                                let v = w_int.data[r * out + o];
-                                if v > 0.0 {
-                                    wp[ri * out + o] = v as i16;
-                                } else {
-                                    wn[ri * out + o] = (-v) as i16;
-                                }
-                            }
-                        }
-                        GroupWeights::Differential(wp, wn)
-                    }
-                    Scheme::BitSerial => {
-                        let mut planes = vec![vec![0u8; n * out]; b_w as usize];
-                        for (ri, r) in rows.clone().enumerate() {
-                            for o in 0..out {
-                                let v = w_int.data[r * out + o] as i32;
-                                // two's complement over b_w bits
-                                let u = if v < 0 { v + (1 << b_w) } else { v } as u32;
-                                for (k, plane) in planes.iter_mut().enumerate() {
-                                    plane[ri * out + o] = ((u >> k) & 1) as u8;
-                                }
-                            }
-                        }
-                        GroupWeights::BitSerial(planes)
-                    }
+            .map(|_| match scheme {
+                Scheme::Native => GroupWeights::Native(vec![0i16; n * out]),
+                Scheme::Differential => {
+                    GroupWeights::Differential(vec![0i16; n * out], vec![0i16; n * out])
+                }
+                Scheme::BitSerial => {
+                    GroupWeights::BitSerial(vec![vec![0u8; n * out]; bits.b_w as usize])
                 }
             })
             .collect();
-
-        PimEngine {
+        let mut engine = PimEngine {
             scheme,
             bits,
             plan,
@@ -183,7 +170,82 @@ impl PimEngine {
             fs,
             threads: 0,
             groups,
+            w_cache: vec![0i16; plan.cols() * out],
             scratch: ScratchPool::new(),
+        };
+        for g in 0..engine.plan.groups {
+            engine.program_group(g, w_int);
+        }
+        engine
+    }
+
+    /// Reprogram the weight planes in place for this step's integer
+    /// weights `w_int` (same [C·k·k, O] layout as [`PimEngine::prepare`]).
+    /// Groups whose integer weights are unchanged since the last
+    /// (re)programming are skipped — the common case late in low-`b_w`
+    /// training, where most quantized weights stop moving.  Returns the
+    /// number of groups rewritten.
+    ///
+    /// The result is bitwise identical to a fresh `prepare` with the same
+    /// weights (pinned by `tests/engine_parity.rs`).  Geometry, scheme and
+    /// bit widths are fixed at `prepare` time — changing those needs a new
+    /// engine (see DESIGN.md §Engine cache).
+    pub fn reprogram(&mut self, w_int: &[f32]) -> usize {
+        assert_eq!(w_int.len(), self.plan.cols() * self.out, "weight size vs group plan");
+        let out = self.out;
+        let mut rewritten = 0;
+        for g in 0..self.plan.groups {
+            let wr = self.plan.weight_range(g, out);
+            let unchanged =
+                self.w_cache[wr.clone()].iter().zip(&w_int[wr]).all(|(&c, &v)| c == v as i16);
+            if unchanged {
+                continue;
+            }
+            self.program_group(g, w_int);
+            rewritten += 1;
+        }
+        rewritten
+    }
+
+    /// (Re)write group `g`'s decomposed weight buffers — and its slice of
+    /// the raw-weight cache — from the full [cols·out] weight slice.
+    fn program_group(&mut self, g: usize, w_int: &[f32]) {
+        let out = self.out;
+        let n = self.plan.n;
+        let b_w = self.bits.b_w;
+        let wr = self.plan.weight_range(g, out);
+        let src = &w_int[wr.clone()];
+        for (c, &v) in self.w_cache[wr].iter_mut().zip(src) {
+            *c = v as i16;
+        }
+        match &mut self.groups[g] {
+            GroupWeights::Native(w) => {
+                for (d, &v) in w.iter_mut().zip(src) {
+                    *d = v as i16;
+                }
+            }
+            GroupWeights::Differential(wp, wn) => {
+                for i in 0..n * out {
+                    let v = src[i];
+                    if v > 0.0 {
+                        wp[i] = v as i16;
+                        wn[i] = 0;
+                    } else {
+                        wp[i] = 0;
+                        wn[i] = (-v) as i16;
+                    }
+                }
+            }
+            GroupWeights::BitSerial(planes) => {
+                for i in 0..n * out {
+                    let v = src[i] as i32;
+                    // two's complement over b_w bits
+                    let u = if v < 0 { v + (1 << b_w) } else { v } as u32;
+                    for (k, plane) in planes.iter_mut().enumerate() {
+                        plane[i] = ((u >> k) & 1) as u8;
+                    }
+                }
+            }
         }
     }
 
@@ -205,7 +267,9 @@ impl PimEngine {
 
     /// Execute the grouped PIM matmul over integer activation patches
     /// [M, C*k*k] (values on the 0..a_levels integer grid, stored as f32).
-    /// Output [M, O] is in unit scale (estimate of Σ W̃ q̃).
+    /// Output [M, O] is in unit scale (estimate of Σ W̃ q̃).  Convenience
+    /// wrapper over [`PimEngine::matmul_u8_into`] — the training hot loop
+    /// quantizes into a reused u8 buffer instead.
     ///
     /// `rng` seeds the thermal-noise field: when the chip has noise, one
     /// draw is taken and every noise sample becomes a pure function of
@@ -213,8 +277,29 @@ impl PimEngine {
     /// for any thread count.
     pub fn matmul(&self, patches_int: &Tensor, chip: &ChipModel, rng: &mut Rng) -> Tensor {
         let m = patches_int.shape[0];
-        let cols = patches_int.shape[1];
-        assert_eq!(cols, self.plan.cols(), "patch columns vs group plan");
+        assert_eq!(patches_int.shape[1], self.plan.cols(), "patch columns vs group plan");
+        let a8: Vec<u8> = patches_int.data.iter().map(|&v| v as u8).collect();
+        let mut y = Vec::new();
+        self.matmul_u8_into(&a8, chip, rng, &mut y);
+        Tensor::from_vec(&[m, self.out], y)
+    }
+
+    /// The allocation-free execution core: grouped PIM matmul over u8
+    /// activation patches (row-major [M, C·k·k] on the 0..a_levels grid),
+    /// writing the [M, O] unit-scale output into `y` (cleared and resized
+    /// — no allocation once the buffer has grown).  Noise contract is that
+    /// of [`PimEngine::matmul`]; rows fan out across the shared worker
+    /// pool.
+    pub fn matmul_u8_into(
+        &self,
+        patches: &[u8],
+        chip: &ChipModel,
+        rng: &mut Rng,
+        y: &mut Vec<f32>,
+    ) {
+        let cols = self.plan.cols();
+        assert!(cols > 0 && patches.len() % cols == 0, "patch columns vs group plan");
+        let m = patches.len() / cols;
         let out = self.out;
 
         let conv = Converter::new(chip, self.fs, out);
@@ -224,37 +309,37 @@ impl PimEngine {
             None
         };
 
-        let mut y = vec![0.0f32; m * out];
+        y.clear();
+        y.resize(m * out, 0.0);
         let threads = self.effective_threads(m);
         if threads <= 1 {
-            self.run_rows(patches_int, 0, m, &conv, noise.as_ref(), &mut y);
+            self.run_rows(patches, 0, m, &conv, noise.as_ref(), y);
         } else {
             let chunk = (m + threads - 1) / threads;
-            std::thread::scope(|sc| {
-                for (ti, ych) in y.chunks_mut(chunk * out).enumerate() {
-                    let conv = &conv;
-                    let noise = noise.as_ref();
-                    sc.spawn(move || {
-                        let rows = ych.len() / out;
-                        self.run_rows(patches_int, ti * chunk, rows, conv, noise, ych);
-                    });
-                }
-            });
+            let mut jobs: Vec<crate::util::pool::ScopedJob<'_>> = Vec::with_capacity(threads);
+            for (ti, ych) in y.chunks_mut(chunk * out).enumerate() {
+                let conv = &conv;
+                let noise = noise.as_ref();
+                jobs.push(Box::new(move || {
+                    let rows = ych.len() / out;
+                    self.run_rows(patches, ti * chunk, rows, conv, noise, ych);
+                }));
+            }
+            crate::util::pool::run_scoped(jobs);
         }
 
         let denom = (self.bits.w_levels() * self.bits.a_levels()) as f32;
-        for v in &mut y {
+        for v in y.iter_mut() {
             *v /= denom;
         }
-        Tensor::from_vec(&[m, out], y)
     }
 
-    /// Process rows [row0, row0+rows): gather each group's columns onto the
-    /// u8 grid, extract DAC planes with shift/mask, form i32 plane sums,
-    /// and convert row-batched.  One thread's worth of work.
+    /// Process rows [row0, row0+rows): gather each group's u8 columns,
+    /// extract DAC planes with shift/mask, form i32 plane sums, and
+    /// convert row-batched.  One worker's share of the matmul.
     fn run_rows(
         &self,
-        patches: &Tensor,
+        patches: &[u8],
         row0: usize,
         rows: usize,
         conv: &Converter,
@@ -278,13 +363,11 @@ impl PimEngine {
 
         for (g, gw) in self.groups.iter().enumerate() {
             let crange = self.plan.col_range(g);
-            // gather this group's patch columns, quantized to the u8 grid
+            // gather this group's patch columns (already on the u8 grid)
             for i in 0..rows {
                 let base = (row0 + i) * cols;
-                let src = &patches.data[base + crange.start..base + crange.end];
-                for (d, &v) in sc.a_grp[i * n..(i + 1) * n].iter_mut().zip(src) {
-                    *d = v as u8;
-                }
+                sc.a_grp[i * n..(i + 1) * n]
+                    .copy_from_slice(&patches[base + crange.start..base + crange.end]);
             }
             for l in 0..n_slices {
                 let slice_w = (delta as f32).powi(l as i32);
@@ -554,6 +637,41 @@ mod tests {
                     / 105.0;
                 assert!((y.data[i * 2 + oi] - exact).abs() < 2e-3);
             }
+        }
+    }
+
+    #[test]
+    fn reprogram_skips_unchanged_groups_and_matches_prepare() {
+        let q = bits();
+        let mut rng = Rng::new(9);
+        let (c, k, o, uc) = (4usize, 3usize, 3usize, 2usize); // 2 groups
+        let cols = c * k * k;
+        let w1 = Tensor::from_vec(
+            &[cols, o],
+            (0..cols * o).map(|_| rng.int_in(-7, 7) as f32).collect(),
+        );
+        let mut w2 = w1.clone();
+        // flip one weight in the LAST group only
+        let flip = (cols - 1) * o;
+        w2.data[flip] = if w2.data[flip] > 0.0 { -7.0 } else { 7.0 };
+        for scheme in [Scheme::Native, Scheme::Differential, Scheme::BitSerial] {
+            let mut engine = PimEngine::prepare(scheme, q, &w1, c, k, uc);
+            assert_eq!(engine.reprogram(&w1.data), 0, "{scheme}: identical weights, all skipped");
+            assert_eq!(engine.reprogram(&w2.data), 1, "{scheme}: exactly one group changed");
+            let fresh = PimEngine::prepare(scheme, q, &w2, c, k, uc);
+            assert_eq!(engine.w_cache, fresh.w_cache);
+            let a = Tensor::from_vec(
+                &[3, cols],
+                (0..3 * cols).map(|_| rng.int_in(0, 15) as f32).collect(),
+            );
+            let chip = ChipModel::ideal(7).with_noise(0.4);
+            let mut r1 = Rng::new(5);
+            let mut r2 = Rng::new(5);
+            assert_eq!(
+                engine.matmul(&a, &chip, &mut r1).data,
+                fresh.matmul(&a, &chip, &mut r2).data,
+                "{scheme}: reprogrammed engine must match a fresh prepare bitwise"
+            );
         }
     }
 

@@ -38,6 +38,15 @@ impl GroupPlan {
         debug_assert!(g < self.groups);
         g * self.n..(g + 1) * self.n
     }
+
+    /// The flat index range of group `g`'s rows in a row-major [cols, out]
+    /// weight matrix.  Groups are contiguous row blocks, so one group's
+    /// weights are one contiguous slice — what makes in-place
+    /// reprogramming and the unchanged-group comparison pure slice ops.
+    pub fn weight_range(&self, g: usize, out: usize) -> std::ops::Range<usize> {
+        let r = self.col_range(g);
+        r.start * out..r.end * out
+    }
 }
 
 pub fn plan_groups(c_in: usize, kernel: usize, unit_channels: usize) -> GroupPlan {
@@ -64,6 +73,14 @@ mod tests {
         assert_eq!(p.cols(), 288);
         assert_eq!(p.col_range(0), 0..144);
         assert_eq!(p.col_range(1), 144..288);
+    }
+
+    #[test]
+    fn weight_ranges_tile_the_matrix() {
+        let p = plan_groups(32, 3, 16);
+        let out = 64;
+        assert_eq!(p.weight_range(0, out), 0..144 * 64);
+        assert_eq!(p.weight_range(1, out), 144 * 64..288 * 64);
     }
 
     #[test]

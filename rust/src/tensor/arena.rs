@@ -1,0 +1,115 @@
+//! Grown-once buffer pool (EXPERIMENTS.md §Perf L3.5): recycles the large
+//! flat buffers of the training hot loop — im2col patches, quantized u8
+//! grids, transposed-GEMM outputs, scaled-gradient staging — so the
+//! steady-state train step performs zero large allocations.
+//!
+//! `take_*` hands out the smallest pooled buffer whose capacity fits the
+//! requested length (best fit), or a fresh one when nothing fits (the
+//! grow-once phase); `put_*` returns a buffer for reuse.  A training step
+//! requests the same multiset of sizes every iteration, so from step 2 on
+//! every take is a hit.  Ownership rules live in DESIGN.md §Arena.
+
+/// Size-classed free lists of reusable flat buffers.
+#[derive(Debug, Default)]
+pub struct BufPool {
+    f32s: Vec<Vec<f32>>,
+    u8s: Vec<Vec<u8>>,
+}
+
+impl BufPool {
+    pub fn new() -> Self {
+        BufPool::default()
+    }
+
+    /// Take a cleared f32 buffer with capacity for at least `len` elements
+    /// if one is pooled, else a fresh one with that capacity.
+    pub fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        take(&mut self.f32s, len)
+    }
+
+    /// Return an f32 buffer for reuse.
+    pub fn put_f32(&mut self, buf: Vec<f32>) {
+        if buf.capacity() > 0 {
+            self.f32s.push(buf);
+        }
+    }
+
+    /// Take a cleared u8 buffer with capacity for at least `len` elements
+    /// if one is pooled, else a fresh one with that capacity.
+    pub fn take_u8(&mut self, len: usize) -> Vec<u8> {
+        take(&mut self.u8s, len)
+    }
+
+    /// Return a u8 buffer for reuse.
+    pub fn put_u8(&mut self, buf: Vec<u8>) {
+        if buf.capacity() > 0 {
+            self.u8s.push(buf);
+        }
+    }
+
+    /// Number of buffers currently pooled (tests / diagnostics).
+    pub fn pooled(&self) -> usize {
+        self.f32s.len() + self.u8s.len()
+    }
+}
+
+/// Best-fit take: the smallest pooled buffer whose capacity covers `len`.
+/// A too-small buffer is left pooled for its own size class — growing it
+/// would reallocate anyway.
+fn take<T>(pool: &mut Vec<Vec<T>>, len: usize) -> Vec<T> {
+    let mut best: Option<usize> = None;
+    for (i, b) in pool.iter().enumerate() {
+        if b.capacity() >= len && best.map_or(true, |j| b.capacity() < pool[j].capacity()) {
+            best = Some(i);
+        }
+    }
+    match best {
+        Some(i) => {
+            let mut v = pool.swap_remove(i);
+            v.clear();
+            v
+        }
+        None => Vec::with_capacity(len),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_best_fit_and_steady_state_reuses() {
+        let mut p = BufPool::new();
+        let small = {
+            let mut v = p.take_f32(16);
+            v.resize(16, 1.0);
+            v
+        };
+        let big = {
+            let mut v = p.take_f32(1024);
+            v.resize(1024, 2.0);
+            v
+        };
+        p.put_f32(big);
+        p.put_f32(small);
+        assert_eq!(p.pooled(), 2);
+        // a 16-element request must not steal the 1024-capacity buffer
+        let v = p.take_f32(16);
+        assert!(v.capacity() >= 16 && v.capacity() < 1024);
+        assert!(v.is_empty(), "taken buffers come back cleared");
+        let v2 = p.take_f32(1000);
+        assert!(v2.capacity() >= 1024);
+        assert_eq!(p.pooled(), 0);
+    }
+
+    #[test]
+    fn miss_hands_out_fresh_capacity() {
+        let mut p = BufPool::new();
+        let v = p.take_u8(64);
+        assert!(v.capacity() >= 64);
+        p.put_u8(v);
+        // zero-capacity buffers are not worth pooling
+        p.put_u8(Vec::new());
+        assert_eq!(p.pooled(), 1);
+    }
+}

@@ -136,18 +136,34 @@ pub fn gemm_acc_u8_bin(m: usize, k: usize, n: usize, a: &[u8], b: &[u8], c: &mut
 
 /// C = A * B (allocating convenience wrapper, dense).
 pub fn gemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
-    let mut c = vec![0.0; m * n];
-    gemm_acc(m, k, n, a, b, &mut c);
+    let mut c = Vec::new();
+    gemm_into(m, k, n, a, b, &mut c);
     c
+}
+
+/// C = A * B into a reused buffer (`c` is cleared, zero-filled and resized
+/// to m·n): the zero-allocation twin of [`gemm`] for arena callers.
+pub fn gemm_into(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut Vec<f32>) {
+    c.clear();
+    c.resize(m * n, 0.0);
+    gemm_acc(m, k, n, a, b, c);
 }
 
 /// C[m,n] = A[m,p] · B[n,p]ᵀ (both row-major).  The data-gradient pass of
 /// the native trainer: dPatches[M,K] = dY[M,O] · W[K,O]ᵀ.  Dot-product
 /// form — both operands stream row-wise.
 pub fn gemm_nt(m: usize, p: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut c = Vec::new();
+    gemm_nt_into(m, p, n, a, b, &mut c);
+    c
+}
+
+/// [`gemm_nt`] into a reused buffer (cleared and resized to m·n).
+pub fn gemm_nt_into(m: usize, p: usize, n: usize, a: &[f32], b: &[f32], c: &mut Vec<f32>) {
     assert_eq!(a.len(), m * p);
     assert_eq!(b.len(), n * p);
-    let mut c = vec![0.0f32; m * n];
+    c.clear();
+    c.resize(m * n, 0.0);
     for i in 0..m {
         let arow = &a[i * p..(i + 1) * p];
         let crow = &mut c[i * n..(i + 1) * n];
@@ -160,16 +176,23 @@ pub fn gemm_nt(m: usize, p: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
             crow[j] = s;
         }
     }
-    c
 }
 
 /// C[m,n] = A[p,m]ᵀ · B[p,n] (both row-major).  The weight-gradient pass:
 /// dW[K,O] = patches[M,K]ᵀ · dY[M,O].  Keeps the zero-skip on A — patch
 /// rows are post-ReLU quantized activations, which carry many exact zeros.
 pub fn gemm_tn(p: usize, m: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
+    let mut c = Vec::new();
+    gemm_tn_into(p, m, n, a, b, &mut c);
+    c
+}
+
+/// [`gemm_tn`] into a reused buffer (cleared and resized to m·n).
+pub fn gemm_tn_into(p: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut Vec<f32>) {
     assert_eq!(a.len(), p * m);
     assert_eq!(b.len(), p * n);
-    let mut c = vec![0.0f32; m * n];
+    c.clear();
+    c.resize(m * n, 0.0);
     for q in 0..p {
         let arow = &a[q * m..(q + 1) * m];
         let brow = &b[q * n..(q + 1) * n];
@@ -183,7 +206,6 @@ pub fn gemm_tn(p: usize, m: usize, n: usize, a: &[f32], b: &[f32]) -> Vec<f32> {
             }
         }
     }
-    c
 }
 
 /// C = A * B via the sparse kernel (digital conv path: A is post-ReLU

@@ -5,6 +5,7 @@
 //! (grouped integer MAC) lives in `crate::pim`; this module provides the
 //! digital layers (first conv, shortcuts, BN, FC) and the patch plumbing.
 
+pub mod arena;
 pub mod gemm;
 pub mod ops;
 

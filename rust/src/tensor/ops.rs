@@ -7,6 +7,37 @@
 //! what lets `crate::pim` reuse these patches directly.
 
 use super::{gemm::gemm, Tensor};
+use crate::util::pool;
+
+/// Minimum elements touched before a threaded op dispatches to the worker
+/// pool when threading is fully automatic; below this (CI smoke
+/// geometries) the queue handoff costs more than the loop itself, so the
+/// op runs inline — matching the engine's skip-at-1 behavior.  An
+/// explicit pin — a nonzero `threads` argument or `$PIM_QAT_THREADS` — is
+/// always honored.
+pub(crate) const PAR_MIN_ELEMS: usize = 1 << 14;
+
+/// The `$PIM_QAT_THREADS` pin, when set to a positive count.
+fn env_threads() -> Option<usize> {
+    std::env::var("PIM_QAT_THREADS").ok().and_then(|v| v.parse::<usize>().ok()).filter(|&t| t > 0)
+}
+
+/// Thread count for a threaded op over `work` total elements: explicit
+/// pins win; otherwise tiny workloads run inline (see [`PAR_MIN_ELEMS`]).
+pub(crate) fn work_threads(requested: usize, work: usize, cap: usize) -> usize {
+    if requested == 0 && env_threads().is_none() && work < PAR_MIN_ELEMS {
+        1
+    } else {
+        resolve_threads(requested).min(cap.max(1)).max(1)
+    }
+}
+
+/// SAME-conv output spatial dims for an (h, w) input, kernel `k`, stride
+/// `s` — lets arena callers size patch buffers before running im2col.
+pub fn conv_out_dims(h: usize, w: usize, k: usize, s: usize) -> (usize, usize) {
+    let pad = k / 2;
+    ((h + 2 * pad - k) / s + 1, (w + 2 * pad - k) / s + 1)
+}
 
 /// Extract SAME-padded conv patches: x [B,H,W,C] → ([M, C*k*k], out_h, out_w)
 /// with stride `s` and the channel-major layout documented above.
@@ -14,38 +45,53 @@ pub fn im2col(x: &Tensor, k: usize, s: usize) -> (Tensor, usize, usize) {
     im2col_threaded(x, k, s, 1)
 }
 
-/// `im2col` with the per-image work split across `threads` scoped threads
-/// (0 = auto: $PIM_QAT_THREADS or the available parallelism).  Every patch
-/// row is a pure function of the input, so the output is bit-identical to
-/// the single-threaded path for any thread count.
+/// `im2col` with the per-image work split across `threads` worker-pool
+/// jobs (0 = auto: $PIM_QAT_THREADS or the available parallelism).  Every
+/// patch row is a pure function of the input, so the output is
+/// bit-identical to the single-threaded path for any thread count.
 pub fn im2col_threaded(x: &Tensor, k: usize, s: usize, threads: usize) -> (Tensor, usize, usize) {
+    let mut out = Vec::new();
+    let (oh, ow) = im2col_into(x, k, s, threads, &mut out);
+    let (b, c) = (x.shape[0], x.shape[3]);
+    (Tensor::from_vec(&[b * oh * ow, c * k * k], out), oh, ow)
+}
+
+/// [`im2col_threaded`] writing into a reused buffer: `out` is cleared,
+/// zero-filled and resized to B·oh·ow·C·k² — no allocation once it has
+/// grown to size (the arena path of the training hot loop).
+pub fn im2col_into(
+    x: &Tensor,
+    k: usize,
+    s: usize,
+    threads: usize,
+    out: &mut Vec<f32>,
+) -> (usize, usize) {
     assert_eq!(x.rank(), 4, "im2col expects NHWC");
     let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
-    let pad = k / 2;
-    let oh = (h + 2 * pad - k) / s + 1;
-    let ow = (w + 2 * pad - k) / s + 1;
+    let (oh, ow) = conv_out_dims(h, w, k, s);
     let cols = c * k * k;
     let img = oh * ow * cols;
-    let mut out = vec![0.0f32; b * img];
-    let threads = resolve_threads(threads).min(b.max(1)).max(1);
+    out.clear();
+    out.resize(b * img, 0.0);
+    let threads = work_threads(threads, b * img, b);
     if threads <= 1 {
         for (bi, chunk) in out.chunks_mut(img).enumerate() {
             im2col_image(x, bi, k, s, oh, ow, chunk);
         }
     } else {
         let per = (b + threads - 1) / threads;
-        std::thread::scope(|sc| {
-            for (ti, block) in out.chunks_mut(per * img).enumerate() {
-                let x = &*x;
-                sc.spawn(move || {
-                    for (off, chunk) in block.chunks_mut(img).enumerate() {
-                        im2col_image(x, ti * per + off, k, s, oh, ow, chunk);
-                    }
-                });
-            }
-        });
+        let mut jobs: Vec<pool::ScopedJob<'_>> = Vec::with_capacity(threads);
+        for (ti, block) in out.chunks_mut(per * img).enumerate() {
+            let x = &*x;
+            jobs.push(Box::new(move || {
+                for (off, chunk) in block.chunks_mut(img).enumerate() {
+                    im2col_image(x, ti * per + off, k, s, oh, ow, chunk);
+                }
+            }));
+        }
+        pool::run_scoped(jobs);
     }
-    (Tensor::from_vec(&[b * oh * ow, cols], out), oh, ow)
+    (oh, ow)
 }
 
 /// Patch extraction of one image into its [oh*ow, cols] output block.
@@ -82,53 +128,64 @@ pub fn resolve_threads(requested: usize) -> usize {
     if requested > 0 {
         return requested;
     }
-    std::env::var("PIM_QAT_THREADS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .filter(|&t| t > 0)
+    env_threads()
         .unwrap_or_else(|| std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
 }
 
 /// Adjoint of [`im2col`]: scatter-add patch-row gradients [B*oh*ow, C*k*k]
 /// back into an input-shaped [B,H,W,C] tensor (the data-gradient pass of a
 /// SAME conv — "conv transpose" in backprop terms).  Images are disjoint
-/// output slices, so the work is split per-image across scoped threads with
-/// bit-identical results at any thread count.
+/// output slices, so the work is split per-image across worker-pool jobs
+/// with bit-identical results at any thread count; tiny workloads skip the
+/// dispatch entirely.
 pub fn col2im(dpatches: &Tensor, x_shape: &[usize], k: usize, s: usize) -> Tensor {
     assert_eq!(x_shape.len(), 4, "col2im expects an NHWC target shape");
+    let (oh, ow) = conv_out_dims(x_shape[1], x_shape[2], k, s);
+    assert_eq!(
+        dpatches.shape,
+        vec![x_shape[0] * oh * ow, x_shape[3] * k * k],
+        "patch gradient shape"
+    );
+    let mut out = Vec::new();
+    col2im_into(&dpatches.data, x_shape, k, s, &mut out);
+    Tensor::from_vec(x_shape, out)
+}
+
+/// [`col2im`] from a raw patch-gradient slice into a reused buffer: `out`
+/// is cleared, zero-filled and resized to B·H·W·C — no allocation once it
+/// has grown to size.
+pub fn col2im_into(dpatches: &[f32], x_shape: &[usize], k: usize, s: usize, out: &mut Vec<f32>) {
+    assert_eq!(x_shape.len(), 4, "col2im expects an NHWC target shape");
     let (b, h, w, c) = (x_shape[0], x_shape[1], x_shape[2], x_shape[3]);
-    let pad = k / 2;
-    let oh = (h + 2 * pad - k) / s + 1;
-    let ow = (w + 2 * pad - k) / s + 1;
+    let (oh, ow) = conv_out_dims(h, w, k, s);
     let cols = c * k * k;
-    assert_eq!(dpatches.shape, vec![b * oh * ow, cols], "patch gradient shape");
+    assert_eq!(dpatches.len(), b * oh * ow * cols, "patch gradient size");
     let img = h * w * c;
-    let mut out = vec![0.0f32; b * img];
-    let threads = resolve_threads(0).min(b.max(1)).max(1);
+    out.clear();
+    out.resize(b * img, 0.0);
+    let threads = work_threads(0, dpatches.len(), b);
     if threads <= 1 {
         for (bi, chunk) in out.chunks_mut(img).enumerate() {
             col2im_image(dpatches, bi, h, w, c, k, s, oh, ow, chunk);
         }
     } else {
         let per = (b + threads - 1) / threads;
-        std::thread::scope(|sc| {
-            for (ti, block) in out.chunks_mut(per * img).enumerate() {
-                let dp = &*dpatches;
-                sc.spawn(move || {
-                    for (off, chunk) in block.chunks_mut(img).enumerate() {
-                        col2im_image(dp, ti * per + off, h, w, c, k, s, oh, ow, chunk);
-                    }
-                });
-            }
-        });
+        let mut jobs: Vec<pool::ScopedJob<'_>> = Vec::with_capacity(threads);
+        for (ti, block) in out.chunks_mut(per * img).enumerate() {
+            jobs.push(Box::new(move || {
+                for (off, chunk) in block.chunks_mut(img).enumerate() {
+                    col2im_image(dpatches, ti * per + off, h, w, c, k, s, oh, ow, chunk);
+                }
+            }));
+        }
+        pool::run_scoped(jobs);
     }
-    Tensor::from_vec(&[b, h, w, c], out)
 }
 
 /// Scatter one image's patch gradients into its [h*w*c] output block.
 #[allow(clippy::too_many_arguments)]
 fn col2im_image(
-    dp: &Tensor,
+    dp: &[f32],
     bi: usize,
     h: usize,
     w: usize,
@@ -157,7 +214,7 @@ fn col2im_image(
                     let dst = ((iy as usize) * w + ix as usize) * c;
                     let p = dy * k + dx;
                     for ci in 0..c {
-                        out[dst + ci] += dp.data[row + ci * k * k + p];
+                        out[dst + ci] += dp[row + ci * k * k + p];
                     }
                 }
             }
@@ -189,6 +246,13 @@ pub fn weights_to_cols(w: &Tensor) -> Tensor {
 /// [C*k*k, O] back to HWIO [kh,kw,C,O] (the weight-gradient pass).
 pub fn cols_to_weights(g: &Tensor, kh: usize, kw: usize, c: usize, o: usize) -> Tensor {
     assert_eq!(g.shape, vec![c * kh * kw, o], "cols gradient shape");
+    cols_to_weights_from(&g.data, kh, kw, c, o)
+}
+
+/// [`cols_to_weights`] from a raw [C·k·k·O] slice — arena callers keep the
+/// column gradient in a pooled buffer instead of a `Tensor`.
+pub fn cols_to_weights_from(g: &[f32], kh: usize, kw: usize, c: usize, o: usize) -> Tensor {
+    assert_eq!(g.len(), c * kh * kw * o, "cols gradient size");
     let mut out = vec![0.0f32; kh * kw * c * o];
     for dy in 0..kh {
         for dx in 0..kw {
@@ -196,12 +260,21 @@ pub fn cols_to_weights(g: &Tensor, kh: usize, kw: usize, c: usize, o: usize) -> 
                 for oi in 0..o {
                     let src = (ci * kh * kw + dy * kw + dx) * o + oi;
                     let dst = ((dy * kw + dx) * c + ci) * o + oi;
-                    out[dst] = g.data[src];
+                    out[dst] = g[src];
                 }
             }
         }
     }
     Tensor::from_vec(&[kh, kw, c, o], out)
+}
+
+/// Quantize unit-scale activations onto the integer u8 grid the PIM engine
+/// consumes: `dst[i] = round_ties_even(src[i] · levels)` (values must land
+/// in [0, 255]).  Clears and refills `dst` — zero allocations once the
+/// buffer has grown to size.
+pub fn quantize_into_u8(src: &[f32], levels: f32, dst: &mut Vec<u8>) {
+    dst.clear();
+    dst.extend(src.iter().map(|&v| crate::chip::round_ties_even(v * levels) as u8));
 }
 
 /// Digital SAME conv, NHWC × HWIO → NHWC.
@@ -434,6 +507,43 @@ mod tests {
                 dx.data.iter().zip(&x.data).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
             assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "k={k} s={s}: {lhs} vs {rhs}");
         }
+    }
+
+    #[test]
+    fn into_variants_match_and_reuse_buffers() {
+        let mut rng = Rng::new(21);
+        let x = Tensor::from_vec(
+            &[3, 5, 5, 2],
+            (0..150).map(|_| rng.normal_in(0.0, 1.0)).collect(),
+        );
+        let (p, oh, ow) = im2col_threaded(&x, 3, 1, 0);
+        let mut buf = Vec::new();
+        let (oh2, ow2) = im2col_into(&x, 3, 1, 0, &mut buf);
+        assert_eq!((oh, ow), (oh2, ow2));
+        assert_eq!(p.data, buf);
+        let cap = buf.capacity();
+        // second fill into the grown buffer: same result, no growth
+        im2col_into(&x, 3, 1, 0, &mut buf);
+        assert_eq!(p.data, buf);
+        assert_eq!(buf.capacity(), cap);
+
+        let g = Tensor::from_vec(&p.shape, (0..p.len()).map(|_| rng.normal_in(0.0, 1.0)).collect());
+        let dx = col2im(&g, &x.shape, 3, 1);
+        let mut dbuf = Vec::new();
+        col2im_into(&g.data, &x.shape, 3, 1, &mut dbuf);
+        assert_eq!(dx.data, dbuf);
+    }
+
+    #[test]
+    fn quantize_into_u8_rounds_ties_even() {
+        let src = vec![0.0, 1.0, 0.5, 0.1];
+        let mut dst = Vec::new();
+        quantize_into_u8(&src, 15.0, &mut dst);
+        // 0.5·15 = 7.5 → 8 (ties-to-even), 0.1·15 = 1.5 → 2
+        assert_eq!(dst, vec![0, 15, 8, 2]);
+        let cap = dst.capacity();
+        quantize_into_u8(&src, 15.0, &mut dst);
+        assert_eq!(dst.capacity(), cap);
     }
 
     #[test]

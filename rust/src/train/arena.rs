@@ -1,0 +1,95 @@
+//! Per-job persistent training state that outlives a step (EXPERIMENTS.md
+//! §Perf L3.5): the grown-once buffer pool and the cached per-layer PIM
+//! engines.
+//!
+//! Ownership rules (DESIGN.md §Arena): a buffer taken from the pool either
+//! returns to it within the same step (transients — quantized u8 grids,
+//! integer-weight staging, scaled-gradient copies, transposed-GEMM
+//! outputs) or rides inside a tape and is reclaimed when the backward pass
+//! consumes that tape (im2col patches).  Engines are keyed by layer name
+//! and reprogrammed in place each step; a geometry, scheme or bit-width
+//! change rebuilds them.
+
+use std::collections::BTreeMap;
+
+use crate::config::Scheme;
+use crate::pim::layout::plan_groups;
+use crate::pim::{PimEngine, QuantBits};
+use crate::tensor::arena::BufPool;
+
+/// Reusable state threaded through the native trainer's hot loop.
+#[derive(Default)]
+pub struct TrainArena {
+    /// Grown-once flat buffers (patches, u8 grids, GEMM scratch, …).
+    pub pool: BufPool,
+    /// One persistent engine per PIM conv layer, reprogrammed in place.
+    pub engines: BTreeMap<String, PimEngine>,
+}
+
+impl TrainArena {
+    pub fn new() -> Self {
+        TrainArena::default()
+    }
+
+    /// Make sure the cached engine for layer `name` exists, matches the
+    /// layer geometry, and carries this step's integer weights `w_int`
+    /// ([C·k·k, O], im2col column order).  Cache hit → in-place
+    /// [`PimEngine::reprogram`] (unchanged groups skipped); miss, or a
+    /// scheme / bits / shape change → fresh [`PimEngine::prepare_cols`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn ensure_engine(
+        &mut self,
+        name: &str,
+        scheme: Scheme,
+        bits: QuantBits,
+        w_int: &[f32],
+        out: usize,
+        c_in: usize,
+        kernel: usize,
+        unit_channels: usize,
+    ) {
+        let plan = plan_groups(c_in, kernel, unit_channels);
+        if let Some(e) = self.engines.get_mut(name) {
+            if e.scheme == scheme && e.bits == bits && e.out == out && e.plan == plan {
+                e.reprogram(w_int);
+                return;
+            }
+        }
+        let engine = PimEngine::prepare_cols(scheme, bits, w_int, out, c_in, kernel, unit_channels);
+        self.engines.insert(name.to_string(), engine);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::ChipModel;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ensure_engine_caches_and_invalidates() {
+        let mut arena = TrainArena::new();
+        let bits = QuantBits::default();
+        let mut rng = Rng::new(3);
+        let (c, k, o, uc) = (2usize, 3usize, 4usize, 1usize);
+        let w: Vec<f32> = (0..c * k * k * o).map(|_| rng.int_in(-7, 7) as f32).collect();
+        arena.ensure_engine("l0", Scheme::BitSerial, bits, &w, o, c, k, uc);
+        assert_eq!(arena.engines.len(), 1);
+        // same geometry: cache hit, engine reprogrammed in place
+        arena.ensure_engine("l0", Scheme::BitSerial, bits, &w, o, c, k, uc);
+        assert_eq!(arena.engines.len(), 1);
+        // scheme change invalidates (rebuild under the same key)
+        arena.ensure_engine("l0", Scheme::Native, bits, &w, o, c, k, uc);
+        assert_eq!(arena.engines.len(), 1);
+        assert_eq!(arena.engines.get("l0").unwrap().scheme, Scheme::Native);
+        // the cached engine executes
+        let a = Tensor::from_vec(
+            &[2, c * k * k],
+            (0..2 * c * k * k).map(|_| rng.int_in(0, 15) as f32).collect(),
+        );
+        let mut nrng = Rng::new(0);
+        let y = arena.engines.get("l0").unwrap().matmul(&a, &ChipModel::ideal(7), &mut nrng);
+        assert_eq!(y.shape, vec![2, o]);
+    }
+}

@@ -26,10 +26,12 @@
 //! `PIM_QAT_BACKEND` env var (see DESIGN.md §CLI surface); `auto` prefers
 //! PJRT when it is compiled in *and* artifacts exist, else native.
 
+pub mod arena;
 pub mod checkpoint;
 pub mod native;
 pub mod schedule;
 
+pub use arena::TrainArena;
 pub use checkpoint::Checkpoint;
 pub use native::NativeBackend;
 

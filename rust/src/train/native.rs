@@ -6,7 +6,7 @@
 //!
 //! * forward in training mode — digital first conv / shortcuts / FC
 //!   (modified DoReFa, Eqn. A20), PIM-mapped convs through the integer
-//!   [`PimEngine`] at the training resolution (`mode=ours`, Eqn. 4a) or the
+//!   [`crate::pim::PimEngine`] at the training resolution (`mode=ours`, Eqn. 4a) or the
 //!   digital product (`baseline`; `ams` adds the Rekhi-et-al additive
 //!   Gaussian), batch-statistics BN with running-stat momentum updates;
 //! * backward — straight-through estimators for every quantizer
@@ -16,9 +16,16 @@
 //! * update — SGD with Nesterov momentum 0.9, weight decay 1e-4, and the
 //!   multi-step LR schedule owned by the caller.
 //!
-//! Heavy ops (im2col/col2im, the PIM plane GEMMs) run multi-threaded via
-//! the scoped-thread machinery in `tensor::ops` and `pim::engine`; set
+//! Heavy ops (im2col/col2im, the PIM plane GEMMs, the ξ digital twin) run
+//! multi-threaded on the shared worker pool (`util::pool`); set
 //! `PIM_QAT_THREADS` to pin the worker count.
+//!
+//! §Perf L3.5 (EXPERIMENTS.md): the hot loop is built around persistent,
+//! incrementally-updated state in a [`TrainArena`] — one cached
+//! [`crate::pim::PimEngine`] per PIM conv, reprogrammed in place each step with
+//! unchanged groups skipped, plus a grown-once buffer pool for every
+//! patch-scale temporary.  From step 2 on, a train step performs zero
+//! large allocations (pinned by the `alloc`-counter test below).
 
 use std::collections::BTreeMap;
 
@@ -28,14 +35,17 @@ use crate::chip::ChipModel;
 use crate::config::{rescale, JobConfig, Mode, Scheme};
 use crate::data::{Dataset, EpochIter};
 use crate::nn::{grad, init, quant, vgg11_plan, ExecSpec};
-use crate::pim::{PimEngine, QuantBits};
+use crate::pim::QuantBits;
 use crate::runtime::Manifest;
 use crate::runtime::ModelEntry;
-use crate::tensor::gemm::{gemm, gemm_nt, gemm_tn};
+use crate::tensor::arena::BufPool;
+use crate::tensor::gemm::{gemm, gemm_acc, gemm_nt, gemm_tn, gemm_tn_into};
 use crate::tensor::{ops, Tensor};
+use crate::util::pool;
 use crate::util::rng::Rng;
+use crate::util::Welford;
 
-use super::{schedule, Backend, Checkpoint, StepLog, TrainResult};
+use super::{schedule, Backend, Checkpoint, StepLog, TrainArena, TrainResult};
 
 /// The zero-dependency training backend (default).  Holds only the model
 /// registry; per-job state lives in [`NativeTrainer`].
@@ -199,11 +209,93 @@ struct VggTape {
     pool: Option<(Vec<u32>, Vec<usize>)>,
 }
 
-/// Biased variance of a slice, in f64 (the jnp.var convention of Eqn. 8).
-fn variance(v: &[f32]) -> f64 {
-    let n = v.len().max(1) as f64;
-    let mean = v.iter().map(|&x| x as f64).sum::<f64>() / n;
-    v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n
+/// Row tile of the fused ξ twin: small enough that the per-worker scratch
+/// (TILE·O floats) stays cache-resident, large enough to amortize the GEMM
+/// setup.
+const XI_TILE: usize = 64;
+
+/// ξ statistics for the GSTE backward (Eqn. 8), fused: one pass computes
+/// the biased (population) variances of the PIM output `y_pim` and of the
+/// exact digital twin `patches · wcols` together.  The twin is evaluated
+/// tile-by-tile into pooled scratch and fed straight into per-tile Welford
+/// accumulators — it is never materialized.  Tiles are a *fixed* XI_TILE
+/// rows regardless of worker count and are merged in tile order, so the
+/// result is bit-identical for any thread count / `PIM_QAT_THREADS`
+/// setting — the trainer's cross-machine reproducibility contract.
+/// Returns (VAR[y_PIM], VAR[y]).
+fn xi_variance_fused(
+    m: usize,
+    kc: usize,
+    o: usize,
+    patches: &[f32],
+    wcols: &[f32],
+    y_pim: &[f32],
+    pool_bufs: &mut BufPool,
+) -> (f64, f64) {
+    let n_tiles = (m + XI_TILE - 1) / XI_TILE;
+    let threads = ops::work_threads(0, m * o, n_tiles);
+    let mut scratch = pool_bufs.take_f32(threads * XI_TILE * o);
+    scratch.resize(threads * XI_TILE * o, 0.0);
+    let mut parts: Vec<(Welford, Welford)> = vec![Default::default(); n_tiles];
+    if threads <= 1 {
+        for (t, part) in parts.iter_mut().enumerate() {
+            *part = twin_welford_tile(t, m, kc, o, patches, wcols, y_pim, &mut scratch);
+        }
+    } else {
+        let per = (n_tiles + threads - 1) / threads;
+        let mut jobs: Vec<pool::ScopedJob<'_>> = Vec::with_capacity(threads);
+        for (w, (block, tile)) in
+            parts.chunks_mut(per).zip(scratch.chunks_mut(XI_TILE * o)).enumerate()
+        {
+            jobs.push(Box::new(move || {
+                for (off, part) in block.iter_mut().enumerate() {
+                    let t = w * per + off;
+                    *part = twin_welford_tile(t, m, kc, o, patches, wcols, y_pim, tile);
+                }
+            }));
+        }
+        pool::run_scoped(jobs);
+    }
+    pool_bufs.put_f32(scratch);
+    let mut wp = Welford::default();
+    let mut wx = Welford::default();
+    for (p, x) in &parts {
+        wp.merge(p);
+        wx.merge(x);
+    }
+    (wp.var(), wx.var())
+}
+
+/// One fixed tile of [`xi_variance_fused`]: rows
+/// [t·XI_TILE, min((t+1)·XI_TILE, m)), through `tile` ([XI_TILE·o]
+/// scratch).  Returns (Welford over y_pim, Welford over the exact twin)
+/// for exactly this tile — self-contained, so the caller's tile-order
+/// merge is independent of which worker ran it.
+#[allow(clippy::too_many_arguments)]
+fn twin_welford_tile(
+    t: usize,
+    m: usize,
+    kc: usize,
+    o: usize,
+    patches: &[f32],
+    wcols: &[f32],
+    y_pim: &[f32],
+    tile: &mut [f32],
+) -> (Welford, Welford) {
+    let r0 = t * XI_TILE;
+    let tr = XI_TILE.min(m - r0);
+    let s = &mut tile[..tr * o];
+    s.fill(0.0);
+    gemm_acc(tr, kc, o, &patches[r0 * kc..(r0 + tr) * kc], wcols, s);
+    let mut wp = Welford::default();
+    let mut wx = Welford::default();
+    for &v in s.iter() {
+        wx.push(v as f64);
+    }
+    for &v in &y_pim[r0 * o..(r0 + tr) * o] {
+        wp.push(v as f64);
+    }
+    (wp, wx)
 }
 
 // ---------------------------------------------------------------------------
@@ -234,6 +326,10 @@ pub struct NativeTrainer {
     params: BTreeMap<String, Tensor>,
     vel: BTreeMap<String, Tensor>,
     bn_state: BTreeMap<String, (Vec<f32>, Vec<f32>)>,
+    /// Persistent hot-loop state (§Perf L3.5): cached per-layer engines +
+    /// the grown-once buffer pool.  Taken out of `self` for the duration
+    /// of each step and restored after.
+    arena: TrainArena,
 }
 
 impl NativeTrainer {
@@ -290,6 +386,7 @@ impl NativeTrainer {
             params,
             vel,
             bn_state,
+            arena: TrainArena::new(),
         })
     }
 
@@ -303,11 +400,16 @@ impl NativeTrainer {
         lr: f32,
         rng: &mut Rng,
     ) -> Result<(f32, usize)> {
-        let (loss, correct, grads, stats) = match self.entry.arch.as_str() {
-            "resnet" => self.resnet_step(x, y, rng)?,
-            "vgg11" => self.vgg_step(x, y, rng)?,
-            a => return Err(anyhow!("unknown arch {a:?}")),
+        // the arena leaves `self` for the step so the step functions can
+        // borrow parameters (&self) and the arena (&mut) independently
+        let mut arena = std::mem::take(&mut self.arena);
+        let step = match self.entry.arch.as_str() {
+            "resnet" => self.resnet_step(x, y, rng, &mut arena),
+            "vgg11" => self.vgg_step(x, y, rng, &mut arena),
+            a => Err(anyhow!("unknown arch {a:?}")),
         };
+        self.arena = arena;
+        let (loss, correct, grads, stats) = step?;
 
         // BN running statistics: (1-m)·old + m·batch (training-mode BN)
         let mom = self.bn_momentum;
@@ -377,12 +479,13 @@ impl NativeTrainer {
         x: &Tensor,
         name: &str,
         stride: usize,
+        pool_bufs: &mut BufPool,
     ) -> Result<(Tensor, ConvTape)> {
         let w = self.param(name)?;
         let (kh, o) = (w.shape[0], w.shape[3]);
         let wq = grad::weight_quant_fwd(w, &self.bits, o);
         let cols = ops::weights_to_cols(&wq.q_unit);
-        let (mut y, ctx) = grad::conv_cols_fwd(x, &cols, kh, stride);
+        let (mut y, ctx) = grad::conv_cols_fwd(x, &cols, kh, stride, pool_bufs);
         let s = wq.scale;
         for v in &mut y.data {
             *v *= s;
@@ -414,37 +517,50 @@ impl NativeTrainer {
         name: &str,
         stride: usize,
         rng: &mut Rng,
+        arena: &mut TrainArena,
     ) -> Result<(Tensor, ConvTape)> {
         let w = self.param(name)?;
         let (kh, c_in, o) = (w.shape[0], w.shape[2], w.shape[3]);
         let wq = grad::weight_quant_fwd(w, &self.bits, o);
         let cols = ops::weights_to_cols(&wq.q_unit);
-        let (patches, oh, ow) = ops::im2col_threaded(x, kh, stride, 0);
+        let kc = cols.shape[0];
+        let (patches, oh, ow) = grad::pooled_im2col(x, kh, stride, kc, &mut arena.pool);
         let m = patches.shape[0];
-        let kc = patches.shape[1];
         let (y, coef_bwd) = match self.mode {
             Mode::Ours => {
                 let wl = self.bits.w_levels() as f32;
                 let al = self.bits.a_levels() as f32;
-                let cols_int = cols.clone().map(|v| crate::chip::round_ties_even(v * wl));
-                let engine = PimEngine::prepare(
+                // integer weights, staged in a pooled buffer; the cached
+                // engine reprograms in place, skipping unchanged groups
+                let mut wint = arena.pool.take_f32(cols.len());
+                wint.extend(cols.data.iter().map(|&v| crate::chip::round_ties_even(v * wl)));
+                arena.ensure_engine(
+                    name,
                     self.scheme,
                     self.bits,
-                    &cols_int,
+                    &wint,
+                    o,
                     c_in,
                     kh,
                     self.unit_channels,
                 );
-                let pint = patches.clone().map(|v| crate::chip::round_ties_even(v * al));
-                let y_pim = engine.matmul(&pint, &self.chip, rng);
+                arena.pool.put_f32(wint);
+                // u8 activation grid, pooled
+                let mut pint = arena.pool.take_u8(patches.len());
+                ops::quantize_into_u8(&patches.data, al, &mut pint);
+                let engine = arena.engines.get(name).expect("engine ensured above");
+                let mut y = Vec::new();
+                engine.matmul_u8_into(&pint, &self.chip, rng, &mut y);
+                arena.pool.put_u8(pint);
                 let xi = if self.bwd_rescale {
-                    let y_ex = gemm(m, kc, o, &patches.data, &cols.data);
-                    ((variance(&y_pim.data) + 1e-12) / (variance(&y_ex) + 1e-12)).sqrt() as f32
+                    let pb = &mut arena.pool;
+                    let (var_pim, var_ex) =
+                        xi_variance_fused(m, kc, o, &patches.data, &cols.data, &y, pb);
+                    ((var_pim + 1e-12) / (var_ex + 1e-12)).sqrt() as f32
                 } else {
                     1.0
                 };
                 let cf = self.eta * wq.scale;
-                let mut y = y_pim.data;
                 for v in &mut y {
                     *v *= cf;
                 }
@@ -483,27 +599,33 @@ impl NativeTrainer {
 
     /// Shared conv backward (digital and PIM — Theorem 1 makes them the
     /// same up to `coef_bwd`).  Accumulates dW into `grads`, returns dx.
+    /// Every patch-scale intermediate (scaled dy, dW columns, the patch
+    /// gradient inside `conv_cols_bwd`) lives in pooled buffers.
     fn conv_bwd(
         &self,
         tape: &ConvTape,
         dy: &Tensor,
         grads: &mut BTreeMap<String, Tensor>,
+        pool_bufs: &mut BufPool,
     ) -> Tensor {
-        let mut dy2 = dy.clone();
-        for v in &mut dy2.data {
-            *v *= tape.coef_bwd;
-        }
-        let (dx, dwcols) = grad::conv_cols_bwd(
+        let mut dy2 = pool_bufs.take_f32(dy.len());
+        dy2.extend(dy.data.iter().map(|&v| v * tape.coef_bwd));
+        let mut dwcols = pool_bufs.take_f32(tape.cols_unit.len());
+        let dx = grad::conv_cols_bwd(
             &tape.ctx,
             &tape.cols_unit,
             &tape.x_shape,
             tape.kernel,
             tape.stride,
             &dy2,
+            pool_bufs,
+            &mut dwcols,
         );
+        pool_bufs.put_f32(dy2);
         let (kh, kw, c, o) =
             (tape.w_shape[0], tape.w_shape[1], tape.w_shape[2], tape.w_shape[3]);
-        let dq = ops::cols_to_weights(&dwcols, kh, kw, c, o);
+        let dq = ops::cols_to_weights_from(&dwcols, kh, kw, c, o);
+        pool_bufs.put_f32(dwcols);
         let dw = grad::weight_quant_bwd(&tape.wq, &dq);
         grads.insert(tape.name.clone(), dw);
         dx
@@ -517,18 +639,20 @@ impl NativeTrainer {
         tape: &ConvTape,
         dy: &Tensor,
         grads: &mut BTreeMap<String, Tensor>,
+        pool_bufs: &mut BufPool,
     ) {
-        let mut dy2 = dy.clone();
-        for v in &mut dy2.data {
-            *v *= tape.coef_bwd;
-        }
+        let mut dy2 = pool_bufs.take_f32(dy.len());
+        dy2.extend(dy.data.iter().map(|&v| v * tape.coef_bwd));
         let m = tape.ctx.patches.shape[0];
         let kc = tape.ctx.patches.shape[1];
         let o = tape.cols_unit.shape[1];
-        let dwcols = gemm_tn(m, kc, o, &tape.ctx.patches.data, &dy2.data);
+        let mut dwcols = pool_bufs.take_f32(kc * o);
+        gemm_tn_into(m, kc, o, &tape.ctx.patches.data, &dy2, &mut dwcols);
+        pool_bufs.put_f32(dy2);
         let (kh, kw, c, ocnt) =
             (tape.w_shape[0], tape.w_shape[1], tape.w_shape[2], tape.w_shape[3]);
-        let dq = ops::cols_to_weights(&Tensor::from_vec(&[kc, o], dwcols), kh, kw, c, ocnt);
+        let dq = ops::cols_to_weights_from(&dwcols, kh, kw, c, ocnt);
+        pool_bufs.put_f32(dwcols);
         let dw = grad::weight_quant_bwd(&tape.wq, &dq);
         grads.insert(tape.name.clone(), dw);
     }
@@ -606,32 +730,34 @@ impl NativeTrainer {
         x: &Tensor,
         y_lab: &[i32],
         rng: &mut Rng,
+        arena: &mut TrainArena,
     ) -> Result<(f32, usize, BTreeMap<String, Tensor>, Vec<(String, (Vec<f32>, Vec<f32>))>)> {
-        let e = self.entry.clone();
+        let (width, depth_n) = (self.entry.width, self.entry.depth_n);
         let mut stats = Vec::new();
         let mut grads = BTreeMap::new();
 
         // ---- forward
         let x8 = quant::act_quant_bits(x.clone(), 8); // 8-bit first-layer inputs (§A2.1)
-        let (h, t_c0) = self.conv_digital_fwd(&x8, "conv0/w", 1)?;
+        let (h, t_c0) = self.conv_digital_fwd(&x8, "conv0/w", 1, &mut arena.pool)?;
         let (h, t_b0) = self.bn_fwd(&h, "bn0", &mut stats)?;
         let (mut h, m_a0) = grad::act_fwd(&h, &self.bits);
         let mut blocks: Vec<BlockTape> = Vec::new();
-        let mut cin = e.width;
+        let mut cin = width;
         for s in 0..3 {
-            let cout = e.width * (1 << s);
-            for b in 0..e.depth_n {
+            let cout = width * (1 << s);
+            for b in 0..depth_n {
                 let blk = format!("s{s}b{b}");
                 let stride = if s > 0 && b == 0 { 2 } else { 1 };
                 let x_in = h.clone();
-                let (z, t1) = self.conv_pim_fwd(&x_in, &format!("{blk}/conv1/w"), stride, rng)?;
+                let (z, t1) =
+                    self.conv_pim_fwd(&x_in, &format!("{blk}/conv1/w"), stride, rng, arena)?;
                 let (z, tb1) = self.bn_fwd(&z, &format!("{blk}/bn1"), &mut stats)?;
                 let (z, m1) = grad::act_fwd(&z, &self.bits);
-                let (z, t2) = self.conv_pim_fwd(&z, &format!("{blk}/conv2/w"), 1, rng)?;
+                let (z, t2) = self.conv_pim_fwd(&z, &format!("{blk}/conv2/w"), 1, rng, arena)?;
                 let (z, tb2) = self.bn_fwd(&z, &format!("{blk}/bn2"), &mut stats)?;
                 let (sc_out, sc) = if cin != cout || stride != 1 {
                     let name = format!("{blk}/convs/w");
-                    let (sraw, ts) = self.conv_digital_fwd(&x_in, &name, stride)?;
+                    let (sraw, ts) = self.conv_digital_fwd(&x_in, &name, stride, &mut arena.pool)?;
                     let (sbn, tbs) = self.bn_fwd(&sraw, &format!("{blk}/bns"), &mut stats)?;
                     (sbn, Some((ts, tbs)))
                 } else {
@@ -649,20 +775,26 @@ impl NativeTrainer {
         let (logits, fct) = self.fc_fwd(&pooled)?;
         let (loss, correct, dlogits) = grad::softmax_xent(&logits, y_lab);
 
-        // ---- backward
+        // ---- backward (tapes are consumed so their patch buffers return
+        // to the arena as soon as each layer's gradient is done)
         let dpooled = self.fc_bwd(&fct, &dlogits, &mut grads);
         let mut dh = grad::global_avg_pool_bwd(&h_shape, &dpooled);
-        for bt in blocks.iter().rev() {
-            let dsum = grad::act_bwd(&bt.ma, &dh);
-            let dz = self.bn_bwd(&bt.tb2, &dsum, &mut grads);
-            let dz = self.conv_bwd(&bt.t2, &dz, &mut grads);
-            let dz = grad::act_bwd(&bt.m1, &dz);
-            let dz = self.bn_bwd(&bt.tb1, &dz, &mut grads);
-            let dx_main = self.conv_bwd(&bt.t1, &dz, &mut grads);
-            let dx_sc = match &bt.sc {
+        for bt in blocks.into_iter().rev() {
+            let BlockTape { t1, tb1, m1, t2, tb2, sc, ma } = bt;
+            let dsum = grad::act_bwd(&ma, &dh);
+            let dz = self.bn_bwd(&tb2, &dsum, &mut grads);
+            let dz = self.conv_bwd(&t2, &dz, &mut grads, &mut arena.pool);
+            arena.pool.put_f32(t2.ctx.patches.data);
+            let dz = grad::act_bwd(&m1, &dz);
+            let dz = self.bn_bwd(&tb1, &dz, &mut grads);
+            let dx_main = self.conv_bwd(&t1, &dz, &mut grads, &mut arena.pool);
+            arena.pool.put_f32(t1.ctx.patches.data);
+            let dx_sc = match sc {
                 Some((ts, tbs)) => {
-                    let d = self.bn_bwd(tbs, &dsum, &mut grads);
-                    self.conv_bwd(ts, &d, &mut grads)
+                    let d = self.bn_bwd(&tbs, &dsum, &mut grads);
+                    let dxs = self.conv_bwd(&ts, &d, &mut grads, &mut arena.pool);
+                    arena.pool.put_f32(ts.ctx.patches.data);
+                    dxs
                 }
                 None => dsum,
             };
@@ -670,7 +802,8 @@ impl NativeTrainer {
         }
         let dh = grad::act_bwd(&m_a0, &dh);
         let dh = self.bn_bwd(&t_b0, &dh, &mut grads);
-        self.conv_bwd_w_only(&t_c0, &dh, &mut grads); // input gradient unused
+        self.conv_bwd_w_only(&t_c0, &dh, &mut grads, &mut arena.pool); // input gradient unused
+        arena.pool.put_f32(t_c0.ctx.patches.data);
         Ok((loss, correct, grads, stats))
     }
 
@@ -680,9 +813,9 @@ impl NativeTrainer {
         x: &Tensor,
         y_lab: &[i32],
         rng: &mut Rng,
+        arena: &mut TrainArena,
     ) -> Result<(f32, usize, BTreeMap<String, Tensor>, Vec<(String, (Vec<f32>, Vec<f32>))>)> {
-        let e = self.entry.clone();
-        let plan = vgg11_plan(e.width, e.image);
+        let plan = vgg11_plan(self.entry.width, self.entry.image);
         let mut stats = Vec::new();
         let mut grads = BTreeMap::new();
 
@@ -692,9 +825,9 @@ impl NativeTrainer {
         for (i, &(_cout, pool)) in plan.iter().enumerate() {
             let name = format!("conv{i}/w");
             let (z, conv) = if i == 0 {
-                self.conv_digital_fwd(&h, &name, 1)?
+                self.conv_digital_fwd(&h, &name, 1, &mut arena.pool)?
             } else {
-                self.conv_pim_fwd(&h, &name, 1, rng)?
+                self.conv_pim_fwd(&h, &name, 1, rng, arena)?
             };
             let (z, bn) = self.bn_fwd(&z, &format!("bn{i}"), &mut stats)?;
             let (z, mask) = grad::act_fwd(&z, &self.bits);
@@ -713,21 +846,23 @@ impl NativeTrainer {
         let (logits, fct) = self.fc_fwd(&pooled)?;
         let (loss, correct, dlogits) = grad::softmax_xent(&logits, y_lab);
 
-        // ---- backward
+        // ---- backward (tapes consumed; patch buffers return to the arena)
         let dpooled = self.fc_bwd(&fct, &dlogits, &mut grads);
         let mut dh = grad::global_avg_pool_bwd(&h_shape, &dpooled);
-        for (li, t) in tapes.iter().enumerate().rev() {
-            if let Some((idx, pre_shape)) = &t.pool {
+        for (li, t) in tapes.into_iter().enumerate().rev() {
+            let VggTape { conv, bn, mask, pool: pool_tape } = t;
+            if let Some((idx, pre_shape)) = &pool_tape {
                 dh = grad::maxpool2_bwd(idx, pre_shape, &dh);
             }
-            let d = grad::act_bwd(&t.mask, &dh);
-            let d = self.bn_bwd(&t.bn, &d, &mut grads);
+            let d = grad::act_bwd(&mask, &dh);
+            let d = self.bn_bwd(&bn, &d, &mut grads);
             if li == 0 {
                 // first layer: input gradient unused
-                self.conv_bwd_w_only(&t.conv, &d, &mut grads);
+                self.conv_bwd_w_only(&conv, &d, &mut grads, &mut arena.pool);
             } else {
-                dh = self.conv_bwd(&t.conv, &d, &mut grads);
+                dh = self.conv_bwd(&conv, &d, &mut grads, &mut arena.pool);
             }
+            arena.pool.put_f32(conv.ctx.patches.data);
         }
         Ok((loss, correct, grads, stats))
     }
@@ -805,6 +940,83 @@ mod tests {
         assert!(!t.bwd_rescale);
         job.variant = "bogus".to_string();
         assert!(NativeTrainer::new(&m, &job).is_err());
+    }
+
+    #[test]
+    fn fused_xi_variance_matches_direct() {
+        let mut rng = Rng::new(17);
+        let (m, kc, o) = (37usize, 18usize, 5usize);
+        let patches: Vec<f32> = (0..m * kc).map(|_| rng.normal_in(0.0, 1.0)).collect();
+        let wcols: Vec<f32> = (0..kc * o).map(|_| rng.normal_in(0.0, 0.5)).collect();
+        let y_pim: Vec<f32> = (0..m * o).map(|_| rng.normal_in(0.1, 2.0)).collect();
+        let mut pool_bufs = BufPool::new();
+        let (vp, vx) = xi_variance_fused(m, kc, o, &patches, &wcols, &y_pim, &mut pool_bufs);
+        let direct = |v: &[f32]| {
+            let n = v.len() as f64;
+            let mean = v.iter().map(|&x| x as f64).sum::<f64>() / n;
+            v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n
+        };
+        let y_ex = gemm(m, kc, o, &patches, &wcols);
+        assert!((vp - direct(&y_pim)).abs() < 1e-9 * direct(&y_pim).max(1.0), "{vp}");
+        assert!((vx - direct(&y_ex)).abs() < 1e-9 * direct(&y_ex).max(1.0), "{vx}");
+        assert_eq!(pool_bufs.pooled(), 1, "the tile scratch must return to the pool");
+    }
+
+    #[test]
+    fn engine_cache_persists_across_steps() {
+        let m = micro_manifest();
+        let job = micro_job(Mode::Ours, 2);
+        let mut t = NativeTrainer::new(&m, &job).unwrap();
+        assert!(t.arena.engines.is_empty());
+        let ds = synth::generate(8, 4, 16, 1);
+        let mut rng = Rng::new(0);
+        let batch = ds.batch(&(0..8).collect::<Vec<_>>(), false, &mut rng);
+        t.train_step(&batch.x, &batch.y, 0.05, &mut rng).unwrap();
+        // micro resnet: 3 stages × depth 1 × 2 PIM convs per block
+        assert_eq!(t.arena.engines.len(), 6, "one cached engine per PIM conv");
+        t.train_step(&batch.x, &batch.y, 0.05, &mut rng).unwrap();
+        assert_eq!(t.arena.engines.len(), 6, "steady state must reuse cached engines");
+        assert!(t.arena.pool.pooled() > 0, "step buffers must return to the arena");
+    }
+
+    #[test]
+    fn steady_state_step_makes_no_large_allocations() {
+        let m = micro_manifest();
+        let job = micro_job(Mode::Ours, 3);
+        let mut t = NativeTrainer::new(&m, &job).unwrap();
+        let ds = synth::generate(8, 4, 16, 1);
+        let mut rng = Rng::new(0);
+        let batch = ds.batch(&(0..8).collect::<Vec<_>>(), false, &mut rng);
+        // step 1 grows the arena and spawns the worker pool; step 2 lets
+        // any remaining lazily-grown buffer reach its final size
+        t.train_step(&batch.x, &batch.y, 0.05, &mut rng).unwrap();
+        t.train_step(&batch.x, &batch.y, 0.05, &mut rng).unwrap();
+        // patch-scale buffers at this geometry are ≥ 18 KB; feature-map
+        // temporaries stay ≤ ~9 KB — 16 KiB separates the two
+        crate::util::alloc::arm(16 * 1024);
+        t.train_step(&batch.x, &batch.y, 0.05, &mut rng).unwrap();
+        let large = crate::util::alloc::disarm();
+        assert_eq!(large, 0, "steady-state train step made {large} large allocation(s)");
+    }
+
+    #[test]
+    fn training_is_deterministic_across_fresh_trainers() {
+        let m = micro_manifest();
+        let job = micro_job(Mode::Ours, 4);
+        let ds = synth::generate(8, 4, 16, 1);
+        let run = || {
+            let mut t = NativeTrainer::new(&m, &job).unwrap();
+            let mut rng = Rng::new(7);
+            let batch = ds.batch(&(0..8).collect::<Vec<_>>(), false, &mut rng);
+            let mut losses = Vec::new();
+            for _ in 0..4 {
+                let mut srng = Rng::new(9);
+                let (loss, _) = t.train_step(&batch.x, &batch.y, 0.05, &mut srng).unwrap();
+                losses.push(loss);
+            }
+            losses
+        };
+        assert_eq!(run(), run(), "engine cache + arena must not perturb the trajectory");
     }
 
     #[test]

@@ -1,0 +1,92 @@
+//! Debug allocation counter (unit tests only): a thin wrapper around the
+//! system allocator that counts allocations at or above an armed size
+//! threshold **on the armed thread**.  `train::native` tests use it to pin
+//! the zero-large-allocation contract of the steady-state train step
+//! (EXPERIMENTS.md §Perf L3.5): from step 2 on, the arena and the engine
+//! cache must absorb every patch-scale buffer.
+//!
+//! Counting is thread-filtered (thread-local threshold and counter) so the
+//! worker pool and unrelated tests running in parallel do not perturb the
+//! armed thread's count.  The `#[global_allocator]` registration is
+//! compiled into the unit-test binary only (`#[cfg(test)]` in `util`), so
+//! release builds and integration tests keep the plain system allocator.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    /// Armed size threshold in bytes; `usize::MAX` = disarmed.
+    static THRESHOLD: Cell<usize> = const { Cell::new(usize::MAX) };
+    /// Number of at-or-above-threshold allocations since arming.
+    static LARGE: Cell<usize> = const { Cell::new(0) };
+}
+
+/// System allocator with per-thread large-allocation counting.
+pub struct CountingAllocator;
+
+#[global_allocator]
+static GLOBAL: CountingAllocator = CountingAllocator;
+
+#[inline]
+fn note(size: usize) {
+    // `try_with` so allocations during TLS teardown never panic.
+    let armed = THRESHOLD.try_with(Cell::get).unwrap_or(usize::MAX);
+    if size >= armed {
+        let _ = LARGE.try_with(|c| c.set(c.get() + 1));
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        note(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        note(layout.size());
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if new_size > layout.size() {
+            note(new_size);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Start counting allocations of `threshold` bytes or more on this thread.
+pub fn arm(threshold: usize) {
+    THRESHOLD.with(|c| c.set(threshold));
+    LARGE.with(|c| c.set(0));
+}
+
+/// Stop counting; returns the number of large allocations seen on this
+/// thread since [`arm`].
+pub fn disarm() -> usize {
+    THRESHOLD.with(|c| c.set(usize::MAX));
+    LARGE.with(|c| c.get())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_only_armed_thread_and_threshold() {
+        arm(1 << 16);
+        let small = vec![0u8; 1 << 10];
+        assert_eq!(LARGE.with(|c| c.get()), 0, "small allocation must not count");
+        let big = vec![0u8; 1 << 17];
+        let seen = disarm();
+        assert!(seen >= 1, "large allocation must count");
+        // disarmed: further large allocations are free
+        let big2 = vec![0u8; 1 << 17];
+        assert_eq!(disarm(), 0);
+        std::hint::black_box((small, big, big2));
+    }
+}

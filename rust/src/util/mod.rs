@@ -1,9 +1,12 @@
 //! In-tree substrates replacing crates unavailable in the offline cache
 //! (DESIGN.md §Substrates S10–S13).
 
+#[cfg(test)]
+pub mod alloc;
 pub mod bench;
 pub mod error;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod table;
 

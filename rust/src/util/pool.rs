@@ -1,0 +1,234 @@
+//! Persistent worker pool (EXPERIMENTS.md §Perf L3.5): scoped fork-join
+//! parallelism on long-lived threads, replacing the per-call
+//! `std::thread::scope` spawns in `tensor::ops` and `pim::engine`.
+//!
+//! Why: a training step issues hundreds of small parallel regions (im2col,
+//! PIM plane-sum batches, col2im, the ξ digital twin), and OS thread
+//! creation was charged to every one of them.  The pool spawns workers
+//! once, on first use, and every later region is a queue push plus a
+//! condvar wake.
+//!
+//! Semantics match `std::thread::scope`: [`run_scoped`] returns only after
+//! every job has finished, so jobs may borrow from the caller's stack (the
+//! lifetime is erased internally, which is sound *because* of that
+//! barrier).  A panic inside a job is caught and re-raised on the caller.
+//! `$PIM_QAT_THREADS` keeps its meaning — callers decide how many jobs to
+//! create (see `tensor::ops::resolve_threads`); the pool grows to match,
+//! and the calling thread works the queue itself while it waits.
+
+use std::any::Any;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// A borrowing job, as accepted by [`run_scoped`].
+pub type ScopedJob<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+/// One queued job plus the scope it reports completion to.
+struct Task {
+    job: Box<dyn FnOnce() + Send + 'static>,
+    scope: Arc<ScopeState>,
+}
+
+impl Task {
+    fn run(self) {
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(self.job)) {
+            // keep the FIRST payload so the caller re-raises the real
+            // message/location, as std::thread::scope would
+            let mut slot = self.scope.panic.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        let mut pending = self.scope.pending.lock().unwrap();
+        *pending -= 1;
+        if *pending == 0 {
+            self.scope.done.notify_all();
+        }
+    }
+}
+
+/// Completion latch of one `run_scoped` call.
+struct ScopeState {
+    pending: Mutex<usize>,
+    done: Condvar,
+    panic: Mutex<Option<Box<dyn Any + Send + 'static>>>,
+}
+
+struct PoolShared {
+    queue: Mutex<VecDeque<Task>>,
+    ready: Condvar,
+}
+
+struct Pool {
+    shared: Arc<PoolShared>,
+    /// Workers spawned so far; grows on demand, never shrinks.
+    workers: Mutex<usize>,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        shared: Arc::new(PoolShared { queue: Mutex::new(VecDeque::new()), ready: Condvar::new() }),
+        workers: Mutex::new(0),
+    })
+}
+
+impl Pool {
+    fn ensure_workers(&self, want: usize) {
+        let mut n = self.workers.lock().unwrap();
+        while *n < want {
+            let shared = Arc::clone(&self.shared);
+            std::thread::Builder::new()
+                .name(format!("pim-qat-pool-{}", *n))
+                .spawn(move || loop {
+                    let task = {
+                        let mut q = shared.queue.lock().unwrap();
+                        loop {
+                            match q.pop_front() {
+                                Some(t) => break t,
+                                None => q = shared.ready.wait(q).unwrap(),
+                            }
+                        }
+                    };
+                    task.run();
+                })
+                .expect("spawn pool worker");
+            *n += 1;
+        }
+    }
+}
+
+/// Run `jobs` to completion across the pool's workers and the calling
+/// thread.  Blocks until every job has finished; a panic in any job
+/// resurfaces here.  Equivalent to spawning each job under
+/// `std::thread::scope`, minus the per-call thread startup.
+pub fn run_scoped(jobs: Vec<ScopedJob<'_>>) {
+    let n = jobs.len();
+    if n == 0 {
+        return;
+    }
+    if n == 1 {
+        // nothing to overlap — run inline, no queue traffic
+        let job = jobs.into_iter().next().unwrap();
+        job();
+        return;
+    }
+    let p = pool();
+    p.ensure_workers(n - 1);
+    let scope = Arc::new(ScopeState {
+        pending: Mutex::new(n),
+        done: Condvar::new(),
+        panic: Mutex::new(None),
+    });
+    {
+        let mut q = p.shared.queue.lock().unwrap();
+        for job in jobs {
+            // SAFETY: erases the borrowed environment's lifetime.  Sound
+            // because this function does not return until `pending == 0`,
+            // i.e. until every erased closure has finished running, so no
+            // borrow outlives its referent — the same contract
+            // `std::thread::scope` enforces by joining.
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe { std::mem::transmute(job) };
+            q.push_back(Task { job, scope: Arc::clone(&scope) });
+        }
+    }
+    p.shared.ready.notify_all();
+    // The caller works the queue too.  It may pick up a task from a
+    // sibling scope on another thread — harmless, it just helps that scope
+    // finish while this one's tasks run elsewhere.
+    loop {
+        let task = p.shared.queue.lock().unwrap().pop_front();
+        match task {
+            Some(t) => t.run(),
+            None => break,
+        }
+    }
+    let mut pending = scope.pending.lock().unwrap();
+    while *pending > 0 {
+        pending = scope.done.wait(pending).unwrap();
+    }
+    drop(pending);
+    if let Some(payload) = scope.panic.lock().unwrap().take() {
+        resume_unwind(payload);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs_with_borrows() {
+        let mut data = vec![0u64; 64];
+        let jobs: Vec<ScopedJob<'_>> = data
+            .chunks_mut(16)
+            .enumerate()
+            .map(|(i, chunk)| {
+                let job: ScopedJob<'_> = Box::new(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (i * 16 + j) as u64;
+                    }
+                });
+                job
+            })
+            .collect();
+        run_scoped(jobs);
+        for (i, &v) in data.iter().enumerate() {
+            assert_eq!(v, i as u64);
+        }
+    }
+
+    #[test]
+    fn empty_and_single_job() {
+        run_scoped(Vec::new());
+        let hit = AtomicUsize::new(0);
+        run_scoped(vec![Box::new(|| {
+            hit.fetch_add(1, Ordering::Relaxed);
+        })]);
+        assert_eq!(hit.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn reuses_workers_across_calls() {
+        // many consecutive same-size scopes must not accumulate threads:
+        // the pool grows to the largest request and stays there.  (The
+        // pool is process-global and other tests may grow it concurrently,
+        // so assert non-growth across THIS loop, not an absolute count.)
+        let baseline = {
+            run_scoped((0..4).map(|_| Box::new(|| {}) as ScopedJob<'_>).collect());
+            *pool().workers.lock().unwrap()
+        };
+        for round in 0..50u64 {
+            let total = AtomicUsize::new(0);
+            let jobs: Vec<ScopedJob<'_>> = (0..4)
+                .map(|i| {
+                    let total = &total;
+                    let job: ScopedJob<'_> = Box::new(move || {
+                        total.fetch_add((round + i) as usize, Ordering::Relaxed);
+                    });
+                    job
+                })
+                .collect();
+            run_scoped(jobs);
+            assert_eq!(total.load(Ordering::Relaxed), (4 * round + 6) as usize);
+        }
+        let after = *pool().workers.lock().unwrap();
+        let ceiling = baseline.max(std::thread::available_parallelism().map_or(8, |n| n.get()));
+        assert!(after >= 3, "4-job scopes need at least 3 workers, saw {after}");
+        assert!(after <= ceiling, "same-size scopes must not keep growing the pool: {after}");
+    }
+
+    #[test]
+    fn job_panic_propagates_with_payload() {
+        let caught = catch_unwind(|| {
+            let jobs: Vec<ScopedJob<'_>> =
+                vec![Box::new(|| {}), Box::new(|| panic!("inner")), Box::new(|| {})];
+            run_scoped(jobs);
+        });
+        let payload = caught.expect_err("panic in a job must resurface on the caller");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "inner", "the original panic payload must be preserved");
+    }
+}

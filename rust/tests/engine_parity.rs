@@ -218,6 +218,54 @@ fn threaded_engine_bit_identical_all_schemes_with_noise() {
 }
 
 #[test]
+fn reprogram_matches_fresh_prepare_bitwise_with_noise() {
+    // The engine-cache contract (§Perf L3.5): an engine kept alive across
+    // training steps and incrementally reprogrammed must be
+    // indistinguishable — bit for bit, noise on — from one freshly
+    // prepared with the same weights, for every scheme, including when
+    // most groups take the unchanged-skip path.
+    let bits = QuantBits::default();
+    let (m, c, k, o, uc) = (6usize, 4usize, 3usize, 5usize, 1usize); // 4 groups
+    let cols = c * k * k;
+    let mut rng = Rng::new(123);
+    let a = Tensor::from_vec(
+        &[m, cols],
+        (0..m * cols).map(|_| rng.int_in(0, 15) as f32).collect(),
+    );
+    let w0 = Tensor::from_vec(
+        &[cols, o],
+        (0..cols * o).map(|_| rng.int_in(-7, 7) as f32).collect(),
+    );
+    let chip = ChipModel::ideal(7).with_noise(0.5);
+    let groups = plan_groups(c, k, uc).groups;
+    for scheme in [Scheme::Native, Scheme::BitSerial, Scheme::Differential] {
+        let mut cached = PimEngine::prepare(scheme, bits, &w0, c, k, uc).with_threads(2);
+        // identical weights: every group takes the skip path
+        assert_eq!(cached.reprogram(&w0.data), 0, "{scheme}: all groups unchanged");
+        // drift a single weight per step, as late low-b_w training does
+        let mut w = w0.clone();
+        for step in 0..3usize {
+            let i = (step * 131) % (cols * o);
+            w.data[i] = if w.data[i] >= 7.0 { -7.0 } else { w.data[i] + 1.0 };
+            let rewritten = cached.reprogram(&w.data);
+            assert!(
+                rewritten >= 1 && rewritten < groups,
+                "{scheme} step {step}: expected a partial rewrite, got {rewritten}/{groups}"
+            );
+            let fresh = PimEngine::prepare(scheme, bits, &w, c, k, uc).with_threads(2);
+            let mut r1 = Rng::new(77);
+            let mut r2 = Rng::new(77);
+            let y_cached = cached.matmul(&a, &chip, &mut r1);
+            let y_fresh = fresh.matmul(&a, &chip, &mut r2);
+            assert_eq!(
+                y_cached.data, y_fresh.data,
+                "{scheme} step {step}: reprogrammed engine diverged from fresh prepare"
+            );
+        }
+    }
+}
+
+#[test]
 fn dac_plane_shift_mask_matches_float_slicing() {
     // the satellite parity check at the formula level: (a >> m·l) & (Δ-1)
     // must equal floor(a / Δ^l) mod Δ on the whole activation grid.

@@ -14,6 +14,7 @@ use pim_qat::nn::grad;
 use pim_qat::nn::ExecSpec;
 use pim_qat::pim::QuantBits;
 use pim_qat::runtime::Manifest;
+use pim_qat::tensor::arena::BufPool;
 use pim_qat::tensor::gemm::{gemm, gemm_nt, gemm_tn};
 use pim_qat::tensor::Tensor;
 use pim_qat::train::native::run_job_native;
@@ -45,14 +46,18 @@ fn dot_loss(g: &Tensor, y: &Tensor) -> f64 {
 fn conv_backward_matches_finite_difference() {
     let mut rng = Rng::new(41);
     for &(h, c, o, k, s) in &[(5usize, 3usize, 4usize, 3usize, 1usize), (6, 4, 3, 3, 2)] {
+        let mut pool = BufPool::new();
         let x = randn(&[2, h, h, c], 1.0, &mut rng);
         let wcols = randn(&[c * k * k, o], 0.5, &mut rng);
-        let (y, ctx) = grad::conv_cols_fwd(&x, &wcols, k, s);
+        let (y, ctx) = grad::conv_cols_fwd(&x, &wcols, k, s, &mut pool);
         let g = randn(&y.shape, 1.0, &mut rng);
-        let (dx, dw) = grad::conv_cols_bwd(&ctx, &wcols, &x.shape, k, s, &g);
+        let mut dwv = Vec::new();
+        let dx = grad::conv_cols_bwd(&ctx, &wcols, &x.shape, k, s, &g.data, &mut pool, &mut dwv);
+        let dw = Tensor::from_vec(&[c * k * k, o], dwv);
 
         let loss = |x: &Tensor, w: &Tensor| -> f64 {
-            let (y, _) = grad::conv_cols_fwd(x, w, k, s);
+            let mut pool = BufPool::new();
+            let (y, _) = grad::conv_cols_fwd(x, w, k, s, &mut pool);
             dot_loss(&g, &y)
         };
         let eps = 1e-2f32;
