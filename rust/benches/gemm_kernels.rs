@@ -1,0 +1,101 @@
+//! Bench: the dispatched GEMM kernel subsystem (§Perf L3.6) — scalar
+//! reference arm vs the runtime-selected arm, on DAC-plane-shaped
+//! workloads (M batch-rows × N per conversion chain × O outputs, the
+//! shapes `PimEngine::run_rows` feeds the kernels).
+//!
+//! Cases (`<kernel>/<shape>/<arm>`):
+//!
+//! * `u8i16` — the integer plane kernel (native/differential cells).
+//! * `binpacked` — the bit-packed bit-serial plane kernel (64 cols/u64
+//!   word, the engine's stored layout).
+//! * `f32acc` — the dense f32 GEMM (digital convs, FC).
+//!
+//! Emits `BENCH_gemm_kernels.json`; CI gates it against
+//! `baselines/BENCH_gemm_kernels.json` via `bench_check` (see ROADMAP.md,
+//! bench-baseline convention).  Set `PIM_QAT_BENCH_QUICK=1` for a fast
+//! smoke run.
+
+use pim_qat::pim::layout::pack_bin_plane;
+use pim_qat::tensor::kernels::{self, scalar, KernelTable};
+use pim_qat::util::bench::{save_json, Bencher};
+use pim_qat::util::rng::Rng;
+
+fn main() {
+    let b = if std::env::var_os("PIM_QAT_BENCH_QUICK").is_some() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+    let active = kernels::active();
+    println!(
+        "GEMM kernel arms: scalar vs dispatched ({}{})",
+        active.name,
+        if active.name == "scalar" { " — no SIMD on this host" } else { "" }
+    );
+
+    // (label, m, k, n): m batch rows, k = N per conversion chain, n = O
+    let shapes: &[(&str, usize, usize, usize)] = &[
+        ("n144_o32", 1024, 144, 32), // uc=16 3x3 mid conv (the paper's N=144)
+        ("n72_o64", 1024, 72, 64),   // uc=8 3x3, wider output
+        ("n9_o16", 1024, 9, 16),     // native uc=1 — many small planes
+    ];
+    let arms: Vec<(&str, &'static KernelTable)> =
+        vec![("scalar", &scalar::TABLE), ("dispatch", active)];
+
+    let mut rng = Rng::new(7);
+    let mut all = Vec::new();
+    for &(label, m, k, n) in shapes {
+        let a: Vec<u8> = (0..m * k).map(|_| rng.int_in(0, 15) as u8).collect();
+        let w16: Vec<i16> = (0..k * n).map(|_| rng.int_in(-7, 7) as i16).collect();
+        let bin: Vec<u8> = (0..k * n).map(|_| rng.below(2) as u8).collect();
+        let wp = pack_bin_plane(&bin, k, n);
+        let af: Vec<f32> = a.iter().map(|&v| v as f32).collect();
+        let wf: Vec<f32> = w16.iter().map(|&v| v as f32).collect();
+        let macs = (m * k * n) as f64;
+
+        let mut ci = vec![0i32; m * n];
+        let mut cf = vec![0.0f32; m * n];
+        for (arm, table) in &arms {
+            let stats = b.run(&format!("u8i16/{label}/{arm}"), Some(macs), || {
+                ci.fill(0);
+                (table.gemm_acc_u8_i16)(m, k, n, &a, &w16, &mut ci);
+                std::hint::black_box(&ci);
+            });
+            println!("{}", stats.report());
+            all.push(stats);
+
+            let stats = b.run(&format!("binpacked/{label}/{arm}"), Some(macs), || {
+                ci.fill(0);
+                (table.gemm_acc_u8_bin_packed)(m, k, n, &a, &wp, &mut ci);
+                std::hint::black_box(&ci);
+            });
+            println!("{}", stats.report());
+            all.push(stats);
+
+            let stats = b.run(&format!("f32acc/{label}/{arm}"), Some(macs), || {
+                cf.fill(0.0);
+                (table.gemm_acc)(m, k, n, &af, &wf, &mut cf);
+                std::hint::black_box(&cf);
+            });
+            println!("{}", stats.report());
+            all.push(stats);
+        }
+    }
+
+    let path = std::path::Path::new("BENCH_gemm_kernels.json");
+    match save_json(path, &all) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+
+    // headline: dispatched vs scalar on the big i16-plane shape
+    let s = all.iter().find(|s| s.name == "u8i16/n144_o32/scalar");
+    let d = all.iter().find(|s| s.name == "u8i16/n144_o32/dispatch");
+    if let (Some(s), Some(d)) = (s, d) {
+        println!(
+            "u8i16/n144_o32 speedup ({} vs scalar): {:.2}x",
+            active.name,
+            s.mean_ns / d.mean_ns
+        );
+    }
+}

@@ -77,14 +77,18 @@ pub fn search(
             chip: &chip,
         };
         let mut net = network_from_ckpt(runner.manifest(), &outcome.ckpt)?;
-        let (train_ds, test_ds) = {
-            let pair = runner.datasets(&job)?;
-            (pair.0.clone(), pair.1.clone())
-        };
+        // persistent eval engines: candidates share geometry, so each
+        // checkpoint reprograms the cached planes instead of re-preparing
+        net.set_engine_cache(std::mem::take(&mut runner.eval_engines));
         let mut rng = Rng::new(0xADAB ^ tr as u64);
-        net.calibrate_bn(&train_ds, 32, calib_batches, &exec, &mut rng)?;
-        let acc = net.evaluate(&test_ds, 32, &exec, &mut rng)?;
-        candidates.push(Candidate { train_resolution: tr, chip_acc: acc });
+        let acc = (|| {
+            // borrow the cached datasets — no per-candidate deep clones
+            let (train_ds, test_ds) = runner.datasets(&job)?;
+            net.calibrate_bn(train_ds, 32, calib_batches, &exec, &mut rng)?;
+            net.evaluate(test_ds, 32, &exec, &mut rng)
+        })();
+        runner.eval_engines = net.take_engine_cache();
+        candidates.push(Candidate { train_resolution: tr, chip_acc: acc? });
     }
     Ok(AdjustedResult { b_pim_infer, noise_lsb, enob_suggestion: sug, candidates })
 }

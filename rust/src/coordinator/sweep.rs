@@ -44,6 +44,12 @@ pub struct SweepRunner<'a> {
     pub backend: &'a dyn Backend,
     pub ckpt_root: PathBuf,
     pub verbose: bool,
+    /// Persistent per-layer PIM engines for the evaluation side: chip
+    /// sweeps hand this cache to each checkpoint's `Network`
+    /// (`experiments::common::chip_eval`, `coordinator::adjusted`), so a
+    /// grid of chip configurations reprograms cached engines in place
+    /// instead of re-deriving every layer's weight planes per point.
+    pub eval_engines: crate::pim::EngineCache,
     datasets: HashMap<(usize, usize, usize, usize, u64), (Dataset, Dataset)>,
 }
 
@@ -52,7 +58,13 @@ impl<'a> SweepRunner<'a> {
         let root = std::env::var_os("PIM_QAT_CKPTS")
             .map(PathBuf::from)
             .unwrap_or_else(|| PathBuf::from("results/ckpts"));
-        SweepRunner { backend, ckpt_root: root, verbose: true, datasets: HashMap::new() }
+        SweepRunner {
+            backend,
+            ckpt_root: root,
+            verbose: true,
+            eval_engines: crate::pim::EngineCache::new(),
+            datasets: HashMap::new(),
+        }
     }
 
     /// The backend's model registry.

@@ -72,18 +72,24 @@ pub fn chip_eval(
     test_size: usize,
 ) -> Result<f64> {
     let mut net = network_from_ckpt(runner.manifest(), &outcome.ckpt)?;
-    let (train_ds, test_ds) = {
-        let pair = runner.datasets(&outcome.job)?;
-        (pair.0.clone(), pair.1.clone())
-    };
+    // reuse the sweep's persistent engines: matching layers reprogram in
+    // place instead of re-deriving their weight planes per chip point
+    net.set_engine_cache(std::mem::take(&mut runner.eval_engines));
     let exec = ExecSpec::Pim { scheme, unit_channels, chip };
     // deterministic noise stream per (chip config, checkpoint)
     let mut rng = Rng::new(0xE7A1 ^ chip.b_pim as u64 ^ ((chip.noise_lsb * 100.0) as u64) << 8);
-    if calibrate {
-        net.calibrate_bn(&train_ds, 32, calib_batches, &exec, &mut rng)?;
-    }
-    let sub = subset(&test_ds, test_size);
-    net.evaluate(&sub, 32, &exec, &mut rng)
+    let res = (|| {
+        // borrow the runner's cached datasets for the evaluation only —
+        // no per-point deep clones of the image buffers
+        let (train_ds, test_ds) = runner.datasets(&outcome.job)?;
+        if calibrate {
+            net.calibrate_bn(train_ds, 32, calib_batches, &exec, &mut rng)?;
+        }
+        let sub = subset(test_ds, test_size);
+        net.evaluate(&sub, 32, &exec, &mut rng)
+    })();
+    runner.eval_engines = net.take_engine_cache();
+    res
 }
 
 /// First-n subset of a dataset.

@@ -6,7 +6,7 @@ use crate::util::error::{anyhow, Result};
 
 use crate::chip::ChipModel;
 use crate::config::Scheme;
-use crate::pim::{PimEngine, QuantBits};
+use crate::pim::{EngineCache, QuantBits};
 use crate::runtime::ModelEntry;
 use crate::tensor::ops;
 use crate::tensor::Tensor;
@@ -44,8 +44,12 @@ pub struct Network {
     /// BN running stats, mutated by `calibrate_bn`.
     bn_state: BTreeMap<String, (Vec<f32>, Vec<f32>)>,
     convs: HashMap<String, ConvW>,
-    /// PIM engines cache, keyed by (scheme, uc, conv name).
-    engines: std::cell::RefCell<HashMap<(Scheme, usize, String), std::rc::Rc<PimEngine>>>,
+    /// Per-layer PIM engine cache (same keying as the trainer's
+    /// `TrainArena`): engines persist across forwards and — via
+    /// [`Network::set_engine_cache`] / [`Network::take_engine_cache`] —
+    /// across the Networks a sweep builds, so evaluation stops re-deriving
+    /// weight planes per checkpoint/chip point.
+    engines: std::cell::RefCell<EngineCache>,
 }
 
 impl Network {
@@ -115,6 +119,19 @@ impl Network {
         self.bn_state.insert(name.to_string(), (mean, var));
     }
 
+    /// Hand this network a persistent engine cache (e.g. the sweep
+    /// runner's): PIM convs whose geometry matches a cached engine
+    /// reprogram it in place instead of re-deriving their weight planes.
+    pub fn set_engine_cache(&mut self, cache: EngineCache) {
+        self.engines = std::cell::RefCell::new(cache);
+    }
+
+    /// Take the engine cache back out (leaving an empty one) to pass it to
+    /// the next checkpoint's network.
+    pub fn take_engine_cache(&mut self) -> EngineCache {
+        self.engines.take()
+    }
+
     pub fn bn_names(&self) -> Vec<String> {
         self.bn_state.keys().cloned().collect()
     }
@@ -161,28 +178,27 @@ impl Network {
             ExecSpec::Software => self.conv_digital(x, name, stride, true),
             ExecSpec::Pim { scheme, unit_channels, chip } => {
                 let cw = self.convs.get(name).ok_or_else(|| anyhow!("conv {name} missing"))?;
-                let key = (*scheme, *unit_channels, name.to_string());
-                let engine = {
-                    let mut cache = self.engines.borrow_mut();
-                    cache
-                        .entry(key)
-                        .or_insert_with(|| {
-                            std::rc::Rc::new(PimEngine::prepare(
-                                *scheme,
-                                self.bits,
-                                &cw.cols_int,
-                                cw.c_in,
-                                cw.kernel,
-                                *unit_channels,
-                            ))
-                        })
-                        .clone()
-                };
                 let (patches, oh, ow) = ops::im2col_threaded(x, cw.kernel, stride, 0);
                 // patches hold quantized activations in [0,1] — scale to ints
                 let al = self.bits.a_levels() as f32;
                 let pint = patches.map(|v| crate::chip::round_ties_even(v * al));
+                // cache hit → in-place reprogram (all groups skip when the
+                // weights are this engine's); miss / geometry change →
+                // fresh prepare.  The borrow is held across the matmul —
+                // nothing below re-enters the cache.
+                let mut cache = self.engines.borrow_mut();
+                let engine = cache.ensure_engine(
+                    name,
+                    *scheme,
+                    self.bits,
+                    &cw.cols_int.data,
+                    cw.cols_int.shape[1],
+                    cw.c_in,
+                    cw.kernel,
+                    *unit_channels,
+                );
                 let y = engine.matmul(&pint, chip, rng);
+                drop(cache);
                 let o = y.shape[1];
                 Ok(y
                     .map(|v| v * cw.scale)
@@ -541,6 +557,35 @@ mod tests {
             )
             .unwrap();
         assert!(sw.max_abs_diff(&pim) > 1e-3);
+    }
+
+    #[test]
+    fn engine_cache_transfers_between_networks() {
+        let chip = ChipModel::ideal(7);
+        let exec = ExecSpec::Pim { scheme: Scheme::BitSerial, unit_channels: 8, chip: &chip };
+        let x = Tensor::from_vec(
+            &[1, 16, 16, 3],
+            (0..16 * 16 * 3).map(|i| ((i * 13) % 256) as f32 / 255.0).collect(),
+        );
+        // same weights: the handed-over cache takes the all-groups-skip path
+        let mut net1 = random_net(5);
+        let y1 = net1.forward(&x, &exec, &mut Rng::new(0)).unwrap();
+        let cache = net1.take_engine_cache();
+        assert!(!cache.is_empty(), "PIM forward must populate the engine cache");
+        let n_engines = cache.len();
+        let mut net2 = random_net(5);
+        net2.set_engine_cache(cache);
+        let y2 = net2.forward(&x, &exec, &mut Rng::new(0)).unwrap();
+        assert_eq!(y1.data, y2.data, "shared cache must not change results");
+        // different weights: reprogram rewrites in place; results must
+        // match a network that prepared from scratch
+        let mut net3 = random_net(6);
+        let y3 = net3.forward(&x, &exec, &mut Rng::new(0)).unwrap();
+        let mut net4 = random_net(6);
+        net4.set_engine_cache(net2.take_engine_cache());
+        let y4 = net4.forward(&x, &exec, &mut Rng::new(0)).unwrap();
+        assert_eq!(y3.data, y4.data, "reprogrammed cache must match fresh prepare");
+        assert_eq!(net4.take_engine_cache().len(), n_engines);
     }
 
     #[test]

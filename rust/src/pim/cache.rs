@@ -1,0 +1,120 @@
+//! Shared per-layer engine cache (§Perf L3.5/L3.6): one persistent
+//! [`PimEngine`] per PIM conv, keyed by layer name, reprogrammed in place
+//! when only the weights moved and rebuilt when the geometry did.
+//!
+//! Both halves of the system use this same keying:
+//!
+//! * the native trainer's `TrainArena` (one cache per job, weights move
+//!   every step), and
+//! * the evaluation path (`nn::Network`): chip sweeps evaluate one
+//!   checkpoint under many chip configurations — and many checkpoints
+//!   under one — so the cache is handed from `Network` to `Network` by the
+//!   sweep drivers (`SweepRunner::eval_engines`) instead of re-deriving
+//!   every layer's decomposed planes per evaluation.
+//!
+//! The engine itself is chip-independent (the ADC/noise model is applied
+//! per `matmul` call), which is why a chip sweep can share one programmed
+//! engine across all its configurations.
+
+use std::collections::BTreeMap;
+
+use crate::config::Scheme;
+
+use super::layout::plan_groups;
+use super::{PimEngine, QuantBits};
+
+/// Persistent per-layer-name engine cache.
+#[derive(Default)]
+pub struct EngineCache {
+    engines: BTreeMap<String, PimEngine>,
+}
+
+impl EngineCache {
+    pub fn new() -> Self {
+        EngineCache::default()
+    }
+
+    /// Number of cached engines.
+    pub fn len(&self) -> usize {
+        self.engines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.engines.is_empty()
+    }
+
+    /// The cached engine for `name`, if any.
+    pub fn get(&self, name: &str) -> Option<&PimEngine> {
+        self.engines.get(name)
+    }
+
+    /// Make sure the cached engine for layer `name` exists, matches the
+    /// layer geometry, and carries the integer weights `w_int`
+    /// ([C·k·k, O], im2col column order), then return it.  Cache hit →
+    /// in-place [`PimEngine::reprogram`] (groups with unchanged weights
+    /// skipped); miss, or a scheme / bits / shape change → fresh
+    /// [`PimEngine::prepare_cols`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn ensure_engine(
+        &mut self,
+        name: &str,
+        scheme: Scheme,
+        bits: QuantBits,
+        w_int: &[f32],
+        out: usize,
+        c_in: usize,
+        kernel: usize,
+        unit_channels: usize,
+    ) -> &PimEngine {
+        let plan = plan_groups(c_in, kernel, unit_channels);
+        let hit = self.engines.get(name).is_some_and(|e| {
+            e.scheme == scheme && e.bits == bits && e.out == out && e.plan == plan
+        });
+        if hit {
+            let e = self.engines.get_mut(name).expect("hit checked above");
+            e.reprogram(w_int);
+            return e;
+        }
+        let engine = PimEngine::prepare_cols(scheme, bits, w_int, out, c_in, kernel, unit_channels);
+        self.engines.insert(name.to_string(), engine);
+        self.engines.get(name).expect("just inserted")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chip::ChipModel;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn hit_reprograms_miss_rebuilds() {
+        let mut cache = EngineCache::new();
+        let bits = QuantBits::default();
+        let mut rng = Rng::new(4);
+        let (c, k, o, uc) = (2usize, 3usize, 4usize, 1usize);
+        let w1: Vec<f32> = (0..c * k * k * o).map(|_| rng.int_in(-7, 7) as f32).collect();
+        cache.ensure_engine("l0", Scheme::BitSerial, bits, &w1, o, c, k, uc);
+        assert_eq!(cache.len(), 1);
+        // weight-only change: same engine object, reprogrammed
+        let mut w2 = w1.clone();
+        w2[0] = if w2[0] > 0.0 { -5.0 } else { 5.0 };
+        cache.ensure_engine("l0", Scheme::BitSerial, bits, &w2, o, c, k, uc);
+        assert_eq!(cache.len(), 1);
+        // the reprogrammed engine matches a fresh prepare bitwise
+        let a: Vec<u8> = (0..3 * c * k * k).map(|_| rng.int_in(0, 15) as u8).collect();
+        let chip = ChipModel::ideal(7).with_noise(0.4);
+        let fresh = PimEngine::prepare_cols(Scheme::BitSerial, bits, &w2, o, c, k, uc);
+        let mut y1 = Vec::new();
+        let mut y2 = Vec::new();
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        cache.get("l0").unwrap().matmul_u8_into(&a, &chip, &mut r1, &mut y1);
+        fresh.matmul_u8_into(&a, &chip, &mut r2, &mut y2);
+        assert_eq!(y1, y2);
+        // scheme change rebuilds under the same key
+        let e = cache.ensure_engine("l0", Scheme::Native, bits, &w2, o, c, k, uc);
+        assert_eq!(e.scheme, Scheme::Native);
+        assert_eq!(cache.len(), 1);
+    }
+}

@@ -9,7 +9,10 @@
 //! multi-threaded.  Activations arrive on the u8 grid
 //! ([`PimEngine::matmul_u8_into`]), DAC input planes are extracted with
 //! shifts/masks, plane sums accumulate in i32 (exact, so bit-identical to
-//! the seed float path), conversion runs row-batched through
+//! the seed float path) through the runtime-dispatched kernel table
+//! (`tensor::kernels`, §Perf L3.6) — bit-serial weight planes are stored
+//! bit-packed (64 columns per u64 word, `layout::packed_words`) and run on
+//! the broadcast-AND-accumulate kernel — conversion runs row-batched through
 //! `Converter::convert_row`, and rows are partitioned across the shared
 //! worker pool (`util::pool`) with per-thread scratch buffers from a
 //! reusable arena.  Thermal noise comes from a counter-based RNG addressed
@@ -26,11 +29,11 @@ use std::sync::Mutex;
 
 use crate::chip::{ChipModel, Converter};
 use crate::config::Scheme;
-use crate::tensor::gemm::{gemm_acc_u8_bin, gemm_acc_u8_i16};
+use crate::tensor::gemm::{gemm_acc_u8_bin_packed, gemm_acc_u8_i16};
 use crate::tensor::Tensor;
 use crate::util::rng::{CounterRng, Rng};
 
-use super::layout::{plan_groups, GroupPlan};
+use super::layout::{packed_words, plan_groups, GroupPlan};
 use super::{plane_full_scale, QuantBits};
 
 /// One layer's weights, decomposed for the configured scheme, on integer
@@ -41,8 +44,10 @@ enum GroupWeights {
     Native(Vec<i16>),
     /// Positive and negative halves, each [N, O] of non-negative ints.
     Differential(Vec<i16>, Vec<i16>),
-    /// b_w binary planes of [N, O] (bit-serial SRAM cells).
-    BitSerial(Vec<Vec<u8>>),
+    /// b_w binary planes, each bit-packed [N, packed_words(O)] — 64 output
+    /// columns per u64 word (`layout::packed_words`), 8× less weight
+    /// traffic than one u8 per cell.  Pad bits past O are always zero.
+    BitSerial(Vec<Vec<u64>>),
 }
 
 /// Reusable per-thread scratch: group activations, one DAC plane, and the
@@ -158,7 +163,8 @@ impl PimEngine {
                     GroupWeights::Differential(vec![0i16; n * out], vec![0i16; n * out])
                 }
                 Scheme::BitSerial => {
-                    GroupWeights::BitSerial(vec![vec![0u8; n * out]; bits.b_w as usize])
+                    let wpr = packed_words(out);
+                    GroupWeights::BitSerial(vec![vec![0u64; n * wpr]; bits.b_w as usize])
                 }
             })
             .collect();
@@ -237,12 +243,25 @@ impl PimEngine {
                 }
             }
             GroupWeights::BitSerial(planes) => {
-                for i in 0..n * out {
-                    let v = src[i] as i32;
-                    // two's complement over b_w bits
-                    let u = if v < 0 { v + (1 << b_w) } else { v } as u32;
-                    for (k, plane) in planes.iter_mut().enumerate() {
-                        plane[i] = ((u >> k) & 1) as u8;
+                let wpr = packed_words(out);
+                for plane in planes.iter_mut() {
+                    plane.iter_mut().for_each(|w| *w = 0);
+                }
+                for r in 0..n {
+                    for o in 0..out {
+                        let v = src[r * out + o] as i32;
+                        // two's complement over b_w bits
+                        let u = if v < 0 { v + (1 << b_w) } else { v } as u32;
+                        if u == 0 {
+                            continue;
+                        }
+                        let word = r * wpr + o / 64;
+                        let bit = 1u64 << (o % 64);
+                        for (k, plane) in planes.iter_mut().enumerate() {
+                            if (u >> k) & 1 == 1 {
+                                plane[word] |= bit;
+                            }
+                        }
                     }
                 }
             }
@@ -423,7 +442,7 @@ impl PimEngine {
                             let sign = if k as u32 == self.bits.b_w - 1 { -1.0 } else { 1.0 };
                             let bit_w = sign * (1u32 << k) as f32 * slice_w;
                             sc.s.fill(0);
-                            gemm_acc_u8_bin(rows, n, out, &sc.a_plane, wp, &mut sc.s);
+                            gemm_acc_u8_bin_packed(rows, n, out, &sc.a_plane, wp, &mut sc.s);
                             let plane = l as usize * self.bits.b_w as usize + k;
                             self.convert_block(
                                 conv, noise, g, plane, row0, rows, &sc.s, bit_w, false, y,
@@ -673,6 +692,58 @@ mod tests {
                 "{scheme}: reprogrammed engine must match a fresh prepare bitwise"
             );
         }
+    }
+
+    /// Reference packing: the u8-plane layout (one cell per weight bit, as
+    /// the engine stored before L3.6) packed into u64 words.
+    fn pack_u8_planes(w: &[f32], n: usize, out: usize, b_w: u32) -> Vec<Vec<u64>> {
+        let wpr = super::packed_words(out);
+        let mut planes = vec![vec![0u64; n * wpr]; b_w as usize];
+        for r in 0..n {
+            for o in 0..out {
+                let v = w[r * out + o] as i32;
+                let u = if v < 0 { v + (1 << b_w) } else { v } as u32;
+                for (k, plane) in planes.iter_mut().enumerate() {
+                    if (u >> k) & 1 == 1 {
+                        plane[r * wpr + o / 64] |= 1u64 << (o % 64);
+                    }
+                }
+            }
+        }
+        planes
+    }
+
+    #[test]
+    fn packed_planes_match_u8_layout_after_prepare_and_reprogram() {
+        let q = bits();
+        let mut rng = Rng::new(21);
+        // out=70 exercises the partial last word (pad bits must stay zero)
+        let (c, k, o, uc) = (2usize, 3usize, 70usize, 1usize);
+        let cols = c * k * k;
+        let n = plan_groups(c, k, uc).n;
+        let w1 = Tensor::from_vec(
+            &[cols, o],
+            (0..cols * o).map(|_| rng.int_in(-7, 7) as f32).collect(),
+        );
+        let mut engine = PimEngine::prepare(Scheme::BitSerial, q, &w1, c, k, uc);
+        let check = |engine: &PimEngine, w: &Tensor| {
+            for g in 0..engine.plan.groups {
+                let wr = engine.plan.weight_range(g, o);
+                let want = pack_u8_planes(&w.data[wr], n, o, q.b_w);
+                match &engine.groups[g] {
+                    GroupWeights::BitSerial(planes) => {
+                        assert_eq!(planes, &want, "group {g}: packed planes diverged");
+                    }
+                    other => panic!("expected BitSerial planes, got {other:?}"),
+                }
+            }
+        };
+        check(&engine, &w1);
+        // reprogram with one changed group (the other takes the skip path)
+        let mut w2 = w1.clone();
+        w2.data[0] = if w2.data[0] > 0.0 { -3.0 } else { 3.0 };
+        assert_eq!(engine.reprogram(&w2.data), 1);
+        check(&engine, &w2);
     }
 
     #[test]

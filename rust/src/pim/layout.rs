@@ -54,6 +54,34 @@ pub fn plan_groups(c_in: usize, kernel: usize, unit_channels: usize) -> GroupPla
     GroupPlan { uc, groups: c_in / uc, n: uc * kernel * kernel }
 }
 
+/// u64 words per bit-packed plane row: 64 output columns per word (bit
+/// `o % 64` of word `o / 64` ↔ output column `o`).  This is the storage
+/// contract between `PimEngine`'s bit-serial weight planes and
+/// `tensor::gemm::gemm_acc_u8_bin_packed`; pad bits past `out` in the last
+/// word are always zero.
+pub fn packed_words(out: usize) -> usize {
+    (out + 63) / 64
+}
+
+/// Pack a row-major {0,1} u8 plane [k, n] into the bit-packed layout
+/// ([`packed_words`] u64 words per row, bit `o % 64` of word `o / 64` ↔
+/// column `o`).  The single definition of the packing rule for tests and
+/// benches; `PimEngine::program_group` packs directly from two's-complement
+/// weights but follows the same contract (pinned by the parity suites).
+pub fn pack_bin_plane(bin: &[u8], k: usize, n: usize) -> Vec<u64> {
+    assert_eq!(bin.len(), k * n);
+    let wpr = packed_words(n);
+    let mut packed = vec![0u64; k * wpr];
+    for r in 0..k {
+        for o in 0..n {
+            if bin[r * n + o] != 0 {
+                packed[r * wpr + o / 64] |= 1u64 << (o % 64);
+            }
+        }
+    }
+    packed
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -81,6 +109,31 @@ mod tests {
         let out = 64;
         assert_eq!(p.weight_range(0, out), 0..144 * 64);
         assert_eq!(p.weight_range(1, out), 144 * 64..288 * 64);
+    }
+
+    #[test]
+    fn packed_words_rounds_up() {
+        assert_eq!(packed_words(1), 1);
+        assert_eq!(packed_words(63), 1);
+        assert_eq!(packed_words(64), 1);
+        assert_eq!(packed_words(65), 2);
+        assert_eq!(packed_words(128), 2);
+        assert_eq!(packed_words(129), 3);
+    }
+
+    #[test]
+    fn pack_bin_plane_sets_expected_bits() {
+        // 2 rows × 66 cols: column 65 lands in bit 1 of the second word
+        let mut bin = vec![0u8; 2 * 66];
+        bin[0] = 1; // row 0, col 0
+        bin[65] = 1; // row 0, col 65
+        bin[66 + 63] = 1; // row 1, col 63
+        let packed = pack_bin_plane(&bin, 2, 66);
+        assert_eq!(packed.len(), 2 * 2);
+        assert_eq!(packed[0], 1);
+        assert_eq!(packed[1], 1 << 1);
+        assert_eq!(packed[2], 1 << 63);
+        assert_eq!(packed[3], 0);
     }
 
     #[test]

@@ -8,9 +8,11 @@
 //! noise it agrees bit-exactly with the jnp/Pallas forward — pinned by the
 //! golden cross-tests (rust/tests/golden_cross.rs).
 
+pub mod cache;
 pub mod engine;
 pub mod layout;
 
+pub use cache::EngineCache;
 pub use engine::{pim_grouped_matmul, PimEngine};
 
 use crate::config::Scheme;

@@ -1,61 +1,48 @@
-//! GEMM microkernels for the digital conv path and the PIM engine's plane
-//! sums (§Perf L3).
+//! GEMM facade over the runtime-dispatched kernel subsystem
+//! (`tensor::kernels`, §Perf L3.6).
 //!
-//! Four variants, all single-call (threading happens above, across batch
-//! rows, in `crate::pim::engine`):
+//! All single-call GEMM entry points live here (threading happens above,
+//! across batch rows, in `crate::pim::engine`); the actual inner loops are
+//! the arm picked once per process by [`crate::tensor::kernels::active`] —
+//! AVX2+FMA on capable x86_64 hosts, the portable scalar reference
+//! otherwise or under `PIM_QAT_NO_SIMD=1`.
 //!
-//! * [`gemm_acc`] — dense f32, register-blocked (4-wide k unroll).  The old
-//!   per-element `aik == 0.0` skip is gone: on dense native-scheme planes it
-//!   cost a branch per element and defeated vectorization.
-//! * [`gemm_acc_sparse`] — f32 with the zero-skip, for genuinely sparse
-//!   inputs (post-ReLU quantized activation patches).
-//! * [`gemm_acc_u8_i16`] — the integer-native plane kernel: u8 DAC-plane
-//!   activations × i16 weights accumulated in i32.  Plane sums are exact
-//!   integers, so any accumulation order is bit-identical to the float
-//!   reference (all magnitudes ≤ 2^24).
-//! * [`gemm_acc_u8_bin`] — binary-plane specialization (bit-serial weights
-//!   w ∈ {0,1} stored as u8): half the weight-memory traffic of the i16
-//!   kernel, and it keeps the zero-skip on activations, which pays off for
-//!   m=1 DAC slicing where activation planes are ~half zeros.
+//! * [`gemm_acc`] / [`gemm`] / [`gemm_into`] — dense f32 C += A·B.
+//! * [`gemm_nt`] / [`gemm_nt_into`] — C = A·Bᵀ (data-gradient pass).
+//! * [`gemm_tn`] / [`gemm_tn_into`] — C = Aᵀ·B (weight-gradient pass,
+//!   zero-skip on A).
+//! * [`gemm_acc_sparse`] / [`gemm_sparse`] — f32 with a per-element zero
+//!   skip, for genuinely sparse inputs (post-ReLU quantized activation
+//!   patches on the digital conv path).  Always scalar: the skip is the
+//!   point, and it defeats vectorization anyway.
+//! * [`gemm_acc_u8_i16`] — integer plane kernel (u8 DAC-plane activations ×
+//!   i16 weights → i32).  Plane sums are exact integers ≤ 2²⁴, so every
+//!   arm is bit-identical.
+//! * [`gemm_acc_u8_bin`] — binary planes stored one weight per u8 (the
+//!   reference layout; kept for parity tests and compat).
+//! * [`gemm_acc_u8_bin_packed`] — binary planes bit-packed 64 columns per
+//!   u64 word (`pim::layout::packed_words`), the layout `PimEngine` stores
+//!   for the bit-serial scheme: 8× less weight traffic, broadcast-AND-
+//!   accumulate inner loops on the AVX2 arm.
+//!
+//! Exactness contract: integer kernels are bit-identical across arms on
+//! every shape (tails included); f32 kernels are deterministic per arm
+//! (fixed tile order) and match scalar to documented tolerance — see
+//! DESIGN.md §Kernel dispatch.
 
-/// C[m,n] += A[m,k] * B[k,n], row-major, dense f32.
+use crate::tensor::kernels::active;
+
+/// C[m,n] += A[m,k] * B[k,n], row-major, dense f32 (dispatched).
 pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        let mut kk = 0;
-        // register-blocked: 4 rows of B share one pass over the C row
-        while kk + 4 <= k {
-            let a0 = arow[kk];
-            let a1 = arow[kk + 1];
-            let a2 = arow[kk + 2];
-            let a3 = arow[kk + 3];
-            let b0 = &b[kk * n..kk * n + n];
-            let b1 = &b[(kk + 1) * n..(kk + 1) * n + n];
-            let b2 = &b[(kk + 2) * n..(kk + 2) * n + n];
-            let b3 = &b[(kk + 3) * n..(kk + 3) * n + n];
-            for j in 0..n {
-                crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
-            }
-            kk += 4;
-        }
-        while kk < k {
-            let aik = arow[kk];
-            let brow = &b[kk * n..kk * n + n];
-            for j in 0..n {
-                crow[j] += aik * brow[j];
-            }
-            kk += 1;
-        }
-    }
+    (active().gemm_acc)(m, k, n, a, b, c)
 }
 
-/// Dense-accumulate variant with a per-element zero skip.  Only worth it on
-/// sparse inputs (ReLU outputs, binary planes); on dense inputs the branch
-/// costs more than the multiplies it saves.
+/// Dense-accumulate variant with a per-element zero skip.  Only worth it
+/// on genuinely sparse f32 inputs — post-ReLU quantized activation patches
+/// on the digital conv path.  (Binary bit-serial planes stopped using this
+/// in PR 1: they run on the integer [`gemm_acc_u8_bin`] /
+/// [`gemm_acc_u8_bin_packed`] kernels.)  On dense inputs the branch costs
+/// more than the multiplies it saves.
 pub fn gemm_acc_sparse(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
@@ -76,62 +63,29 @@ pub fn gemm_acc_sparse(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &m
 }
 
 /// Integer plane kernel: C[m,n] += A[m,k] * B[k,n] with u8 activations,
-/// i16 weights, i32 accumulators.
+/// i16 weights, i32 accumulators (dispatched; bit-identical across arms).
 pub fn gemm_acc_u8_i16(m: usize, k: usize, n: usize, a: &[u8], b: &[i16], c: &mut [i32]) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        let mut kk = 0;
-        while kk + 4 <= k {
-            let a0 = arow[kk] as i32;
-            let a1 = arow[kk + 1] as i32;
-            let a2 = arow[kk + 2] as i32;
-            let a3 = arow[kk + 3] as i32;
-            let b0 = &b[kk * n..kk * n + n];
-            let b1 = &b[(kk + 1) * n..(kk + 1) * n + n];
-            let b2 = &b[(kk + 2) * n..(kk + 2) * n + n];
-            let b3 = &b[(kk + 3) * n..(kk + 3) * n + n];
-            for j in 0..n {
-                crow[j] +=
-                    a0 * b0[j] as i32 + a1 * b1[j] as i32 + a2 * b2[j] as i32 + a3 * b3[j] as i32;
-            }
-            kk += 4;
-        }
-        while kk < k {
-            let aik = arow[kk] as i32;
-            let brow = &b[kk * n..kk * n + n];
-            for j in 0..n {
-                crow[j] += aik * brow[j] as i32;
-            }
-            kk += 1;
-        }
-    }
+    (active().gemm_acc_u8_i16)(m, k, n, a, b, c)
 }
 
 /// Binary-plane kernel: weights are bit-serial planes in {0, 1} stored as
-/// u8.  Keeps the activation zero-skip (the sparse variant of the integer
-/// path — DAC planes under m=1 slicing are ~half zeros).
+/// u8 — the reference layout.  `PimEngine` stores packed planes and calls
+/// [`gemm_acc_u8_bin_packed`] instead; this stays as the parity/compat
+/// surface.  Keeps the activation zero-skip (DAC planes under m=1 slicing
+/// are ~half zeros).
 pub fn gemm_acc_u8_bin(m: usize, k: usize, n: usize, a: &[u8], b: &[u8], c: &mut [i32]) {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(c.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (kk, &aik) in arow.iter().enumerate() {
-            if aik == 0 {
-                continue;
-            }
-            let av = aik as i32;
-            let brow = &b[kk * n..kk * n + n];
-            for j in 0..n {
-                crow[j] += av * brow[j] as i32;
-            }
-        }
-    }
+    (active().gemm_acc_u8_bin)(m, k, n, a, b, c)
+}
+
+/// Bit-packed binary-plane kernel: B row `kk` is
+/// `pim::layout::packed_words(n)` u64 words, bit `o%64` of word `o/64` ↔
+/// column `o`.  Pad bits past `n` in the last word must be zero (the
+/// engine's programming guarantees this; a stray pad bit panics on the
+/// bounds check rather than corrupting memory).  Dispatched;
+/// bit-identical across arms and to [`gemm_acc_u8_bin`] on the unpacked
+/// plane.
+pub fn gemm_acc_u8_bin_packed(m: usize, k: usize, n: usize, a: &[u8], b: &[u64], c: &mut [i32]) {
+    (active().gemm_acc_u8_bin_packed)(m, k, n, a, b, c)
 }
 
 /// C = A * B (allocating convenience wrapper, dense).
@@ -164,18 +118,7 @@ pub fn gemm_nt_into(m: usize, p: usize, n: usize, a: &[f32], b: &[f32], c: &mut 
     assert_eq!(b.len(), n * p);
     c.clear();
     c.resize(m * n, 0.0);
-    for i in 0..m {
-        let arow = &a[i * p..(i + 1) * p];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for j in 0..n {
-            let brow = &b[j * p..(j + 1) * p];
-            let mut s = 0.0f32;
-            for q in 0..p {
-                s += arow[q] * brow[q];
-            }
-            crow[j] = s;
-        }
-    }
+    (active().gemm_nt_acc)(m, p, n, a, b, c);
 }
 
 /// C[m,n] = A[p,m]ᵀ · B[p,n] (both row-major).  The weight-gradient pass:
@@ -193,19 +136,7 @@ pub fn gemm_tn_into(p: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut 
     assert_eq!(b.len(), p * n);
     c.clear();
     c.resize(m * n, 0.0);
-    for q in 0..p {
-        let arow = &a[q * m..(q + 1) * m];
-        let brow = &b[q * n..(q + 1) * n];
-        for (i, &aq) in arow.iter().enumerate() {
-            if aq == 0.0 {
-                continue;
-            }
-            let crow = &mut c[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += aq * brow[j];
-            }
-        }
-    }
+    (active().gemm_tn_acc)(p, m, n, a, b, c);
 }
 
 /// C = A * B via the sparse kernel (digital conv path: A is post-ReLU
@@ -293,7 +224,8 @@ mod tests {
     fn sparse_matches_dense() {
         let mut rng = Rng::new(2);
         for &(m, k, n) in &[(4, 9, 6), (7, 65, 12)] {
-            // ~60% zeros, like quantized ReLU activations
+            // ~60% zeros, like quantized ReLU activations; integer-valued
+            // data keeps f32 sums exact, so dispatched == scalar == sparse
             let a: Vec<f32> = (0..m * k)
                 .map(|_| if rng.below(5) < 3 { 0.0 } else { rng.int_in(1, 15) as f32 })
                 .collect();
@@ -326,6 +258,12 @@ mod tests {
             for (x, y) in cb.iter().zip(&cbf) {
                 assert_eq!(*x as f32, *y);
             }
+
+            // bit-packed layout of the same binary plane
+            let wp = crate::pim::layout::pack_bin_plane(&w_bin, k, n);
+            let mut cp = vec![0i32; m * n];
+            gemm_acc_u8_bin_packed(m, k, n, &a_u8, &wp, &mut cp);
+            assert_eq!(cb, cp, "({m},{k},{n}): packed plane diverged from u8 plane");
         }
     }
 

@@ -1,0 +1,452 @@
+//! AVX2 + FMA arm (`std::arch::x86_64`), selected at runtime by
+//! [`super::active`] after `is_x86_feature_detected!("avx2")` and `("fma")`
+//! both pass.
+//!
+//! * Integer kernels are exact i32 arithmetic, so they are **bit-identical
+//!   to the scalar arm** on every shape; k/n tails that are not multiples
+//!   of the 8-lane width run the same scalar tail code.
+//! * f32 kernels use FMA with a fixed (shape-only) tile order — an
+//!   L1-sized n×k tile walk for [`gemm_acc`], 8-lane partial sums reduced
+//!   in a fixed lane order for [`gemm_nt_acc`] — so outputs are
+//!   deterministic run-to-run, and differ from scalar only by summation
+//!   order (tested at 1e-3 absolute tolerance on unit-scale data).
+//! * The bit-packed binary kernel expands each byte of a packed u64 word
+//!   to an 8-lane 0/-1 mask (broadcast-AND-compare against per-lane bit
+//!   constants) and accumulates the broadcast activation under that mask —
+//!   one load/store pair per 8 outputs, no multiplies.
+//!
+//! Every public fn here asserts the slice geometry *and* the CPU features
+//! before entering the `#[target_feature]` inner body, so each table entry
+//! is sound in isolation — the feature assert runs in release too (these
+//! are safe `pub fn`s; without it, a direct call on a non-AVX2 x86_64 CPU
+//! would be UB reachable from safe code).  The in-bounds pointer
+//! arithmetic is established by the geometry asserts.
+
+#![allow(unsafe_code)]
+
+use std::arch::x86_64::*;
+
+use super::KernelTable;
+
+/// The AVX2+FMA kernel table.  Only select this after feature detection.
+pub static TABLE: KernelTable = KernelTable {
+    name: "avx2",
+    gemm_acc,
+    gemm_nt_acc,
+    gemm_tn_acc,
+    gemm_acc_u8_i16,
+    // the u8 binary-plane kernel stays scalar: the engine's bit-serial path
+    // uses the packed kernel below, and the u8 layout survives only as the
+    // reference/compat surface
+    gemm_acc_u8_bin: super::scalar::gemm_acc_u8_bin,
+    gemm_acc_u8_bin_packed,
+};
+
+/// Release-mode guard: these are safe `pub fn`s, so executing the AVX2
+/// bodies on a CPU without the features would be UB reachable from safe
+/// code.  `is_x86_feature_detected!` caches its answer, so this is one
+/// atomic load per GEMM call — noise next to the kernel itself.
+#[inline]
+fn check_features() {
+    assert!(
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma"),
+        "avx2 kernel table used without AVX2+FMA"
+    );
+}
+
+// -- f32 dense: C += A·B ----------------------------------------------------
+
+/// L1-sized tile edges: a KB×NB f32 tile of B is 48 KiB ≤ typical L2, with
+/// the hot NB strip of C (1.5 KiB) pinned in L1 across the KB loop.  Fixed
+/// constants — the tile walk depends only on (m, k, n), which is what makes
+/// the f32 arms deterministic at any thread count.
+const NB: usize = 384;
+const KB: usize = 32;
+
+pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    check_features();
+    unsafe { gemm_acc_impl(m, k, n, a, b, c) }
+}
+
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn gemm_acc_impl(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    for j0 in (0..n).step_by(NB) {
+        let jend = (j0 + NB).min(n);
+        for kk0 in (0..k).step_by(KB) {
+            let kend = (kk0 + KB).min(k);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n..(i + 1) * n];
+                let mut kk = kk0;
+                while kk + 4 <= kend {
+                    let a0 = _mm256_set1_ps(arow[kk]);
+                    let a1 = _mm256_set1_ps(arow[kk + 1]);
+                    let a2 = _mm256_set1_ps(arow[kk + 2]);
+                    let a3 = _mm256_set1_ps(arow[kk + 3]);
+                    let b0 = b.as_ptr().add(kk * n);
+                    let b1 = b.as_ptr().add((kk + 1) * n);
+                    let b2 = b.as_ptr().add((kk + 2) * n);
+                    let b3 = b.as_ptr().add((kk + 3) * n);
+                    let cp = crow.as_mut_ptr();
+                    let mut j = j0;
+                    while j + 8 <= jend {
+                        let mut cv = _mm256_loadu_ps(cp.add(j));
+                        cv = _mm256_fmadd_ps(a0, _mm256_loadu_ps(b0.add(j)), cv);
+                        cv = _mm256_fmadd_ps(a1, _mm256_loadu_ps(b1.add(j)), cv);
+                        cv = _mm256_fmadd_ps(a2, _mm256_loadu_ps(b2.add(j)), cv);
+                        cv = _mm256_fmadd_ps(a3, _mm256_loadu_ps(b3.add(j)), cv);
+                        _mm256_storeu_ps(cp.add(j), cv);
+                        j += 8;
+                    }
+                    while j < jend {
+                        crow[j] += arow[kk] * *b0.add(j)
+                            + arow[kk + 1] * *b1.add(j)
+                            + arow[kk + 2] * *b2.add(j)
+                            + arow[kk + 3] * *b3.add(j);
+                        j += 1;
+                    }
+                    kk += 4;
+                }
+                while kk < kend {
+                    let av = _mm256_set1_ps(arow[kk]);
+                    let brow = b.as_ptr().add(kk * n);
+                    let cp = crow.as_mut_ptr();
+                    let mut j = j0;
+                    while j + 8 <= jend {
+                        let cv = _mm256_loadu_ps(cp.add(j));
+                        _mm256_storeu_ps(
+                            cp.add(j),
+                            _mm256_fmadd_ps(av, _mm256_loadu_ps(brow.add(j)), cv),
+                        );
+                        j += 8;
+                    }
+                    while j < jend {
+                        crow[j] += arow[kk] * *brow.add(j);
+                        j += 1;
+                    }
+                    kk += 1;
+                }
+            }
+        }
+    }
+}
+
+// -- f32 A·Bᵀ: dot-product rows ---------------------------------------------
+
+pub fn gemm_nt_acc(m: usize, p: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * p);
+    assert_eq!(b.len(), n * p);
+    assert_eq!(c.len(), m * n);
+    check_features();
+    unsafe { gemm_nt_acc_impl(m, p, n, a, b, c) }
+}
+
+/// Fixed-order horizontal sum: (lane 0+4, 1+5, 2+6, 3+7) → pairwise.
+#[target_feature(enable = "avx2")]
+unsafe fn hsum256(v: __m256) -> f32 {
+    let hi = _mm256_extractf128_ps(v, 1);
+    let lo = _mm256_castps256_ps128(v);
+    let s = _mm_add_ps(lo, hi);
+    let shuf = _mm_movehdup_ps(s); // [1,1,3,3]
+    let sums = _mm_add_ps(s, shuf); // [0+1, _, 2+3, _]
+    let shuf2 = _mm_movehl_ps(shuf, sums); // [2+3, _, ...]
+    _mm_cvtss_f32(_mm_add_ss(sums, shuf2))
+}
+
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn gemm_nt_acc_impl(m: usize, p: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    for i in 0..m {
+        let arow = a.as_ptr().add(i * p);
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = b.as_ptr().add(j * p);
+            let mut acc = _mm256_setzero_ps();
+            let mut q = 0;
+            while q + 8 <= p {
+                acc = _mm256_fmadd_ps(
+                    _mm256_loadu_ps(arow.add(q)),
+                    _mm256_loadu_ps(brow.add(q)),
+                    acc,
+                );
+                q += 8;
+            }
+            let mut s = hsum256(acc);
+            while q < p {
+                s += *arow.add(q) * *brow.add(q);
+                q += 1;
+            }
+            crow[j] += s;
+        }
+    }
+}
+
+// -- f32 Aᵀ·B: zero-skip axpy rows ------------------------------------------
+
+pub fn gemm_tn_acc(p: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), p * m);
+    assert_eq!(b.len(), p * n);
+    assert_eq!(c.len(), m * n);
+    check_features();
+    unsafe { gemm_tn_acc_impl(p, m, n, a, b, c) }
+}
+
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn gemm_tn_acc_impl(p: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    for q in 0..p {
+        let arow = &a[q * m..(q + 1) * m];
+        let brow = b.as_ptr().add(q * n);
+        for (i, &aq) in arow.iter().enumerate() {
+            if aq == 0.0 {
+                continue;
+            }
+            let av = _mm256_set1_ps(aq);
+            let cp = c.as_mut_ptr().add(i * n);
+            let mut j = 0;
+            while j + 8 <= n {
+                let cv = _mm256_loadu_ps(cp.add(j));
+                _mm256_storeu_ps(cp.add(j), _mm256_fmadd_ps(av, _mm256_loadu_ps(brow.add(j)), cv));
+                j += 8;
+            }
+            while j < n {
+                *cp.add(j) += aq * *brow.add(j);
+                j += 1;
+            }
+        }
+    }
+}
+
+// -- u8 × i16 → i32 plane kernel --------------------------------------------
+
+pub fn gemm_acc_u8_i16(m: usize, k: usize, n: usize, a: &[u8], b: &[i16], c: &mut [i32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    check_features();
+    unsafe { gemm_acc_u8_i16_impl(m, k, n, a, b, c) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_acc_u8_i16_impl(m: usize, k: usize, n: usize, a: &[u8], b: &[i16], c: &mut [i32]) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut kk = 0;
+        // 4 weight rows share one pass over the C row (same blocking as
+        // scalar; sums are exact, so the order is irrelevant to the bits)
+        while kk + 4 <= k {
+            let cp = crow.as_mut_ptr();
+            let a0 = _mm256_set1_epi32(arow[kk] as i32);
+            let a1 = _mm256_set1_epi32(arow[kk + 1] as i32);
+            let a2 = _mm256_set1_epi32(arow[kk + 2] as i32);
+            let a3 = _mm256_set1_epi32(arow[kk + 3] as i32);
+            let b0 = b.as_ptr().add(kk * n);
+            let b1 = b.as_ptr().add((kk + 1) * n);
+            let b2 = b.as_ptr().add((kk + 2) * n);
+            let b3 = b.as_ptr().add((kk + 3) * n);
+            let mut j = 0;
+            while j + 8 <= n {
+                let w0 = _mm256_cvtepi16_epi32(_mm_loadu_si128(b0.add(j) as *const __m128i));
+                let w1 = _mm256_cvtepi16_epi32(_mm_loadu_si128(b1.add(j) as *const __m128i));
+                let w2 = _mm256_cvtepi16_epi32(_mm_loadu_si128(b2.add(j) as *const __m128i));
+                let w3 = _mm256_cvtepi16_epi32(_mm_loadu_si128(b3.add(j) as *const __m128i));
+                let mut cv = _mm256_loadu_si256(cp.add(j) as *const __m256i);
+                cv = _mm256_add_epi32(cv, _mm256_mullo_epi32(a0, w0));
+                cv = _mm256_add_epi32(cv, _mm256_mullo_epi32(a1, w1));
+                cv = _mm256_add_epi32(cv, _mm256_mullo_epi32(a2, w2));
+                cv = _mm256_add_epi32(cv, _mm256_mullo_epi32(a3, w3));
+                _mm256_storeu_si256(cp.add(j) as *mut __m256i, cv);
+                j += 8;
+            }
+            while j < n {
+                crow[j] += arow[kk] as i32 * *b0.add(j) as i32
+                    + arow[kk + 1] as i32 * *b1.add(j) as i32
+                    + arow[kk + 2] as i32 * *b2.add(j) as i32
+                    + arow[kk + 3] as i32 * *b3.add(j) as i32;
+                j += 1;
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let cp = crow.as_mut_ptr();
+            let av = _mm256_set1_epi32(arow[kk] as i32);
+            let brow = b.as_ptr().add(kk * n);
+            let mut j = 0;
+            while j + 8 <= n {
+                let w = _mm256_cvtepi16_epi32(_mm_loadu_si128(brow.add(j) as *const __m128i));
+                let cv = _mm256_loadu_si256(cp.add(j) as *const __m256i);
+                _mm256_storeu_si256(
+                    cp.add(j) as *mut __m256i,
+                    _mm256_add_epi32(cv, _mm256_mullo_epi32(av, w)),
+                );
+                j += 8;
+            }
+            while j < n {
+                crow[j] += arow[kk] as i32 * *brow.add(j) as i32;
+                j += 1;
+            }
+            kk += 1;
+        }
+    }
+}
+
+// -- bit-packed binary plane kernel -----------------------------------------
+
+pub fn gemm_acc_u8_bin_packed(m: usize, k: usize, n: usize, a: &[u8], b: &[u64], c: &mut [i32]) {
+    let wpr = crate::pim::layout::packed_words(n);
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * wpr);
+    assert_eq!(c.len(), m * n);
+    check_features();
+    unsafe { gemm_acc_u8_bin_packed_impl(m, k, n, wpr, a, b, c) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_acc_u8_bin_packed_impl(
+    m: usize,
+    k: usize,
+    n: usize,
+    wpr: usize,
+    a: &[u8],
+    b: &[u64],
+    c: &mut [i32],
+) {
+    // per-lane bit constants: lane j tests bit j of the broadcast byte
+    let bits = _mm256_setr_epi32(1, 2, 4, 8, 16, 32, 64, 128);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0 {
+                continue;
+            }
+            let av = _mm256_set1_epi32(aik as i32);
+            let brow = &b[kk * wpr..(kk + 1) * wpr];
+            for (wi, &word) in brow.iter().enumerate() {
+                if word == 0 {
+                    continue;
+                }
+                let o0 = wi * 64;
+                if o0 + 64 <= n {
+                    // full word: 8 bytes × 8 lanes, broadcast-AND-accumulate
+                    let cp = crow.as_mut_ptr();
+                    for byte in 0..8 {
+                        let bv = ((word >> (8 * byte)) & 0xFF) as i32;
+                        if bv == 0 {
+                            continue;
+                        }
+                        let mask = _mm256_cmpeq_epi32(
+                            _mm256_and_si256(_mm256_set1_epi32(bv), bits),
+                            bits,
+                        );
+                        let j = o0 + 8 * byte;
+                        let cv = _mm256_loadu_si256(cp.add(j) as *const __m256i);
+                        _mm256_storeu_si256(
+                            cp.add(j) as *mut __m256i,
+                            _mm256_add_epi32(cv, _mm256_and_si256(av, mask)),
+                        );
+                    }
+                } else {
+                    // tail word (n not a multiple of 64): scalar bit walk
+                    let mut w = word;
+                    while w != 0 {
+                        let o = o0 + w.trailing_zeros() as usize;
+                        crow[o] += aik as i32;
+                        w &= w - 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scalar;
+    use crate::util::rng::Rng;
+
+    fn have_avx2() -> bool {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    }
+
+    #[test]
+    fn integer_kernels_bit_identical_to_scalar() {
+        if !have_avx2() {
+            return; // nothing to check on this host; CI x86 runners cover it
+        }
+        let mut rng = Rng::new(0xA2);
+        let shapes = [(1, 1, 1), (3, 5, 7), (2, 9, 8), (4, 13, 17), (5, 64, 33), (2, 7, 130)];
+        for &(m, k, n) in &shapes {
+            let a: Vec<u8> = (0..m * k).map(|_| rng.int_in(0, 15) as u8).collect();
+            let w: Vec<i16> = (0..k * n).map(|_| rng.int_in(-7, 7) as i16).collect();
+            let mut c1: Vec<i32> = (0..m * n).map(|_| rng.int_in(-9, 9) as i32).collect();
+            let mut c2 = c1.clone();
+            scalar::gemm_acc_u8_i16(m, k, n, &a, &w, &mut c1);
+            super::gemm_acc_u8_i16(m, k, n, &a, &w, &mut c2);
+            assert_eq!(c1, c2, "u8i16 ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn packed_kernel_bit_identical_to_scalar() {
+        if !have_avx2() {
+            return;
+        }
+        let mut rng = Rng::new(0xB3);
+        for &(m, k, n) in &[(1, 1, 1), (2, 3, 63), (3, 5, 64), (2, 9, 65), (4, 7, 200)] {
+            let a: Vec<u8> = (0..m * k).map(|_| rng.int_in(0, 3) as u8).collect();
+            let bin: Vec<u8> = (0..k * n).map(|_| rng.below(2) as u8).collect();
+            let packed = crate::pim::layout::pack_bin_plane(&bin, k, n);
+            let mut c1: Vec<i32> = (0..m * n).map(|_| rng.int_in(0, 5) as i32).collect();
+            let mut c2 = c1.clone();
+            scalar::gemm_acc_u8_bin_packed(m, k, n, &a, &packed, &mut c1);
+            super::gemm_acc_u8_bin_packed(m, k, n, &a, &packed, &mut c2);
+            assert_eq!(c1, c2, "packed ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn f32_kernels_close_to_scalar() {
+        if !have_avx2() {
+            return;
+        }
+        let mut rng = Rng::new(0xC4);
+        for &(m, k, n) in &[(1, 1, 1), (4, 9, 6), (3, 130, 17), (7, 33, 384), (2, 400, 10)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal_in(0.0, 1.0)).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal_in(0.0, 1.0)).collect();
+            let mut c1 = vec![0.0f32; m * n];
+            let mut c2 = vec![0.0f32; m * n];
+            scalar::gemm_acc(m, k, n, &a, &b, &mut c1);
+            super::gemm_acc(m, k, n, &a, &b, &mut c2);
+            for (x, y) in c1.iter().zip(&c2) {
+                assert!((x - y).abs() < 1e-3, "acc ({m},{k},{n}): {x} vs {y}");
+            }
+            // nt: b as [n, k]ᵀ operand
+            let bt: Vec<f32> = (0..n * k).map(|_| rng.normal_in(0.0, 1.0)).collect();
+            let mut c3 = vec![0.0f32; m * n];
+            let mut c4 = vec![0.0f32; m * n];
+            scalar::gemm_nt_acc(m, k, n, &a, &bt, &mut c3);
+            super::gemm_nt_acc(m, k, n, &a, &bt, &mut c4);
+            for (x, y) in c3.iter().zip(&c4) {
+                assert!((x - y).abs() < 1e-3, "nt ({m},{k},{n}): {x} vs {y}");
+            }
+            // tn: a as [k, m] operand (zero-skip path)
+            let a2: Vec<f32> = (0..k * m)
+                .map(|_| if rng.below(3) == 0 { 0.0 } else { rng.normal_in(0.0, 1.0) })
+                .collect();
+            let b2: Vec<f32> = (0..k * n).map(|_| rng.normal_in(0.0, 1.0)).collect();
+            let mut c5 = vec![0.0f32; m * n];
+            let mut c6 = vec![0.0f32; m * n];
+            scalar::gemm_tn_acc(k, m, n, &a2, &b2, &mut c5);
+            super::gemm_tn_acc(k, m, n, &a2, &b2, &mut c6);
+            for (x, y) in c5.iter().zip(&c6) {
+                assert!((x - y).abs() < 1e-3, "tn ({k},{m},{n}): {x} vs {y}");
+            }
+        }
+    }
+}

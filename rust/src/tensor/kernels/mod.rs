@@ -1,0 +1,110 @@
+//! Runtime-dispatched GEMM kernel subsystem (§Perf L3.6).
+//!
+//! Every plane GEMM and f32 GEMM in the crate goes through one function-
+//! pointer table, resolved **once per process**:
+//!
+//! * [`scalar`] — the portable reference arm, always compiled.  Its integer
+//!   kernels define the bit-exact contract; its f32 kernels are the
+//!   pre-dispatch implementations unchanged.
+//! * [`avx2`] — `std::arch::x86_64` paths (AVX2 + FMA), selected at runtime
+//!   via `is_x86_feature_detected!`.  Compiled only on x86_64; other
+//!   targets fall back to [`scalar`] at compile time.
+//!
+//! Selection order: `PIM_QAT_NO_SIMD=1` forces the scalar arm (the CI leg
+//! that keeps the fallback exercised); otherwise AVX2+FMA when the CPU has
+//! both; otherwise scalar.
+//!
+//! ## Exactness contract (DESIGN.md §Kernel dispatch)
+//!
+//! * **Integer kernels** (`gemm_acc_u8_i16`, `gemm_acc_u8_bin`,
+//!   `gemm_acc_u8_bin_packed`) compute exact i32 sums, so every arm must be
+//!   **bit-identical** to scalar on every shape — including k/n tails that
+//!   are not multiples of the vector width.  Pinned by the property tests
+//!   in `tests/engine_parity.rs`.
+//! * **f32 kernels** (`gemm_acc`, `gemm_nt_acc`, `gemm_tn_acc`) may differ
+//!   from scalar by summation order (FMA, 8-lane partial sums), but each
+//!   arm uses a **fixed tile order** that depends only on the shape — never
+//!   on data or thread count — so results are deterministic run-to-run at
+//!   any parallelism.  Tested against scalar at 1e-3 absolute tolerance on
+//!   unit-scale data.
+//!
+//! All table entries **accumulate** into `c` (callers zero `c` when they
+//! want a plain product), and every arm asserts the slice geometry itself,
+//! so each entry is independently sound.
+
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+
+use std::sync::OnceLock;
+
+/// The dispatched kernel set.  One static instance per arm; `active()`
+/// returns the arm selected for this process.
+pub struct KernelTable {
+    /// Arm name ("scalar", "avx2") — surfaced by benches and tests.
+    pub name: &'static str,
+    /// C[m,n] += A[m,k] · B[k,n], dense f32 (row-major).
+    pub gemm_acc: fn(usize, usize, usize, &[f32], &[f32], &mut [f32]),
+    /// C[m,n] += A[m,p] · B[n,p]ᵀ, f32 (dot-product form).
+    pub gemm_nt_acc: fn(usize, usize, usize, &[f32], &[f32], &mut [f32]),
+    /// C[m,n] += A[p,m]ᵀ · B[p,n], f32 (zero-skip on A).
+    pub gemm_tn_acc: fn(usize, usize, usize, &[f32], &[f32], &mut [f32]),
+    /// C[m,n] += A[m,k] · B[k,n], u8 activations × i16 weights → i32.
+    pub gemm_acc_u8_i16: fn(usize, usize, usize, &[u8], &[i16], &mut [i32]),
+    /// C[m,n] += A[m,k] · B[k,n], u8 activations × {0,1} u8 weights → i32.
+    pub gemm_acc_u8_bin: fn(usize, usize, usize, &[u8], &[u8], &mut [i32]),
+    /// C[m,n] += A[m,k] · B[k,n] with B a bit-packed binary plane:
+    /// `(n+63)/64` u64 words per row, bit `o%64` of word `o/64` ↔ column
+    /// `o` (see `pim::layout::packed_words`).
+    pub gemm_acc_u8_bin_packed: fn(usize, usize, usize, &[u8], &[u64], &mut [i32]),
+}
+
+static ACTIVE: OnceLock<&'static KernelTable> = OnceLock::new();
+
+/// The kernel table selected for this process (resolved on first call).
+pub fn active() -> &'static KernelTable {
+    ACTIVE.get_or_init(select)
+}
+
+/// `PIM_QAT_NO_SIMD=1` (any non-empty value other than "0") forces the
+/// scalar arm.
+fn no_simd_forced() -> bool {
+    std::env::var_os("PIM_QAT_NO_SIMD").is_some_and(|v| !v.is_empty() && v != "0")
+}
+
+fn select() -> &'static KernelTable {
+    if no_simd_forced() {
+        return &scalar::TABLE;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return &avx2::TABLE;
+        }
+    }
+    &scalar::TABLE
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn active_is_resolved_once_and_named() {
+        let t1 = active();
+        let t2 = active();
+        assert!(std::ptr::eq(t1, t2), "OnceLock must hand out one table");
+        assert!(t1.name == "scalar" || t1.name == "avx2");
+    }
+
+    #[test]
+    fn scalar_table_is_always_available() {
+        // the reference arm must exist on every target
+        let a = vec![1u8, 2, 3, 4];
+        let b = vec![1i16, 0, 0, 1];
+        let mut c = vec![0i32; 4];
+        (scalar::TABLE.gemm_acc_u8_i16)(2, 2, 2, &a, &b, &mut c);
+        assert_eq!(c, vec![1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,219 @@
+//! Scalar reference arm: always compiled, on every target.  The integer
+//! kernels here define the bit-exact contract every SIMD arm must match;
+//! the f32 kernels are the pre-dispatch implementations unchanged (4-wide
+//! k register blocking for `gemm_acc`, dot-product `gemm_nt_acc`,
+//! zero-skip `gemm_tn_acc`).
+
+use super::KernelTable;
+
+/// The scalar kernel table.
+pub static TABLE: KernelTable = KernelTable {
+    name: "scalar",
+    gemm_acc,
+    gemm_nt_acc,
+    gemm_tn_acc,
+    gemm_acc_u8_i16,
+    gemm_acc_u8_bin,
+    gemm_acc_u8_bin_packed,
+};
+
+/// C[m,n] += A[m,k] · B[k,n], row-major, dense f32.
+pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut kk = 0;
+        // register-blocked: 4 rows of B share one pass over the C row
+        while kk + 4 <= k {
+            let a0 = arow[kk];
+            let a1 = arow[kk + 1];
+            let a2 = arow[kk + 2];
+            let a3 = arow[kk + 3];
+            let b0 = &b[kk * n..kk * n + n];
+            let b1 = &b[(kk + 1) * n..(kk + 1) * n + n];
+            let b2 = &b[(kk + 2) * n..(kk + 2) * n + n];
+            let b3 = &b[(kk + 3) * n..(kk + 3) * n + n];
+            for j in 0..n {
+                crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let aik = arow[kk];
+            let brow = &b[kk * n..kk * n + n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+            kk += 1;
+        }
+    }
+}
+
+/// C[m,n] += A[m,p] · B[n,p]ᵀ (both row-major), dot-product form — both
+/// operands stream row-wise.
+pub fn gemm_nt_acc(m: usize, p: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * p);
+    assert_eq!(b.len(), n * p);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * p..(i + 1) * p];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * p..(j + 1) * p];
+            let mut s = 0.0f32;
+            for q in 0..p {
+                s += arow[q] * brow[q];
+            }
+            crow[j] += s;
+        }
+    }
+}
+
+/// C[m,n] += A[p,m]ᵀ · B[p,n] (both row-major).  Keeps the zero-skip on A
+/// — the weight-gradient pass feeds post-ReLU quantized patch rows, which
+/// carry many exact zeros.
+pub fn gemm_tn_acc(p: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), p * m);
+    assert_eq!(b.len(), p * n);
+    assert_eq!(c.len(), m * n);
+    for q in 0..p {
+        let arow = &a[q * m..(q + 1) * m];
+        let brow = &b[q * n..(q + 1) * n];
+        for (i, &aq) in arow.iter().enumerate() {
+            if aq == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aq * brow[j];
+            }
+        }
+    }
+}
+
+/// Integer plane kernel: C[m,n] += A[m,k] · B[k,n] with u8 activations,
+/// i16 weights, i32 accumulators.  Exact, so any accumulation order is
+/// bit-identical (all magnitudes ≤ 2²⁴).
+pub fn gemm_acc_u8_i16(m: usize, k: usize, n: usize, a: &[u8], b: &[i16], c: &mut [i32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut kk = 0;
+        while kk + 4 <= k {
+            let a0 = arow[kk] as i32;
+            let a1 = arow[kk + 1] as i32;
+            let a2 = arow[kk + 2] as i32;
+            let a3 = arow[kk + 3] as i32;
+            let b0 = &b[kk * n..kk * n + n];
+            let b1 = &b[(kk + 1) * n..(kk + 1) * n + n];
+            let b2 = &b[(kk + 2) * n..(kk + 2) * n + n];
+            let b3 = &b[(kk + 3) * n..(kk + 3) * n + n];
+            for j in 0..n {
+                crow[j] +=
+                    a0 * b0[j] as i32 + a1 * b1[j] as i32 + a2 * b2[j] as i32 + a3 * b3[j] as i32;
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let aik = arow[kk] as i32;
+            let brow = &b[kk * n..kk * n + n];
+            for j in 0..n {
+                crow[j] += aik * brow[j] as i32;
+            }
+            kk += 1;
+        }
+    }
+}
+
+/// Binary-plane kernel: weights are bit-serial planes in {0, 1} stored one
+/// per u8.  Keeps the activation zero-skip (DAC planes under m=1 slicing
+/// are ~half zeros).
+pub fn gemm_acc_u8_bin(m: usize, k: usize, n: usize, a: &[u8], b: &[u8], c: &mut [i32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0 {
+                continue;
+            }
+            let av = aik as i32;
+            let brow = &b[kk * n..kk * n + n];
+            for j in 0..n {
+                crow[j] += av * brow[j] as i32;
+            }
+        }
+    }
+}
+
+/// Bit-packed binary-plane kernel: B row `kk` is `(n+63)/64` u64 words,
+/// bit `o%64` of word `o/64` ↔ column `o` — 8× less weight traffic than
+/// the u8 layout.  The scalar arm walks set bits with
+/// `trailing_zeros` / clear-lowest; sums are exact, so this is
+/// bit-identical to [`gemm_acc_u8_bin`] on the unpacked plane.
+pub fn gemm_acc_u8_bin_packed(m: usize, k: usize, n: usize, a: &[u8], b: &[u64], c: &mut [i32]) {
+    let wpr = crate::pim::layout::packed_words(n);
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * wpr);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0 {
+                continue;
+            }
+            let av = aik as i32;
+            let brow = &b[kk * wpr..(kk + 1) * wpr];
+            for (wi, &word) in brow.iter().enumerate() {
+                let mut w = word;
+                let o0 = wi * 64;
+                while w != 0 {
+                    let o = o0 + w.trailing_zeros() as usize;
+                    crow[o] += av;
+                    w &= w - 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packed_matches_unpacked_bin() {
+        // pad bits live in the last word; programming never sets them
+        let (m, k, n) = (3usize, 5usize, 70usize);
+        let a: Vec<u8> = (0..m * k).map(|i| (i % 3) as u8).collect();
+        let bin: Vec<u8> = (0..k * n).map(|i| ((i * 7) % 3 == 0) as u8).collect();
+        let packed = crate::pim::layout::pack_bin_plane(&bin, k, n);
+        let mut c1 = vec![3i32; m * n];
+        let mut c2 = vec![3i32; m * n];
+        gemm_acc_u8_bin(m, k, n, &a, &bin, &mut c1);
+        gemm_acc_u8_bin_packed(m, k, n, &a, &packed, &mut c2);
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn nt_tn_accumulate() {
+        // the table contract: += into c, not overwrite
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 4.0];
+        let mut c = vec![10.0f32];
+        gemm_nt_acc(1, 2, 1, &a, &b, &mut c);
+        assert_eq!(c, vec![21.0]);
+        let mut c = vec![5.0f32];
+        gemm_tn_acc(2, 1, 1, &a, &b, &mut c);
+        assert_eq!(c, vec![16.0]);
+    }
+}

@@ -7,6 +7,7 @@
 
 pub mod arena;
 pub mod gemm;
+pub mod kernels;
 pub mod ops;
 
 /// A dense row-major f32 tensor.

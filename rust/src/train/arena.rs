@@ -10,11 +10,8 @@
 //! and reprogrammed in place each step; a geometry, scheme or bit-width
 //! change rebuilds them.
 
-use std::collections::BTreeMap;
-
 use crate::config::Scheme;
-use crate::pim::layout::plan_groups;
-use crate::pim::{PimEngine, QuantBits};
+use crate::pim::{EngineCache, QuantBits};
 use crate::tensor::arena::BufPool;
 
 /// Reusable state threaded through the native trainer's hot loop.
@@ -22,8 +19,10 @@ use crate::tensor::arena::BufPool;
 pub struct TrainArena {
     /// Grown-once flat buffers (patches, u8 grids, GEMM scratch, …).
     pub pool: BufPool,
-    /// One persistent engine per PIM conv layer, reprogrammed in place.
-    pub engines: BTreeMap<String, PimEngine>,
+    /// One persistent engine per PIM conv layer, reprogrammed in place —
+    /// the same [`EngineCache`] keying the evaluation path uses
+    /// (`pim::cache`).
+    pub engines: EngineCache,
 }
 
 impl TrainArena {
@@ -34,8 +33,10 @@ impl TrainArena {
     /// Make sure the cached engine for layer `name` exists, matches the
     /// layer geometry, and carries this step's integer weights `w_int`
     /// ([C·k·k, O], im2col column order).  Cache hit → in-place
-    /// [`PimEngine::reprogram`] (unchanged groups skipped); miss, or a
-    /// scheme / bits / shape change → fresh [`PimEngine::prepare_cols`].
+    /// [`crate::pim::PimEngine::reprogram`] (unchanged groups skipped);
+    /// miss, or a scheme / bits / shape change → fresh
+    /// [`crate::pim::PimEngine::prepare_cols`].  Delegates to
+    /// [`EngineCache::ensure_engine`].
     #[allow(clippy::too_many_arguments)]
     pub fn ensure_engine(
         &mut self,
@@ -48,15 +49,7 @@ impl TrainArena {
         kernel: usize,
         unit_channels: usize,
     ) {
-        let plan = plan_groups(c_in, kernel, unit_channels);
-        if let Some(e) = self.engines.get_mut(name) {
-            if e.scheme == scheme && e.bits == bits && e.out == out && e.plan == plan {
-                e.reprogram(w_int);
-                return;
-            }
-        }
-        let engine = PimEngine::prepare_cols(scheme, bits, w_int, out, c_in, kernel, unit_channels);
-        self.engines.insert(name.to_string(), engine);
+        self.engines.ensure_engine(name, scheme, bits, w_int, out, c_in, kernel, unit_channels);
     }
 }
 
