@@ -5,13 +5,20 @@
 //! twin).  Because the trainer keeps per-layer engines and the step arena
 //! alive across iterations (§Perf L3.5), the warmup phase doubles as the
 //! grow-once pass and the measured iterations are the steady state the
-//! trainer actually runs in.  Emits `BENCH_train_step.json` so the perf
-//! trajectory is tracked across PRs (EXPERIMENTS.md §Perf); CI gates it
-//! against `baselines/BENCH_train_step.json` via `bench_check`.
+//! trainer actually runs in.
+//!
+//! The `acquire+step/*` case pair (§Perf L3.7) times the FULL step
+//! lifecycle — batch assembly + augmentation through the `BatchLoader`,
+//! then the train step — serial (`prefetch0`) vs pipelined (`prefetch1`,
+//! assembly overlapped with the step on the worker pool).  Emits
+//! `BENCH_train_step.json` so the perf trajectory is tracked across PRs
+//! (EXPERIMENTS.md §Perf); CI gates it against
+//! `baselines/BENCH_train_step.json` via `bench_check`.
 //!
 //! Set `PIM_QAT_BENCH_QUICK=1` for a fast smoke run.
 
 use pim_qat::config::{JobConfig, Mode, Scheme};
+use pim_qat::data::loader::{with_loader, LoaderCfg};
 use pim_qat::data::synth;
 use pim_qat::runtime::Manifest;
 use pim_qat::train::native::NativeTrainer;
@@ -56,6 +63,36 @@ fn main() {
         println!("{}", stats.report());
         all.push(stats);
     }
+
+    // the full lifecycle, serial vs pipelined acquire (bit-identical
+    // results by the loader's determinism contract — this pair measures
+    // pure overlap)
+    for (label, prefetch) in [
+        ("acquire+step/bit_serial_b7/prefetch0", 0usize),
+        ("acquire+step/bit_serial_b7/prefetch1", 1usize),
+    ] {
+        let job = JobConfig {
+            model: "tiny".into(),
+            mode: Mode::Ours,
+            scheme: Scheme::BitSerial,
+            unit_channels: 8,
+            b_pim_train: 7,
+            ..Default::default()
+        };
+        let mut trainer = NativeTrainer::new(&manifest, &job).unwrap();
+        let cfg = LoaderCfg { batch: bs, augment: true, flip: false, seed: 7, prefetch, shards: 0 };
+        let mut rng = Rng::new(2);
+        let stats = with_loader(&ds, cfg, |loader| {
+            b.run(label, Some(bs as f64), || {
+                let (x, y) = loader.next().unwrap();
+                std::hint::black_box(trainer.train_step(x, y, 0.05, &mut rng).unwrap());
+            })
+        })
+        .unwrap();
+        println!("{}", stats.report());
+        all.push(stats);
+    }
+
     let path = std::path::Path::new("BENCH_train_step.json");
     match save_json(path, &all) {
         Ok(()) => println!("wrote {}", path.display()),

@@ -10,6 +10,7 @@
 //! §Substitutions.
 
 pub mod cifar;
+pub mod loader;
 pub mod synth;
 
 use crate::tensor::Tensor;
@@ -40,7 +41,11 @@ impl Dataset {
 
     /// Assemble a batch from indices, optionally with train-time
     /// augmentation (random crop with 2px pad + horizontal flip — §A2.1
-    /// scaled to the small image).
+    /// scaled to the small image).  Samples are written straight into the
+    /// batch buffer — no per-image intermediate on either path.  The
+    /// training loop itself batches through [`loader::BatchLoader`], which
+    /// additionally reuses its buffers and overlaps assembly with compute;
+    /// this allocating form serves evaluation, tests and benches.
     pub fn batch(
         &self,
         idx: &[usize],
@@ -54,17 +59,45 @@ impl Dataset {
         let mut x = Tensor::zeros(&[idx.len(), h, w, c]);
         let mut y = Vec::with_capacity(idx.len());
         for (bi, &i) in idx.iter().enumerate() {
-            let img = if augment {
-                augment_image(&self.images[i], rng)
-            } else {
-                self.images[i].clone()
-            };
             let dst = &mut x.data[bi * h * w * c..(bi + 1) * h * w * c];
-            dst.copy_from_slice(&img.data);
+            if augment {
+                let (dy, dx, flip) = draw_shift(rng, false);
+                augment_shift_into(&self.images[i], dy, dx, flip, dst);
+            } else {
+                dst.copy_from_slice(&self.images[i].data);
+            }
             y.push(self.labels[i]);
         }
         Batch { x, y }
     }
+}
+
+/// Augmentation pad: random crop offsets are drawn from
+/// [-AUG_PAD, AUG_PAD] per axis.
+pub const AUG_PAD: usize = 2;
+
+/// Map a draw source to one sample's augmentation parameters — the
+/// single definition of the draw layout (bounds, order, offsets) shared
+/// by the sequential-Rng paths here and the positional counter-RNG path
+/// in [`loader`].  `draw(i, n)` returns the `i`-th uniform draw in
+/// [0, n): `i` = 0 → dy, 1 → dx, 2 → flip; the flip draw is only
+/// consumed when flips are allowed (the historical sequential stream
+/// layout — positional sources simply never read counter 2).
+pub fn shift_params(
+    mut draw: impl FnMut(u64, usize) -> usize,
+    allow_flip: bool,
+) -> (isize, isize, bool) {
+    let d = 2 * AUG_PAD + 1;
+    let dy = draw(0, d) as isize - AUG_PAD as isize;
+    let dx = draw(1, d) as isize - AUG_PAD as isize;
+    let flip = allow_flip && draw(2, 2) == 1;
+    (dy, dx, flip)
+}
+
+/// [`shift_params`] over a sequential stream (the counter index is
+/// ignored — draws come in call order).
+fn draw_shift(rng: &mut crate::util::rng::Rng, allow_flip: bool) -> (isize, isize, bool) {
+    shift_params(|_, n| rng.below(n), allow_flip)
 }
 
 /// Random crop (pad 2, shift), mirroring the paper's CIFAR augmentation at
@@ -82,12 +115,21 @@ pub fn augment_image_opts(
     rng: &mut crate::util::rng::Rng,
     allow_flip: bool,
 ) -> Tensor {
+    let (dy, dx, flip) = draw_shift(rng, allow_flip);
+    let mut out = Tensor::zeros(&img.shape);
+    augment_shift_into(img, dy, dx, flip, &mut out.data);
+    out
+}
+
+/// The augmentation core shared by every caller (sequential-Rng paths
+/// above, the counter-RNG [`loader`] assembly): shifted copy of `img` into
+/// `dst` with zero padding and optional horizontal flip.  `dst` is fully
+/// overwritten (out-of-range pixels become 0), so callers may hand in a
+/// dirty reused buffer.
+pub fn augment_shift_into(img: &Tensor, dy: isize, dx: isize, flip: bool, dst: &mut [f32]) {
     let (h, w, c) = (img.shape[0], img.shape[1], img.shape[2]);
-    let pad = 2usize;
-    let dy = rng.below(2 * pad + 1) as isize - pad as isize;
-    let dx = rng.below(2 * pad + 1) as isize - pad as isize;
-    let flip = allow_flip && rng.below(2) == 1;
-    let mut out = Tensor::zeros(&[h, w, c]);
+    assert_eq!(dst.len(), h * w * c, "augment destination size");
+    dst.fill(0.0);
     for y in 0..h {
         for x in 0..w {
             let sy = y as isize + dy;
@@ -97,11 +139,10 @@ pub fn augment_image_opts(
             }
             let sx = if flip { w - 1 - sx as usize } else { sx as usize };
             for ci in 0..c {
-                out.data[(y * w + x) * c + ci] = img.data[((sy as usize) * w + sx) * c + ci];
+                dst[(y * w + x) * c + ci] = img.data[((sy as usize) * w + sx) * c + ci];
             }
         }
     }
-    out
 }
 
 /// Epoch iterator: shuffled full batches of size `bs` (drops the ragged

@@ -21,11 +21,19 @@
 //!
 //! All of these are finite-difference-checked (against the smooth STE
 //! surrogates where a round is involved) in `rust/tests/grad_check.rs`.
+//!
+//! Since §Perf L3.7 every feature-map-sized output here has a `_pooled`
+//! variant whose storage comes from the caller's [`BufPool`] — the trainer
+//! uses only those, so the whole step (BN/activation intermediates
+//! included, not just patch scale) is allocation-free in steady state
+//! (DESIGN.md §Arena).  The plain variants are thin wrappers over a
+//! throwaway pool, kept for the finite-difference tests and small one-off
+//! callers.
 
 use crate::chip::round_ties_even;
 use crate::pim::QuantBits;
 use crate::tensor::arena::BufPool;
-use crate::tensor::gemm::{gemm, gemm_nt_into, gemm_tn_into};
+use crate::tensor::gemm::{gemm_into, gemm_nt_into, gemm_tn_into};
 use crate::tensor::{ops, Tensor};
 
 // ---------------------------------------------------------------------------
@@ -130,7 +138,8 @@ pub fn conv_cols_fwd(
     let (patches, oh, ow) = pooled_im2col(x, k, stride, kc, pool);
     let m = patches.shape[0];
     let o = wcols.shape[1];
-    let y = gemm(m, kc, o, &patches.data, &wcols.data);
+    let mut y = pool.take_f32(m * o);
+    gemm_into(m, kc, o, &patches.data, &wcols.data, &mut y);
     let out = Tensor::from_vec(&[x.shape[0], oh, ow, o], y);
     (out, ConvCtx { patches, oh, ow })
 }
@@ -156,8 +165,9 @@ pub fn pooled_im2col(
 
 /// Backward of [`conv_cols_fwd`]: `dy` is the flat [M·O] output gradient,
 /// already multiplied by any scalar backward coefficient.  Returns dL/dx
-/// and writes dL/dwcols into `dwcols` ([K·O], cleared and resized); the
-/// patch-gradient intermediate lives in a pooled buffer and never escapes.
+/// (pooled storage — the caller owes it back) and writes dL/dwcols into
+/// `dwcols` ([K·O], cleared and resized); the patch-gradient intermediate
+/// lives in a pooled buffer and never escapes.
 #[allow(clippy::too_many_arguments)]
 pub fn conv_cols_bwd(
     ctx: &ConvCtx,
@@ -176,7 +186,7 @@ pub fn conv_cols_bwd(
     gemm_tn_into(m, kc, o, &ctx.patches.data, dy, dwcols);
     let mut dpatches = pool.take_f32(m * kc);
     gemm_nt_into(m, o, kc, dy, &wcols.data, &mut dpatches);
-    let mut dxbuf = Vec::new();
+    let mut dxbuf = pool.take_f32(x_shape.iter().product());
     ops::col2im_into(&dpatches, x_shape, k, stride, &mut dxbuf);
     pool.put_f32(dpatches);
     Tensor::from_vec(x_shape, dxbuf)
@@ -196,23 +206,44 @@ pub struct BnCtx {
     xhat: Tensor,
 }
 
+impl BnCtx {
+    /// Return the context's feature-map-sized storage (x̂) to the pool.
+    /// The backward loops call this when they consume a BN tape.
+    pub fn recycle(self, pool: &mut BufPool) {
+        pool.put_f32(self.xhat.data);
+    }
+}
+
 /// Training-mode batch norm: normalize with THIS batch's statistics
 /// (biased variance over B·H·W, eps 1e-5 — the jax model's convention).
 pub fn bn_train_fwd(x: &Tensor, gamma: &[f32], beta: &[f32]) -> (Tensor, BnCtx) {
+    bn_train_fwd_pooled(x, gamma, beta, &mut BufPool::new())
+}
+
+/// [`bn_train_fwd`] with y and x̂ in pooled storage (x̂ rides the returned
+/// [`BnCtx`]; reclaim it with [`BnCtx::recycle`]).
+pub fn bn_train_fwd_pooled(
+    x: &Tensor,
+    gamma: &[f32],
+    beta: &[f32],
+    pool: &mut BufPool,
+) -> (Tensor, BnCtx) {
     let c = *x.shape.last().unwrap();
     assert!(gamma.len() == c && beta.len() == c);
     let (mean, var) = ops::channel_stats(x);
     let inv: Vec<f32> = var.iter().map(|v| 1.0 / (v + 1e-5).sqrt()).collect();
-    let mut xhat = x.clone();
-    for (i, v) in xhat.data.iter_mut().enumerate() {
+    let mut xh = pool.take_f32(x.len());
+    xh.extend(x.data.iter().enumerate().map(|(i, v)| {
         let ci = i % c;
-        *v = (*v - mean[ci]) * inv[ci];
-    }
-    let mut y = xhat.clone();
-    for (i, v) in y.data.iter_mut().enumerate() {
+        (*v - mean[ci]) * inv[ci]
+    }));
+    let mut yb = pool.take_f32(x.len());
+    yb.extend(xh.iter().enumerate().map(|(i, v)| {
         let ci = i % c;
-        *v = gamma[ci] * *v + beta[ci];
-    }
+        gamma[ci] * *v + beta[ci]
+    }));
+    let y = Tensor::from_vec(&x.shape, yb);
+    let xhat = Tensor::from_vec(&x.shape, xh);
     (y, BnCtx { mean, var, inv, xhat })
 }
 
@@ -221,6 +252,16 @@ pub fn bn_train_fwd(x: &Tensor, gamma: &[f32], beta: &[f32]) -> (Tensor, BnCtx) 
 /// normalized input,
 /// dx = γ·inv/N · (N·dy − Σdy − x̂·Σ(dy·x̂)).
 pub fn bn_train_bwd(ctx: &BnCtx, gamma: &[f32], dy: &Tensor) -> (Tensor, Vec<f32>, Vec<f32>) {
+    bn_train_bwd_pooled(ctx, gamma, dy, &mut BufPool::new())
+}
+
+/// [`bn_train_bwd`] with dx in pooled storage.
+pub fn bn_train_bwd_pooled(
+    ctx: &BnCtx,
+    gamma: &[f32],
+    dy: &Tensor,
+    pool: &mut BufPool,
+) -> (Tensor, Vec<f32>, Vec<f32>) {
     let c = *dy.shape.last().unwrap();
     assert_eq!(gamma.len(), c);
     let n = (dy.len() / c) as f32;
@@ -231,13 +272,12 @@ pub fn bn_train_bwd(ctx: &BnCtx, gamma: &[f32], dy: &Tensor) -> (Tensor, Vec<f32
         dbeta[ci] += g;
         dgamma[ci] += g * ctx.xhat.data[i];
     }
-    let mut dx = dy.clone();
-    for (i, v) in dx.data.iter_mut().enumerate() {
+    let mut dxb = pool.take_f32(dy.len());
+    dxb.extend(dy.data.iter().enumerate().map(|(i, g)| {
         let ci = i % c;
-        *v = gamma[ci] * ctx.inv[ci] / n
-            * (n * dy.data[i] - dbeta[ci] - ctx.xhat.data[i] * dgamma[ci]);
-    }
-    (dx, dgamma, dbeta)
+        gamma[ci] * ctx.inv[ci] / n * (n * *g - dbeta[ci] - ctx.xhat.data[i] * dgamma[ci])
+    }));
+    (Tensor::from_vec(&dy.shape, dxb), dgamma, dbeta)
 }
 
 // ---------------------------------------------------------------------------
@@ -248,27 +288,39 @@ pub fn bn_train_bwd(ctx: &BnCtx, gamma: &[f32], dy: &Tensor) -> (Tensor, Vec<f32
 /// exactly where the pre-activation is in (0, 1] (ReLU passes and the clip
 /// does not saturate), else 0.
 pub fn act_fwd(x: &Tensor, bits: &QuantBits) -> (Tensor, Vec<u8>) {
+    act_fwd_pooled(x, bits, &mut BufPool::new())
+}
+
+/// [`act_fwd`] with the output and the mask in pooled storage (the caller
+/// owes both back: the tensor via `put_tensor`, the mask via `put_u8`).
+pub fn act_fwd_pooled(x: &Tensor, bits: &QuantBits, pool: &mut BufPool) -> (Tensor, Vec<u8>) {
     let lv = bits.a_levels() as f32;
-    let mut mask = vec![0u8; x.len()];
-    let mut y = x.clone();
-    for (i, v) in y.data.iter_mut().enumerate() {
-        let xi = *v;
-        mask[i] = (xi > 0.0 && xi <= 1.0) as u8;
-        *v = round_ties_even(xi.clamp(0.0, 1.0) * lv) / lv;
+    let mut mask = pool.take_u8(x.len());
+    let mut yb = pool.take_f32(x.len());
+    for &xi in &x.data {
+        mask.push((xi > 0.0 && xi <= 1.0) as u8);
+        yb.push(round_ties_even(xi.clamp(0.0, 1.0) * lv) / lv);
     }
-    (y, mask)
+    (Tensor::from_vec(&x.shape, yb), mask)
 }
 
 /// Backward of [`act_fwd`]: dy masked by the saved STE mask.
 pub fn act_bwd(mask: &[u8], dy: &Tensor) -> Tensor {
-    assert_eq!(mask.len(), dy.len());
     let mut dx = dy.clone();
-    for (i, v) in dx.data.iter_mut().enumerate() {
-        if mask[i] == 0 {
+    act_bwd_inplace(mask, &mut dx);
+    dx
+}
+
+/// [`act_bwd`] in place — the STE mask zeroes `dy` directly, no
+/// allocation at all (the trainer owns its gradient feature maps, so
+/// masking never needs a copy).
+pub fn act_bwd_inplace(mask: &[u8], dy: &mut Tensor) {
+    assert_eq!(mask.len(), dy.len());
+    for (v, &m) in dy.data.iter_mut().zip(mask) {
+        if m == 0 {
             *v = 0.0;
         }
     }
-    dx
 }
 
 // ---------------------------------------------------------------------------
@@ -277,10 +329,19 @@ pub fn act_bwd(mask: &[u8], dy: &Tensor) -> Tensor {
 
 /// 2×2 max pool saving per-output argmax indices into `x.data`.
 pub fn maxpool2_fwd(x: &Tensor) -> (Tensor, Vec<u32>) {
+    maxpool2_fwd_pooled(x, &mut BufPool::new())
+}
+
+/// [`maxpool2_fwd`] with the output and the argmax indices in pooled
+/// storage (owed back via `put_tensor` / `put_u32`).
+pub fn maxpool2_fwd_pooled(x: &Tensor, pool: &mut BufPool) -> (Tensor, Vec<u32>) {
     let (b, h, w, c) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
     let (oh, ow) = (h / 2, w / 2);
-    let mut out = Tensor::zeros(&[b, oh, ow, c]);
-    let mut idx = vec![0u32; b * oh * ow * c];
+    let mut ob = pool.take_f32(b * oh * ow * c);
+    ob.resize(b * oh * ow * c, 0.0);
+    let mut out = Tensor::from_vec(&[b, oh, ow, c], ob);
+    let mut idx = pool.take_u32(b * oh * ow * c);
+    idx.resize(b * oh * ow * c, 0);
     for bi in 0..b {
         for oy in 0..oh {
             for ox in 0..ow {
@@ -308,8 +369,18 @@ pub fn maxpool2_fwd(x: &Tensor) -> (Tensor, Vec<u32>) {
 
 /// Backward of [`maxpool2_fwd`]: route each output gradient to its argmax.
 pub fn maxpool2_bwd(idx: &[u32], x_shape: &[usize], dy: &Tensor) -> Tensor {
+    maxpool2_bwd_pooled(idx, x_shape, dy, &mut BufPool::new())
+}
+
+/// [`maxpool2_bwd`] with dx in pooled storage.
+pub fn maxpool2_bwd_pooled(
+    idx: &[u32],
+    x_shape: &[usize],
+    dy: &Tensor,
+    pool: &mut BufPool,
+) -> Tensor {
     assert_eq!(idx.len(), dy.len());
-    let mut dx = Tensor::zeros(x_shape);
+    let mut dx = Tensor::from_vec(x_shape, pool.take_zeroed_f32(x_shape.iter().product()));
     for (i, &g) in dy.data.iter().enumerate() {
         dx.data[idx[i] as usize] += g;
     }
@@ -318,10 +389,15 @@ pub fn maxpool2_bwd(idx: &[u32], x_shape: &[usize], dy: &Tensor) -> Tensor {
 
 /// Backward of [`ops::global_avg_pool`]: broadcast dY[B,C]/(H·W).
 pub fn global_avg_pool_bwd(x_shape: &[usize], dy: &Tensor) -> Tensor {
+    global_avg_pool_bwd_pooled(x_shape, dy, &mut BufPool::new())
+}
+
+/// [`global_avg_pool_bwd`] with dx in pooled storage.
+pub fn global_avg_pool_bwd_pooled(x_shape: &[usize], dy: &Tensor, pool: &mut BufPool) -> Tensor {
     let (b, h, w, c) = (x_shape[0], x_shape[1], x_shape[2], x_shape[3]);
     assert_eq!(dy.shape, vec![b, c]);
     let inv = 1.0 / (h * w) as f32;
-    let mut dx = Tensor::zeros(x_shape);
+    let mut dx = Tensor::from_vec(x_shape, pool.take_zeroed_f32(x_shape.iter().product()));
     for bi in 0..b {
         for hi in 0..h {
             for wi in 0..w {

@@ -1,19 +1,28 @@
-//! Grown-once buffer pool (EXPERIMENTS.md §Perf L3.5): recycles the large
-//! flat buffers of the training hot loop — im2col patches, quantized u8
-//! grids, transposed-GEMM outputs, scaled-gradient staging — so the
-//! steady-state train step performs zero large allocations.
+//! Grown-once buffer pool (EXPERIMENTS.md §Perf L3.5, extended to feature
+//! maps in L3.7): recycles the large flat buffers of the training hot
+//! loop — im2col patches, quantized u8 grids, transposed-GEMM outputs,
+//! scaled-gradient staging, and every feature-map intermediate (conv/BN/
+//! activation outputs, STE masks, maxpool argmax indices, gradient
+//! feature maps) — so the steady-state train step performs zero large
+//! allocations end to end.
 //!
 //! `take_*` hands out the smallest pooled buffer whose capacity fits the
 //! requested length (best fit), or a fresh one when nothing fits (the
 //! grow-once phase); `put_*` returns a buffer for reuse.  A training step
 //! requests the same multiset of sizes every iteration, so from step 2 on
-//! every take is a hit.  Ownership rules live in DESIGN.md §Arena.
+//! every take is a hit.  [`BufPool::take_like`]/[`BufPool::put_tensor`]
+//! are the tensor-shaped conveniences: a "pooled tensor" is an ordinary
+//! [`Tensor`] whose storage happens to come from the pool and is owed back
+//! to it.  Ownership rules live in DESIGN.md §Arena.
+
+use super::Tensor;
 
 /// Size-classed free lists of reusable flat buffers.
 #[derive(Debug, Default)]
 pub struct BufPool {
     f32s: Vec<Vec<f32>>,
     u8s: Vec<Vec<u8>>,
+    u32s: Vec<Vec<u32>>,
 }
 
 impl BufPool {
@@ -47,9 +56,43 @@ impl BufPool {
         }
     }
 
+    /// Take a cleared u32 buffer (maxpool argmax indices) with capacity
+    /// for at least `len` elements.
+    pub fn take_u32(&mut self, len: usize) -> Vec<u32> {
+        take(&mut self.u32s, len)
+    }
+
+    /// Return a u32 buffer for reuse.
+    pub fn put_u32(&mut self, buf: Vec<u32>) {
+        if buf.capacity() > 0 {
+            self.u32s.push(buf);
+        }
+    }
+
+    /// Take an f32 buffer pre-sized to exactly `len` zeros (scatter-add
+    /// targets).
+    pub fn take_zeroed_f32(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.take_f32(len);
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// Pooled clone: a tensor with `src`'s shape and contents whose
+    /// storage comes from the pool (owed back via [`BufPool::put_tensor`]).
+    pub fn take_like(&mut self, src: &Tensor) -> Tensor {
+        let mut v = self.take_f32(src.len());
+        v.extend_from_slice(&src.data);
+        Tensor::from_vec(&src.shape, v)
+    }
+
+    /// Return a pooled tensor's storage (the shape vector is dropped).
+    pub fn put_tensor(&mut self, t: Tensor) {
+        self.put_f32(t.data);
+    }
+
     /// Number of buffers currently pooled (tests / diagnostics).
     pub fn pooled(&self) -> usize {
-        self.f32s.len() + self.u8s.len()
+        self.f32s.len() + self.u8s.len() + self.u32s.len()
     }
 }
 
@@ -100,6 +143,24 @@ mod tests {
         let v2 = p.take_f32(1000);
         assert!(v2.capacity() >= 1024);
         assert_eq!(p.pooled(), 0);
+    }
+
+    #[test]
+    fn tensor_helpers_roundtrip_through_the_pool() {
+        let mut p = BufPool::new();
+        let src = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let t = p.take_like(&src);
+        assert_eq!(t.shape, src.shape);
+        assert_eq!(t.data, src.data);
+        p.put_tensor(t);
+        assert_eq!(p.pooled(), 1);
+        let z = p.take_zeroed_f32(6);
+        assert_eq!(z, vec![0.0; 6], "reused storage must come back zeroed");
+        assert_eq!(p.pooled(), 0, "take_zeroed must reuse the pooled buffer");
+        let i = p.take_u32(4);
+        assert!(i.capacity() >= 4);
+        p.put_u32(i);
+        assert_eq!(p.pooled(), 1);
     }
 
     #[test]

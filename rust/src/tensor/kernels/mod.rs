@@ -9,10 +9,15 @@
 //! * [`avx2`] — `std::arch::x86_64` paths (AVX2 + FMA), selected at runtime
 //!   via `is_x86_feature_detected!`.  Compiled only on x86_64; other
 //!   targets fall back to [`scalar`] at compile time.
+//! * `neon` (`kernels/neon.rs`) — `std::arch::aarch64` paths for the
+//!   integer plane kernels (u8×i16→i32 and the bit-packed binary plane),
+//!   selected at runtime via `is_aarch64_feature_detected!`.  Compiled
+//!   only on aarch64.
 //!
 //! Selection order: `PIM_QAT_NO_SIMD=1` forces the scalar arm (the CI leg
-//! that keeps the fallback exercised); otherwise AVX2+FMA when the CPU has
-//! both; otherwise scalar.
+//! that keeps the fallback exercised); otherwise the target's SIMD arm
+//! when the CPU has the features (AVX2+FMA on x86_64, NEON on aarch64);
+//! otherwise scalar.
 //!
 //! ## Exactness contract (DESIGN.md §Kernel dispatch)
 //!
@@ -37,12 +42,15 @@ pub mod scalar;
 #[cfg(target_arch = "x86_64")]
 pub mod avx2;
 
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
 use std::sync::OnceLock;
 
 /// The dispatched kernel set.  One static instance per arm; `active()`
 /// returns the arm selected for this process.
 pub struct KernelTable {
-    /// Arm name ("scalar", "avx2") — surfaced by benches and tests.
+    /// Arm name ("scalar", "avx2", "neon") — surfaced by benches and tests.
     pub name: &'static str,
     /// C[m,n] += A[m,k] · B[k,n], dense f32 (row-major).
     pub gemm_acc: fn(usize, usize, usize, &[f32], &[f32], &mut [f32]),
@@ -83,6 +91,12 @@ fn select() -> &'static KernelTable {
             return &avx2::TABLE;
         }
     }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return &neon::TABLE;
+        }
+    }
     &scalar::TABLE
 }
 
@@ -95,7 +109,7 @@ mod tests {
         let t1 = active();
         let t2 = active();
         assert!(std::ptr::eq(t1, t2), "OnceLock must hand out one table");
-        assert!(t1.name == "scalar" || t1.name == "avx2");
+        assert!(t1.name == "scalar" || t1.name == "avx2" || t1.name == "neon");
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! NEON arm (`std::arch::aarch64`), selected at runtime by
+//! [`super::active`] on aarch64 hosts (NEON is baseline on every aarch64
+//! target Rust ships, but the runtime check keeps the selection honest and
+//! mirrors the AVX2 arm's discipline).
+//!
+//! Scope (the L3.7 satellite): the **integer plane kernels** — u8×i16→i32
+//! and the bit-packed binary-plane kernel — which carry the PIM engine's
+//! hot loops.  Both compute exact i32 sums, so they are **bit-identical to
+//! the scalar arm** on every shape; k/n tails that are not multiples of
+//! the vector width run the same scalar tail code.  Pinned by the existing
+//! odd-shape property sweep in `tests/engine_parity.rs` (which compares
+//! the dispatched arm against scalar — on aarch64 that *is* this arm).
+//! The f32 entries and the legacy u8 binary plane stay scalar: the f32
+//! family is bandwidth-bound on the small-model shapes this repo runs, so
+//! a NEON arm there is a measured follow-up, not a freebie.
+//!
+//! * `gemm_acc_u8_i16` — widening multiply-accumulate: the u8 activation
+//!   (≤ 255, so it fits i16 exactly) broadcasts as the scalar operand of
+//!   `vmlal_n_s16`/`vmlal_high_n_s16`, turning 8 weight lanes into 8 i32
+//!   accumulations per step.  Products are ≤ 255·32767 < 2²³ — exact.
+//! * `gemm_acc_u8_bin_packed` — each byte of a packed u64 word expands to
+//!   two 4-lane 0/−1 masks (broadcast-AND-compare against per-lane bit
+//!   constants) and the broadcast activation accumulates under the mask —
+//!   the 128-bit analogue of the AVX2 broadcast-AND-accumulate loop.
+//!
+//! Every public fn asserts the slice geometry *and* the NEON feature
+//! before entering the `#[target_feature]` inner body, so each table entry
+//! is independently sound (same rationale as `kernels::avx2`).
+
+#![allow(unsafe_code)]
+
+use std::arch::aarch64::*;
+
+use super::KernelTable;
+
+/// The NEON kernel table.  Only select this after feature detection.
+pub static TABLE: KernelTable = KernelTable {
+    name: "neon",
+    // f32 kernels stay scalar (see module docs)
+    gemm_acc: super::scalar::gemm_acc,
+    gemm_nt_acc: super::scalar::gemm_nt_acc,
+    gemm_tn_acc: super::scalar::gemm_tn_acc,
+    gemm_acc_u8_i16,
+    // the one-weight-per-u8 binary layout survives only as the
+    // reference/compat surface; the engine runs the packed kernel below
+    gemm_acc_u8_bin: super::scalar::gemm_acc_u8_bin,
+    gemm_acc_u8_bin_packed,
+};
+
+/// Release-mode guard: these are safe `pub fn`s, so executing the NEON
+/// bodies without the feature would be UB reachable from safe code.  The
+/// detection macro caches its answer — one load per GEMM call.
+#[inline]
+fn check_features() {
+    assert!(
+        std::arch::is_aarch64_feature_detected!("neon"),
+        "neon kernel table used without NEON"
+    );
+}
+
+// -- u8 × i16 → i32 plane kernel --------------------------------------------
+
+pub fn gemm_acc_u8_i16(m: usize, k: usize, n: usize, a: &[u8], b: &[i16], c: &mut [i32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    check_features();
+    unsafe { gemm_acc_u8_i16_impl(m, k, n, a, b, c) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn gemm_acc_u8_i16_impl(m: usize, k: usize, n: usize, a: &[u8], b: &[i16], c: &mut [i32]) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0 {
+                // exact sums: the activation zero-skip is bit-neutral
+                continue;
+            }
+            let a16 = aik as i16;
+            let brow = b.as_ptr().add(kk * n);
+            let cp = crow.as_mut_ptr();
+            let mut j = 0;
+            while j + 8 <= n {
+                let w = vld1q_s16(brow.add(j));
+                let c0 = vld1q_s32(cp.add(j) as *const i32);
+                let c1 = vld1q_s32(cp.add(j + 4) as *const i32);
+                let c0 = vmlal_n_s16(c0, vget_low_s16(w), a16);
+                let c1 = vmlal_high_n_s16(c1, w, a16);
+                vst1q_s32(cp.add(j), c0);
+                vst1q_s32(cp.add(j + 4), c1);
+                j += 8;
+            }
+            while j < n {
+                crow[j] += aik as i32 * *brow.add(j) as i32;
+                j += 1;
+            }
+        }
+    }
+}
+
+// -- bit-packed binary plane kernel -----------------------------------------
+
+pub fn gemm_acc_u8_bin_packed(m: usize, k: usize, n: usize, a: &[u8], b: &[u64], c: &mut [i32]) {
+    let wpr = crate::pim::layout::packed_words(n);
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * wpr);
+    assert_eq!(c.len(), m * n);
+    check_features();
+    unsafe { gemm_acc_u8_bin_packed_impl(m, k, n, wpr, a, b, c) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn gemm_acc_u8_bin_packed_impl(
+    m: usize,
+    k: usize,
+    n: usize,
+    wpr: usize,
+    a: &[u8],
+    b: &[u64],
+    c: &mut [i32],
+) {
+    // per-lane bit constants: lane j of the low/high half tests bit j /
+    // bit j+4 of the broadcast byte
+    let lo_bits = [1i32, 2, 4, 8];
+    let hi_bits = [16i32, 32, 64, 128];
+    let bits_lo = vld1q_s32(lo_bits.as_ptr());
+    let bits_hi = vld1q_s32(hi_bits.as_ptr());
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0 {
+                continue;
+            }
+            let av = vdupq_n_s32(aik as i32);
+            let brow = &b[kk * wpr..(kk + 1) * wpr];
+            for (wi, &word) in brow.iter().enumerate() {
+                if word == 0 {
+                    continue;
+                }
+                let o0 = wi * 64;
+                if o0 + 64 <= n {
+                    // full word: 8 bytes × 8 lanes, broadcast-AND-accumulate
+                    let cp = crow.as_mut_ptr();
+                    for byte in 0..8 {
+                        let bv = ((word >> (8 * byte)) & 0xFF) as i32;
+                        if bv == 0 {
+                            continue;
+                        }
+                        let bvv = vdupq_n_s32(bv);
+                        let m_lo =
+                            vreinterpretq_s32_u32(vceqq_s32(vandq_s32(bvv, bits_lo), bits_lo));
+                        let m_hi =
+                            vreinterpretq_s32_u32(vceqq_s32(vandq_s32(bvv, bits_hi), bits_hi));
+                        let j = o0 + 8 * byte;
+                        let c0 = vld1q_s32(cp.add(j) as *const i32);
+                        let c1 = vld1q_s32(cp.add(j + 4) as *const i32);
+                        vst1q_s32(cp.add(j), vaddq_s32(c0, vandq_s32(av, m_lo)));
+                        vst1q_s32(cp.add(j + 4), vaddq_s32(c1, vandq_s32(av, m_hi)));
+                    }
+                } else {
+                    // tail word (n not a multiple of 64): scalar bit walk
+                    let mut w = word;
+                    while w != 0 {
+                        let o = o0 + w.trailing_zeros() as usize;
+                        crow[o] += aik as i32;
+                        w &= w - 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scalar;
+    use crate::util::rng::Rng;
+
+    fn have_neon() -> bool {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+
+    #[test]
+    fn u8_i16_bit_identical_to_scalar() {
+        if !have_neon() {
+            return;
+        }
+        let mut rng = Rng::new(0xA4);
+        let shapes = [(1, 1, 1), (3, 5, 7), (2, 9, 8), (4, 13, 17), (5, 64, 33), (2, 7, 130)];
+        for &(m, k, n) in &shapes {
+            let a: Vec<u8> = (0..m * k).map(|_| rng.int_in(0, 15) as u8).collect();
+            let w: Vec<i16> = (0..k * n).map(|_| rng.int_in(-7, 7) as i16).collect();
+            let mut c1: Vec<i32> = (0..m * n).map(|_| rng.int_in(-9, 9) as i32).collect();
+            let mut c2 = c1.clone();
+            scalar::gemm_acc_u8_i16(m, k, n, &a, &w, &mut c1);
+            super::gemm_acc_u8_i16(m, k, n, &a, &w, &mut c2);
+            assert_eq!(c1, c2, "u8i16 ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn packed_bit_identical_to_scalar() {
+        if !have_neon() {
+            return;
+        }
+        let mut rng = Rng::new(0xB4);
+        for &(m, k, n) in &[(1, 1, 1), (2, 3, 63), (3, 5, 64), (2, 9, 65), (4, 7, 200)] {
+            let a: Vec<u8> = (0..m * k).map(|_| rng.int_in(0, 3) as u8).collect();
+            let bin: Vec<u8> = (0..k * n).map(|_| rng.below(2) as u8).collect();
+            let packed = crate::pim::layout::pack_bin_plane(&bin, k, n);
+            let mut c1: Vec<i32> = (0..m * n).map(|_| rng.int_in(0, 5) as i32).collect();
+            let mut c2 = c1.clone();
+            scalar::gemm_acc_u8_bin_packed(m, k, n, &a, &packed, &mut c1);
+            super::gemm_acc_u8_bin_packed(m, k, n, &a, &packed, &mut c2);
+            assert_eq!(c1, c2, "packed ({m},{k},{n})");
+        }
+    }
+}

@@ -83,6 +83,16 @@ impl Tensor {
         self
     }
 
+    /// In-place elementwise add of an equally-shaped tensor — the
+    /// residual-sum hot path (avoids the allocating [`Tensor::zip`] in the
+    /// pooled training step).
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
     /// Elementwise binary op with an equally-shaped tensor.
     pub fn zip(mut self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Self {
         assert_eq!(self.shape, other.shape);

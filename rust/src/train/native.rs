@@ -16,16 +16,34 @@
 //! * update — SGD with Nesterov momentum 0.9, weight decay 1e-4, and the
 //!   multi-step LR schedule owned by the caller.
 //!
-//! Heavy ops (im2col/col2im, the PIM plane GEMMs, the ξ digital twin) run
-//! multi-threaded on the shared worker pool (`util::pool`); set
-//! `PIM_QAT_THREADS` to pin the worker count.
+//! ## Step lifecycle (§Perf L3.7)
 //!
-//! §Perf L3.5 (EXPERIMENTS.md): the hot loop is built around persistent,
-//! incrementally-updated state in a [`TrainArena`] — one cached
-//! [`crate::pim::PimEngine`] per PIM conv, reprogrammed in place each step with
-//! unchanged groups skipped, plus a grown-once buffer pool for every
-//! patch-scale temporary.  From step 2 on, a train step performs zero
-//! large allocations (pinned by the `alloc`-counter test below).
+//! Training is staged as an explicit `acquire → forward → backward →
+//! apply` pipeline (DESIGN.md §Data pipeline):
+//!
+//! * **acquire** — [`run_job_native`] pulls batches from a
+//!   [`crate::data::loader::BatchLoader`], which shards next-batch
+//!   assembly + augmentation across the worker pool and (at
+//!   `PIM_QAT_PREFETCH ≥ 1`, the default) overlaps it with this step's
+//!   compute.  Counter-keyed augmentation makes the pipelined loop
+//!   bit-identical to the serial one.
+//! * **forward / backward / apply** — [`NativeTrainer::train_step`], now a
+//!   thin driver over three named stages: the training-mode network pass
+//!   saving tapes, the tape-consuming gradient pass, and the BN-stat +
+//!   Nesterov-SGD update.
+//!
+//! Heavy ops (im2col/col2im, the PIM plane GEMMs, the ξ digital twin, batch
+//! assembly) run multi-threaded on the shared worker pool (`util::pool`);
+//! set `PIM_QAT_THREADS` to pin the worker count.
+//!
+//! §Perf L3.5 + L3.7 (EXPERIMENTS.md): the hot loop is built around
+//! persistent, incrementally-updated state in a [`TrainArena`] — one
+//! cached [`crate::pim::PimEngine`] per PIM conv, reprogrammed in place each step
+//! with unchanged groups skipped, plus a grown-once buffer pool that since
+//! L3.7 owns **every** step-scale temporary: patch buffers *and* the
+//! feature-map intermediates (conv/BN/activation outputs, STE masks,
+//! gradient maps).  From step 2 on, a train step performs zero large
+//! allocations end to end (pinned by the `alloc`-counter test below).
 
 use std::collections::BTreeMap;
 
@@ -33,13 +51,14 @@ use crate::util::error::{anyhow, Result};
 
 use crate::chip::ChipModel;
 use crate::config::{rescale, JobConfig, Mode, Scheme};
-use crate::data::{Dataset, EpochIter};
+use crate::data::loader::{self, LoaderCfg};
+use crate::data::Dataset;
 use crate::nn::{grad, init, quant, vgg11_plan, ExecSpec};
 use crate::pim::QuantBits;
 use crate::runtime::Manifest;
 use crate::runtime::ModelEntry;
 use crate::tensor::arena::BufPool;
-use crate::tensor::gemm::{gemm, gemm_acc, gemm_nt, gemm_tn, gemm_tn_into};
+use crate::tensor::gemm::{gemm, gemm_acc, gemm_into, gemm_nt, gemm_tn, gemm_tn_into};
 use crate::tensor::{ops, Tensor};
 use crate::util::pool;
 use crate::util::rng::Rng;
@@ -96,7 +115,11 @@ impl Backend for NativeBackend {
 }
 
 /// Run one training job on the native backend (the native twin of
-/// [`super::run_job`]).
+/// [`super::run_job`]), staged as the explicit step lifecycle: the
+/// [`crate::data::loader::BatchLoader`] is the *acquire* stage (shuffling,
+/// augmentation, prefetch — with `PIM_QAT_PREFETCH ≥ 1` the next batch
+/// assembles on the worker pool while this step's backward runs), and
+/// [`NativeTrainer::train_step`] is forward → backward → apply.
 pub fn run_job_native(
     manifest: &Manifest,
     job: &JobConfig,
@@ -109,36 +132,35 @@ pub fn run_job_native(
     let bs = manifest.batch.max(1);
     let lr_sched = schedule::MultiStepLr::new(job.lr, job.milestones, job.steps);
 
-    let mut rng = Rng::new(job.seed ^ 0x7EAC);
     let mut history = Vec::new();
-    let mut epoch = EpochIter::new(train_ds.len(), bs, &mut rng);
-    for step in 0..job.steps {
-        let idx: Vec<usize> = match epoch.next_indices() {
-            Some(ix) => ix.to_vec(),
-            None => {
-                epoch = EpochIter::new(train_ds.len(), bs, &mut rng);
-                epoch
-                    .next_indices()
-                    .ok_or_else(|| anyhow!("dataset smaller than one batch"))?
-                    .to_vec()
-            }
-        };
-        let batch = train_ds.batch(&idx, true, &mut rng);
-        let lr = lr_sched.at(step);
-        // per-step noise stream (AMS mode), mirroring the per-step seed of
-        // the lowered train artifact
-        let mut srng = Rng::new((step as u64) ^ (job.seed << 8) ^ 0x5EED);
-        let (loss, correct) = trainer.train_step(&batch.x, &batch.y, lr, &mut srng)?;
+    let cfg = LoaderCfg::for_training(bs, job.seed ^ 0x7EAC);
+    // the scoped loader entry point joins any in-flight assembly before
+    // the dataset borrow ends (data::loader module docs)
+    loader::with_loader(train_ds, cfg, |loader| -> Result<()> {
+        for step in 0..job.steps {
+            // -- acquire (stage 1): batch slot, assembled ahead under
+            // prefetch
+            let (x, y) = loader.next()?;
+            let lr = lr_sched.at(step);
+            // per-step noise stream (AMS mode), mirroring the per-step
+            // seed of the lowered train artifact
+            let mut srng = Rng::new((step as u64) ^ (job.seed << 8) ^ 0x5EED);
+            // -- forward / backward / apply (stages 2–4)
+            let (loss, correct) = trainer.train_step(x, y, lr, &mut srng)?;
 
-        if !loss.is_finite() {
-            // diverged (the rescaling-ablation rows do this) — record & stop
-            history.push(StepLog { step, loss, acc: 0.0, lr });
-            break;
+            if !loss.is_finite() {
+                // diverged (the rescaling-ablation rows do this) — record
+                // & stop
+                history.push(StepLog { step, loss, acc: 0.0, lr });
+                break;
+            }
+            if step % log_every == 0 || step + 1 == job.steps {
+                let acc = 100.0 * correct as f32 / bs as f32;
+                history.push(StepLog { step, loss, acc, lr });
+            }
         }
-        if step % log_every == 0 || step + 1 == job.steps {
-            history.push(StepLog { step, loss, acc: 100.0 * correct as f32 / bs as f32, lr });
-        }
-    }
+        Ok(())
+    })??;
 
     let ckpt = trainer.into_checkpoint(job);
     let software_acc = eval_software_native(manifest, &ckpt, test_ds)?;
@@ -207,6 +229,36 @@ struct VggTape {
     mask: Vec<u8>,
     /// (argmax indices, pre-pool shape) when the plan pools here.
     pool: Option<(Vec<u32>, Vec<usize>)>,
+}
+
+/// Per-channel batch statistics recorded by the forward stage, consumed by
+/// the apply stage's running-stat update.
+type BnStats = Vec<(String, (Vec<f32>, Vec<f32>))>;
+
+/// Everything the forward stage hands to the backward stage: the saved
+/// per-layer tapes plus what the loss head needs.  Tapes own pooled
+/// buffers (patches, x̂, masks, argmax indices); the backward stage
+/// consumes them layer by layer and returns each buffer to the arena the
+/// moment its gradient is done.
+struct ResnetTapes {
+    t_c0: ConvTape,
+    t_b0: BnTape,
+    m_a0: Vec<u8>,
+    blocks: Vec<BlockTape>,
+    h_shape: Vec<usize>,
+    fct: FcTape,
+}
+
+struct VggTapes {
+    layers: Vec<VggTape>,
+    h_shape: Vec<usize>,
+    fct: FcTape,
+}
+
+/// The forward stage's tape, dispatched per architecture.
+enum StepTape {
+    Resnet(ResnetTapes),
+    Vgg(VggTapes),
 }
 
 /// Row tile of the fused ξ twin: small enough that the per-worker scratch
@@ -390,9 +442,10 @@ impl NativeTrainer {
         })
     }
 
-    /// One SGD step on a batch: forward, backward, BN running-stat update,
-    /// Nesterov-momentum parameter update.  Returns (mean loss, correct
-    /// predictions in the batch).
+    /// One SGD step on a batch: the compute/update stages of the step
+    /// lifecycle (`forward → backward → apply`; the *acquire* stage lives
+    /// in the caller's [`crate::data::loader::BatchLoader`]).  Returns
+    /// (mean loss, correct predictions in the batch).
     pub fn train_step(
         &mut self,
         x: &Tensor,
@@ -400,17 +453,74 @@ impl NativeTrainer {
         lr: f32,
         rng: &mut Rng,
     ) -> Result<(f32, usize)> {
-        // the arena leaves `self` for the step so the step functions can
+        // the arena leaves `self` for the step so the stage functions can
         // borrow parameters (&self) and the arena (&mut) independently
         let mut arena = std::mem::take(&mut self.arena);
-        let step = match self.entry.arch.as_str() {
-            "resnet" => self.resnet_step(x, y, rng, &mut arena),
-            "vgg11" => self.vgg_step(x, y, rng, &mut arena),
-            a => Err(anyhow!("unknown arch {a:?}")),
-        };
+        let result = self.step_stages(x, y, lr, rng, &mut arena);
         self.arena = arena;
-        let (loss, correct, grads, stats) = step?;
+        result
+    }
 
+    /// The three compute stages, in order.  Split out of [`Self::train_step`]
+    /// so the arena swap-out wraps them uniformly.
+    fn step_stages(
+        &mut self,
+        x: &Tensor,
+        y_lab: &[i32],
+        lr: f32,
+        rng: &mut Rng,
+        arena: &mut TrainArena,
+    ) -> Result<(f32, usize)> {
+        // -- forward: training-mode network pass, tapes saved
+        let mut stats = BnStats::new();
+        let (logits, tape) = self.forward(x, rng, arena, &mut stats)?;
+        let (loss, correct, dlogits) = grad::softmax_xent(&logits, y_lab);
+        // -- backward: consume the tapes into parameter gradients
+        let grads = self.backward(tape, &dlogits, arena);
+        // -- apply: BN running stats + Nesterov SGD
+        self.apply(grads, stats, lr)?;
+        Ok((loss, correct))
+    }
+
+    /// Forward stage: run the training-mode network on `x`, returning the
+    /// logits and the tape the backward stage consumes.
+    fn forward(
+        &self,
+        x: &Tensor,
+        rng: &mut Rng,
+        arena: &mut TrainArena,
+        stats: &mut BnStats,
+    ) -> Result<(Tensor, StepTape)> {
+        match self.entry.arch.as_str() {
+            "resnet" => {
+                let (logits, t) = self.resnet_forward(x, rng, arena, stats)?;
+                Ok((logits, StepTape::Resnet(t)))
+            }
+            "vgg11" => {
+                let (logits, t) = self.vgg_forward(x, rng, arena, stats)?;
+                Ok((logits, StepTape::Vgg(t)))
+            }
+            a => Err(anyhow!("unknown arch {a:?}")),
+        }
+    }
+
+    /// Backward stage: consume the forward tape into parameter gradients,
+    /// returning every pooled buffer to the arena as it goes.
+    fn backward(
+        &self,
+        tape: StepTape,
+        dlogits: &Tensor,
+        arena: &mut TrainArena,
+    ) -> BTreeMap<String, Tensor> {
+        match tape {
+            StepTape::Resnet(t) => self.resnet_backward(t, dlogits, arena),
+            StepTape::Vgg(t) => self.vgg_backward(t, dlogits, arena),
+        }
+    }
+
+    /// Apply stage: BN running-statistic momentum update + SGD with
+    /// Nesterov momentum and weight decay (TrainConfig defaults).
+    fn apply(&mut self, grads: BTreeMap<String, Tensor>, stats: BnStats, lr: f32) -> Result<()> {
         // BN running statistics: (1-m)·old + m·batch (training-mode BN)
         let mom = self.bn_momentum;
         for (name, (bm, bv)) in stats {
@@ -426,7 +536,6 @@ impl NativeTrainer {
             }
         }
 
-        // SGD with Nesterov momentum + weight decay (TrainConfig defaults)
         for (name, g) in grads {
             let p = self
                 .params
@@ -444,7 +553,7 @@ impl NativeTrainer {
                 p.data[i] -= lr * upd;
             }
         }
-        Ok((loss, correct))
+        Ok(())
     }
 
     /// Consume the trainer into a checkpoint (params + BN running state).
@@ -545,11 +654,11 @@ impl NativeTrainer {
                     self.unit_channels,
                 );
                 arena.pool.put_f32(wint);
-                // u8 activation grid, pooled
+                // u8 activation grid + output feature map, both pooled
                 let mut pint = arena.pool.take_u8(patches.len());
                 ops::quantize_into_u8(&patches.data, al, &mut pint);
+                let mut y = arena.pool.take_f32(m * o);
                 let engine = arena.engines.get(name).expect("engine ensured above");
-                let mut y = Vec::new();
                 engine.matmul_u8_into(&pint, &self.chip, rng, &mut y);
                 arena.pool.put_u8(pint);
                 let xi = if self.bwd_rescale {
@@ -567,7 +676,8 @@ impl NativeTrainer {
                 (y, self.eta * xi * wq.scale)
             }
             Mode::Baseline | Mode::Ams => {
-                let mut y = gemm(m, kc, o, &patches.data, &cols.data);
+                let mut y = arena.pool.take_f32(m * o);
+                gemm_into(m, kc, o, &patches.data, &cols.data, &mut y);
                 if self.mode == Mode::Ams && self.sigma > 0.0 {
                     for v in &mut y {
                         *v += self.sigma * rng.normal() as f32;
@@ -657,28 +767,41 @@ impl NativeTrainer {
         grads.insert(tape.name.clone(), dw);
     }
 
+    /// Training-mode BN forward: y and the tape's x̂ live in pooled
+    /// storage (the tape is consumed — and its x̂ reclaimed — by
+    /// [`Self::bn_bwd`]).
     fn bn_fwd(
         &self,
         x: &Tensor,
         name: &str,
-        stats: &mut Vec<(String, (Vec<f32>, Vec<f32>))>,
+        stats: &mut BnStats,
+        pool: &mut BufPool,
     ) -> Result<(Tensor, BnTape)> {
         let gamma = self.param(&format!("{name}/gamma"))?;
         let beta = self.param(&format!("{name}/beta"))?;
-        let (y, ctx) = grad::bn_train_fwd(x, &gamma.data, &beta.data);
+        let (y, ctx) = grad::bn_train_fwd_pooled(x, &gamma.data, &beta.data, pool);
         stats.push((name.to_string(), (ctx.mean.clone(), ctx.var.clone())));
         Ok((y, BnTape { name: name.to_string(), ctx }))
     }
 
-    fn bn_bwd(&self, tape: &BnTape, dy: &Tensor, grads: &mut BTreeMap<String, Tensor>) -> Tensor {
+    /// BN backward, consuming the tape: dx comes from the pool, the
+    /// tape's x̂ goes back to it.
+    fn bn_bwd(
+        &self,
+        tape: BnTape,
+        dy: &Tensor,
+        grads: &mut BTreeMap<String, Tensor>,
+        pool: &mut BufPool,
+    ) -> Tensor {
         let gamma = self
             .params
             .get(&format!("{}/gamma", tape.name))
             .expect("bn gamma vanished mid-step");
-        let (dx, dgamma, dbeta) = grad::bn_train_bwd(&tape.ctx, &gamma.data, dy);
+        let (dx, dgamma, dbeta) = grad::bn_train_bwd_pooled(&tape.ctx, &gamma.data, dy, pool);
         let c = dgamma.len();
         grads.insert(format!("{}/gamma", tape.name), Tensor::from_vec(&[c], dgamma));
         grads.insert(format!("{}/beta", tape.name), Tensor::from_vec(&[c], dbeta));
+        tape.ctx.recycle(pool);
         dx
     }
 
@@ -722,25 +845,28 @@ impl NativeTrainer {
         Tensor::from_vec(&[bsz, cin], dx)
     }
 
-    // -- full model steps ---------------------------------------------------
+    // -- full model stages --------------------------------------------------
 
-    #[allow(clippy::type_complexity)]
-    fn resnet_step(
+    /// Resnet forward stage.  Every feature map is a pooled tensor: a
+    /// layer's input is returned to the arena the moment its consumer has
+    /// produced the next map, so at any instant only the live maps (plus
+    /// the tapes) hold pool buffers.
+    fn resnet_forward(
         &self,
         x: &Tensor,
-        y_lab: &[i32],
         rng: &mut Rng,
         arena: &mut TrainArena,
-    ) -> Result<(f32, usize, BTreeMap<String, Tensor>, Vec<(String, (Vec<f32>, Vec<f32>))>)> {
+        stats: &mut BnStats,
+    ) -> Result<(Tensor, ResnetTapes)> {
         let (width, depth_n) = (self.entry.width, self.entry.depth_n);
-        let mut stats = Vec::new();
-        let mut grads = BTreeMap::new();
-
-        // ---- forward
-        let x8 = quant::act_quant_bits(x.clone(), 8); // 8-bit first-layer inputs (§A2.1)
-        let (h, t_c0) = self.conv_digital_fwd(&x8, "conv0/w", 1, &mut arena.pool)?;
-        let (h, t_b0) = self.bn_fwd(&h, "bn0", &mut stats)?;
-        let (mut h, m_a0) = grad::act_fwd(&h, &self.bits);
+        // 8-bit first-layer inputs (§A2.1), quantized in a pooled copy
+        let x8 = quant::act_quant_bits(arena.pool.take_like(x), 8);
+        let (h0, t_c0) = self.conv_digital_fwd(&x8, "conv0/w", 1, &mut arena.pool)?;
+        arena.pool.put_tensor(x8);
+        let (hb, t_b0) = self.bn_fwd(&h0, "bn0", stats, &mut arena.pool)?;
+        arena.pool.put_tensor(h0);
+        let (mut h, m_a0) = grad::act_fwd_pooled(&hb, &self.bits, &mut arena.pool);
+        arena.pool.put_tensor(hb);
         let mut blocks: Vec<BlockTape> = Vec::new();
         let mut cin = width;
         for s in 0..3 {
@@ -748,23 +874,32 @@ impl NativeTrainer {
             for b in 0..depth_n {
                 let blk = format!("s{s}b{b}");
                 let stride = if s > 0 && b == 0 { 2 } else { 1 };
-                let x_in = h.clone();
-                let (z, t1) =
-                    self.conv_pim_fwd(&x_in, &format!("{blk}/conv1/w"), stride, rng, arena)?;
-                let (z, tb1) = self.bn_fwd(&z, &format!("{blk}/bn1"), &mut stats)?;
-                let (z, m1) = grad::act_fwd(&z, &self.bits);
-                let (z, t2) = self.conv_pim_fwd(&z, &format!("{blk}/conv2/w"), 1, rng, arena)?;
-                let (z, tb2) = self.bn_fwd(&z, &format!("{blk}/bn2"), &mut stats)?;
-                let (sc_out, sc) = if cin != cout || stride != 1 {
+                let (z, t1) = self.conv_pim_fwd(&h, &format!("{blk}/conv1/w"), stride, rng, arena)?;
+                let (zb, tb1) = self.bn_fwd(&z, &format!("{blk}/bn1"), stats, &mut arena.pool)?;
+                arena.pool.put_tensor(z);
+                let (za, m1) = grad::act_fwd_pooled(&zb, &self.bits, &mut arena.pool);
+                arena.pool.put_tensor(zb);
+                let (z2, t2) = self.conv_pim_fwd(&za, &format!("{blk}/conv2/w"), 1, rng, arena)?;
+                arena.pool.put_tensor(za);
+                let (mut zsum, tb2) =
+                    self.bn_fwd(&z2, &format!("{blk}/bn2"), stats, &mut arena.pool)?;
+                arena.pool.put_tensor(z2);
+                let sc = if cin != cout || stride != 1 {
                     let name = format!("{blk}/convs/w");
-                    let (sraw, ts) = self.conv_digital_fwd(&x_in, &name, stride, &mut arena.pool)?;
-                    let (sbn, tbs) = self.bn_fwd(&sraw, &format!("{blk}/bns"), &mut stats)?;
-                    (sbn, Some((ts, tbs)))
+                    let (sraw, ts) = self.conv_digital_fwd(&h, &name, stride, &mut arena.pool)?;
+                    let (sbn, tbs) =
+                        self.bn_fwd(&sraw, &format!("{blk}/bns"), stats, &mut arena.pool)?;
+                    arena.pool.put_tensor(sraw);
+                    zsum.add_assign(&sbn);
+                    arena.pool.put_tensor(sbn);
+                    Some((ts, tbs))
                 } else {
-                    (x_in, None)
+                    zsum.add_assign(&h);
+                    None
                 };
-                let sum = z.zip(&sc_out, |a, b| a + b);
-                let (hn, ma) = grad::act_fwd(&sum, &self.bits);
+                arena.pool.put_tensor(h); // block input dead after the residual add
+                let (hn, ma) = grad::act_fwd_pooled(&zsum, &self.bits, &mut arena.pool);
+                arena.pool.put_tensor(zsum);
                 blocks.push(BlockTape { t1, tb1, m1, t2, tb2, sc, ma });
                 h = hn;
                 cin = cout;
@@ -772,106 +907,181 @@ impl NativeTrainer {
         }
         let h_shape = h.shape.clone();
         let pooled = ops::global_avg_pool(&h);
+        arena.pool.put_tensor(h);
         let (logits, fct) = self.fc_fwd(&pooled)?;
-        let (loss, correct, dlogits) = grad::softmax_xent(&logits, y_lab);
-
-        // ---- backward (tapes are consumed so their patch buffers return
-        // to the arena as soon as each layer's gradient is done)
-        let dpooled = self.fc_bwd(&fct, &dlogits, &mut grads);
-        let mut dh = grad::global_avg_pool_bwd(&h_shape, &dpooled);
-        for bt in blocks.into_iter().rev() {
-            let BlockTape { t1, tb1, m1, t2, tb2, sc, ma } = bt;
-            let dsum = grad::act_bwd(&ma, &dh);
-            let dz = self.bn_bwd(&tb2, &dsum, &mut grads);
-            let dz = self.conv_bwd(&t2, &dz, &mut grads, &mut arena.pool);
-            arena.pool.put_f32(t2.ctx.patches.data);
-            let dz = grad::act_bwd(&m1, &dz);
-            let dz = self.bn_bwd(&tb1, &dz, &mut grads);
-            let dx_main = self.conv_bwd(&t1, &dz, &mut grads, &mut arena.pool);
-            arena.pool.put_f32(t1.ctx.patches.data);
-            let dx_sc = match sc {
-                Some((ts, tbs)) => {
-                    let d = self.bn_bwd(&tbs, &dsum, &mut grads);
-                    let dxs = self.conv_bwd(&ts, &d, &mut grads, &mut arena.pool);
-                    arena.pool.put_f32(ts.ctx.patches.data);
-                    dxs
-                }
-                None => dsum,
-            };
-            dh = dx_main.zip(&dx_sc, |a, b| a + b);
-        }
-        let dh = grad::act_bwd(&m_a0, &dh);
-        let dh = self.bn_bwd(&t_b0, &dh, &mut grads);
-        self.conv_bwd_w_only(&t_c0, &dh, &mut grads, &mut arena.pool); // input gradient unused
-        arena.pool.put_f32(t_c0.ctx.patches.data);
-        Ok((loss, correct, grads, stats))
+        Ok((logits, ResnetTapes { t_c0, t_b0, m_a0, blocks, h_shape, fct }))
     }
 
-    #[allow(clippy::type_complexity)]
-    fn vgg_step(
+    /// Resnet backward stage: tapes are consumed so their pooled buffers
+    /// (patches, x̂, masks) return to the arena as soon as each layer's
+    /// gradient is done, and every gradient feature map is pooled too.
+    fn resnet_backward(
+        &self,
+        tapes: ResnetTapes,
+        dlogits: &Tensor,
+        arena: &mut TrainArena,
+    ) -> BTreeMap<String, Tensor> {
+        let ResnetTapes { t_c0, t_b0, m_a0, blocks, h_shape, fct } = tapes;
+        let mut grads = BTreeMap::new();
+        let pool = &mut arena.pool;
+        let dpooled = self.fc_bwd(&fct, dlogits, &mut grads);
+        let mut dh = grad::global_avg_pool_bwd_pooled(&h_shape, &dpooled, pool);
+        for bt in blocks.into_iter().rev() {
+            let BlockTape { t1, tb1, m1, t2, tb2, sc, ma } = bt;
+            grad::act_bwd_inplace(&ma, &mut dh);
+            pool.put_u8(ma);
+            let dsum = dh; // feeds both the main path and the shortcut
+            let dz = self.bn_bwd(tb2, &dsum, &mut grads, pool);
+            let mut dz2 = self.conv_bwd(&t2, &dz, &mut grads, pool);
+            pool.put_tensor(dz);
+            pool.put_f32(t2.ctx.patches.data);
+            grad::act_bwd_inplace(&m1, &mut dz2);
+            pool.put_u8(m1);
+            let dz3 = self.bn_bwd(tb1, &dz2, &mut grads, pool);
+            pool.put_tensor(dz2);
+            let mut dx_main = self.conv_bwd(&t1, &dz3, &mut grads, pool);
+            pool.put_tensor(dz3);
+            pool.put_f32(t1.ctx.patches.data);
+            match sc {
+                Some((ts, tbs)) => {
+                    let d = self.bn_bwd(tbs, &dsum, &mut grads, pool);
+                    pool.put_tensor(dsum);
+                    let dxs = self.conv_bwd(&ts, &d, &mut grads, pool);
+                    pool.put_tensor(d);
+                    pool.put_f32(ts.ctx.patches.data);
+                    dx_main.add_assign(&dxs);
+                    pool.put_tensor(dxs);
+                }
+                None => {
+                    dx_main.add_assign(&dsum);
+                    pool.put_tensor(dsum);
+                }
+            }
+            dh = dx_main;
+        }
+        grad::act_bwd_inplace(&m_a0, &mut dh);
+        pool.put_u8(m_a0);
+        let dh2 = self.bn_bwd(t_b0, &dh, &mut grads, pool);
+        pool.put_tensor(dh);
+        self.conv_bwd_w_only(&t_c0, &dh2, &mut grads, pool); // input gradient unused
+        pool.put_tensor(dh2);
+        pool.put_f32(t_c0.ctx.patches.data);
+        grads
+    }
+
+    /// VGG forward stage (pooled feature maps — same ownership discipline
+    /// as [`Self::resnet_forward`]).
+    fn vgg_forward(
         &self,
         x: &Tensor,
-        y_lab: &[i32],
         rng: &mut Rng,
         arena: &mut TrainArena,
-    ) -> Result<(f32, usize, BTreeMap<String, Tensor>, Vec<(String, (Vec<f32>, Vec<f32>))>)> {
+        stats: &mut BnStats,
+    ) -> Result<(Tensor, VggTapes)> {
         let plan = vgg11_plan(self.entry.width, self.entry.image);
-        let mut stats = Vec::new();
-        let mut grads = BTreeMap::new();
-
-        // ---- forward
-        let mut h = quant::act_quant_bits(x.clone(), 8);
-        let mut tapes: Vec<VggTape> = Vec::new();
-        for (i, &(_cout, pool)) in plan.iter().enumerate() {
+        let mut h = quant::act_quant_bits(arena.pool.take_like(x), 8);
+        let mut layers: Vec<VggTape> = Vec::new();
+        for (i, &(_cout, pool_here)) in plan.iter().enumerate() {
             let name = format!("conv{i}/w");
             let (z, conv) = if i == 0 {
                 self.conv_digital_fwd(&h, &name, 1, &mut arena.pool)?
             } else {
                 self.conv_pim_fwd(&h, &name, 1, rng, arena)?
             };
-            let (z, bn) = self.bn_fwd(&z, &format!("bn{i}"), &mut stats)?;
-            let (z, mask) = grad::act_fwd(&z, &self.bits);
-            let (z, pool_tape) = if pool {
-                let pre_shape = z.shape.clone();
-                let (p, idx) = grad::maxpool2_fwd(&z);
+            arena.pool.put_tensor(h);
+            let (zb, bn) = self.bn_fwd(&z, &format!("bn{i}"), stats, &mut arena.pool)?;
+            arena.pool.put_tensor(z);
+            let (za, mask) = grad::act_fwd_pooled(&zb, &self.bits, &mut arena.pool);
+            arena.pool.put_tensor(zb);
+            let (hn, pool_tape) = if pool_here {
+                let pre_shape = za.shape.clone();
+                let (p, idx) = grad::maxpool2_fwd_pooled(&za, &mut arena.pool);
+                arena.pool.put_tensor(za);
                 (p, Some((idx, pre_shape)))
             } else {
-                (z, None)
+                (za, None)
             };
-            tapes.push(VggTape { conv, bn, mask, pool: pool_tape });
-            h = z;
+            layers.push(VggTape { conv, bn, mask, pool: pool_tape });
+            h = hn;
         }
         let h_shape = h.shape.clone();
         let pooled = ops::global_avg_pool(&h);
+        arena.pool.put_tensor(h);
         let (logits, fct) = self.fc_fwd(&pooled)?;
-        let (loss, correct, dlogits) = grad::softmax_xent(&logits, y_lab);
+        Ok((logits, VggTapes { layers, h_shape, fct }))
+    }
 
-        // ---- backward (tapes consumed; patch buffers return to the arena)
-        let dpooled = self.fc_bwd(&fct, &dlogits, &mut grads);
-        let mut dh = grad::global_avg_pool_bwd(&h_shape, &dpooled);
-        for (li, t) in tapes.into_iter().enumerate().rev() {
+    /// VGG backward stage (tapes consumed; all buffers return to the
+    /// arena).
+    fn vgg_backward(
+        &self,
+        tapes: VggTapes,
+        dlogits: &Tensor,
+        arena: &mut TrainArena,
+    ) -> BTreeMap<String, Tensor> {
+        let VggTapes { layers, h_shape, fct } = tapes;
+        let mut grads = BTreeMap::new();
+        let pool = &mut arena.pool;
+        let dpooled = self.fc_bwd(&fct, dlogits, &mut grads);
+        let mut dh = grad::global_avg_pool_bwd_pooled(&h_shape, &dpooled, pool);
+        for (li, t) in layers.into_iter().enumerate().rev() {
             let VggTape { conv, bn, mask, pool: pool_tape } = t;
-            if let Some((idx, pre_shape)) = &pool_tape {
-                dh = grad::maxpool2_bwd(idx, pre_shape, &dh);
+            if let Some((idx, pre_shape)) = pool_tape {
+                let dpre = grad::maxpool2_bwd_pooled(&idx, &pre_shape, &dh, pool);
+                pool.put_u32(idx);
+                pool.put_tensor(dh);
+                dh = dpre;
             }
-            let d = grad::act_bwd(&mask, &dh);
-            let d = self.bn_bwd(&bn, &d, &mut grads);
+            grad::act_bwd_inplace(&mask, &mut dh);
+            pool.put_u8(mask);
+            let d = self.bn_bwd(bn, &dh, &mut grads, pool);
+            pool.put_tensor(dh);
             if li == 0 {
                 // first layer: input gradient unused
-                self.conv_bwd_w_only(&conv, &d, &mut grads, &mut arena.pool);
+                self.conv_bwd_w_only(&conv, &d, &mut grads, pool);
+                dh = d;
             } else {
-                dh = self.conv_bwd(&conv, &d, &mut grads, &mut arena.pool);
+                dh = self.conv_bwd(&conv, &d, &mut grads, pool);
+                pool.put_tensor(d);
             }
-            arena.pool.put_f32(conv.ctx.patches.data);
+            pool.put_f32(conv.ctx.patches.data);
         }
-        Ok((loss, correct, grads, stats))
+        pool.put_tensor(dh); // the spent gradient of the earliest layer
+        grads
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::loader::BatchLoader;
     use crate::data::synth;
+
+    /// Stage split sanity: the public `train_step` must drive all three
+    /// compute stages — params move (apply ran on backward's grads) and BN
+    /// running stats move (apply consumed forward's batch stats).
+    #[test]
+    fn lifecycle_stages_compose() {
+        let m = micro_manifest();
+        let job = micro_job(Mode::Baseline, 1);
+        let mut t = NativeTrainer::new(&m, &job).unwrap();
+        let ds = synth::generate(8, 4, 16, 3);
+        let mut rng = Rng::new(1);
+        let batch = ds.batch(&(0..8).collect::<Vec<_>>(), false, &mut rng);
+        let mut arena = std::mem::take(&mut t.arena);
+        let mut stats = BnStats::new();
+        let (logits, tape) = t.forward(&batch.x, &mut rng, &mut arena, &mut stats).unwrap();
+        assert_eq!(logits.shape, vec![8, 4]);
+        assert!(!stats.is_empty(), "forward must record BN batch stats");
+        let (_, _, dlogits) = grad::softmax_xent(&logits, &batch.y);
+        let grads = t.backward(tape, &dlogits, &mut arena);
+        assert!(grads.contains_key("conv0/w") && grads.contains_key("fc/w"));
+        let before = t.params.get("s0b0/conv1/w").unwrap().clone();
+        t.apply(grads, stats, 0.05).unwrap();
+        t.arena = arena;
+        assert_ne!(before.data, t.params.get("s0b0/conv1/w").unwrap().data);
+        assert!(t.bn_state.get("bn0").unwrap().0.iter().any(|&v| v != 0.0));
+    }
 
     /// A down-scaled resnet geometry so debug-mode tests stay fast.
     fn micro_manifest() -> Manifest {
@@ -981,22 +1191,37 @@ mod tests {
 
     #[test]
     fn steady_state_step_makes_no_large_allocations() {
-        let m = micro_manifest();
+        // batch 32 puts every feature map above the threshold (the largest
+        // BN/activation maps are 32·8·8·4 floats = 32 KiB, the quantized
+        // input copy 24 KiB) while weight-scale temporaries stay ≤ ~9 KiB
+        // — so 16 KiB now pins the WHOLE armed window: batch acquisition,
+        // patch buffers AND the L3.7 pooled feature-map intermediates.
+        let mut m = micro_manifest();
+        m.batch = 32;
         let job = micro_job(Mode::Ours, 3);
         let mut t = NativeTrainer::new(&m, &job).unwrap();
-        let ds = synth::generate(8, 4, 16, 1);
+        let ds = synth::generate(8, 4, 64, 1);
+        let cfg = LoaderCfg {
+            batch: 32,
+            augment: true,
+            flip: false,
+            seed: 5,
+            prefetch: 0, // serial: assembly runs inside the armed window
+            shards: 1,
+        };
+        let mut loader = BatchLoader::new(&ds, cfg).unwrap();
         let mut rng = Rng::new(0);
-        let batch = ds.batch(&(0..8).collect::<Vec<_>>(), false, &mut rng);
-        // step 1 grows the arena and spawns the worker pool; step 2 lets
-        // any remaining lazily-grown buffer reach its final size
-        t.train_step(&batch.x, &batch.y, 0.05, &mut rng).unwrap();
-        t.train_step(&batch.x, &batch.y, 0.05, &mut rng).unwrap();
-        // patch-scale buffers at this geometry are ≥ 18 KB; feature-map
-        // temporaries stay ≤ ~9 KB — 16 KiB separates the two
+        // step 1 grows the arena, the loader slot and the worker pool;
+        // step 2 lets any remaining lazily-grown buffer reach final size
+        for _ in 0..2 {
+            let (x, y) = loader.next().unwrap();
+            t.train_step(x, y, 0.05, &mut rng).unwrap();
+        }
         crate::util::alloc::arm(16 * 1024);
-        t.train_step(&batch.x, &batch.y, 0.05, &mut rng).unwrap();
+        let (x, y) = loader.next().unwrap();
+        t.train_step(x, y, 0.05, &mut rng).unwrap();
         let large = crate::util::alloc::disarm();
-        assert_eq!(large, 0, "steady-state train step made {large} large allocation(s)");
+        assert_eq!(large, 0, "steady-state acquire+step made {large} large allocation(s)");
     }
 
     #[test]

@@ -15,6 +15,13 @@
 //! `$PIM_QAT_THREADS` keeps its meaning — callers decide how many jobs to
 //! create (see `tensor::ops::resolve_threads`); the pool grows to match,
 //! and the calling thread works the queue itself while it waits.
+//!
+//! [`submit`] is the detached counterpart (§Perf L3.7): it queues a batch
+//! of `'static` jobs and returns a [`Ticket`] immediately, so work — the
+//! batch loader's next-batch assembly — can run *concurrently with* the
+//! submitter's own compute (the current step's backward) instead of inside
+//! a barrier.  The receiving side calls [`Ticket::wait`] before touching
+//! anything the jobs write; a panic in a detached job re-raises there.
 
 use std::any::Any;
 use std::collections::VecDeque;
@@ -97,6 +104,80 @@ impl Pool {
             *n += 1;
         }
     }
+}
+
+/// Completion handle of a detached [`submit`] batch.  The jobs may still
+/// be running (or still queued) while this exists; [`Ticket::wait`] is the
+/// only way to learn they are done.  Dropping a ticket without waiting is
+/// allowed *only* when the jobs borrow nothing (`submit`'s safe `'static`
+/// contract); callers that erased a lifetime to get `'static` jobs must
+/// wait before the borrowed data dies — see `data::loader` for the
+/// canonical discipline (wait before every slot reuse and in `Drop`).
+#[must_use = "detached jobs are only known finished after Ticket::wait"]
+pub struct Ticket {
+    scope: Arc<ScopeState>,
+}
+
+impl Ticket {
+    /// Block until every job in the batch has finished; the first panic
+    /// from any job re-raises here.  When the batch is already complete —
+    /// the steady-state prefetch hit — this returns without touching the
+    /// queue, so work submitted moments earlier stays on the workers
+    /// instead of being dragged onto the waiting thread (draining here
+    /// would serialize exactly what [`submit`] exists to overlap).  Only
+    /// while the batch is genuinely unfinished does the caller help work
+    /// the queue (it may then execute tasks from other scopes — harmless,
+    /// and better than idling).
+    pub fn wait(self) {
+        loop {
+            if *self.scope.pending.lock().unwrap() == 0 {
+                break;
+            }
+            let task = pool().shared.queue.lock().unwrap().pop_front();
+            match task {
+                Some(t) => t.run(),
+                // queue empty but our jobs still running on workers:
+                // fall through to the condvar
+                None => break,
+            }
+        }
+        let mut pending = self.scope.pending.lock().unwrap();
+        while *pending > 0 {
+            pending = self.scope.done.wait(pending).unwrap();
+        }
+        drop(pending);
+        if let Some(payload) = self.scope.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+/// Queue `jobs` for asynchronous execution on the pool and return a
+/// [`Ticket`] immediately — the detached twin of [`run_scoped`].  Jobs
+/// must be `'static`: nothing here blocks, so there is no barrier to make
+/// borrowed environments sound.  The pool is grown to at least `jobs.len()`
+/// workers so a submit-then-wait cannot deadlock even when the submitter
+/// never touches the queue in between.
+pub fn submit(jobs: Vec<ScopedJob<'static>>) -> Ticket {
+    let n = jobs.len();
+    let scope = Arc::new(ScopeState {
+        pending: Mutex::new(n),
+        done: Condvar::new(),
+        panic: Mutex::new(None),
+    });
+    if n == 0 {
+        return Ticket { scope };
+    }
+    let p = pool();
+    p.ensure_workers(n);
+    {
+        let mut q = p.shared.queue.lock().unwrap();
+        for job in jobs {
+            q.push_back(Task { job, scope: Arc::clone(&scope) });
+        }
+    }
+    p.shared.ready.notify_all();
+    Ticket { scope }
 }
 
 /// Run `jobs` to completion across the pool's workers and the calling
@@ -218,6 +299,38 @@ mod tests {
         let ceiling = baseline.max(std::thread::available_parallelism().map_or(8, |n| n.get()));
         assert!(after >= 3, "4-job scopes need at least 3 workers, saw {after}");
         assert!(after <= ceiling, "same-size scopes must not keep growing the pool: {after}");
+    }
+
+    #[test]
+    fn submit_runs_detached_and_wait_joins() {
+        use std::sync::atomic::AtomicU64;
+        let total = Arc::new(AtomicU64::new(0));
+        let jobs: Vec<ScopedJob<'static>> = (0..6u64)
+            .map(|i| {
+                let total = Arc::clone(&total);
+                let job: ScopedJob<'static> = Box::new(move || {
+                    total.fetch_add(i + 1, Ordering::SeqCst);
+                });
+                job
+            })
+            .collect();
+        let ticket = submit(jobs);
+        // run a barrier region while the detached batch is in flight —
+        // the two must coexist on one queue
+        run_scoped((0..3).map(|_| Box::new(|| {}) as ScopedJob<'_>).collect());
+        ticket.wait();
+        assert_eq!(total.load(Ordering::SeqCst), 21);
+        // an empty submission is a no-op ticket
+        submit(Vec::new()).wait();
+    }
+
+    #[test]
+    fn submit_panic_propagates_on_wait() {
+        let ticket = submit(vec![Box::new(|| panic!("detached")) as ScopedJob<'static>]);
+        let caught = catch_unwind(AssertUnwindSafe(|| ticket.wait()));
+        let payload = caught.expect_err("panic in a detached job must resurface on wait");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "detached");
     }
 
     #[test]

@@ -170,6 +170,15 @@ impl CounterRng {
         (self.u64_at(i) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Uniform integer in [0, n) at counter `i` (the positional twin of
+    /// [`Rng::below`]; modulo bias is negligible for our n << 2^64).  Used
+    /// by the data loader's per-sample augmentation streams.
+    #[inline]
+    pub fn below_at(&self, i: u64, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.u64_at(i) % n as u64) as usize
+    }
+
     /// Standard normal at counter `i` (Box–Muller, cosine branch only — no
     /// pair caching, so the draw stays a pure function of position).
     #[inline]
@@ -290,6 +299,19 @@ mod tests {
         let var = s2 / n as f64 - mean * mean;
         assert!(mean.abs() < 0.02, "mean={mean}");
         assert!((var - 1.0).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn counter_below_bounds_and_positional() {
+        let r = CounterRng::new(40);
+        let mut seen = [false; 5];
+        for i in 0..500 {
+            let v = r.below_at(i, 5);
+            assert!(v < 5);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert_eq!(r.below_at(7, 5), CounterRng::new(40).below_at(7, 5));
     }
 
     #[test]
