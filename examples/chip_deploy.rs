@@ -9,7 +9,7 @@
 //! Runs on the native backend by default (no artifacts needed).
 
 use pim_qat::chip::curves::{synthesize_bank_with, CurveStats};
-use pim_qat::chip::ChipModel;
+use pim_qat::chip::{ChipModel, FaultProfile};
 use pim_qat::config::{JobConfig, Mode, Scheme};
 use pim_qat::coordinator::SweepRunner;
 use pim_qat::nn::ExecSpec;
@@ -42,13 +42,19 @@ fn main() -> Result<()> {
     // hardware realism ladder
     let uncal = {
         let bank = synthesize_bank_with(7, 32, 0xA7, CurveStats::uncalibrated());
-        ChipModel { b_pim: 7, noise_lsb: 0.35, bank: Some(bank), unit_out: 8 }
+        ChipModel { b_pim: 7, noise_lsb: 0.35, bank: Some(bank), unit_out: 8, faults: None }
     };
     let ladder: Vec<(&str, ChipModel)> = vec![
         ("ideal 7-bit ADC", ChipModel::ideal(7)),
         ("+ thermal noise 0.35 LSB", ChipModel::ideal(7).with_noise(0.35)),
         ("+ measured-curve INL", ChipModel::real(0xC819).with_noise(0.35)),
         ("+ uncalibrated gain/offset", uncal),
+        (
+            "+ field faults (moderate)",
+            ChipModel::real(0xC819)
+                .with_noise(0.35)
+                .with_faults(FaultProfile::moderate()),
+        ),
     ];
 
     let mut t = Table::new(&["Hardware", "no BN calib", "with BN calib"]);

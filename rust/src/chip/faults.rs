@@ -1,0 +1,404 @@
+//! Chip fault injection: device-to-device variability, cycle-to-cycle
+//! drift, stuck-at columns, and transient noise bursts.
+//!
+//! The curve bank (`chip/curves.rs`) models a *healthy* chip's static ADC
+//! non-idealities.  This module layers *degradation* on top: the kinds of
+//! faults a deployed PIM part accumulates in the field (arXiv 2111.06457
+//! shows device-to-device and cycle-to-cycle variability are first-order
+//! accuracy killers for analog PIM).  A [`FaultProfile`] is a small,
+//! serializable spec; a [`FaultModel`] is a profile pinned to a step clock;
+//! [`FaultModel::column_faults`] compiles the model into flat per-column
+//! arrays the converter hot loop reads.
+//!
+//! ## RNG keying (determinism contract)
+//!
+//! Every draw is positional (DESIGN.md §RNG contract): the base field is
+//! `CounterRng::new(seed).stream(chip_id)`, with one tagged substream per
+//! fault class:
+//!
+//! | tag | class          | addressing                                    |
+//! |-----|----------------|-----------------------------------------------|
+//! | 0   | device-to-device | column `i`: gain at `2i`, offset at `2i+1`  |
+//! | 1   | drift walk     | step `s`: gain inc at `2s`, offset at `2s+1`  |
+//! | 2   | stuck columns  | column `i`: gate at `2i`, kind at `2i+1`      |
+//! | 3   | noise bursts   | window `w = step / burst_window`: gate at `w` |
+//!
+//! Because `column_faults` is evaluated once per converter construction
+//! (single-threaded) and the result is shared read-only by all row workers,
+//! faulty evaluation is bit-identical at any thread count for free.
+
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::util::rng::CounterRng;
+
+/// Serializable description of one injured chip instance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultProfile {
+    /// Identity of the physical replica — distinct chips in a farm share a
+    /// `seed` but differ in `chip_id`, so each engine replica can carry its
+    /// own instance of the same statistical population.
+    pub chip_id: u64,
+    /// Base seed of the fault field.
+    pub seed: u64,
+    /// Device-to-device per-column gain spread (multiplicative, σ of N(1, σ)).
+    pub gain_std: f32,
+    /// Device-to-device per-column offset spread in LSB.
+    pub offset_std_lsb: f32,
+    /// Cycle-to-cycle drift: per-step σ of the chip-level gain random walk.
+    pub drift_gain_std: f32,
+    /// Cycle-to-cycle drift: per-step σ of the chip-level offset walk (LSB).
+    pub drift_offset_std_lsb: f32,
+    /// Probability that a column is stuck (output pinned to 0 or full-scale).
+    pub stuck_rate: f32,
+    /// Probability that any given step window is inside a noise burst.
+    pub burst_rate: f32,
+    /// Width of a burst window in steps (0 disables bursts).
+    pub burst_window: u32,
+    /// Thermal-noise σ multiplier while a burst is active.
+    pub burst_sigma_mult: f32,
+}
+
+impl FaultProfile {
+    /// A healthy chip: every fault class disabled.
+    pub fn none() -> Self {
+        FaultProfile {
+            chip_id: 0,
+            seed: 0xFA017,
+            gain_std: 0.0,
+            offset_std_lsb: 0.0,
+            drift_gain_std: 0.0,
+            drift_offset_std_lsb: 0.0,
+            stuck_rate: 0.0,
+            burst_rate: 0.0,
+            burst_window: 0,
+            burst_sigma_mult: 1.0,
+        }
+    }
+
+    /// Light field aging: sub-percent gain spread, fraction-of-LSB offsets.
+    pub fn mild() -> Self {
+        FaultProfile {
+            gain_std: 0.01,
+            offset_std_lsb: 0.5,
+            drift_gain_std: 1e-4,
+            drift_offset_std_lsb: 5e-3,
+            burst_rate: 0.05,
+            burst_window: 16,
+            burst_sigma_mult: 3.0,
+            ..Self::none()
+        }
+    }
+
+    /// Noticeably injured part: percent-level gain error, LSB-scale offsets,
+    /// the occasional dead column.
+    pub fn moderate() -> Self {
+        FaultProfile {
+            gain_std: 0.03,
+            offset_std_lsb: 1.5,
+            drift_gain_std: 3e-4,
+            drift_offset_std_lsb: 0.01,
+            stuck_rate: 0.01,
+            burst_rate: 0.1,
+            burst_window: 8,
+            burst_sigma_mult: 5.0,
+            ..Self::none()
+        }
+    }
+
+    /// Heavily degraded chip — the regime where raw accuracy collapses and
+    /// BN self-tuning has a large gap to close.
+    pub fn severe() -> Self {
+        FaultProfile {
+            gain_std: 0.08,
+            offset_std_lsb: 4.0,
+            drift_gain_std: 1e-3,
+            drift_offset_std_lsb: 0.02,
+            stuck_rate: 0.05,
+            burst_rate: 0.2,
+            burst_window: 4,
+            burst_sigma_mult: 8.0,
+            ..Self::none()
+        }
+    }
+
+    /// Rebind this profile to another chip replica.
+    pub fn on_chip(mut self, chip_id: u64) -> Self {
+        self.chip_id = chip_id;
+        self
+    }
+
+    /// Parse a CLI spec: `mild|moderate|severe[:chip_id]` or a path to a
+    /// profile JSON written by [`FaultProfile::save`].
+    pub fn parse(spec: &str) -> Result<Self> {
+        let (name, chip) = match spec.split_once(':') {
+            Some((n, c)) => {
+                let id = c
+                    .parse::<u64>()
+                    .map_err(|_| crate::anyhow!("bad fault chip id {c:?}"))?;
+                (n, Some(id))
+            }
+            None => (spec, None),
+        };
+        let mut p = match name {
+            "none" => Self::none(),
+            "mild" => Self::mild(),
+            "moderate" => Self::moderate(),
+            "severe" => Self::severe(),
+            path => Self::load(std::path::Path::new(path))?,
+        };
+        if let Some(id) = chip {
+            p.chip_id = id;
+        }
+        Ok(p)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("chip_id", Json::num(self.chip_id as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("gain_std", Json::num(self.gain_std as f64)),
+            ("offset_std_lsb", Json::num(self.offset_std_lsb as f64)),
+            ("drift_gain_std", Json::num(self.drift_gain_std as f64)),
+            ("drift_offset_std_lsb", Json::num(self.drift_offset_std_lsb as f64)),
+            ("stuck_rate", Json::num(self.stuck_rate as f64)),
+            ("burst_rate", Json::num(self.burst_rate as f64)),
+            ("burst_window", Json::num(self.burst_window as f64)),
+            ("burst_sigma_mult", Json::num(self.burst_sigma_mult as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<Self> {
+        Some(FaultProfile {
+            chip_id: j.get("chip_id").as_i64()? as u64,
+            seed: j.get("seed").as_i64()? as u64,
+            gain_std: j.get("gain_std").as_f64()? as f32,
+            offset_std_lsb: j.get("offset_std_lsb").as_f64()? as f32,
+            drift_gain_std: j.get("drift_gain_std").as_f64()? as f32,
+            drift_offset_std_lsb: j.get("drift_offset_std_lsb").as_f64()? as f32,
+            stuck_rate: j.get("stuck_rate").as_f64()? as f32,
+            burst_rate: j.get("burst_rate").as_f64()? as f32,
+            burst_window: j.get("burst_window").as_i64()? as u32,
+            burst_sigma_mult: j.get("burst_sigma_mult").as_f64()? as f32,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        let j = crate::util::json::parse_file(path)?;
+        Self::from_json(&j).ok_or_else(|| crate::anyhow!("malformed fault profile"))
+    }
+
+    /// Variability-aware training view: a *fresh* device-to-device instance
+    /// each step (the profile statistics stay fixed; the replica identity is
+    /// remixed), so training sees the population rather than one chip.
+    pub fn training_sample(&self, step: u64) -> FaultModel {
+        let remixed = self
+            .chip_id
+            .wrapping_add(step.wrapping_add(1).wrapping_mul(0x9E3779B97F4A7C15));
+        FaultModel::new(self.on_chip(remixed)).at_step(step)
+    }
+}
+
+/// A fault profile pinned to a point on the step clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultModel {
+    pub profile: FaultProfile,
+    /// Current step: advances the drift walk and selects the burst window.
+    pub step: u64,
+}
+
+/// Compiled per-column fault view: what the converter hot loop reads.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ColumnFaults {
+    /// Per-column multiplicative gain (device-to-device spread + drift).
+    pub gain: Vec<f32>,
+    /// Per-column additive offset in LSB.
+    pub offset: Vec<f32>,
+    /// 0 = healthy, 1 = stuck at zero, 2 = stuck at full-scale.
+    pub stuck: Vec<u8>,
+    /// Thermal-noise σ multiplier for the current step window.
+    pub sigma_mult: f32,
+}
+
+const TAG_D2D: u64 = 0;
+const TAG_DRIFT: u64 = 1;
+const TAG_STUCK: u64 = 2;
+const TAG_BURST: u64 = 3;
+
+impl FaultModel {
+    pub fn new(profile: FaultProfile) -> Self {
+        FaultModel { profile, step: 0 }
+    }
+
+    /// The same model viewed at another step (drift + bursts advance;
+    /// device-to-device spread and stuck columns are fixed per chip).
+    pub fn at_step(mut self, step: u64) -> Self {
+        self.step = step;
+        self
+    }
+
+    fn field(&self) -> CounterRng {
+        CounterRng::new(self.profile.seed).stream(self.profile.chip_id)
+    }
+
+    /// Chip-level drift at the current step: the random walk summed from
+    /// step 0.  O(step) per call — evaluated once per converter build, and
+    /// our step counts are small enough that recomputing beats carrying
+    /// mutable walk state through the (bit-reproducibility-sensitive)
+    /// engine plumbing.
+    fn drift(&self) -> (f32, f32) {
+        let p = &self.profile;
+        if p.drift_gain_std == 0.0 && p.drift_offset_std_lsb == 0.0 {
+            return (0.0, 0.0);
+        }
+        let walk = self.field().stream(TAG_DRIFT);
+        let (mut dg, mut doff) = (0.0f64, 0.0f64);
+        for s in 0..self.step {
+            dg += p.drift_gain_std as f64 * walk.normal_at(2 * s);
+            doff += p.drift_offset_std_lsb as f64 * walk.normal_at(2 * s + 1);
+        }
+        (dg as f32, doff as f32)
+    }
+
+    /// σ multiplier for the current step's burst window.
+    pub fn sigma_mult(&self) -> f32 {
+        let p = &self.profile;
+        if p.burst_window == 0 || p.burst_rate <= 0.0 {
+            return 1.0;
+        }
+        let w = self.step / p.burst_window as u64;
+        let gate = self.field().stream(TAG_BURST);
+        if gate.uniform_at(w) < p.burst_rate as f64 {
+            p.burst_sigma_mult
+        } else {
+            1.0
+        }
+    }
+
+    /// Compile the model into per-column arrays for `out` ADC columns.
+    pub fn column_faults(&self, out: usize) -> ColumnFaults {
+        let p = &self.profile;
+        let field = self.field();
+        let d2d = field.stream(TAG_D2D);
+        let stuck_f = field.stream(TAG_STUCK);
+        let (drift_g, drift_o) = self.drift();
+        let mut gain = Vec::with_capacity(out);
+        let mut offset = Vec::with_capacity(out);
+        let mut stuck = Vec::with_capacity(out);
+        for i in 0..out as u64 {
+            gain.push(1.0 + p.gain_std * d2d.normal_at(2 * i) as f32 + drift_g);
+            offset.push(p.offset_std_lsb * d2d.normal_at(2 * i + 1) as f32 + drift_o);
+            let s = if p.stuck_rate > 0.0
+                && stuck_f.uniform_at(2 * i) < p.stuck_rate as f64
+            {
+                1 + (stuck_f.u64_at(2 * i + 1) & 1) as u8
+            } else {
+                0
+            };
+            stuck.push(s);
+        }
+        ColumnFaults { gain, offset, stuck, sigma_mult: self.sigma_mult() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn column_faults_deterministic_per_chip() {
+        let p = FaultProfile::severe().on_chip(7);
+        let a = FaultModel::new(p).at_step(12).column_faults(64);
+        let b = FaultModel::new(p).at_step(12).column_faults(64);
+        assert_eq!(a, b);
+        let other = FaultModel::new(p.on_chip(8)).at_step(12).column_faults(64);
+        assert_ne!(a.gain, other.gain);
+        assert_ne!(a.offset, other.offset);
+    }
+
+    #[test]
+    fn none_profile_is_identity() {
+        let cf = FaultModel::new(FaultProfile::none()).column_faults(32);
+        assert!(cf.gain.iter().all(|&g| g == 1.0));
+        assert!(cf.offset.iter().all(|&o| o == 0.0));
+        assert!(cf.stuck.iter().all(|&s| s == 0));
+        assert_eq!(cf.sigma_mult, 1.0);
+    }
+
+    #[test]
+    fn drift_advances_with_step_and_d2d_stays_fixed() {
+        let mut p = FaultProfile::none();
+        p.gain_std = 0.05;
+        p.drift_gain_std = 0.01;
+        p.drift_offset_std_lsb = 0.05;
+        let m = FaultModel::new(p);
+        let a = m.at_step(0).column_faults(16);
+        let b = m.at_step(40).column_faults(16);
+        assert_ne!(a.gain, b.gain, "drift must move the gains across steps");
+        // drift is chip-level: the per-column *differences* are step-invariant
+        let rel_a: Vec<f32> = a.gain.iter().map(|g| g - a.gain[0]).collect();
+        let rel_b: Vec<f32> = b.gain.iter().map(|g| g - b.gain[0]).collect();
+        for (x, y) in rel_a.iter().zip(&rel_b) {
+            assert!((x - y).abs() < 1e-5, "d2d spread must not change with step");
+        }
+    }
+
+    #[test]
+    fn stuck_rate_hits_expected_fraction() {
+        let mut p = FaultProfile::none();
+        p.stuck_rate = 0.1;
+        let cf = FaultModel::new(p).column_faults(4000);
+        let n = cf.stuck.iter().filter(|&&s| s != 0).count();
+        assert!((300..=500).contains(&n), "stuck count {n} far from 10% of 4000");
+        assert!(cf.stuck.iter().any(|&s| s == 1));
+        assert!(cf.stuck.iter().any(|&s| s == 2));
+    }
+
+    #[test]
+    fn burst_windows_gate_sigma() {
+        let mut p = FaultProfile::none();
+        p.burst_rate = 0.5;
+        p.burst_window = 4;
+        p.burst_sigma_mult = 6.0;
+        let m = FaultModel::new(p);
+        let mults: Vec<f32> = (0..200).map(|s| m.at_step(s).sigma_mult()).collect();
+        assert!(mults.iter().any(|&x| x == 6.0));
+        assert!(mults.iter().any(|&x| x == 1.0));
+        // constant within a window
+        for w in 0..50 {
+            let base = mults[w * 4];
+            assert!(mults[w * 4..(w + 1) * 4].iter().all(|&x| x == base));
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let p = FaultProfile::moderate().on_chip(42);
+        let text = p.to_json().to_string();
+        let back =
+            FaultProfile::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(p, back);
+    }
+
+    #[test]
+    fn parse_presets_and_chip_suffix() {
+        assert_eq!(FaultProfile::parse("mild").unwrap(), FaultProfile::mild());
+        let p = FaultProfile::parse("severe:9").unwrap();
+        assert_eq!(p, FaultProfile::severe().on_chip(9));
+        assert!(FaultProfile::parse("mild:notanumber").is_err());
+        assert!(FaultProfile::parse("/no/such/file.json").is_err());
+    }
+
+    #[test]
+    fn training_sample_varies_per_step() {
+        let p = FaultProfile::moderate();
+        let a = p.training_sample(3).column_faults(16);
+        let b = p.training_sample(4).column_faults(16);
+        assert_ne!(a.gain, b.gain, "each step must see a fresh replica");
+        assert_eq!(a, p.training_sample(3).column_faults(16));
+    }
+}

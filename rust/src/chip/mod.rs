@@ -13,9 +13,10 @@
 pub mod curves;
 pub mod energy;
 pub mod enob;
+pub mod faults;
 
 pub use curves::{AdcCurve, CurveBank};
-
+pub use faults::{ColumnFaults, FaultModel, FaultProfile};
 
 use crate::util::rng::{CounterRng, Rng};
 
@@ -30,12 +31,15 @@ pub struct ChipModel {
     pub bank: Option<CurveBank>,
     /// Output channels served by one ADC (paper: unit output channel of 8).
     pub unit_out: usize,
+    /// Injected degradation (None = healthy chip).  Engines may carry their
+    /// own per-replica [`FaultModel`] which overrides this one.
+    pub faults: Option<FaultModel>,
 }
 
 impl ChipModel {
     /// Perfectly linear, noiseless chip (training-time assumption).
     pub fn ideal(b_pim: u32) -> Self {
-        ChipModel { b_pim, noise_lsb: 0.0, bank: None, unit_out: 8 }
+        ChipModel { b_pim, noise_lsb: 0.0, bank: None, unit_out: 8, faults: None }
     }
 
     /// The paper's real-chip setting: 7-bit, measured-curve bank, 0.35 LSB.
@@ -45,11 +49,28 @@ impl ChipModel {
             noise_lsb: 0.35,
             bank: Some(curves::synthesize_bank(7, 32, seed)),
             unit_out: 8,
+            faults: None,
         }
     }
 
     pub fn with_noise(mut self, noise_lsb: f32) -> Self {
         self.noise_lsb = noise_lsb;
+        self
+    }
+
+    /// Injure this chip with a fault profile (pinned at step 0; advance the
+    /// drift/burst clock with [`ChipModel::at_step`]).
+    pub fn with_faults(mut self, profile: FaultProfile) -> Self {
+        self.faults = Some(FaultModel::new(profile));
+        self
+    }
+
+    /// Advance the fault model's step clock (drift walk + burst windows).
+    /// No-op on a healthy chip.
+    pub fn at_step(mut self, step: u64) -> Self {
+        if let Some(f) = self.faults {
+            self.faults = Some(f.at_step(step));
+        }
         self
     }
 
@@ -103,12 +124,28 @@ pub struct Converter<'a> {
     /// Curve index per output column (hoisted `curve_index`; empty when
     /// ideal).
     col_curve: Vec<u32>,
+    /// Compiled per-column fault view (None = healthy conversion; the
+    /// fault-free match arms below stay byte-for-byte what they were).
+    faults: Option<ColumnFaults>,
 }
 
 impl<'a> Converter<'a> {
     /// `out` is the layer's output-column count; it sizes the per-column
-    /// curve-assignment table.
+    /// curve-assignment table.  Faults come from the chip's own model; use
+    /// [`Converter::with_faults`] to override (per-engine replicas).
     pub fn new(chip: &'a ChipModel, fs: f32, out: usize) -> Self {
+        let fm = chip.faults;
+        Self::with_faults(chip, fs, out, fm.as_ref())
+    }
+
+    /// Build with an explicit fault model (which wins over `chip.faults`;
+    /// pass `None` to force healthy conversion).
+    pub fn with_faults(
+        chip: &'a ChipModel,
+        fs: f32,
+        out: usize,
+        faults: Option<&FaultModel>,
+    ) -> Self {
         let levels = chip.levels();
         let (inl_tables, col_curve) = match &chip.bank {
             Some(bank) => (
@@ -136,6 +173,7 @@ impl<'a> Converter<'a> {
             levels,
             inl_tables,
             col_curve,
+            faults: faults.map(|f| f.column_faults(out)),
         }
     }
 
@@ -147,11 +185,20 @@ impl<'a> Converter<'a> {
         if self.chip.bank.is_some() {
             u = self.distort(u, oc);
         }
+        if let Some(cf) = &self.faults {
+            u = cf.gain[oc] * u + cf.offset[oc];
+        }
         if self.chip.noise_lsb > 0.0 {
-            u += rng.normal_in(0.0, self.chip.noise_lsb);
+            let mult = self.faults.as_ref().map_or(1.0, |cf| cf.sigma_mult);
+            u += rng.normal_in(0.0, self.chip.noise_lsb * mult);
         }
         let lo = if signed { -self.levels } else { 0.0 };
-        round_ties_even(u).clamp(lo, self.levels) * self.lsb
+        let code = match self.faults.as_ref().map_or(0, |cf| cf.stuck[oc]) {
+            1 => 0.0,
+            2 => self.levels,
+            _ => round_ties_even(u).clamp(lo, self.levels),
+        };
+        code * self.lsb
     }
 
     /// Curve distortion of a continuous ideal code (gain/offset exact,
@@ -192,6 +239,9 @@ impl<'a> Converter<'a> {
         y: &mut [f32],
     ) {
         assert_eq!(s.len(), y.len());
+        if let Some(cf) = &self.faults {
+            return self.convert_row_faulty(cf, s, signed, coef, noise, y);
+        }
         let levels = self.levels;
         let lo = if signed { -levels } else { 0.0 };
         let inv_lsb = self.inv_lsb;
@@ -227,6 +277,42 @@ impl<'a> Converter<'a> {
                     *yv += coef * (code * lsb);
                 }
             }
+        }
+    }
+
+    /// The degraded twin of the match arms above: curve distortion, then
+    /// per-column fault gain/offset, burst-scaled noise, and stuck-column
+    /// pinning.  Noise draws stay keyed by output column, so faulty
+    /// conversion keeps the any-thread-count bit-reproducibility contract.
+    fn convert_row_faulty(
+        &self,
+        cf: &ColumnFaults,
+        s: &[i32],
+        signed: bool,
+        coef: f32,
+        noise: Option<(&CounterRng, f32)>,
+        y: &mut [f32],
+    ) {
+        let levels = self.levels;
+        let lo = if signed { -levels } else { 0.0 };
+        let inv_lsb = self.inv_lsb;
+        let lsb = self.lsb;
+        let banked = self.chip.bank.is_some();
+        for (o, (&si, yv)) in s.iter().zip(y.iter_mut()).enumerate() {
+            let mut u = si as f32 * inv_lsb;
+            if banked {
+                u = self.distort(u, o);
+            }
+            u = cf.gain[o] * u + cf.offset[o];
+            if let Some((stream, sigma)) = noise {
+                u += sigma * cf.sigma_mult * stream.normal_at(o as u64) as f32;
+            }
+            let code = match cf.stuck[o] {
+                1 => 0.0,
+                2 => levels,
+                _ => round_ties_even(u).clamp(lo, levels),
+            };
+            *yv += coef * (code * lsb);
         }
     }
 
@@ -341,6 +427,100 @@ mod tests {
         let mut y3 = vec![0.0f32; out];
         conv.convert_row(&s, false, 1.0, Some((&st2, chip.noise_lsb)), &mut y3);
         assert_ne!(y1, y3, "different row stream, different draws");
+    }
+
+    #[test]
+    fn faulty_convert_row_matches_scalar() {
+        let mut rng = Rng::new(0);
+        let chip = ChipModel::real(7)
+            .with_noise(0.0)
+            .with_faults(FaultProfile::severe().on_chip(3))
+            .at_step(5);
+        let out = 40;
+        let conv = Converter::new(&chip, 2160.0, out);
+        for signed in [false, true] {
+            let s: Vec<i32> = (0..out as i32).map(|o| (o * 137) % 2300 - 600).collect();
+            let mut y = vec![0.0f32; out];
+            conv.convert_row(&s, signed, 2.0, None, &mut y);
+            for o in 0..out {
+                let want = 2.0 * conv.convert(s[o] as f32, o, signed, &mut rng);
+                assert_eq!(y[o], want, "col {o} signed={signed}");
+            }
+        }
+    }
+
+    #[test]
+    fn none_faults_convert_identically_to_healthy() {
+        let healthy = ChipModel::real(4);
+        let injured = ChipModel::real(4).with_faults(FaultProfile::none());
+        let out = 32;
+        let ch = Converter::new(&healthy, 2160.0, out);
+        let ci = Converter::new(&injured, 2160.0, out);
+        let s: Vec<i32> = (0..out as i32).map(|i| i * 60 - 900).collect();
+        let (mut y1, mut y2) = (vec![0.0f32; out], vec![0.0f32; out]);
+        ch.convert_row(&s, true, 1.0, None, &mut y1);
+        ci.convert_row(&s, true, 1.0, None, &mut y2);
+        assert_eq!(y1, y2, "all-zero fault profile must be a no-op");
+    }
+
+    #[test]
+    fn stuck_columns_pin_output() {
+        let mut p = FaultProfile::none();
+        p.stuck_rate = 0.3;
+        let chip = ChipModel::ideal(5).with_faults(p);
+        let out = 64;
+        let cf = chip.faults.unwrap().column_faults(out);
+        let conv = Converter::new(&chip, 310.0, out);
+        let s: Vec<i32> = vec![150; out];
+        let mut y = vec![0.0f32; out];
+        conv.convert_row(&s, false, 1.0, None, &mut y);
+        let lsb = 310.0 / 31.0;
+        let mut pinned = 0;
+        for o in 0..out {
+            match cf.stuck[o] {
+                1 => {
+                    assert_eq!(y[o], 0.0, "col {o} must be stuck at zero");
+                    pinned += 1;
+                }
+                2 => {
+                    assert_eq!(y[o], 31.0 * lsb, "col {o} must be stuck at full-scale");
+                    pinned += 1;
+                }
+                _ => assert_eq!(y[o], round_ties_even(150.0 / lsb) * lsb),
+            }
+        }
+        assert!(pinned > 0, "stuck_rate 0.3 over 64 columns must pin some");
+    }
+
+    #[test]
+    fn burst_scales_noise_draws() {
+        let mut p = FaultProfile::none();
+        p.burst_rate = 1.0; // every window bursts
+        p.burst_window = 1;
+        p.burst_sigma_mult = 50.0;
+        let quiet = ChipModel::ideal(7).with_noise(0.05);
+        let loud = quiet.clone().with_faults(p);
+        let out = 128;
+        let cq = Converter::new(&quiet, 2160.0, out);
+        let cl = Converter::new(&loud, 2160.0, out);
+        let field = CounterRng::new(3);
+        let st = field.stream3(0, 0, 0);
+        let s: Vec<i32> = (0..out as i32).map(|i| i * 15).collect();
+        let (mut yq, mut yl) = (vec![0.0f32; out], vec![0.0f32; out]);
+        cq.convert_row(&s, false, 1.0, Some((&st, 0.05)), &mut yq);
+        cl.convert_row(&s, false, 1.0, Some((&st, 0.05)), &mut yl);
+        let spread = |y: &[f32], s: &[i32]| -> f32 {
+            y.iter()
+                .zip(s)
+                .map(|(&v, &si)| (v - si as f32).abs())
+                .sum::<f32>()
+        };
+        assert!(
+            spread(&yl, &s) > 4.0 * spread(&yq, &s),
+            "burst σ×50 must visibly widen the code error: quiet {} loud {}",
+            spread(&yq, &s),
+            spread(&yl, &s)
+        );
     }
 
     #[test]

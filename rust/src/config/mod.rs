@@ -109,6 +109,11 @@ pub struct JobConfig {
     /// Dataset size (synthetic corpus).
     pub train_size: usize,
     pub test_size: usize,
+    /// Fault-profile spec for variability-aware training: a preset name
+    /// (`mild`/`moderate`/`severe`, optionally `:chip_id`) or a JSON path
+    /// understood by `chip::FaultProfile::parse`.  Empty (default) trains
+    /// on the paper's clean chip.
+    pub faults: String,
 }
 
 impl Default for JobConfig {
@@ -127,6 +132,7 @@ impl Default for JobConfig {
             seed: 0,
             train_size: 2048,
             test_size: 512,
+            faults: String::new(),
         }
     }
 }
@@ -171,6 +177,7 @@ impl JobConfig {
             "seed" => self.seed = value.parse().map_err(|e| bad(format!("{e}")))?,
             "train_size" => self.train_size = value.parse().map_err(|e| bad(format!("{e}")))?,
             "test_size" => self.test_size = value.parse().map_err(|e| bad(format!("{e}")))?,
+            "faults" => self.faults = value.to_string(),
             _ => return Err(format!("unknown config key {key:?}")),
         }
         Ok(())

@@ -27,8 +27,21 @@ pub fn fingerprint(job: &JobConfig) -> String {
         .eta_override
         .map(|e| format!("_eta{e}"))
         .unwrap_or_default();
+    // variability-aware training changes the weights, so the fault spec is
+    // part of the identity of the trained model (sanitized: specs can be
+    // file paths)
+    let flt = if job.faults.is_empty() {
+        String::new()
+    } else {
+        let tag: String = job
+            .faults
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
+            .collect();
+        format!("_flt{tag}")
+    };
     format!(
-        "{}_b{}_st{}_lr{}_seed{}_n{}{eta}",
+        "{}_b{}_st{}_lr{}_seed{}_n{}{eta}{flt}",
         job.artifact_name(),
         job.b_pim_train,
         job.steps,
@@ -220,6 +233,10 @@ mod tests {
         let mut c = a.clone();
         c.seed = 1;
         assert_ne!(fingerprint(&a), fingerprint(&c));
+        let mut d = a.clone();
+        d.faults = "moderate:7".into();
+        assert_ne!(fingerprint(&a), fingerprint(&d));
+        assert!(!fingerprint(&d).contains(':'), "{}", fingerprint(&d));
     }
 
     #[test]

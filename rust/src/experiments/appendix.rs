@@ -113,6 +113,7 @@ pub fn fig_a6(runner: &mut SweepRunner, scale: Scale) -> Result<Report> {
         noise_lsb: 0.35,
         bank: Some(crate::chip::curves::synthesize_bank(b, 32, 0xC819)),
         unit_out: 8,
+        faults: None,
     };
     for (label, chip) in [
         ("ideal 4b + noise 0.35", ChipModel::ideal(b).with_noise(0.35)),
@@ -150,7 +151,8 @@ pub fn table_a4(runner: &mut SweepRunner, scale: Scale) -> Result<Report> {
     let mut stats = CurveStats::uncalibrated();
     stats.inl_peak_lsb = 0.0;
     let bank = synthesize_bank_with(b, 32, 0xA7, stats);
-    let vchip = ChipModel { b_pim: b, noise_lsb: 0.0, bank: Some(bank), unit_out: 8 };
+    let vchip =
+        ChipModel { b_pim: b, noise_lsb: 0.0, bank: Some(bank), unit_out: 8, faults: None };
     let ichip = ChipModel::ideal(b);
 
     struct Row {

@@ -34,6 +34,7 @@ pub fn run(runner: &mut SweepRunner, scale: Scale) -> Result<Report> {
         noise_lsb: 0.35,
         bank: Some(crate::chip::curves::synthesize_bank(b_chip, 32, 0xC819)),
         unit_out: 8,
+        faults: None,
     };
     let n_test = scale.chip_test_size();
     let cb = scale.calib_batches();

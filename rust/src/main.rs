@@ -9,7 +9,7 @@ use std::process::ExitCode;
 
 use pim_qat::util::error::{anyhow, Result};
 
-use pim_qat::chip::{enob, ChipModel};
+use pim_qat::chip::{enob, ChipModel, FaultProfile};
 use pim_qat::config::JobConfig;
 use pim_qat::coordinator::{sweep, SweepRunner};
 use pim_qat::experiments::{self, Scale};
@@ -23,7 +23,9 @@ pim-qat — PIM-QAT reproduction (Jin et al. 2022)
 
 USAGE:
   pim-qat train [key=val ...]                  one training job
-  pim-qat eval --ckpt DIR [--chip SPEC] [--calibrate] [key=val ...]
+  pim-qat eval --ckpt DIR [--chip SPEC] [--faults PROFILE] [--calibrate] [key=val ...]
+  pim-qat calibrate --ckpt DIR [--chip SPEC] [--faults PROFILE] [--out DIR] [key=val ...]
+                                               self-tune BN stats on an injured chip
   pim-qat sweep --grid \"k=v1,v2;k2=v3..v4\" [key=val ...]
   pim-qat experiment <id|all> [--full]         regenerate paper tables/figures
   pim-qat chip-info [--b-pim B] [--noise S]    curve bank + ENOB report
@@ -34,9 +36,10 @@ Global: --backend auto|native|pjrt (or $PIM_QAT_BACKEND).  `native` is the
 zero-dependency in-crate trainer (default); `pjrt` executes AOT HLO
 artifacts and needs the `pjrt` cargo feature plus `make artifacts`.
 Chip SPEC for eval:  ideal:<bits>[:noise]  |  real[:noise]  |  <curves.json>[:noise]
+Fault PROFILE:  none | mild | moderate | severe  (optionally :chip_id) | <profile.json>
 Common keys: model, mode(ours|baseline|ams), scheme, uc, b_pim, steps, lr,
-seed, train_size, test_size.  Artifacts dir: $PIM_QAT_ARTIFACTS (default ./artifacts).
-Experiments: table1 table2 table3 table4 fig3 fig4 fig5 figA2 figA3 tableA2 tableA3 figA6 tableA4";
+seed, train_size, test_size, faults.  Artifacts dir: $PIM_QAT_ARTIFACTS (default ./artifacts).
+Experiments: table1 table2 table3 table4 fig3 fig4 fig5 figA2 figA3 tableA2 tableA3 figA6 tableA4 faults";
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -63,7 +66,10 @@ fn parse_cli(args: &[String]) -> Cli {
         let a = &args[i];
         if let Some(name) = a.strip_prefix("--") {
             let takes_value =
-                matches!(name, "grid" | "ckpt" | "chip" | "b-pim" | "noise" | "out" | "backend");
+                matches!(
+                    name,
+                    "grid" | "ckpt" | "chip" | "b-pim" | "noise" | "out" | "backend" | "faults"
+                );
             if takes_value && i + 1 < args.len() {
                 cli.flags.push((name.to_string(), Some(args[i + 1].clone())));
                 i += 2;
@@ -116,6 +122,7 @@ fn run(args: &[String]) -> Result<()> {
         "list" => cmd_list(&cli)?,
         "train" => cmd_train(&cli)?,
         "eval" => cmd_eval(&cli)?,
+        "calibrate" => cmd_calibrate(&cli)?,
         "sweep" => cmd_sweep(&cli)?,
         "experiment" => cmd_experiment(&cli)?,
         "chip-info" => cmd_chip_info(&cli)?,
@@ -181,7 +188,13 @@ fn parse_chip(spec: &str) -> Result<ChipModel> {
         "real" => ChipModel::real(0xC819),
         path => {
             let bank = pim_qat::chip::CurveBank::load(&PathBuf::from(path))?;
-            ChipModel { b_pim: bank.b_pim, noise_lsb: 0.0, bank: Some(bank), unit_out: 8 }
+            ChipModel {
+                b_pim: bank.b_pim,
+                noise_lsb: 0.0,
+                bank: Some(bank),
+                unit_out: 8,
+                faults: None,
+            }
         }
     };
     let chip = match parts.next() {
@@ -218,7 +231,10 @@ fn cmd_eval(cli: &Cli) -> Result<()> {
     println!("software (digital) accuracy: {sw:.2}%");
 
     if let Some(spec) = cli.flag_value("chip") {
-        let chip = parse_chip(spec)?;
+        let mut chip = parse_chip(spec)?;
+        if let Some(f) = cli.flag_value("faults") {
+            chip = chip.with_faults(FaultProfile::parse(f)?);
+        }
         let exec = ExecSpec::Pim {
             scheme: job.scheme,
             unit_channels: job.unit_channels,
@@ -233,6 +249,62 @@ fn cmd_eval(cli: &Cli) -> Result<()> {
             "chip accuracy ({spec}, scheme {}, uc {}): {acc:.2}%",
             job.scheme, job.unit_channels
         );
+    }
+    Ok(())
+}
+
+/// `pim-qat calibrate`: the self-tuning field repair.  Loads a checkpoint,
+/// injures the deployment chip with a fault profile, reports the clean /
+/// injured / self-tuned accuracy ladder, and (with `--out`) saves the
+/// repaired checkpoint — same weights, BN statistics re-estimated through
+/// the injured forward path (§3.4 applied post-deployment).
+fn cmd_calibrate(cli: &Cli) -> Result<()> {
+    let backend = open_backend(cli)?;
+    let ckpt_dir = cli
+        .flag_value("ckpt")
+        .ok_or_else(|| anyhow!("--ckpt <dir> required"))?;
+    let ckpt = Checkpoint::load(&PathBuf::from(ckpt_dir))?;
+    let mut job = JobConfig::default();
+    job.model = ckpt.model.clone();
+    if let Some(s) = ckpt.meta.get("scheme") {
+        job.scheme = s.parse().map_err(|e: String| anyhow!(e))?;
+    }
+    if let Some(u) = ckpt.meta.get("unit_channels") {
+        job.unit_channels = u.parse()?;
+    }
+    job.apply_overrides(&cli.kv).map_err(|e| anyhow!(e))?;
+
+    let chip = match cli.flag_value("chip") {
+        Some(spec) => parse_chip(spec)?,
+        None => ChipModel::ideal(7).with_noise(0.35),
+    };
+    let profile = FaultProfile::parse(cli.flag_value("faults").unwrap_or("moderate"))?;
+
+    let entry = backend.manifest().model(&job.model)?;
+    let (train_ds, test_ds) = pim_qat::data::load_default(
+        entry.image, entry.classes, job.train_size, job.test_size, 0xDA7A ^ job.seed,
+    );
+    let cfg = train::SelfTuneCfg {
+        scheme: job.scheme,
+        unit_channels: job.unit_channels,
+        ..Default::default()
+    };
+    println!(
+        "self-tuning {} on chip b_PIM={} noise={} with fault profile {} (chip {})",
+        ckpt.model,
+        chip.b_pim,
+        chip.noise_lsb,
+        cli.flag_value("faults").unwrap_or("moderate"),
+        profile.chip_id
+    );
+    let rep = train::self_tune(backend.manifest(), &ckpt, &chip, &profile, &cfg, &train_ds, &test_ds)?;
+    println!("  clean chip      : {:.2}%", rep.clean_acc);
+    println!("  injured chip    : {:.2}%", rep.injured_acc);
+    println!("  self-tuned      : {:.2}%", rep.tuned_acc);
+    println!("  drop recovered  : {:.0}%", 100.0 * rep.recovered());
+    if let Some(out) = cli.flag_value("out") {
+        rep.ckpt.save(&PathBuf::from(out))?;
+        println!("repaired checkpoint saved to {out}");
     }
     Ok(())
 }

@@ -12,12 +12,19 @@
 //!   sweep drivers (`SweepRunner::eval_engines`) instead of re-deriving
 //!   every layer's decomposed planes per evaluation.
 //!
-//! The engine itself is chip-independent (the ADC/noise model is applied
-//! per `matmul` call), which is why a chip sweep can share one programmed
-//! engine across all its configurations.
+//! The engine's *weight planes* are chip-independent (the ADC/noise model
+//! is applied per `matmul` call), which is why a chip sweep can share one
+//! programmed engine across all its configurations.  Since the fault
+//! subsystem, an engine may additionally carry a per-replica
+//! [`FaultModel`](crate::chip::FaultModel) — its own injured ADC columns —
+//! which overrides whatever chip model a `matmul` passes in.  Replica
+//! faults are identity, not geometry: they survive in-place reprogramming
+//! and are carried over when a geometry change forces a rebuild under the
+//! same key.
 
 use std::collections::BTreeMap;
 
+use crate::chip::FaultModel;
 use crate::config::Scheme;
 
 use super::layout::plan_groups;
@@ -48,6 +55,19 @@ impl EngineCache {
         self.engines.get(name)
     }
 
+    /// Mutable access to a cached engine (thread pinning, fault binding).
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut PimEngine> {
+        self.engines.get_mut(name)
+    }
+
+    /// Bind one replica fault model to every cached engine (a whole farm
+    /// node going bad), or clear them all with `None`.
+    pub fn set_faults_all(&mut self, faults: Option<FaultModel>) {
+        for e in self.engines.values_mut() {
+            e.set_faults(faults);
+        }
+    }
+
     /// Make sure the cached engine for layer `name` exists, matches the
     /// layer geometry, and carries the integer weights `w_int`
     /// ([C·k·k, O], im2col column order), then return it.  Cache hit →
@@ -75,7 +95,12 @@ impl EngineCache {
             e.reprogram(w_int);
             return e;
         }
-        let engine = PimEngine::prepare_cols(scheme, bits, w_int, out, c_in, kernel, unit_channels);
+        let mut engine =
+            PimEngine::prepare_cols(scheme, bits, w_int, out, c_in, kernel, unit_channels);
+        // a geometry rebuild replaces the planes, not the replica identity
+        if let Some(old) = self.engines.get(name) {
+            engine.set_faults(old.faults().copied());
+        }
         self.engines.insert(name.to_string(), engine);
         self.engines.get(name).expect("just inserted")
     }
@@ -116,5 +141,26 @@ mod tests {
         let e = cache.ensure_engine("l0", Scheme::Native, bits, &w2, o, c, k, uc);
         assert_eq!(e.scheme, Scheme::Native);
         assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn rebuild_preserves_replica_faults() {
+        use crate::chip::FaultProfile;
+        let mut cache = EngineCache::new();
+        let bits = QuantBits::default();
+        let mut rng = Rng::new(17);
+        let (c, k, o, uc) = (2usize, 3usize, 4usize, 1usize);
+        let w: Vec<f32> = (0..c * k * k * o).map(|_| rng.int_in(-7, 7) as f32).collect();
+        cache.ensure_engine("l0", Scheme::BitSerial, bits, &w, o, c, k, uc);
+        let fm = FaultModel::new(FaultProfile::moderate().on_chip(5)).at_step(3);
+        cache.get_mut("l0").unwrap().set_faults(Some(fm));
+        // weight-only reprogram keeps the faults
+        cache.ensure_engine("l0", Scheme::BitSerial, bits, &w, o, c, k, uc);
+        assert_eq!(cache.get("l0").unwrap().faults(), Some(&fm));
+        // geometry rebuild (scheme change) keeps the replica identity too
+        cache.ensure_engine("l0", Scheme::Native, bits, &w, o, c, k, uc);
+        assert_eq!(cache.get("l0").unwrap().faults(), Some(&fm));
+        cache.set_faults_all(None);
+        assert_eq!(cache.get("l0").unwrap().faults(), None);
     }
 }

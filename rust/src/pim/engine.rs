@@ -27,7 +27,7 @@
 use std::fmt;
 use std::sync::Mutex;
 
-use crate::chip::{ChipModel, Converter};
+use crate::chip::{ChipModel, Converter, FaultModel};
 use crate::config::Scheme;
 use crate::tensor::gemm::{gemm_acc_u8_bin_packed, gemm_acc_u8_i16};
 use crate::tensor::Tensor;
@@ -90,6 +90,11 @@ pub struct PimEngine {
     /// The raw integer weights last programmed, flat [cols·out] — what
     /// `reprogram` compares against to skip unchanged groups.
     w_cache: Vec<i16>,
+    /// Per-replica degradation: when set, this engine converts through its
+    /// own injured ADC columns, overriding any `ChipModel`-level fault model
+    /// passed to `matmul` — the substrate for a chip farm where replicas of
+    /// one layer sit on physically distinct (differently injured) chips.
+    faults: Option<FaultModel>,
     scratch: ScratchPool,
 }
 
@@ -104,6 +109,7 @@ impl Clone for PimEngine {
             threads: self.threads,
             groups: self.groups.clone(),
             w_cache: self.w_cache.clone(),
+            faults: self.faults,
             scratch: ScratchPool::new(),
         }
     }
@@ -119,6 +125,7 @@ impl fmt::Debug for PimEngine {
             .field("fs", &self.fs)
             .field("threads", &self.threads)
             .field("groups", &self.groups.len())
+            .field("faults", &self.faults)
             .finish()
     }
 }
@@ -177,6 +184,7 @@ impl PimEngine {
             threads: 0,
             groups,
             w_cache: vec![0i16; plan.cols() * out],
+            faults: None,
             scratch: ScratchPool::new(),
         };
         for g in 0..engine.plan.groups {
@@ -275,6 +283,18 @@ impl PimEngine {
         self
     }
 
+    /// Bind (or clear) this replica's fault model.  Takes precedence over
+    /// `chip.faults` in [`PimEngine::matmul`]; survives `reprogram` and the
+    /// engine cache's geometry-change rebuild.
+    pub fn set_faults(&mut self, faults: Option<FaultModel>) {
+        self.faults = faults;
+    }
+
+    /// This replica's fault model, if any.
+    pub fn faults(&self) -> Option<&FaultModel> {
+        self.faults.as_ref()
+    }
+
     /// Total MACs per output row (for throughput accounting).
     pub fn macs_per_row(&self) -> usize {
         self.plan.groups * self.plan.n * self.out
@@ -321,7 +341,12 @@ impl PimEngine {
         let m = patches.len() / cols;
         let out = self.out;
 
-        let conv = Converter::new(chip, self.fs, out);
+        // per-replica faults win over the chip-level model; either way the
+        // compiled per-column view is built once here (single-threaded) and
+        // shared read-only by the row workers — bit-identical at any thread
+        // count.
+        let faults = self.faults.as_ref().or(chip.faults.as_ref());
+        let conv = Converter::with_faults(chip, self.fs, out, faults);
         let noise = if chip.noise_lsb > 0.0 {
             Some((CounterRng::new(rng.next_u64()), chip.noise_lsb))
         } else {
@@ -744,6 +769,37 @@ mod tests {
         w2.data[0] = if w2.data[0] > 0.0 { -3.0 } else { 3.0 };
         assert_eq!(engine.reprogram(&w2.data), 1);
         check(&engine, &w2);
+    }
+
+    #[test]
+    fn engine_faults_override_chip_faults() {
+        use crate::chip::FaultProfile;
+        let q = bits();
+        let mut rng = Rng::new(8);
+        let a = Tensor::from_vec(&[4, 18], (0..72).map(|_| rng.int_in(0, 15) as f32).collect());
+        let w = Tensor::from_vec(&[18, 3], (0..54).map(|_| rng.int_in(-7, 7) as f32).collect());
+        let healthy = ChipModel::ideal(7);
+        let injured = healthy.clone().with_faults(FaultProfile::severe().on_chip(1));
+        let mut engine = PimEngine::prepare(Scheme::BitSerial, q, &w, 2, 3, 1);
+        let run = |e: &PimEngine, chip: &ChipModel| e.matmul(&a, chip, &mut Rng::new(0)).data;
+
+        let clean = run(&engine, &healthy);
+        let chip_faulted = run(&engine, &injured);
+        assert_ne!(clean, chip_faulted, "chip-level faults must perturb the output");
+
+        // engine replica carries its own (different) injury: it wins over
+        // the chip-level model
+        engine.set_faults(Some(FaultModel::new(FaultProfile::severe().on_chip(2))));
+        let replica = run(&engine, &injured);
+        assert_ne!(replica, chip_faulted, "replica profile must override chip profile");
+        assert_eq!(replica, run(&engine, &healthy), "override makes the chip model moot");
+
+        // clearing restores the chip-level behaviour and survives clone
+        let cloned = engine.clone();
+        assert_eq!(run(&cloned, &injured), replica, "clone must keep the replica faults");
+        engine.set_faults(None);
+        assert_eq!(run(&engine, &injured), chip_faulted);
+        assert_eq!(run(&engine, &healthy), clean);
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! Post-deployment self-tuning: BN calibration (§3.4) as a standalone
+//! field-repair pass for degraded and drifting PIM hardware.
+//!
+//! The paper uses BN calibration at deployment time to absorb the gap
+//! between the ideal training-time chip and the real inference chip.  The
+//! same mechanism doubles as a *self-tuning* repair: when a fielded chip
+//! degrades (device-to-device spread, drift, stuck columns — the
+//! [`crate::chip::faults`] subsystem), streaming a few calibration batches
+//! through the **injured** forward path and re-estimating the BN running
+//! statistics recovers much of the lost accuracy without touching a single
+//! weight.  Gain/offset errors in the ADC columns are, from BN's point of
+//! view, just a shifted/scaled activation distribution — exactly what the
+//! running statistics normalize away.  (Stuck columns are information loss
+//! and stay lost; the recovery is partial by construction.)
+//!
+//! Exposed as the `pim-qat calibrate` CLI subcommand and used by the
+//! experiment ledger to report clean / injured / self-tuned accuracy.
+
+use crate::chip::{ChipModel, FaultModel, FaultProfile};
+use crate::config::Scheme;
+use crate::data::Dataset;
+use crate::nn::ExecSpec;
+use crate::runtime::Manifest;
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+use super::{network_from_ckpt, Checkpoint};
+
+/// What to measure and how hard to calibrate.
+#[derive(Debug, Clone, Copy)]
+pub struct SelfTuneCfg {
+    pub scheme: Scheme,
+    pub unit_channels: usize,
+    /// Calibration batches streamed through the injured chip (§3.4 uses a
+    /// handful; more buys stability, not accuracy).
+    pub calib_batches: usize,
+    pub batch: usize,
+    /// Evaluation subset size (0 = full test set).
+    pub test_size: usize,
+    pub seed: u64,
+}
+
+impl Default for SelfTuneCfg {
+    fn default() -> Self {
+        SelfTuneCfg {
+            scheme: Scheme::BitSerial,
+            unit_channels: 8,
+            calib_batches: 4,
+            batch: 32,
+            test_size: 0,
+            seed: 1,
+        }
+    }
+}
+
+/// Outcome of one self-tuning pass: the three accuracies of the story and
+/// the repaired checkpoint (same weights, re-estimated BN state).
+#[derive(Debug, Clone)]
+pub struct SelfTuneReport {
+    /// Accuracy on the healthy chip (no faults) — the deployment baseline.
+    pub clean_acc: f64,
+    /// Accuracy on the injured chip, stale BN statistics.
+    pub injured_acc: f64,
+    /// Accuracy on the injured chip after BN self-tuning.
+    pub tuned_acc: f64,
+    pub ckpt: Checkpoint,
+}
+
+impl SelfTuneReport {
+    /// Fraction of the fault-induced accuracy drop recovered by tuning
+    /// (0 when nothing was lost).
+    pub fn recovered(&self) -> f64 {
+        let lost = self.clean_acc - self.injured_acc;
+        if lost <= 0.0 {
+            0.0
+        } else {
+            ((self.tuned_acc - self.injured_acc) / lost).clamp(0.0, 1.0)
+        }
+    }
+}
+
+/// Run the clean → injured → self-tuned ladder for one checkpoint on one
+/// chip + fault profile.  `chip` is the healthy deployment chip (its own
+/// `faults` field is ignored); `faults` is the injury under test.  The
+/// returned checkpoint carries the tuned BN statistics, so saving it IS the
+/// field repair.
+pub fn self_tune(
+    manifest: &Manifest,
+    ckpt: &Checkpoint,
+    chip: &ChipModel,
+    faults: &FaultProfile,
+    cfg: &SelfTuneCfg,
+    train_ds: &Dataset,
+    test_ds: &Dataset,
+) -> Result<SelfTuneReport> {
+    let mut healthy = chip.clone();
+    healthy.faults = None;
+    let mut injured = chip.clone();
+    injured.faults = Some(FaultModel::new(*faults));
+
+    let eval_ds;
+    let test_ds = if cfg.test_size > 0 && cfg.test_size < test_ds.len() {
+        let n = cfg.test_size;
+        eval_ds = Dataset {
+            images: test_ds.images[..n].to_vec(),
+            labels: test_ds.labels[..n].to_vec(),
+            classes: test_ds.classes,
+        };
+        &eval_ds
+    } else {
+        test_ds
+    };
+
+    let mut net = network_from_ckpt(manifest, ckpt)?;
+    let mut rng = Rng::new(cfg.seed);
+
+    let clean_exec = ExecSpec::Pim {
+        scheme: cfg.scheme,
+        unit_channels: cfg.unit_channels,
+        chip: &healthy,
+    };
+    let injured_exec = ExecSpec::Pim {
+        scheme: cfg.scheme,
+        unit_channels: cfg.unit_channels,
+        chip: &injured,
+    };
+
+    let clean_acc = net.evaluate(test_ds, cfg.batch, &clean_exec, &mut rng)?;
+    let injured_acc = net.evaluate(test_ds, cfg.batch, &injured_exec, &mut rng)?;
+    // the self-tuning step: calibration data flows through the SAME
+    // injured path the chip will serve inference on (§3.4's requirement,
+    // applied to the fault model instead of the nominal chip)
+    net.calibrate_bn(train_ds, cfg.batch, cfg.calib_batches, &injured_exec, &mut rng)?;
+    let tuned_acc = net.evaluate(test_ds, cfg.batch, &injured_exec, &mut rng)?;
+
+    // repaired checkpoint: same params, BN state overwritten in place
+    let mut tuned = ckpt.clone();
+    for (name, t) in tuned.state.iter_mut() {
+        if let Some(base) = name.strip_suffix("/mean") {
+            if let Some((m, _)) = net.bn_stats(base) {
+                t.data.clone_from(m);
+            }
+        } else if let Some(base) = name.strip_suffix("/var") {
+            if let Some((_, v)) = net.bn_stats(base) {
+                t.data.clone_from(v);
+            }
+        }
+    }
+    tuned.meta.insert(
+        "self_tuned".to_string(),
+        format!("chip {} seed {:#x}", faults.chip_id, faults.seed),
+    );
+
+    Ok(SelfTuneReport { clean_acc, injured_acc, tuned_acc, ckpt: tuned })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{JobConfig, Mode};
+    use crate::train::{Backend, NativeBackend};
+
+    /// The calibration-recovers-accuracy smoke test: train a micro model,
+    /// injure the chip with a BN-recoverable fault profile (gain/offset
+    /// spread only — stuck columns are unrecoverable information loss),
+    /// and pin the ladder ordering.  Gated behind `PIM_QAT_FAULTS=1`
+    /// because it trains a model (seconds, not milliseconds).
+    #[test]
+    fn self_tuning_recovers_injured_accuracy() {
+        if std::env::var("PIM_QAT_FAULTS").map_or(true, |v| v != "1") {
+            return;
+        }
+        let mut manifest = Manifest::builtin();
+        let mut e = manifest.models.get("tiny").unwrap().clone();
+        e.width = 4;
+        e.image = 8;
+        e.classes = 4;
+        manifest.models.insert("micro".to_string(), e);
+        manifest.batch = 8;
+        let backend = NativeBackend::new(manifest);
+
+        let job = JobConfig {
+            model: "micro".to_string(),
+            mode: Mode::Ours,
+            scheme: Scheme::BitSerial,
+            unit_channels: 8,
+            b_pim_train: 7,
+            steps: 120,
+            lr: 0.05,
+            train_size: 256,
+            test_size: 128,
+            ..Default::default()
+        };
+        let entry = backend.manifest().model(&job.model).unwrap();
+        let (train_ds, test_ds) = crate::data::load_default(
+            entry.image,
+            entry.classes,
+            job.train_size,
+            job.test_size,
+            0xDA7A ^ job.seed,
+        );
+        let res = backend.train_job(&job, &train_ds, &test_ds, 50).unwrap();
+
+        // BN-recoverable injury: heavy gain/offset spread, no stuck
+        // columns, no noise on the chip so the ladder is deterministic
+        let faults = FaultProfile {
+            gain_std: 0.15,
+            offset_std_lsb: 6.0,
+            ..FaultProfile::none().on_chip(3)
+        };
+        let chip = ChipModel::ideal(7);
+        let cfg = SelfTuneCfg {
+            scheme: job.scheme,
+            unit_channels: job.unit_channels,
+            calib_batches: 6,
+            batch: 16,
+            test_size: 0,
+            seed: 1,
+        };
+        let rep =
+            self_tune(backend.manifest(), &res.ckpt, &chip, &faults, &cfg, &train_ds, &test_ds)
+                .unwrap();
+        // conservative ordering: the injury must not help, and tuning must
+        // not hurt the injured chip
+        assert!(
+            rep.injured_acc <= rep.clean_acc,
+            "injury helped? clean {:.1} injured {:.1}",
+            rep.clean_acc,
+            rep.injured_acc
+        );
+        assert!(
+            rep.tuned_acc >= rep.injured_acc,
+            "tuning hurt: injured {:.1} tuned {:.1}",
+            rep.injured_acc,
+            rep.tuned_acc
+        );
+        // the repaired checkpoint carries the provenance tag + fresh stats
+        assert!(rep.ckpt.meta.contains_key("self_tuned"));
+    }
+}

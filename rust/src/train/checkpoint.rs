@@ -1,8 +1,14 @@
 //! Checkpoint format: `<dir>/ckpt.json` (metadata + tensor index) +
 //! `<dir>/params.bin` (little-endian f32, concatenated in index order).
+//!
+//! Writes are crash-safe: both files land as `*.tmp` siblings first and are
+//! renamed into place, `params.bin` before `ckpt.json` — the JSON header is
+//! the commit point, so a reader never sees a header that references bytes
+//! which were not fully written.  An interrupted save leaves at worst stale
+//! `*.tmp` litter next to the previous intact checkpoint.
 
 use std::collections::BTreeMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use crate::util::error::{anyhow, Context, Result};
 
@@ -56,9 +62,39 @@ impl Checkpoint {
             ("meta", meta),
             ("tensors", Json::Arr(index)),
         ]);
-        std::fs::write(dir.join("ckpt.json"), head.to_string())?;
-        std::fs::write(dir.join("params.bin"), bin)?;
+        // tmp + rename on the same directory (and thus filesystem): the
+        // payload commits before the header that indexes it
+        write_atomic(&dir.join("params.bin"), &bin)?;
+        write_atomic(&dir.join("ckpt.json"), head.to_string().as_bytes())?;
+        // best-effort directory fsync so the renames survive power loss;
+        // ignored where directories can't be fsynced (some filesystems)
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
         Ok(())
+    }
+
+    /// Scan `root`'s subdirectories for saved checkpoints and load the most
+    /// advanced one: highest `meta["step"]` (ties and step-less checkpoints
+    /// fall back to directory-name order).  Corrupt or torn entries are
+    /// skipped, which is what makes crash recovery a one-liner: point this
+    /// at the checkpoint root and resume from whatever survived.
+    pub fn load_latest(root: &Path) -> Option<(PathBuf, Checkpoint)> {
+        let mut best: Option<(u64, PathBuf, Checkpoint)> = None;
+        let entries = std::fs::read_dir(root).ok()?;
+        let mut dirs: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.join("ckpt.json").is_file())
+            .collect();
+        dirs.sort();
+        for dir in dirs {
+            let Ok(ck) = Checkpoint::load(&dir) else { continue };
+            let step = ck.meta.get("step").and_then(|s| s.parse::<u64>().ok()).unwrap_or(0);
+            if best.as_ref().map_or(true, |(s, _, _)| step >= *s) {
+                best = Some((step, dir, ck));
+            }
+        }
+        best.map(|(_, dir, ck)| (dir, ck))
     }
 
     pub fn load(dir: &Path) -> Result<Checkpoint> {
@@ -104,6 +140,23 @@ impl Checkpoint {
     }
 }
 
+/// Write `bytes` to `path` via a `.tmp` sibling + rename (atomic on POSIX
+/// within one filesystem).  The tmp file is fsynced before the rename so
+/// the rename never publishes unflushed data.
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -141,5 +194,45 @@ mod tests {
         ck.save(&dir).unwrap();
         std::fs::write(dir.join("params.bin"), [0u8; 4]).unwrap();
         assert!(Checkpoint::load(&dir).is_err());
+    }
+
+    fn ck(model: &str, step: u64, v: f32) -> Checkpoint {
+        Checkpoint {
+            model: model.into(),
+            meta: [("step".to_string(), step.to_string())].into_iter().collect(),
+            params: vec![("w".into(), Tensor::from_vec(&[2], vec![v, -v]))],
+            state: vec![],
+        }
+    }
+
+    #[test]
+    fn save_leaves_no_tmp_litter_and_overwrites_cleanly() {
+        let dir = std::env::temp_dir().join("pimqat_ckpt_atomic");
+        ck("a", 1, 1.0).save(&dir).unwrap();
+        ck("a", 2, 2.0).save(&dir).unwrap();
+        assert!(!dir.join("ckpt.tmp").exists());
+        assert!(!dir.join("params.tmp").exists());
+        let back = Checkpoint::load(&dir).unwrap();
+        assert_eq!(back.meta.get("step").unwrap(), "2");
+        assert_eq!(back.params[0].1.data, vec![2.0, -2.0]);
+    }
+
+    #[test]
+    fn load_latest_picks_highest_step_and_skips_torn() {
+        let root = std::env::temp_dir().join("pimqat_ckpt_latest");
+        let _ = std::fs::remove_dir_all(&root);
+        ck("a", 10, 1.0).save(&root.join("run_a")).unwrap();
+        ck("b", 30, 3.0).save(&root.join("run_b")).unwrap();
+        ck("c", 20, 2.0).save(&root.join("run_c")).unwrap();
+        // tear the highest-step checkpoint: it must be skipped, not crash
+        std::fs::write(root.join("run_b").join("params.bin"), [0u8; 4]).unwrap();
+        let (dir, best) = Checkpoint::load_latest(&root).unwrap();
+        assert!(dir.ends_with("run_c"), "picked {}", dir.display());
+        assert_eq!(best.model, "c");
+        assert_eq!(best.meta.get("step").unwrap(), "20");
+        // empty root → None
+        let empty = root.join("nothing_here");
+        std::fs::create_dir_all(&empty).unwrap();
+        assert!(Checkpoint::load_latest(&empty).is_none());
     }
 }

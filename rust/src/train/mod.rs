@@ -27,11 +27,13 @@
 //! PJRT when it is compiled in *and* artifacts exist, else native.
 
 pub mod arena;
+pub mod calib;
 pub mod checkpoint;
 pub mod native;
 pub mod schedule;
 
 pub use arena::TrainArena;
+pub use calib::{self_tune, SelfTuneCfg, SelfTuneReport};
 pub use checkpoint::Checkpoint;
 pub use native::NativeBackend;
 

@@ -49,7 +49,7 @@ use std::collections::BTreeMap;
 
 use crate::util::error::{anyhow, Result};
 
-use crate::chip::ChipModel;
+use crate::chip::{ChipModel, FaultProfile};
 use crate::config::{rescale, JobConfig, Mode, Scheme};
 use crate::data::loader::{self, LoaderCfg};
 use crate::data::Dataset;
@@ -114,12 +114,53 @@ impl Backend for NativeBackend {
     }
 }
 
+/// Interval (steps) between the divergence guard's in-memory snapshots and
+/// — when `PIM_QAT_RESUME` is set — the periodic crash-safe checkpoints.
+const SNAP_EVERY: usize = 25;
+
+/// Rollback attempts before the guard gives up and records the divergence.
+const MAX_ROLLBACKS: usize = 3;
+
+/// Bounded-retry divergence guard: on a non-finite loss, roll the trainer
+/// back to the last in-memory snapshot with a decayed LR, up to
+/// [`MAX_ROLLBACKS`] times.  Disabled for the rescaling-ablation variants
+/// (Table A3's `norescale`/`nofwd` rows), whose divergence IS the
+/// measurement and must be recorded, not rescued.
+struct DivergenceGuard {
+    enabled: bool,
+    lr_scale: f32,
+    rollbacks: usize,
+}
+
+impl DivergenceGuard {
+    fn new(enabled: bool) -> Self {
+        DivergenceGuard { enabled, lr_scale: 1.0, rollbacks: 0 }
+    }
+
+    /// A non-finite loss was observed: halve the LR scale and approve one
+    /// rollback, or `None` when the guard is disabled / out of attempts.
+    fn on_divergence(&mut self) -> Option<f32> {
+        if !self.enabled || self.rollbacks >= MAX_ROLLBACKS {
+            return None;
+        }
+        self.rollbacks += 1;
+        self.lr_scale *= 0.5;
+        Some(self.lr_scale)
+    }
+}
+
 /// Run one training job on the native backend (the native twin of
 /// [`super::run_job`]), staged as the explicit step lifecycle: the
 /// [`crate::data::loader::BatchLoader`] is the *acquire* stage (shuffling,
 /// augmentation, prefetch — with `PIM_QAT_PREFETCH ≥ 1` the next batch
 /// assembles on the worker pool while this step's backward runs), and
 /// [`NativeTrainer::train_step`] is forward → backward → apply.
+///
+/// Robustness plumbing (this layer, not the trainer): the divergence guard
+/// above, and — when `PIM_QAT_RESUME=<dir>` is set — crash-safe operation:
+/// the job resumes from the most advanced intact checkpoint under that
+/// directory and writes an atomic checkpoint there every [`SNAP_EVERY`]
+/// steps.
 pub fn run_job_native(
     manifest: &Manifest,
     job: &JobConfig,
@@ -132,16 +173,47 @@ pub fn run_job_native(
     let bs = manifest.batch.max(1);
     let lr_sched = schedule::MultiStepLr::new(job.lr, job.milestones, job.steps);
 
+    let resume_dir = std::env::var("PIM_QAT_RESUME").ok().map(std::path::PathBuf::from);
+    let mut start_step = 0usize;
+    if let Some(root) = &resume_dir {
+        if let Some((dir, ck)) = Checkpoint::load_latest(root) {
+            if ck.model == job.model {
+                start_step = trainer.restore_from_checkpoint(&ck)?;
+                eprintln!(
+                    "resuming {} from {} at step {start_step}",
+                    job.model,
+                    dir.display()
+                );
+            }
+        }
+    }
+
+    let mut guard = DivergenceGuard::new(job.variant.is_empty());
+    let mut snapshot: Option<(usize, TrainerSnapshot)> = None;
+
     let mut history = Vec::new();
     let cfg = LoaderCfg::for_training(bs, job.seed ^ 0x7EAC);
     // the scoped loader entry point joins any in-flight assembly before
     // the dataset borrow ends (data::loader module docs)
     loader::with_loader(train_ds, cfg, |loader| -> Result<()> {
-        for step in 0..job.steps {
+        let mut step = start_step;
+        while step < job.steps {
+            if guard.enabled && (snapshot.is_none() || step % SNAP_EVERY == 0) {
+                snapshot = Some((step, trainer.snapshot()));
+            }
+            if let Some(root) = &resume_dir {
+                if step > start_step && step % SNAP_EVERY == 0 {
+                    let mut ck = trainer.checkpoint(job);
+                    ck.meta.insert("step".to_string(), step.to_string());
+                    ck.save(&root.join("latest"))?;
+                }
+            }
             // -- acquire (stage 1): batch slot, assembled ahead under
             // prefetch
             let (x, y) = loader.next()?;
-            let lr = lr_sched.at(step);
+            let lr = lr_sched.at(step) * guard.lr_scale;
+            // variability-aware training: fresh fault replica per step
+            trainer.set_step_faults(step);
             // per-step noise stream (AMS mode), mirroring the per-step
             // seed of the lowered train artifact
             let mut srng = Rng::new((step as u64) ^ (job.seed << 8) ^ 0x5EED);
@@ -149,8 +221,23 @@ pub fn run_job_native(
             let (loss, correct) = trainer.train_step(x, y, lr, &mut srng)?;
 
             if !loss.is_finite() {
-                // diverged (the rescaling-ablation rows do this) — record
-                // & stop
+                if let (Some(scale), Some((snap_step, snap))) =
+                    (guard.on_divergence(), &snapshot)
+                {
+                    // roll back to the last good state with a smaller LR.
+                    // The loader is deliberately NOT rewound: the retry
+                    // sees fresh batches, which is part of the escape.
+                    eprintln!(
+                        "warning: non-finite loss at step {step}; rolling back to \
+                         step {snap_step} with lr scale {scale}"
+                    );
+                    trainer.restore_snapshot(snap);
+                    step = *snap_step;
+                    continue;
+                }
+                // diverged for real (the rescaling-ablation rows do this,
+                // with the guard off) — record & stop
+                eprintln!("warning: training diverged at step {step} (loss {loss}); stopping");
                 history.push(StepLog { step, loss, acc: 0.0, lr });
                 break;
             }
@@ -158,6 +245,7 @@ pub fn run_job_native(
                 let acc = 100.0 * correct as f32 / bs as f32;
                 history.push(StepLog { step, loss, acc, lr });
             }
+            step += 1;
         }
         Ok(())
     })??;
@@ -354,6 +442,15 @@ fn twin_welford_tile(
 // The trainer
 // ---------------------------------------------------------------------------
 
+/// In-memory copy of the trainer's mutable state, taken every
+/// [`SNAP_EVERY`] steps so the divergence guard can roll back without
+/// touching disk.
+struct TrainerSnapshot {
+    params: BTreeMap<String, Tensor>,
+    vel: BTreeMap<String, Tensor>,
+    bn_state: BTreeMap<String, (Vec<f32>, Vec<f32>)>,
+}
+
 /// Per-job training state of the native backend: parameters, SGD momentum,
 /// BN running statistics, and the resolved hyper-parameters.  Public so
 /// benches can time a single [`NativeTrainer::train_step`].
@@ -369,8 +466,13 @@ pub struct NativeTrainer {
     bwd_rescale: bool,
     /// AMS additive-noise std (mode=ams only).
     sigma: f32,
-    /// The training-resolution chip (ideal, noiseless — Eqn. 4a).
+    /// The training-resolution chip (ideal, noiseless — Eqn. 4a).  When
+    /// `train_faults` is set, a fresh fault replica is bound onto it every
+    /// step (variability-aware training).
     chip: ChipModel,
+    /// Base fault profile for variability-aware training (`job.faults`),
+    /// or `None` for the paper's clean-chip training.
+    train_faults: Option<FaultProfile>,
     momentum: f32,
     weight_decay: f32,
     nesterov: bool,
@@ -409,6 +511,11 @@ impl NativeTrainer {
         } else {
             0.0
         };
+        let train_faults = if job.faults.is_empty() {
+            None
+        } else {
+            Some(FaultProfile::parse(&job.faults)?)
+        };
         let (params, state) = init::init_params(&entry, job.seed);
         let vel: BTreeMap<String, Tensor> =
             params.iter().map(|(k, t)| (k.clone(), Tensor::zeros(&t.shape))).collect();
@@ -431,6 +538,7 @@ impl NativeTrainer {
             bwd_rescale,
             sigma,
             chip: ChipModel::ideal(job.b_pim_train),
+            train_faults,
             momentum: 0.9,
             weight_decay: 1e-4,
             nesterov: true,
@@ -475,6 +583,15 @@ impl NativeTrainer {
         let mut stats = BnStats::new();
         let (logits, tape) = self.forward(x, rng, arena, &mut stats)?;
         let (loss, correct, dlogits) = grad::softmax_xent(&logits, y_lab);
+        // always-on guard: a non-finite loss means the backward pass can
+        // only produce garbage gradients — skip the update and hand the
+        // loss to the caller's divergence guard instead of silently
+        // training on it.  The backward still runs so the tape's pooled
+        // buffers return to the arena.
+        if !loss.is_finite() {
+            let _ = self.backward(tape, &dlogits, arena);
+            return Ok((loss, correct));
+        }
         // -- backward: consume the tapes into parameter gradients
         let grads = self.backward(tape, &dlogits, arena);
         // -- apply: BN running stats + Nesterov SGD
@@ -536,6 +653,12 @@ impl NativeTrainer {
             }
         }
 
+        #[cfg(debug_assertions)]
+        for (name, g) in &grads {
+            let norm2: f64 = g.data.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            debug_assert!(norm2.is_finite(), "non-finite gradient norm for layer {name:?}");
+        }
+
         for (name, g) in grads {
             let p = self
                 .params
@@ -556,14 +679,79 @@ impl NativeTrainer {
         Ok(())
     }
 
-    /// Consume the trainer into a checkpoint (params + BN running state).
-    pub fn into_checkpoint(self, job: &JobConfig) -> Checkpoint {
-        let params: Vec<(String, Tensor)> = self.params.into_iter().collect();
+    /// Variability-aware training: when the job carries a fault profile,
+    /// bind a fresh per-step fault replica onto the training chip so each
+    /// step's PIM forward sees a different injured device (the hardware
+    /// population the deployed model must survive).  No-op otherwise.
+    pub fn set_step_faults(&mut self, step: usize) {
+        if let Some(p) = self.train_faults {
+            self.chip.faults = Some(p.training_sample(step as u64));
+        }
+    }
+
+    /// Snapshot the mutable training state (parameters, momentum, BN
+    /// running stats) for the divergence guard's in-memory rollback.
+    fn snapshot(&self) -> TrainerSnapshot {
+        TrainerSnapshot {
+            params: self.params.clone(),
+            vel: self.vel.clone(),
+            bn_state: self.bn_state.clone(),
+        }
+    }
+
+    /// Restore a [`Self::snapshot`] — the inverse rollback of the
+    /// divergence guard.  Engines in the arena are left alone: they are
+    /// reprogrammed from `params` on the next step anyway.
+    fn restore_snapshot(&mut self, s: &TrainerSnapshot) {
+        self.params.clone_from(&s.params);
+        self.vel.clone_from(&s.vel);
+        self.bn_state.clone_from(&s.bn_state);
+    }
+
+    /// Adopt a saved checkpoint's parameters and BN state (crash-recovery
+    /// resume).  Momentum restarts at zero — the checkpoint doesn't carry
+    /// it, and a few warm-up steps cost less than doubling the file.
+    /// Returns the step recorded in the checkpoint meta (0 when absent).
+    pub fn restore_from_checkpoint(&mut self, ck: &Checkpoint) -> Result<usize> {
+        for (name, t) in &ck.params {
+            let p = self
+                .params
+                .get_mut(name)
+                .ok_or_else(|| anyhow!("checkpoint param {name:?} unknown to this job"))?;
+            if p.shape != t.shape {
+                return Err(anyhow!(
+                    "checkpoint param {name:?} shape {:?} != job shape {:?}",
+                    t.shape,
+                    p.shape
+                ));
+            }
+            p.data.clone_from(&t.data);
+        }
+        for v in self.vel.values_mut() {
+            v.data.fill(0.0);
+        }
+        let state = ck.state_map();
+        for (k, v) in &state {
+            if let Some(base) = k.strip_suffix("/mean") {
+                let var = state
+                    .get(&format!("{base}/var"))
+                    .ok_or_else(|| anyhow!("checkpoint state {base}/var missing"))?;
+                self.bn_state.insert(base.to_string(), (v.data.clone(), var.data.clone()));
+            }
+        }
+        Ok(ck.meta.get("step").and_then(|s| s.parse().ok()).unwrap_or(0))
+    }
+
+    /// Snapshot the trainer into a checkpoint without consuming it
+    /// (periodic crash-safe saves mid-run).
+    pub fn checkpoint(&self, job: &JobConfig) -> Checkpoint {
+        let params: Vec<(String, Tensor)> =
+            self.params.iter().map(|(k, t)| (k.clone(), t.clone())).collect();
         let mut state = Vec::new();
-        for (name, (mean, var)) in self.bn_state {
+        for (name, (mean, var)) in &self.bn_state {
             let c = mean.len();
-            state.push((format!("{name}/mean"), Tensor::from_vec(&[c], mean)));
-            state.push((format!("{name}/var"), Tensor::from_vec(&[c], var)));
+            state.push((format!("{name}/mean"), Tensor::from_vec(&[c], mean.clone())));
+            state.push((format!("{name}/var"), Tensor::from_vec(&[c], var.clone())));
         }
         let mut meta = BTreeMap::new();
         meta.insert("mode".to_string(), job.mode.to_string());
@@ -573,6 +761,11 @@ impl NativeTrainer {
         meta.insert("steps".to_string(), job.steps.to_string());
         meta.insert("backend".to_string(), "native".to_string());
         Checkpoint { model: job.model.clone(), meta, params, state }
+    }
+
+    /// Consume the trainer into a checkpoint (params + BN running state).
+    pub fn into_checkpoint(self, job: &JobConfig) -> Checkpoint {
+        self.checkpoint(job)
     }
 
     // -- layers -------------------------------------------------------------
@@ -1262,5 +1455,119 @@ mod tests {
             .forward(&te.batch(&[0, 1], false, &mut rng).x, &ExecSpec::Software, &mut rng)
             .unwrap();
         assert_eq!(logits.shape, vec![2, 4]);
+    }
+
+    /// Satellite guard: a non-finite loss must not train on garbage — the
+    /// apply stage is skipped, every parameter (and the momentum) stays
+    /// exactly where it was.
+    #[test]
+    fn non_finite_loss_skips_the_update() {
+        let m = micro_manifest();
+        let job = micro_job(Mode::Baseline, 1);
+        let mut t = NativeTrainer::new(&m, &job).unwrap();
+        // poison the FC bias: it feeds the logits unquantized, so the NaN
+        // reaches the loss directly instead of being laundered through an
+        // integer activation cast
+        t.params.get_mut("fc/b").unwrap().data[0] = f32::NAN;
+        let w_before = t.params.get("conv0/w").unwrap().clone();
+        let v_before = t.vel.get("conv0/w").unwrap().clone();
+        let ds = synth::generate(8, 4, 16, 1);
+        let mut rng = Rng::new(0);
+        let batch = ds.batch(&(0..8).collect::<Vec<_>>(), false, &mut rng);
+        let (loss, _) = t.train_step(&batch.x, &batch.y, 0.05, &mut rng).unwrap();
+        assert!(!loss.is_finite(), "poisoned logits must surface a non-finite loss");
+        assert_eq!(t.params.get("conv0/w").unwrap().data, w_before.data);
+        assert_eq!(t.vel.get("conv0/w").unwrap().data, v_before.data);
+        // the trainer stays usable: healing the poison heals the step
+        t.params.get_mut("fc/b").unwrap().data[0] = 0.0;
+        let (loss, _) = t.train_step(&batch.x, &batch.y, 0.05, &mut rng).unwrap();
+        assert!(loss.is_finite());
+        assert_ne!(t.params.get("conv0/w").unwrap().data, w_before.data);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let m = micro_manifest();
+        let mut t = NativeTrainer::new(&m, &micro_job(Mode::Baseline, 1)).unwrap();
+        let snap = t.snapshot();
+        let ds = synth::generate(8, 4, 16, 1);
+        let mut rng = Rng::new(0);
+        let batch = ds.batch(&(0..8).collect::<Vec<_>>(), false, &mut rng);
+        t.train_step(&batch.x, &batch.y, 0.05, &mut rng).unwrap();
+        assert_ne!(t.params.get("conv0/w").unwrap().data, snap.params["conv0/w"].data);
+        t.restore_snapshot(&snap);
+        assert_eq!(t.params.get("conv0/w").unwrap().data, snap.params["conv0/w"].data);
+        assert_eq!(t.vel.get("conv0/w").unwrap().data, snap.vel["conv0/w"].data);
+        assert_eq!(t.bn_state.get("bn0").unwrap(), &snap.bn_state["bn0"]);
+    }
+
+    #[test]
+    fn divergence_guard_decays_lr_and_bounds_retries() {
+        let mut g = DivergenceGuard::new(true);
+        assert_eq!(g.on_divergence(), Some(0.5));
+        assert_eq!(g.on_divergence(), Some(0.25));
+        assert_eq!(g.on_divergence(), Some(0.125));
+        assert_eq!(g.on_divergence(), None, "bounded attempts");
+        // ablation variants keep their divergence: guard off means no help
+        let mut off = DivergenceGuard::new(false);
+        assert_eq!(off.on_divergence(), None);
+        assert_eq!(off.lr_scale, 1.0);
+    }
+
+    #[test]
+    fn step_faults_bind_fresh_replica_per_step() {
+        let m = micro_manifest();
+        let mut job = micro_job(Mode::Ours, 1);
+        job.faults = "mild:9".to_string();
+        let mut t = NativeTrainer::new(&m, &job).unwrap();
+        assert!(t.chip.faults.is_none());
+        t.set_step_faults(0);
+        let f0 = t.chip.faults.expect("step fault replica bound");
+        t.set_step_faults(1);
+        let f1 = t.chip.faults.unwrap();
+        assert_ne!(f0.profile.chip_id, f1.profile.chip_id, "fresh replica per step");
+        // no profile → the clean training chip stays clean
+        let mut clean = NativeTrainer::new(&m, &micro_job(Mode::Ours, 1)).unwrap();
+        clean.set_step_faults(0);
+        assert!(clean.chip.faults.is_none());
+        // bad specs surface at construction, not mid-training
+        job.faults = "catastrophic".to_string();
+        assert!(NativeTrainer::new(&m, &job).is_err());
+    }
+
+    #[test]
+    fn variability_aware_training_runs_and_shifts_the_trajectory() {
+        let m = micro_manifest();
+        let tr = synth::generate(8, 4, 64, 1);
+        let te = synth::generate(8, 4, 32, 2);
+        let clean = run_job_native(&m, &micro_job(Mode::Ours, 2), &tr, &te, 1).unwrap();
+        let mut fj = micro_job(Mode::Ours, 2);
+        fj.faults = "mild".to_string();
+        let faulty = run_job_native(&m, &fj, &tr, &te, 1).unwrap();
+        assert!(faulty.history.iter().all(|l| l.loss.is_finite()));
+        let c: Vec<f32> = clean.history.iter().map(|l| l.loss).collect();
+        let f: Vec<f32> = faulty.history.iter().map(|l| l.loss).collect();
+        assert_ne!(c, f, "per-step fault replicas must perturb the forward");
+    }
+
+    #[test]
+    fn restore_from_checkpoint_resumes_params_and_step() {
+        let m = micro_manifest();
+        let job = micro_job(Mode::Baseline, 1);
+        let mut a = NativeTrainer::new(&m, &job).unwrap();
+        let ds = synth::generate(8, 4, 16, 1);
+        let mut rng = Rng::new(0);
+        let batch = ds.batch(&(0..8).collect::<Vec<_>>(), false, &mut rng);
+        a.train_step(&batch.x, &batch.y, 0.05, &mut rng).unwrap();
+        let mut ck = a.checkpoint(&job);
+        ck.meta.insert("step".to_string(), "17".to_string());
+
+        let mut b = NativeTrainer::new(&m, &job).unwrap();
+        assert_ne!(b.params.get("conv0/w").unwrap().data, a.params.get("conv0/w").unwrap().data);
+        let step = b.restore_from_checkpoint(&ck).unwrap();
+        assert_eq!(step, 17);
+        assert_eq!(b.params.get("conv0/w").unwrap().data, a.params.get("conv0/w").unwrap().data);
+        assert_eq!(b.bn_state.get("bn0").unwrap(), a.bn_state.get("bn0").unwrap());
+        assert!(b.vel.get("conv0/w").unwrap().data.iter().all(|&v| v == 0.0));
     }
 }

@@ -334,6 +334,40 @@ mod tests {
     }
 
     #[test]
+    fn pool_stays_usable_after_detached_panic() {
+        // the robustness contract behind the divergence guard: one crashed
+        // job must neither deadlock the queue nor poison the workers —
+        // after the panic resurfaces on wait(), both submission modes
+        // still run to completion on the same global pool
+        let ticket = submit(vec![Box::new(|| panic!("one-off")) as ScopedJob<'static>]);
+        catch_unwind(AssertUnwindSafe(|| ticket.wait()))
+            .expect_err("panic must resurface on wait");
+        let hits = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<ScopedJob<'static>> = (0..4)
+            .map(|_| {
+                let hits = Arc::clone(&hits);
+                Box::new(move || {
+                    hits.fetch_add(1, Ordering::SeqCst);
+                }) as ScopedJob<'static>
+            })
+            .collect();
+        submit(jobs).wait();
+        assert_eq!(hits.load(Ordering::SeqCst), 4, "detached path dead after panic");
+        let barrier_hits = AtomicUsize::new(0);
+        run_scoped(
+            (0..4)
+                .map(|_| {
+                    let h = &barrier_hits;
+                    Box::new(move || {
+                        h.fetch_add(1, Ordering::SeqCst);
+                    }) as ScopedJob<'_>
+                })
+                .collect(),
+        );
+        assert_eq!(barrier_hits.load(Ordering::SeqCst), 4, "barrier path dead after panic");
+    }
+
+    #[test]
     fn job_panic_propagates_with_payload() {
         let caught = catch_unwind(|| {
             let jobs: Vec<ScopedJob<'_>> =

@@ -8,7 +8,7 @@
 //!    threads for every scheme with thermal noise enabled — the counter-
 //!    based noise RNG is addressed by position, not by draw order.
 
-use pim_qat::chip::{ChipModel, Converter};
+use pim_qat::chip::{ChipModel, Converter, FaultModel, FaultProfile};
 use pim_qat::config::Scheme;
 use pim_qat::pim::layout::{pack_bin_plane, plan_groups};
 use pim_qat::pim::{plane_full_scale, PimEngine, QuantBits};
@@ -264,6 +264,71 @@ fn reprogram_matches_fresh_prepare_bitwise_with_noise() {
             );
         }
     }
+}
+
+/// The fault-subsystem determinism contract: column faults are drawn from
+/// the positional counter RNG keyed by `(seed, chip_id, step)`, never from
+/// a sequential stream — so an injured engine must be bit-identical at any
+/// thread count, with thermal noise, drift, and bursts all enabled.
+#[test]
+fn faulty_engine_bit_identical_across_thread_counts() {
+    let bits = QuantBits::default();
+    let (a, w, c, k, uc) = random_case(&bits, 0xFA);
+    // drift + d2d + stuck + bursts, evaluated mid-drift (step 40)
+    let fm = FaultModel::new(FaultProfile::severe().on_chip(0xBAD)).at_step(40);
+    for scheme in [Scheme::Native, Scheme::BitSerial, Scheme::Differential] {
+        let chip = ChipModel::ideal(7).with_noise(0.5);
+        let run = |threads: usize| {
+            let mut engine = PimEngine::prepare(scheme, bits, &w, c, k, uc).with_threads(threads);
+            engine.set_faults(Some(fm));
+            let mut rng = Rng::new(21);
+            engine.matmul(&a, &chip, &mut rng)
+        };
+        let y1 = run(1);
+        for threads in [2usize, 8] {
+            assert_eq!(
+                y1.data,
+                run(threads).data,
+                "{scheme}: injured engine not bit-identical at {threads} threads"
+            );
+        }
+        // the injury must actually show up against the healthy engine
+        let healthy = {
+            let engine = PimEngine::prepare(scheme, bits, &w, c, k, uc).with_threads(1);
+            let mut rng = Rng::new(21);
+            engine.matmul(&a, &chip, &mut rng)
+        };
+        assert_ne!(y1.data, healthy.data, "{scheme}: fault model had no effect");
+    }
+}
+
+/// JSON round-trip is part of the reproducibility story: a profile shipped
+/// to another machine (or another thread count) must rebuild the same
+/// injured chip bit for bit.
+#[test]
+fn fault_profile_json_roundtrip_reproduces_engine_bitwise() {
+    let bits = QuantBits::default();
+    let (a, w, c, k, uc) = random_case(&bits, 0xFB);
+    let profile = FaultProfile::moderate().on_chip(0x51);
+    let dir = std::env::temp_dir().join("pimqat_fault_parity");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("profile.json");
+    profile.save(&path).unwrap();
+    let back = FaultProfile::parse(path.to_str().unwrap()).unwrap();
+    assert_eq!(profile, back);
+    let chip = ChipModel::ideal(7).with_noise(0.35);
+    let run = |p: FaultProfile, threads: usize| {
+        let mut engine = PimEngine::prepare(Scheme::BitSerial, bits, &w, c, k, uc)
+            .with_threads(threads);
+        engine.set_faults(Some(FaultModel::new(p).at_step(7)));
+        let mut rng = Rng::new(5);
+        engine.matmul(&a, &chip, &mut rng)
+    };
+    assert_eq!(
+        run(profile, 1).data,
+        run(back, 8).data,
+        "round-tripped profile must rebuild the identical injured chip at any thread count"
+    );
 }
 
 /// Shape sweep for the kernel-parity property tests: primes, powers of
