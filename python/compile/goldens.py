@@ -82,12 +82,17 @@ def emit_quant(out_dir: str, rng: np.random.Generator) -> None:
         )
 
 
-def emit_model(out_dir: str, rng: np.random.Generator) -> None:
-    mcfg = ModelConfig(depth_n=1, width=8, image=16)
+def emit_model(
+    out_dir: str,
+    rng: np.random.Generator,
+    mcfg: ModelConfig | None = None,
+    fname: str = "model_tiny.json",
+) -> None:
+    mcfg = mcfg or ModelConfig(depth_n=1, width=8, image=16)
     qcfg = QuantConfig()
     tcfg = TrainConfig(batch=4)
     params, state = model_lib.model_init(jax.random.PRNGKey(0), mcfg)
-    x = rng.uniform(0, 1, (4, 16, 16, 3)).astype(np.float32)
+    x = rng.uniform(0, 1, (4, mcfg.image, mcfg.image, 3)).astype(np.float32)
 
     entry = {
         "model": {"depth_n": mcfg.depth_n, "width": mcfg.width, "image": mcfg.image, "classes": mcfg.classes},
@@ -129,7 +134,7 @@ def emit_model(out_dir: str, rng: np.random.Generator) -> None:
                 np.asarray(lg).flatten().tolist()
             )
 
-    with open(os.path.join(out_dir, "model_tiny.json"), "w") as f:
+    with open(os.path.join(out_dir, fname), "w") as f:
         json.dump(entry, f)
 
 
@@ -138,12 +143,31 @@ def main() -> None:
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--out-dir", default="../artifacts/golden")
+    ap.add_argument(
+        "--micro",
+        action="store_true",
+        help=(
+            "emit the micro committed fixture (model_micro.json at width=4 "
+            "image=8 plus the MAC/quant goldens) instead of the full set; "
+            "pair with --out-dir ../rust/tests/golden"
+        ),
+    )
     args = ap.parse_args()
     os.makedirs(args.out_dir, exist_ok=True)
     rng = np.random.default_rng(1234)
     emit_pim_mac(args.out_dir, rng)
     emit_quant(args.out_dir, rng)
-    emit_model(args.out_dir, rng)
+    if args.micro:
+        # micro geometry keeps the committed fixture small (~100 KB) while
+        # exercising every layer kind the tiny golden does
+        emit_model(
+            args.out_dir,
+            rng,
+            mcfg=ModelConfig(depth_n=1, width=4, image=8),
+            fname="model_micro.json",
+        )
+    else:
+        emit_model(args.out_dir, rng)
     print(f"goldens written to {args.out_dir}")
 
 

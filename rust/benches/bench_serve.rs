@@ -1,0 +1,96 @@
+//! Bench: chip-farm serving layer — sustained QPS and tail latency of the
+//! dynamic batcher + replica farm under a synthetic open-loop load.
+//!
+//! Writes `BENCH_serve.json` in the bench-gate schema: `ns_per_iter` is
+//! wall time per served request (the regression-gated figure); `qps`,
+//! `p50_ns`, `p95_ns`, `p99_ns` and `mean_batch` ride along for the
+//! EXPERIMENTS.md serve ledger.  `PIM_QAT_BENCH_QUICK=1` shrinks the
+//! request count for the CI smoke leg.
+
+use std::time::Duration;
+
+use pim_qat::config::Scheme;
+use pim_qat::data::synth;
+use pim_qat::serve::{Farm, FarmServer, LoadCfg, ReplicaCfg, ServeCfg};
+use pim_qat::train::{Backend, Checkpoint, NativeBackend};
+use pim_qat::util::json::Json;
+
+fn main() {
+    let quick = std::env::var("PIM_QAT_BENCH_QUICK").is_ok();
+    // trains a tiny 20-step checkpoint on the native backend if no cache
+    // exists (shared with the chip_infer bench).
+    let backend = NativeBackend::open_default().unwrap();
+    let dir = std::path::Path::new("results/bench_ckpt");
+    let ckpt = if dir.join("ckpt.json").exists() {
+        Checkpoint::load(dir).unwrap()
+    } else {
+        let job = pim_qat::config::JobConfig {
+            steps: 20,
+            train_size: 128,
+            test_size: 64,
+            ..Default::default()
+        };
+        let tr = synth::generate(16, 10, 128, 1);
+        let te = synth::generate(16, 10, 64, 2);
+        let res = backend.train_job(&job, &tr, &te, 10).unwrap();
+        res.ckpt.save(dir).unwrap();
+        res.ckpt
+    };
+    let ds = synth::generate(16, 10, 64, 3);
+    let requests = if quick { 96 } else { 768 };
+
+    let mut rows: Vec<Json> = Vec::new();
+    println!("chip-farm serving, tiny model, {requests} requests per case");
+    for &(label, replicas, batch) in &[
+        ("serve 1 replica batch 8", 1usize, 8usize),
+        ("serve 2 replicas batch 8", 2, 8),
+        ("serve 4 replicas batch 16", 4, 16),
+    ] {
+        let rcfg = ReplicaCfg {
+            scheme: Scheme::BitSerial,
+            unit_channels: 8,
+            ..Default::default()
+        };
+        let farm = Farm::new(backend.manifest(), &ckpt, &rcfg, replicas).unwrap();
+        let mut server = FarmServer::start(
+            farm,
+            ServeCfg {
+                batch,
+                latency_budget: Duration::from_micros(2000),
+                queue_cap: 4 * batch,
+            },
+        );
+        let rep = pim_qat::serve::run_open_loop(
+            &server,
+            &ds,
+            &LoadCfg { requests, interarrival: Duration::ZERO, producers: 2 },
+        );
+        server.shutdown();
+        let ns = |d: Duration| d.as_nanos() as f64;
+        let per_req_ns = ns(rep.wall) / rep.requests.max(1) as f64;
+        println!(
+            "{label:<28} {:>8.1} qps  {:>10.1} ns/req  p50 {:>10.0}ns p95 {:>10.0}ns \
+             p99 {:>10.0}ns  mean batch {:.2}",
+            rep.qps(),
+            per_req_ns,
+            ns(rep.percentile(50.0)),
+            ns(rep.percentile(95.0)),
+            ns(rep.percentile(99.0)),
+            rep.mean_batch,
+        );
+        rows.push(Json::obj(vec![
+            ("name", Json::str(label)),
+            ("iters", Json::num(rep.requests as f64)),
+            ("ns_per_iter", Json::num(per_req_ns)),
+            ("median_ns", Json::num(ns(rep.percentile(50.0)))),
+            ("qps", Json::num(rep.qps())),
+            ("p50_ns", Json::num(ns(rep.percentile(50.0)))),
+            ("p95_ns", Json::num(ns(rep.percentile(95.0)))),
+            ("p99_ns", Json::num(ns(rep.percentile(99.0)))),
+            ("mean_batch", Json::num(rep.mean_batch)),
+        ]));
+    }
+    let out = Json::obj(vec![("benches", Json::Arr(rows))]);
+    std::fs::write("BENCH_serve.json", out.to_string()).unwrap();
+    println!("wrote BENCH_serve.json");
+}

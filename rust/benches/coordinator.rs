@@ -45,6 +45,7 @@ fn main() {
             .map(|i| (format!("p{i}"), Tensor::full(&[3, 3, 8, 8], 0.5)))
             .collect(),
         state: vec![],
+        velocity: vec![],
     };
     let dir = std::env::temp_dir().join("pimqat_bench_ckpt");
     let stats = b.run("checkpoint save+load (13k params)", None, || {

@@ -33,6 +33,7 @@ pub mod nn;
 pub mod pim;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod train;
 pub mod util;

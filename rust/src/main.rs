@@ -27,6 +27,10 @@ USAGE:
   pim-qat calibrate --ckpt DIR [--chip SPEC] [--faults PROFILE] [--out DIR] [key=val ...]
                                                self-tune BN stats on an injured chip
   pim-qat sweep --grid \"k=v1,v2;k2=v3..v4\" [key=val ...]
+  pim-qat serve --ckpt DIR [--replicas N] [--batch B] [--latency-budget-us U]
+                [--requests R] [--interarrival-us G] [--producers P]
+                [--queue-cap Q] [--chip SPEC] [--faults PROFILE]
+                                               chip-farm inference serving demo
   pim-qat experiment <id|all> [--full]         regenerate paper tables/figures
   pim-qat chip-info [--b-pim B] [--noise S]    curve bank + ENOB report
   pim-qat list                                 models + artifacts in the manifest
@@ -65,11 +69,24 @@ fn parse_cli(args: &[String]) -> Cli {
     while i < args.len() {
         let a = &args[i];
         if let Some(name) = a.strip_prefix("--") {
-            let takes_value =
-                matches!(
-                    name,
-                    "grid" | "ckpt" | "chip" | "b-pim" | "noise" | "out" | "backend" | "faults"
-                );
+            let takes_value = matches!(
+                name,
+                "grid"
+                    | "ckpt"
+                    | "chip"
+                    | "b-pim"
+                    | "noise"
+                    | "out"
+                    | "backend"
+                    | "faults"
+                    | "replicas"
+                    | "batch"
+                    | "latency-budget-us"
+                    | "requests"
+                    | "interarrival-us"
+                    | "producers"
+                    | "queue-cap"
+            );
             if takes_value && i + 1 < args.len() {
                 cli.flags.push((name.to_string(), Some(args[i + 1].clone())));
                 i += 2;
@@ -124,6 +141,7 @@ fn run(args: &[String]) -> Result<()> {
         "eval" => cmd_eval(&cli)?,
         "calibrate" => cmd_calibrate(&cli)?,
         "sweep" => cmd_sweep(&cli)?,
+        "serve" => cmd_serve(&cli)?,
         "experiment" => cmd_experiment(&cli)?,
         "chip-info" => cmd_chip_info(&cli)?,
         other => return Err(anyhow!("unknown command {other:?}\n{USAGE}")),
@@ -305,6 +323,106 @@ fn cmd_calibrate(cli: &Cli) -> Result<()> {
     if let Some(out) = cli.flag_value("out") {
         rep.ckpt.save(&PathBuf::from(out))?;
         println!("repaired checkpoint saved to {out}");
+    }
+    Ok(())
+}
+
+/// `pim-qat serve`: stand up the chip-farm serving layer over a trained
+/// checkpoint and drive it with a synthetic open-loop load generator,
+/// then report sustained QPS and tail latency (DESIGN.md §Serving layer).
+fn cmd_serve(cli: &Cli) -> Result<()> {
+    use std::time::Duration;
+
+    let backend = open_backend(cli)?;
+    let ckpt_dir = cli
+        .flag_value("ckpt")
+        .ok_or_else(|| anyhow!("--ckpt <dir> required"))?;
+    let ckpt = Checkpoint::load(&PathBuf::from(ckpt_dir))?;
+    let mut job = JobConfig::default();
+    job.model = ckpt.model.clone();
+    if let Some(s) = ckpt.meta.get("scheme") {
+        job.scheme = s.parse().map_err(|e: String| anyhow!(e))?;
+    }
+    if let Some(u) = ckpt.meta.get("unit_channels") {
+        job.unit_channels = u.parse()?;
+    }
+    job.apply_overrides(&cli.kv).map_err(|e| anyhow!(e))?;
+
+    let flag_num = |name: &str, default: usize| -> Result<usize> {
+        match cli.flag_value(name) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    };
+    let replicas = flag_num("replicas", 2)?.max(1);
+    let batch = flag_num("batch", 8)?.max(1);
+    let budget_us = flag_num("latency-budget-us", 2000)? as u64;
+    let requests = flag_num("requests", 256)?.max(1);
+    let interarrival_us = flag_num("interarrival-us", 0)? as u64;
+    let producers = flag_num("producers", 2)?.max(1);
+    let queue_cap = flag_num("queue-cap", 4 * batch)?.max(1);
+
+    let chip = match cli.flag_value("chip") {
+        Some(spec) => parse_chip(spec)?,
+        None => ChipModel::ideal(7),
+    };
+    let faults = match cli.flag_value("faults") {
+        Some(f) => {
+            let p = FaultProfile::parse(f)?;
+            // `none` means pristine chips, not a bound all-zero profile
+            (p != FaultProfile::none()).then_some(p)
+        }
+        None => None,
+    };
+
+    let entry = backend.manifest().model(&job.model)?;
+    let ds = pim_qat::data::synth::generate(entry.image, entry.classes, 256, 0x10AD ^ job.seed);
+
+    let rcfg = pim_qat::serve::ReplicaCfg {
+        scheme: job.scheme,
+        unit_channels: job.unit_channels,
+        chip,
+        faults,
+        seed: job.seed,
+    };
+    let farm = pim_qat::serve::Farm::new(backend.manifest(), &ckpt, &rcfg, replicas)?;
+    let scfg = pim_qat::serve::ServeCfg {
+        batch,
+        latency_budget: Duration::from_micros(budget_us),
+        queue_cap,
+    };
+    println!(
+        "serving {} on {replicas} replica chip(s): batch {batch}, budget {budget_us}us, \
+         queue cap {queue_cap}, faults {}",
+        ckpt.model,
+        cli.flag_value("faults").unwrap_or("none"),
+    );
+    let mut server = pim_qat::serve::FarmServer::start(farm, scfg);
+    let lcfg = pim_qat::serve::LoadCfg {
+        requests,
+        interarrival: Duration::from_micros(interarrival_us),
+        producers,
+    };
+    let rep = pim_qat::serve::run_open_loop(&server, &ds, &lcfg);
+    server.shutdown();
+
+    let ms = |d: Duration| d.as_secs_f64() * 1e3;
+    println!(
+        "served {} requests in {:.2}s — {:.1} QPS, mean batch {:.2}",
+        rep.requests,
+        rep.wall.as_secs_f64(),
+        rep.qps(),
+        rep.mean_batch
+    );
+    println!(
+        "latency ms: mean {:.2}  p50 {:.2}  p95 {:.2}  p99 {:.2}",
+        ms(rep.mean_latency()),
+        ms(rep.percentile(50.0)),
+        ms(rep.percentile(95.0)),
+        ms(rep.percentile(99.0))
+    );
+    for (chip_id, n) in &rep.per_chip {
+        println!("  chip {chip_id}: {n} requests");
     }
     Ok(())
 }

@@ -34,6 +34,12 @@ use super::{PimEngine, QuantBits};
 #[derive(Default)]
 pub struct EngineCache {
     engines: BTreeMap<String, PimEngine>,
+    /// Replica identity stamped onto engines created *after*
+    /// [`EngineCache::set_faults_all`] ran.  The cache is lazily populated
+    /// (a `Network` builds engines on first forward), so a serving replica
+    /// binds its fault model before any engine exists — the default makes
+    /// that binding stick instead of silently applying to nothing.
+    default_faults: Option<FaultModel>,
 }
 
 impl EngineCache {
@@ -61,8 +67,12 @@ impl EngineCache {
     }
 
     /// Bind one replica fault model to every cached engine (a whole farm
-    /// node going bad), or clear them all with `None`.
+    /// node going bad), or clear them all with `None`.  The binding also
+    /// becomes the cache's *default*: engines built later by
+    /// [`EngineCache::ensure_engine`] inherit it, so binding before the
+    /// lazily-populated cache warms up still takes effect.
     pub fn set_faults_all(&mut self, faults: Option<FaultModel>) {
+        self.default_faults = faults;
         for e in self.engines.values_mut() {
             e.set_faults(faults);
         }
@@ -97,9 +107,11 @@ impl EngineCache {
         }
         let mut engine =
             PimEngine::prepare_cols(scheme, bits, w_int, out, c_in, kernel, unit_channels);
-        // a geometry rebuild replaces the planes, not the replica identity
-        if let Some(old) = self.engines.get(name) {
-            engine.set_faults(old.faults().copied());
+        // a geometry rebuild replaces the planes, not the replica identity;
+        // a genuinely fresh engine inherits the cache-wide default replica
+        match self.engines.get(name) {
+            Some(old) => engine.set_faults(old.faults().copied()),
+            None => engine.set_faults(self.default_faults),
         }
         self.engines.insert(name.to_string(), engine);
         self.engines.get(name).expect("just inserted")
@@ -162,5 +174,31 @@ mod tests {
         assert_eq!(cache.get("l0").unwrap().faults(), Some(&fm));
         cache.set_faults_all(None);
         assert_eq!(cache.get("l0").unwrap().faults(), None);
+    }
+
+    #[test]
+    fn faults_bound_before_warmup_stick_to_lazily_built_engines() {
+        use crate::chip::FaultProfile;
+        let mut cache = EngineCache::new();
+        let bits = QuantBits::default();
+        let mut rng = Rng::new(23);
+        let (c, k, o, uc) = (2usize, 3usize, 4usize, 1usize);
+        let w: Vec<f32> = (0..c * k * k * o).map(|_| rng.int_in(-7, 7) as f32).collect();
+        // bind the replica identity while the cache is still empty — the
+        // serving path does exactly this before the first forward
+        let fm = FaultModel::new(FaultProfile::mild().on_chip(3)).at_step(0);
+        cache.set_faults_all(Some(fm));
+        cache.ensure_engine("l0", Scheme::BitSerial, bits, &w, o, c, k, uc);
+        assert_eq!(cache.get("l0").unwrap().faults(), Some(&fm));
+        // an engine that already carries its own identity is not overwritten
+        // by the default on rebuild
+        let fm2 = FaultModel::new(FaultProfile::severe().on_chip(9)).at_step(1);
+        cache.get_mut("l0").unwrap().set_faults(Some(fm2));
+        cache.ensure_engine("l0", Scheme::Native, bits, &w, o, c, k, uc);
+        assert_eq!(cache.get("l0").unwrap().faults(), Some(&fm2));
+        // clearing resets the default for future engines too
+        cache.set_faults_all(None);
+        cache.ensure_engine("l1", Scheme::BitSerial, bits, &w, o, c, k, uc);
+        assert_eq!(cache.get("l1").unwrap().faults(), None);
     }
 }

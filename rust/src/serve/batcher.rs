@@ -1,0 +1,102 @@
+//! Dynamic batcher: coalesce single-image requests into engine-sized
+//! batches under a latency budget.
+//!
+//! The policy is the standard two-trigger flush: a batch ships when it is
+//! *full* (`batch` requests) or when the *deadline* — first request's
+//! arrival plus `budget` — passes, whichever comes first.  A partial batch
+//! therefore never waits for stragglers longer than the budget, and an
+//! idle server burns no CPU (the wait for the batch's first request has no
+//! deadline at all).
+
+use std::time::{Duration, Instant};
+
+use super::queue::{BoundedQueue, Pop};
+
+/// Batcher knobs (`--batch`, `--latency-budget-us`).
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherCfg {
+    /// Flush when this many requests have coalesced.
+    pub batch: usize,
+    /// Flush a partial batch this long after its first request arrived.
+    pub budget: Duration,
+}
+
+/// Block for the next batch: the first request opens the batch and starts
+/// the budget clock; further requests join until the batch is full or the
+/// deadline hits.  `None` means the queue is closed *and* drained — the
+/// batcher's termination condition, guaranteeing every accepted request
+/// was part of some returned batch.
+pub fn next_batch<T>(q: &BoundedQueue<T>, cfg: &BatcherCfg) -> Option<Vec<T>> {
+    debug_assert!(cfg.batch > 0);
+    let first = match q.pop() {
+        Pop::Item(t) => t,
+        Pop::Closed => return None,
+        Pop::TimedOut => unreachable!("deadline-less pop cannot time out"),
+    };
+    let deadline = Instant::now() + cfg.budget;
+    let mut out = Vec::with_capacity(cfg.batch);
+    out.push(first);
+    while out.len() < cfg.batch {
+        match q.pop_deadline(deadline) {
+            Pop::Item(t) => out.push(t),
+            // deadline: ship what we have; closed: ship, the *next*
+            // next_batch call picks up any remaining backlog until drained
+            Pop::TimedOut | Pop::Closed => break,
+        }
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn cfg(batch: usize, budget_ms: u64) -> BatcherCfg {
+        BatcherCfg { batch, budget: Duration::from_millis(budget_ms) }
+    }
+
+    #[test]
+    fn full_batch_ships_without_waiting_for_the_deadline() {
+        let q = BoundedQueue::new(8);
+        for i in 0..4 {
+            q.push(i).unwrap();
+        }
+        let t0 = Instant::now();
+        let b = next_batch(&q, &cfg(4, 10_000)).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        assert!(t0.elapsed() < Duration::from_secs(5), "must not sit out the budget");
+    }
+
+    #[test]
+    fn partial_batch_flushes_at_deadline() {
+        let q = BoundedQueue::new(8);
+        q.push(41).unwrap();
+        q.push(42).unwrap();
+        let t0 = Instant::now();
+        let b = next_batch(&q, &cfg(16, 30)).unwrap();
+        assert_eq!(b, vec![41, 42], "ships what arrived, not a full batch");
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn closed_drained_queue_terminates_the_batcher() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        q.close();
+        assert!(next_batch(&q, &cfg(4, 5)).is_none());
+    }
+
+    #[test]
+    fn close_with_backlog_still_yields_every_item() {
+        let q = Arc::new(BoundedQueue::new(8));
+        for i in 0..6 {
+            q.push(i).unwrap();
+        }
+        q.close();
+        let mut seen = Vec::new();
+        while let Some(mut b) = next_batch(&q, &cfg(4, 5)) {
+            seen.append(&mut b);
+        }
+        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
+    }
+}

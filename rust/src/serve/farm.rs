@@ -1,0 +1,361 @@
+//! Chip farm + serving front-end: N simulated chip replicas behind the
+//! dynamic batcher.
+//!
+//! Each [`Replica`] is a full inference stack — its own [`Network`] (and
+//! thus its own lazily-warmed `EngineCache`), its own [`ChipModel`], its
+//! own per-chip [`FaultProfile`] replica bound through
+//! `EngineCache::set_faults_all`, and its own noise stream seeded from
+//! `CounterRng::stream(chip_id)`.  Replicas share *nothing* mutable, which
+//! is the replica-isolation contract the parity tests pin: a batch served
+//! by chip `i` is bitwise what a standalone engine carrying chip `i`'s
+//! fault replica would produce, whatever else the farm is doing.
+//!
+//! Dispatch rides the global worker pool's detached [`pool::submit`] seam:
+//! one job per batch, one in-flight batch per replica (per-replica FIFO),
+//! idle replicas found with the non-blocking `Ticket::is_complete` probe
+//! and a round-robin fallback that bounds the wait when all are busy.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::util::error::Result;
+
+use crate::chip::{ChipModel, FaultModel, FaultProfile};
+use crate::config::Scheme;
+use crate::nn::{ExecSpec, Network};
+use crate::runtime::Manifest;
+use crate::tensor::{ops, Tensor};
+use crate::train::{network_from_ckpt, Checkpoint};
+use crate::util::pool::{self, ScopedJob, Ticket};
+use crate::util::rng::{CounterRng, Rng};
+
+use super::batcher::{next_batch, BatcherCfg};
+use super::queue::BoundedQueue;
+
+/// Per-replica execution config, shared by every chip in the farm; the
+/// replica index individualizes it (`FaultProfile::on_chip`, noise seed).
+#[derive(Debug, Clone)]
+pub struct ReplicaCfg {
+    pub scheme: Scheme,
+    pub unit_channels: usize,
+    pub chip: ChipModel,
+    /// Fault family: replica `i` carries `profile.on_chip(i)`.  `None`
+    /// serves on pristine chips.
+    pub faults: Option<FaultProfile>,
+    /// Base seed of the farm's noise streams (replica `i` draws from
+    /// `CounterRng::new(seed).stream(i)`).
+    pub seed: u64,
+}
+
+impl Default for ReplicaCfg {
+    fn default() -> Self {
+        ReplicaCfg {
+            scheme: Scheme::BitSerial,
+            unit_channels: 8,
+            chip: ChipModel::ideal(7),
+            faults: None,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// The answer to one request.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub logits: Vec<f32>,
+    /// Argmax class.
+    pub class: usize,
+    /// Which chip replica served this request.
+    pub chip_id: u64,
+    /// How many requests were coalesced into the batch that served it.
+    pub batch_size: usize,
+    /// Enqueue → response-ready.
+    pub latency: Duration,
+}
+
+struct Oneshot {
+    slot: Mutex<Option<Response>>,
+    ready: Condvar,
+}
+
+/// Client-side completion handle of a submitted request.  The server's
+/// shutdown path drains every accepted request, so `wait` always returns.
+#[must_use = "a Pending that is never waited discards its Response"]
+pub struct Pending {
+    cell: Arc<Oneshot>,
+}
+
+impl Pending {
+    /// Block until the request's response is ready.
+    pub fn wait(self) -> Response {
+        let mut g = self.cell.slot.lock().unwrap();
+        loop {
+            if let Some(r) = g.take() {
+                return r;
+            }
+            g = self.cell.ready.wait(g).unwrap();
+        }
+    }
+}
+
+/// One queued inference request: a single [H, W, C] image.
+pub struct Request {
+    image: Tensor,
+    enqueued: Instant,
+    cell: Arc<Oneshot>,
+}
+
+impl Request {
+    fn fulfill(self, mut resp: Response) {
+        resp.latency = self.enqueued.elapsed();
+        *self.cell.slot.lock().unwrap() = Some(resp);
+        self.cell.ready.notify_all();
+    }
+}
+
+/// One simulated chip: network + chip model + fault replica + noise
+/// stream.  Usable standalone (the parity tests' reference path) or as a
+/// farm member.
+pub struct Replica {
+    pub chip_id: u64,
+    net: Network,
+    chip: ChipModel,
+    scheme: Scheme,
+    unit_channels: usize,
+    rng: Rng,
+}
+
+impl Replica {
+    pub fn new(
+        manifest: &Manifest,
+        ckpt: &Checkpoint,
+        cfg: &ReplicaCfg,
+        chip_id: u64,
+    ) -> Result<Replica> {
+        let mut net = network_from_ckpt(manifest, ckpt)?;
+        if let Some(profile) = cfg.faults {
+            // bind the replica identity up front; EngineCache's default
+            // carries it onto the engines the first forward will build
+            let fm = FaultModel::new(profile.on_chip(chip_id)).at_step(0);
+            let mut cache = net.take_engine_cache();
+            cache.set_faults_all(Some(fm));
+            net.set_engine_cache(cache);
+        }
+        let rng = Rng::new(CounterRng::new(cfg.seed).stream(chip_id).u64_at(0));
+        Ok(Replica {
+            chip_id,
+            net,
+            chip: cfg.chip.clone(),
+            scheme: cfg.scheme,
+            unit_channels: cfg.unit_channels,
+            rng,
+        })
+    }
+
+    /// Run one coalesced batch and fulfill every request in it.
+    fn serve_batch(&mut self, reqs: Vec<Request>) {
+        let b = reqs.len();
+        let (h, w, c) = {
+            let s = &reqs[0].image.shape;
+            (s[0], s[1], s[2])
+        };
+        let mut x = Tensor::zeros(&[b, h, w, c]);
+        let px = h * w * c;
+        for (i, r) in reqs.iter().enumerate() {
+            x.data[i * px..(i + 1) * px].copy_from_slice(&r.image.data);
+        }
+        let (logits, classes) = self.infer(&x);
+        let preds = ops::argmax_rows(&logits);
+        for (i, r) in reqs.into_iter().enumerate() {
+            r.fulfill(Response {
+                logits: logits.data[i * classes..(i + 1) * classes].to_vec(),
+                class: preds[i],
+                chip_id: self.chip_id,
+                batch_size: b,
+                latency: Duration::ZERO, // overwritten by fulfill
+            });
+        }
+    }
+
+    /// Forward a prepared [B, H, W, C] batch → (logits [B, classes],
+    /// classes).  The reference path of the parity tests: one request at a
+    /// time through here must match the farm's coalesced answer bitwise on
+    /// a noiseless chip.
+    pub fn infer(&mut self, x: &Tensor) -> (Tensor, usize) {
+        let exec = ExecSpec::Pim {
+            scheme: self.scheme,
+            unit_channels: self.unit_channels,
+            chip: &self.chip,
+        };
+        let logits = self.net.forward(x, &exec, &mut self.rng).expect("replica forward");
+        let classes = logits.shape[1];
+        (logits, classes)
+    }
+
+    /// Single-image convenience wrapper over [`Replica::infer`].
+    pub fn infer_one(&mut self, image: &Tensor) -> Vec<f32> {
+        let (h, w, c) = (image.shape[0], image.shape[1], image.shape[2]);
+        let x = Tensor::from_vec(&[1, h, w, c], image.data.clone());
+        let (logits, _) = self.infer(&x);
+        logits.data
+    }
+}
+
+struct Slot {
+    state: Arc<Mutex<Replica>>,
+    ticket: Option<Ticket>,
+}
+
+/// The chip farm: N replicas, each with at most one batch in flight on the
+/// global worker pool.
+pub struct Farm {
+    slots: Vec<Slot>,
+    rr: usize,
+}
+
+impl Farm {
+    /// Build `replicas` chips from one checkpoint.  Replica `i` gets chip
+    /// id `i`, fault replica `profile.on_chip(i)` and noise stream
+    /// `CounterRng::new(seed).stream(i)`.
+    pub fn new(
+        manifest: &Manifest,
+        ckpt: &Checkpoint,
+        cfg: &ReplicaCfg,
+        replicas: usize,
+    ) -> Result<Farm> {
+        assert!(replicas > 0, "a farm needs at least one replica");
+        // one in-flight batch per replica: make sure the pool can actually
+        // run them side by side instead of serializing on a smaller pool
+        pool::reserve(replicas);
+        let mut slots = Vec::with_capacity(replicas);
+        for i in 0..replicas {
+            let r = Replica::new(manifest, ckpt, cfg, i as u64)?;
+            slots.push(Slot { state: Arc::new(Mutex::new(r)), ticket: None });
+        }
+        Ok(Farm { slots, rr: 0 })
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Ship one batch to a replica: the first idle one at or after the
+    /// round-robin cursor, else the cursor's replica (waiting for its
+    /// previous batch first — per-replica FIFO, bounded wait).
+    fn dispatch(&mut self, reqs: Vec<Request>) {
+        if reqs.is_empty() {
+            return;
+        }
+        let n = self.slots.len();
+        let mut pick = self.rr;
+        for off in 0..n {
+            let i = (self.rr + off) % n;
+            if self.slots[i].ticket.as_ref().map_or(true, |t| t.is_complete()) {
+                pick = i;
+                break;
+            }
+        }
+        self.rr = (pick + 1) % n;
+        let slot = &mut self.slots[pick];
+        if let Some(t) = slot.ticket.take() {
+            t.wait();
+        }
+        let state = Arc::clone(&slot.state);
+        let job: ScopedJob<'static> = Box::new(move || {
+            state.lock().unwrap().serve_batch(reqs);
+        });
+        slot.ticket = Some(pool::submit(vec![job]));
+    }
+
+    /// Wait out every in-flight batch (shutdown barrier).
+    fn drain(&mut self) {
+        for s in &mut self.slots {
+            if let Some(t) = s.ticket.take() {
+                t.wait();
+            }
+        }
+    }
+}
+
+/// Serving-layer knobs (`pim-qat serve` flags).
+#[derive(Debug, Clone, Copy)]
+pub struct ServeCfg {
+    /// Coalesce up to this many requests per dispatch.
+    pub batch: usize,
+    /// Flush a partial batch this long after its first request.
+    pub latency_budget: Duration,
+    /// Admission queue capacity (backpressure threshold).
+    pub queue_cap: usize,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg {
+            batch: 8,
+            latency_budget: Duration::from_micros(2000),
+            queue_cap: 64,
+        }
+    }
+}
+
+/// The running server: bounded queue + batcher thread + farm.
+///
+/// Shutdown discipline (tested): `shutdown` (or drop) closes the queue,
+/// the batcher drains the backlog into final (possibly partial) batches,
+/// waits out every replica ticket, and exits — every accepted request gets
+/// its [`Response`], and the batcher thread is joined, not leaked.
+pub struct FarmServer {
+    queue: Arc<BoundedQueue<Request>>,
+    batcher: Option<JoinHandle<()>>,
+}
+
+impl FarmServer {
+    pub fn start(farm: Farm, cfg: ServeCfg) -> FarmServer {
+        let queue = Arc::new(BoundedQueue::new(cfg.queue_cap));
+        let q = Arc::clone(&queue);
+        let bcfg = BatcherCfg { batch: cfg.batch.max(1), budget: cfg.latency_budget };
+        let batcher = std::thread::Builder::new()
+            .name("pim-qat-batcher".into())
+            .spawn(move || {
+                let mut farm = farm;
+                while let Some(reqs) = next_batch(&q, &bcfg) {
+                    farm.dispatch(reqs);
+                }
+                farm.drain();
+            })
+            .expect("spawn batcher thread");
+        FarmServer { queue, batcher: Some(batcher) }
+    }
+
+    /// Submit one [H, W, C] image.  Blocks while the queue is at capacity
+    /// (backpressure); `None` after shutdown began.
+    pub fn submit(&self, image: Tensor) -> Option<Pending> {
+        let cell = Arc::new(Oneshot { slot: Mutex::new(None), ready: Condvar::new() });
+        let req = Request { image, enqueued: Instant::now(), cell: Arc::clone(&cell) };
+        match self.queue.push(req) {
+            Ok(()) => Some(Pending { cell }),
+            Err(_rejected) => None,
+        }
+    }
+
+    /// Requests admitted but not yet picked up by the batcher.
+    pub fn backlog(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Close admission, serve out everything accepted, join the batcher.
+    /// Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        self.queue.close();
+        if let Some(h) = self.batcher.take() {
+            h.join().expect("batcher thread panicked");
+        }
+    }
+}
+
+impl Drop for FarmServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

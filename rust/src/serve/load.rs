@@ -1,0 +1,118 @@
+//! Synthetic open-loop load generator + latency ledger.
+//!
+//! Open-loop means arrivals follow a fixed schedule (one request every
+//! `interarrival`), not the server's completion rate — the standard way to
+//! surface queueing delay and tail latency.  When the bounded queue fills,
+//! `submit` blocks and the generator degrades into a closed loop: the
+//! backpressure contract, measured rather than hidden.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::data::Dataset;
+
+use super::farm::{FarmServer, Response};
+
+/// Load-generator knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadCfg {
+    /// Total requests to submit.
+    pub requests: usize,
+    /// Target gap between consecutive arrivals (zero = submit flat out).
+    pub interarrival: Duration,
+    /// Producer threads hammering the queue concurrently.
+    pub producers: usize,
+}
+
+impl Default for LoadCfg {
+    fn default() -> Self {
+        LoadCfg { requests: 256, interarrival: Duration::ZERO, producers: 2 }
+    }
+}
+
+/// What the run measured.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub requests: usize,
+    pub wall: Duration,
+    /// Per-request enqueue→response latencies, ascending.
+    pub latencies: Vec<Duration>,
+    /// Requests served per replica chip id (coalescing evidence).
+    pub per_chip: Vec<(u64, usize)>,
+    /// Mean coalesced batch size over all responses.
+    pub mean_batch: f64,
+}
+
+impl LoadReport {
+    pub fn qps(&self) -> f64 {
+        self.requests as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    /// Latency at percentile `p` in [0, 100] (nearest-rank).
+    pub fn percentile(&self, p: f64) -> Duration {
+        if self.latencies.is_empty() {
+            return Duration::ZERO;
+        }
+        let n = self.latencies.len();
+        let rank = ((p / 100.0) * n as f64).ceil().max(1.0) as usize;
+        self.latencies[rank.min(n) - 1]
+    }
+
+    pub fn mean_latency(&self) -> Duration {
+        if self.latencies.is_empty() {
+            return Duration::ZERO;
+        }
+        self.latencies.iter().sum::<Duration>() / self.latencies.len() as u32
+    }
+}
+
+/// Drive `server` with `cfg.requests` images cycled from `ds`, spread
+/// round-robin over `cfg.producers` threads on one shared arrival
+/// schedule, and wait out every response.
+pub fn run_open_loop(server: &FarmServer, ds: &Dataset, cfg: &LoadCfg) -> LoadReport {
+    assert!(cfg.producers > 0 && cfg.requests > 0);
+    let responses: Mutex<Vec<Response>> = Mutex::new(Vec::with_capacity(cfg.requests));
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for p in 0..cfg.producers {
+            let responses = &responses;
+            s.spawn(move || {
+                let mut got = Vec::new();
+                // producer p owns arrivals p, p+producers, ... of the
+                // shared schedule: request q is due at t0 + q*interarrival
+                for q in (p..cfg.requests).step_by(cfg.producers) {
+                    let due = t0 + cfg.interarrival * q as u32;
+                    if let Some(gap) = due.checked_duration_since(Instant::now()) {
+                        std::thread::sleep(gap);
+                    }
+                    let img = ds.images[q % ds.len()].clone();
+                    let pending = server.submit(img).expect("server closed under load");
+                    got.push(pending);
+                }
+                // waiting only at the end keeps the loop open (arrivals
+                // never gate on completions; the bounded queue may)
+                let mut out = responses.lock().unwrap();
+                for pending in got {
+                    out.push(pending.wait());
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let responses = responses.into_inner().unwrap();
+    let mut latencies: Vec<Duration> = responses.iter().map(|r| r.latency).collect();
+    latencies.sort();
+    let mut per_chip: std::collections::BTreeMap<u64, usize> = Default::default();
+    let mut batch_sum = 0usize;
+    for r in &responses {
+        *per_chip.entry(r.chip_id).or_default() += 1;
+        batch_sum += r.batch_size;
+    }
+    LoadReport {
+        requests: responses.len(),
+        wall,
+        latencies,
+        per_chip: per_chip.into_iter().collect(),
+        mean_batch: batch_sum as f64 / responses.len().max(1) as f64,
+    }
+}

@@ -1,0 +1,26 @@
+//! Inference serving layer (DESIGN.md §Serving layer): a chip-farm
+//! front-end over the trained checkpoint.
+//!
+//! Pipeline: producers → [`queue::BoundedQueue`] (bounded admission,
+//! backpressure) → [`batcher`] (coalesce to engine-sized batches under a
+//! latency budget) → [`farm::Farm`] (N isolated chip replicas, one
+//! in-flight batch each, scheduled on the global worker pool) → per-request
+//! [`farm::Response`]s.
+//!
+//! Determinism contract: replicas share nothing mutable, and on a
+//! *noiseless* chip a replica's answer for an image is bitwise independent
+//! of how requests were coalesced — the f32/integer kernels accumulate
+//! each batch row in a batch-size-invariant order, faults are per-column,
+//! and no RNG is drawn.  With thermal noise enabled, results are instead
+//! reproducible per (replica, batch composition, seed).  See
+//! `tests/serve.rs` for the pinned properties.
+
+pub mod batcher;
+pub mod farm;
+pub mod load;
+pub mod queue;
+
+pub use batcher::{next_batch, BatcherCfg};
+pub use farm::{Farm, FarmServer, Pending, Replica, ReplicaCfg, Response, ServeCfg};
+pub use load::{run_open_loop, LoadCfg, LoadReport};
+pub use queue::{BoundedQueue, Pop};

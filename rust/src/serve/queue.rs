@@ -1,0 +1,194 @@
+//! Bounded MPSC request queue: the admission edge of the serving layer.
+//!
+//! Capacity is the backpressure mechanism — [`BoundedQueue::push`] *blocks*
+//! when the queue is full instead of dropping, so an over-driven open-loop
+//! load generator degrades into a closed loop rather than losing requests
+//! (DESIGN.md §Serving layer).  [`BoundedQueue::close`] starts shutdown:
+//! producers get their item back, the consumer drains what is already
+//! queued and then sees [`Pop::Closed`].
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Outcome of a consumer pop.
+pub enum Pop<T> {
+    /// An item was dequeued.
+    Item(T),
+    /// The deadline passed with the queue still empty (and open).
+    TimedOut,
+    /// The queue is closed *and* fully drained — no item will ever appear.
+    Closed,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// A blocking bounded multi-producer queue (single consumer by convention:
+/// the batcher thread; nothing breaks with several consumers).
+pub struct BoundedQueue<T> {
+    cap: usize,
+    inner: Mutex<Inner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "queue capacity must be positive");
+        BoundedQueue {
+            cap,
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Queued items right now (racy by nature; diagnostics only).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    /// Enqueue `item`, blocking while the queue is at capacity
+    /// (backpressure, never drops).  Returns the item back if the queue
+    /// was closed before space opened up.
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(item);
+            }
+            if g.items.len() < self.cap {
+                break;
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue, blocking until an item arrives or the queue is closed and
+    /// drained.  Items queued before `close` are still delivered.
+    pub fn pop(&self) -> Pop<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(it) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Pop::Item(it);
+            }
+            if g.closed {
+                return Pop::Closed;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Dequeue with a deadline: an item if one arrives in time,
+    /// [`Pop::TimedOut`] once `deadline` passes, [`Pop::Closed`] when the
+    /// queue is closed and drained.  The batcher's latency budget lives
+    /// here — a partial batch stops waiting the moment the deadline hits.
+    pub fn pop_deadline(&self, deadline: Instant) -> Pop<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(it) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Pop::Item(it);
+            }
+            if g.closed {
+                return Pop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Pop::TimedOut;
+            }
+            // spurious wakes are fine: the loop re-checks everything
+            let (guard, _timeout) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Close the queue: producers unblock with their item returned,
+    /// the consumer drains the backlog and then sees [`Pop::Closed`].
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_roundtrip_and_len() {
+        let q = BoundedQueue::new(4);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.len(), 2);
+        assert!(matches!(q.pop(), Pop::Item(1)));
+        assert!(matches!(q.pop(), Pop::Item(2)));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pop_deadline_times_out_on_empty_open_queue() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        let t0 = Instant::now();
+        let r = q.pop_deadline(t0 + Duration::from_millis(20));
+        assert!(matches!(r, Pop::TimedOut));
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn close_drains_backlog_then_reports_closed() {
+        let q = BoundedQueue::new(4);
+        q.push(7).unwrap();
+        q.close();
+        assert!(q.push(8).is_err(), "push after close returns the item");
+        assert!(matches!(q.pop(), Pop::Item(7)), "backlog still delivered");
+        assert!(matches!(q.pop(), Pop::Closed));
+        assert!(matches!(q.pop_deadline(Instant::now()), Pop::Closed));
+    }
+
+    #[test]
+    fn full_queue_blocks_producer_until_space_or_close() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(0).unwrap();
+        let q2 = Arc::clone(&q);
+        let producer = std::thread::spawn(move || q2.push(1));
+        // the producer is parked on the full queue; popping frees it
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(q.len(), 1, "second push must not have landed yet");
+        assert!(matches!(q.pop(), Pop::Item(0)));
+        producer.join().unwrap().unwrap();
+        assert!(matches!(q.pop(), Pop::Item(1)));
+        // and a producer parked at close() gets its item back
+        q.push(2).unwrap();
+        let q3 = Arc::clone(&q);
+        let parked = std::thread::spawn(move || q3.push(3));
+        std::thread::sleep(Duration::from_millis(10));
+        q.close();
+        assert_eq!(parked.join().unwrap().unwrap_err(), 3);
+    }
+}

@@ -15,14 +15,24 @@ use crate::util::error::{anyhow, Context, Result};
 use crate::tensor::Tensor;
 use crate::util::json::{parse_file, Json};
 
-/// A trained model snapshot: parameters + BN running state.
-#[derive(Debug, Clone)]
+/// Format version written into `meta["ckpt_version"]`.  v1 checkpoints
+/// (PRs 1-6) carry no optimizer velocity; v2 adds the `velocity` section.
+pub const CKPT_VERSION: &str = "2";
+
+/// A trained model snapshot: parameters + BN running state + (since v2)
+/// SGD momentum velocity buffers, so a resumed run continues the same
+/// optimizer trajectory instead of restarting momentum from zero.
+#[derive(Debug, Clone, Default)]
 pub struct Checkpoint {
     pub model: String,
     /// Extra metadata recorded by the trainer (mode, scheme, b_pim, ...).
     pub meta: BTreeMap<String, String>,
     pub params: Vec<(String, Tensor)>,
     pub state: Vec<(String, Tensor)>,
+    /// SGD velocity buffers, keyed like `params`.  Empty in v1 checkpoints
+    /// and in inference-only snapshots; the section is omitted on disk when
+    /// empty so eval-time checkpoints stay as small as before.
+    pub velocity: Vec<(String, Tensor)>,
 }
 
 impl Checkpoint {
@@ -38,7 +48,12 @@ impl Checkpoint {
         std::fs::create_dir_all(dir)?;
         let mut bin: Vec<u8> = Vec::new();
         let mut index = Vec::new();
-        for (section, entries) in [("param", &self.params), ("state", &self.state)] {
+        let sections = [
+            ("param", &self.params),
+            ("state", &self.state),
+            ("velocity", &self.velocity),
+        ];
+        for (section, entries) in sections {
             for (name, t) in entries.iter() {
                 index.push(Json::obj(vec![
                     ("section", Json::str(section)),
@@ -107,6 +122,7 @@ impl Checkpoint {
             .collect();
         let mut params = Vec::new();
         let mut state = Vec::new();
+        let mut velocity = Vec::new();
         for e in head.get("tensors").as_arr().ok_or_else(|| anyhow!("tensors missing"))? {
             let shape = e.get("shape").as_usize_vec().ok_or_else(|| anyhow!("shape"))?;
             let off = e.get("offset").as_usize().ok_or_else(|| anyhow!("offset"))?;
@@ -119,6 +135,7 @@ impl Checkpoint {
             match e.get("section").as_str() {
                 Some("param") => params.push((name, t)),
                 Some("state") => state.push((name, t)),
+                Some("velocity") => velocity.push((name, t)),
                 s => return Err(anyhow!("bad section {s:?}")),
             }
         }
@@ -136,6 +153,7 @@ impl Checkpoint {
             meta,
             params,
             state,
+            velocity,
         })
     }
 }
@@ -171,6 +189,7 @@ mod tests {
                 ("fc/b".into(), Tensor::from_vec(&[3], vec![0.0, 1.0, -1.0])),
             ],
             state: vec![("bn0/mean".into(), Tensor::from_vec(&[2], vec![0.5, 0.75]))],
+            velocity: vec![],
         };
         let dir = std::env::temp_dir().join("pimqat_ckpt_test");
         ck.save(&dir).unwrap();
@@ -180,6 +199,27 @@ mod tests {
         assert_eq!(back.params.len(), 2);
         assert_eq!(back.params[0].1.data, ck.params[0].1.data);
         assert_eq!(back.state[0].1.data, ck.state[0].1.data);
+        assert!(back.velocity.is_empty());
+    }
+
+    #[test]
+    fn velocity_section_roundtrips() {
+        let ck = Checkpoint {
+            model: "tiny".into(),
+            meta: [("ckpt_version".to_string(), CKPT_VERSION.to_string())]
+                .into_iter()
+                .collect(),
+            params: vec![("w".into(), Tensor::from_vec(&[2], vec![1.0, 2.0]))],
+            state: vec![],
+            velocity: vec![("w".into(), Tensor::from_vec(&[2], vec![0.125, -0.5]))],
+        };
+        let dir = std::env::temp_dir().join("pimqat_ckpt_vel");
+        ck.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir).unwrap();
+        assert_eq!(back.velocity.len(), 1);
+        assert_eq!(back.velocity[0].0, "w");
+        assert_eq!(back.velocity[0].1.data, vec![0.125, -0.5]);
+        assert_eq!(back.meta.get("ckpt_version").unwrap(), CKPT_VERSION);
     }
 
     #[test]
@@ -190,6 +230,7 @@ mod tests {
             meta: Default::default(),
             params: vec![("w".into(), Tensor::from_vec(&[4], vec![1., 2., 3., 4.]))],
             state: vec![],
+            velocity: vec![],
         };
         ck.save(&dir).unwrap();
         std::fs::write(dir.join("params.bin"), [0u8; 4]).unwrap();
@@ -202,6 +243,7 @@ mod tests {
             meta: [("step".to_string(), step.to_string())].into_iter().collect(),
             params: vec![("w".into(), Tensor::from_vec(&[2], vec![v, -v]))],
             state: vec![],
+            velocity: vec![],
         }
     }
 

@@ -321,7 +321,7 @@ pub fn run_job(
     meta.insert("unit_channels".into(), job.unit_channels.to_string());
     meta.insert("b_pim_train".into(), job.b_pim_train.to_string());
     meta.insert("steps".into(), job.steps.to_string());
-    let ckpt = Checkpoint { model: job.model.clone(), meta, params, state };
+    let ckpt = Checkpoint { model: job.model.clone(), meta, params, state, velocity: vec![] };
 
     // ---- software (digital) evaluation through the eval artifact
     let software_acc = eval_software(rt, &ckpt, test_ds)?;

@@ -119,6 +119,15 @@ pub struct Ticket {
 }
 
 impl Ticket {
+    /// Non-blocking completion probe: `true` once every job in the batch
+    /// has finished (a panic inside a job still counts as finished — it is
+    /// re-raised by [`Ticket::wait`], which remains the only way to
+    /// *observe* it).  Serving dispatchers poll this to find a free
+    /// replica without parking on a busy one.
+    pub fn is_complete(&self) -> bool {
+        *self.scope.pending.lock().unwrap() == 0
+    }
+
     /// Block until every job in the batch has finished; the first panic
     /// from any job re-raises here.  When the batch is already complete —
     /// the steady-state prefetch hit — this returns without touching the
@@ -150,6 +159,15 @@ impl Ticket {
             resume_unwind(payload);
         }
     }
+}
+
+/// Grow the pool to at least `n` workers without queueing anything.
+/// Long-lived submitters (the serving farm: one detached batch per chip
+/// replica) call this once up front so their single-job submissions run
+/// side by side instead of serializing on however many workers earlier
+/// callers happened to leave behind.
+pub fn reserve(n: usize) {
+    pool().ensure_workers(n);
 }
 
 /// Queue `jobs` for asynchronous execution on the pool and return a
@@ -322,6 +340,22 @@ mod tests {
         assert_eq!(total.load(Ordering::SeqCst), 21);
         // an empty submission is a no-op ticket
         submit(Vec::new()).wait();
+    }
+
+    #[test]
+    fn is_complete_probe_tracks_batch_lifecycle() {
+        use std::sync::mpsc;
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        let ticket = submit(vec![Box::new(move || {
+            gate_rx.recv().unwrap();
+        }) as ScopedJob<'static>]);
+        assert!(!ticket.is_complete(), "job is parked on the gate");
+        gate_tx.send(()).unwrap();
+        ticket.wait();
+        // an empty batch is born complete
+        let empty = submit(Vec::new());
+        assert!(empty.is_complete());
+        empty.wait();
     }
 
     #[test]

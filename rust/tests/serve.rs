@@ -1,0 +1,313 @@
+//! Serving-layer integration tests: replica-isolation parity, dynamic
+//! batcher semantics (latency budget, backpressure), and shutdown drain.
+//!
+//! The parity contract (DESIGN.md §Serving layer): on a *noiseless* chip,
+//! a request's answer is bitwise independent of how the batcher coalesced
+//! it and which other requests shared its batch — replica `i`'s farm
+//! output equals a standalone engine carrying the same fault replica,
+//! at any replica count and any producer concurrency.
+
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+use pim_qat::chip::{ChipModel, FaultProfile};
+use pim_qat::config::{JobConfig, Mode, Scheme};
+use pim_qat::data::{synth, Dataset};
+use pim_qat::runtime::Manifest;
+use pim_qat::serve::{Farm, FarmServer, Pending, Replica, ReplicaCfg, ServeCfg};
+use pim_qat::train::{native::run_job_native, Checkpoint};
+
+fn micro_manifest() -> Manifest {
+    let mut m = Manifest::builtin();
+    let mut e = m.models.get("tiny").unwrap().clone();
+    e.width = 4;
+    e.image = 8;
+    e.classes = 4;
+    // the cloned spec lists describe tiny's geometry — regenerate for micro
+    let (pspecs, sspecs) = pim_qat::nn::init::param_specs(&e);
+    e.param_paths = pspecs.iter().map(|(n, _)| n.clone()).collect();
+    e.param_shapes = pspecs.into_iter().map(|(_, s)| s).collect();
+    e.state_paths = sspecs.iter().map(|(n, _)| n.clone()).collect();
+    e.state_shapes = sspecs.into_iter().map(|(_, s)| s).collect();
+    m.models.insert("micro".to_string(), e);
+    m.batch = 8;
+    m
+}
+
+/// One shared 2-step micro checkpoint for every test in this file.
+fn fixture() -> &'static (Manifest, Checkpoint) {
+    static FIX: OnceLock<(Manifest, Checkpoint)> = OnceLock::new();
+    FIX.get_or_init(|| {
+        let m = micro_manifest();
+        let job = JobConfig {
+            model: "micro".to_string(),
+            mode: Mode::Ours,
+            scheme: Scheme::BitSerial,
+            unit_channels: 8,
+            b_pim_train: 7,
+            steps: 2,
+            lr: 0.05,
+            train_size: 32,
+            test_size: 16,
+            ..Default::default()
+        };
+        let tr = synth::generate(8, 4, 32, 1);
+        let te = synth::generate(8, 4, 16, 2);
+        let res = run_job_native(&m, &job, &tr, &te, 1).unwrap();
+        (m, res.ckpt)
+    })
+}
+
+fn request_images(n: usize) -> Dataset {
+    synth::generate(8, 4, n, 77)
+}
+
+/// A farm serving on noiseless faulty chips: the parity configuration.
+fn parity_cfg() -> ReplicaCfg {
+    ReplicaCfg {
+        scheme: Scheme::BitSerial,
+        unit_channels: 8,
+        chip: ChipModel::ideal(7), // noiseless: determinism contract holds
+        faults: Some(FaultProfile::severe()),
+        seed: 42,
+    }
+}
+
+/// Submit every image from `producers` threads, wait out all responses.
+/// Returns (image index, response) pairs.
+fn drive(
+    server: &FarmServer,
+    ds: &Dataset,
+    producers: usize,
+) -> Vec<(usize, pim_qat::serve::Response)> {
+    let n = ds.len();
+    let pending: Vec<(usize, Pending)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..producers)
+            .map(|p| {
+                s.spawn(move || {
+                    (p..n)
+                        .step_by(producers)
+                        .map(|q| (q, server.submit(ds.images[q].clone()).expect("server open")))
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    pending.into_iter().map(|(q, p)| (q, p.wait())).collect()
+}
+
+#[test]
+fn farm_output_is_bitwise_identical_to_standalone_replicas() {
+    let (m, ckpt) = fixture();
+    let cfg = parity_cfg();
+    let ds = request_images(24);
+    for &replicas in &[1usize, 2, 8] {
+        for &producers in &[1usize, 4] {
+            let farm = Farm::new(m, ckpt, &cfg, replicas).unwrap();
+            let mut server = FarmServer::start(
+                farm,
+                ServeCfg {
+                    batch: 4,
+                    latency_budget: Duration::from_micros(500),
+                    queue_cap: 16,
+                },
+            );
+            let responses = drive(&server, &ds, producers);
+            server.shutdown();
+            assert_eq!(responses.len(), ds.len());
+            // rebuild each chip that served as a standalone engine and
+            // replay its requests one at a time — bitwise equal
+            for (q, resp) in &responses {
+                assert!((resp.chip_id as usize) < replicas);
+                let mut lone = Replica::new(m, ckpt, &cfg, resp.chip_id).unwrap();
+                let solo = lone.infer_one(&ds.images[*q]);
+                assert_eq!(
+                    solo, resp.logits,
+                    "replicas={replicas} producers={producers} req={q} \
+                     chip={}: farm answer differs from standalone",
+                    resp.chip_id
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn distinct_replicas_disagree_under_severe_faults() {
+    // sanity check that the parity test is not vacuous: different chip
+    // replicas carry different injuries and thus give different logits
+    let (m, ckpt) = fixture();
+    let cfg = parity_cfg();
+    let ds = request_images(1);
+    let mut a = Replica::new(m, ckpt, &cfg, 0).unwrap();
+    let mut b = Replica::new(m, ckpt, &cfg, 1).unwrap();
+    assert_ne!(a.infer_one(&ds.images[0]), b.infer_one(&ds.images[0]));
+}
+
+#[test]
+fn coalescing_is_batch_composition_invariant() {
+    // the same image answered identically whether it rode in a full batch
+    // or nearly alone: run once with batch=8 producers=4 (coalesced) and
+    // once with batch=1 (every request its own batch), single replica
+    let (m, ckpt) = fixture();
+    let cfg = parity_cfg();
+    let ds = request_images(16);
+    let mut by_batch: Vec<Vec<(usize, Vec<f32>)>> = Vec::new();
+    for &(batch, producers) in &[(8usize, 4usize), (1, 1)] {
+        let farm = Farm::new(m, ckpt, &cfg, 1).unwrap();
+        let mut server = FarmServer::start(
+            farm,
+            ServeCfg {
+                batch,
+                latency_budget: Duration::from_millis(2),
+                queue_cap: 16,
+            },
+        );
+        let mut out: Vec<(usize, Vec<f32>)> = drive(&server, &ds, producers)
+            .into_iter()
+            .map(|(q, r)| (q, r.logits))
+            .collect();
+        server.shutdown();
+        out.sort_by_key(|(q, _)| *q);
+        by_batch.push(out);
+    }
+    assert_eq!(by_batch[0], by_batch[1]);
+}
+
+#[test]
+fn partial_batch_flushes_at_the_latency_budget() {
+    // batch far larger than the offered load: without the deadline the
+    // server would wait forever for a full batch
+    let (m, ckpt) = fixture();
+    let farm = Farm::new(m, ckpt, &parity_cfg(), 1).unwrap();
+    let mut server = FarmServer::start(
+        farm,
+        ServeCfg {
+            batch: 64,
+            latency_budget: Duration::from_millis(20),
+            queue_cap: 64,
+        },
+    );
+    let ds = request_images(3);
+    let t0 = Instant::now();
+    let pend: Vec<Pending> =
+        (0..3).map(|q| server.submit(ds.images[q].clone()).unwrap()).collect();
+    for p in pend {
+        let r = p.wait();
+        assert!(r.batch_size <= 3, "must not wait for 64 requests");
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(30),
+        "deadline flush must beat any full-batch wait"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn over_capacity_load_applies_backpressure_not_drops() {
+    // 64 requests through a 4-deep queue: submit blocks when full, and
+    // every single request still gets its answer
+    let (m, ckpt) = fixture();
+    let farm = Farm::new(m, ckpt, &parity_cfg(), 2).unwrap();
+    let mut server = FarmServer::start(
+        farm,
+        ServeCfg {
+            batch: 4,
+            latency_budget: Duration::from_micros(200),
+            queue_cap: 4,
+        },
+    );
+    let ds = request_images(64);
+    let responses = drive(&server, &ds, 4);
+    assert_eq!(responses.len(), 64, "backpressure must never drop a request");
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_drains_every_inflight_request() {
+    // shutdown races a backlog: every accepted request must still resolve
+    let (m, ckpt) = fixture();
+    let farm = Farm::new(m, ckpt, &parity_cfg(), 2).unwrap();
+    let mut server = FarmServer::start(
+        farm,
+        ServeCfg {
+            batch: 4,
+            latency_budget: Duration::from_millis(50),
+            queue_cap: 32,
+        },
+    );
+    let ds = request_images(10);
+    let pend: Vec<Pending> =
+        (0..10).map(|q| server.submit(ds.images[q].clone()).unwrap()).collect();
+    server.shutdown(); // close + drain + join, while most are still queued
+    for p in pend {
+        let r = p.wait();
+        assert_eq!(r.logits.len(), 4, "drained response must be a real answer");
+    }
+    // admission is closed after shutdown
+    assert!(server.submit(ds.images[0].clone()).is_none());
+}
+
+#[test]
+fn drop_performs_the_same_drain_as_shutdown() {
+    let (m, ckpt) = fixture();
+    let farm = Farm::new(m, ckpt, &parity_cfg(), 1).unwrap();
+    let server = FarmServer::start(
+        farm,
+        ServeCfg {
+            batch: 8,
+            latency_budget: Duration::from_millis(50),
+            queue_cap: 16,
+        },
+    );
+    let ds = request_images(5);
+    let pend: Vec<Pending> =
+        (0..5).map(|q| server.submit(ds.images[q].clone()).unwrap()).collect();
+    drop(server);
+    for p in pend {
+        let _ = p.wait(); // must not hang or lose a request
+    }
+}
+
+#[test]
+fn eight_producer_stress_hammers_the_queue_without_loss() {
+    let (m, ckpt) = fixture();
+    let farm = Farm::new(m, ckpt, &parity_cfg(), 4).unwrap();
+    let mut server = FarmServer::start(
+        farm,
+        ServeCfg {
+            batch: 8,
+            latency_budget: Duration::from_micros(300),
+            queue_cap: 8,
+        },
+    );
+    let ds = request_images(8);
+    let total = 8 * 24;
+    let responses: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|p| {
+                let server = &server;
+                let ds = &ds;
+                s.spawn(move || {
+                    (0..24)
+                        .map(|i| server.submit(ds.images[(p + i) % 8].clone()).unwrap())
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .map(Pending::wait)
+            .collect()
+    });
+    assert_eq!(responses.len(), total);
+    // all four chips should have seen work under this much concurrency
+    let mut served = [0usize; 4];
+    for r in &responses {
+        served[r.chip_id as usize] += 1;
+    }
+    assert_eq!(served.iter().sum::<usize>(), total);
+    server.shutdown();
+}
