@@ -4,14 +4,16 @@
 //! Writes `BENCH_serve.json` in the bench-gate schema: `ns_per_iter` is
 //! wall time per served request (the regression-gated figure); `qps`,
 //! `p50_ns`, `p95_ns`, `p99_ns` and `mean_batch` ride along for the
-//! EXPERIMENTS.md serve ledger.  `PIM_QAT_BENCH_QUICK=1` shrinks the
-//! request count for the CI smoke leg.
+//! EXPERIMENTS.md serve ledger.  The health case serves pristine replicas
+//! with the monitor attached (probe cadence + ledger bookkeeping on the
+//! hot path) — the monitoring-overhead figure.  `PIM_QAT_BENCH_QUICK=1`
+//! shrinks the request count for the CI smoke leg.
 
 use std::time::Duration;
 
 use pim_qat::config::Scheme;
 use pim_qat::data::synth;
-use pim_qat::serve::{Farm, FarmServer, LoadCfg, ReplicaCfg, ServeCfg};
+use pim_qat::serve::{Farm, FarmServer, HealthCfg, HealthMonitor, LoadCfg, ReplicaCfg, ServeCfg};
 use pim_qat::train::{Backend, Checkpoint, NativeBackend};
 use pim_qat::util::json::Json;
 
@@ -41,35 +43,57 @@ fn main() {
 
     let mut rows: Vec<Json> = Vec::new();
     println!("chip-farm serving, tiny model, {requests} requests per case");
-    for &(label, replicas, batch) in &[
-        ("serve 1 replica batch 8", 1usize, 8usize),
-        ("serve 2 replicas batch 8", 2, 8),
-        ("serve 4 replicas batch 16", 4, 16),
+    for &(label, replicas, batch, health) in &[
+        ("serve 1 replica batch 8", 1usize, 8usize, false),
+        ("serve 2 replicas batch 8", 2, 8, false),
+        ("serve 4 replicas batch 16", 4, 16, false),
+        ("serve 2 replicas batch 8 health", 2, 8, true),
     ] {
         let rcfg = ReplicaCfg {
             scheme: Scheme::BitSerial,
             unit_channels: 8,
             ..Default::default()
         };
-        let farm = Farm::new(backend.manifest(), &ckpt, &rcfg, replicas).unwrap();
+        let mut farm = Farm::new(backend.manifest(), &ckpt, &rcfg, replicas).unwrap();
+        if health {
+            let probe_ds = synth::generate(16, 10, 32, 9);
+            let calib = synth::generate(16, 10, 128, 11);
+            let monitor = HealthMonitor::new(
+                backend.manifest(),
+                &ckpt,
+                &rcfg,
+                replicas,
+                &probe_ds,
+                calib,
+                HealthCfg::default(),
+            )
+            .unwrap();
+            farm.attach_health(monitor);
+        }
         let mut server = FarmServer::start(
             farm,
             ServeCfg {
                 batch,
                 latency_budget: Duration::from_micros(2000),
                 queue_cap: 4 * batch,
+                hedge_after: None,
             },
         );
         let rep = pim_qat::serve::run_open_loop(
             &server,
             &ds,
-            &LoadCfg { requests, interarrival: Duration::ZERO, producers: 2 },
+            &LoadCfg {
+                requests,
+                interarrival: Duration::ZERO,
+                producers: 2,
+                ..Default::default()
+            },
         );
         server.shutdown();
-        let ns = |d: Duration| d.as_nanos() as f64;
-        let per_req_ns = ns(rep.wall) / rep.requests.max(1) as f64;
+        let ns = |d: Option<Duration>| d.unwrap_or_default().as_nanos() as f64;
+        let per_req_ns = rep.wall.as_nanos() as f64 / rep.requests.max(1) as f64;
         println!(
-            "{label:<28} {:>8.1} qps  {:>10.1} ns/req  p50 {:>10.0}ns p95 {:>10.0}ns \
+            "{label:<34} {:>8.1} qps  {:>10.1} ns/req  p50 {:>10.0}ns p95 {:>10.0}ns \
              p99 {:>10.0}ns  mean batch {:.2}",
             rep.qps(),
             per_req_ns,

@@ -7,6 +7,13 @@
 //! Usage: `bench_check <baseline.json> <current.json> [max_ratio]`
 //! (default max_ratio 1.3).  Cases present on only one side are reported
 //! and skipped.  Exits 1 on regression, 2 on usage/parse errors.
+//!
+//! `bench_check --report <baseline.json> <current.json>` never gates: it
+//! prints each case's headroom against the committed baseline
+//! (measured/committed ratio — how much of the allowance a healthy run
+//! actually uses), the figure needed to tighten carried-over
+//! seeded-estimate baselines from a real CI `BENCH-records` artifact with
+//! informed margins.
 
 use std::process::exit;
 
@@ -35,11 +42,47 @@ fn load(path: &str) -> Json {
     }
 }
 
+/// `--report`: informational headroom table, no gate, always exits 0
+/// (parse errors still exit 2).
+fn report(baseline: &str, current: &str) {
+    let base_cases = cases(&load(baseline));
+    let cur_cases = cases(&load(current));
+    println!("bench headroom vs committed baseline ({baseline}):");
+    for (name, ns) in &cur_cases {
+        match base_cases.iter().find(|(n, _)| n == name) {
+            Some((_, base_ns)) if *base_ns > 0.0 => {
+                let ratio = ns / base_ns;
+                println!(
+                    "{name:<44} measured {ns:>14.0} ns  committed {base_ns:>14.0} ns  \
+                     ratio {ratio:>5.2}  headroom {:>5.1}%",
+                    100.0 * (1.0 - ratio)
+                );
+            }
+            _ => println!("{name:<44} (no committed baseline)"),
+        }
+    }
+    for (name, _) in &base_cases {
+        if !cur_cases.iter().any(|(n, _)| n == name) {
+            println!("{name:<44} (baseline case missing from current run)");
+        }
+    }
+    println!(
+        "(ratio = measured/committed; a seeded-estimate baseline can be tightened \
+         toward measured * margin once CI runs are healthy)"
+    );
+}
+
 fn main() {
-    let args: Vec<String> = std::env::args().collect();
+    let mut args: Vec<String> = std::env::args().collect();
+    let report_mode = args.iter().any(|a| a == "--report");
+    args.retain(|a| a != "--report");
     if args.len() < 3 {
-        eprintln!("usage: bench_check <baseline.json> <current.json> [max_ratio]");
+        eprintln!("usage: bench_check [--report] <baseline.json> <current.json> [max_ratio]");
         exit(2);
+    }
+    if report_mode {
+        report(&args[1], &args[2]);
+        return;
     }
     let max_ratio: f64 = match args.get(3) {
         Some(s) => s.parse().unwrap_or_else(|_| {

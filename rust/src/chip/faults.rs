@@ -264,6 +264,15 @@ impl FaultModel {
         (dg as f32, doff as f32)
     }
 
+    /// Magnitude of the chip-level drift walk at the current step:
+    /// `(gain_displacement, offset_displacement_lsb)` summed from step 0.
+    /// The serving health monitor and the drift tests use this to ask "how
+    /// far has this replica walked from its day-one transfer curve" without
+    /// compiling full per-column fault arrays.
+    pub fn drift_at(&self) -> (f32, f32) {
+        self.drift()
+    }
+
     /// σ multiplier for the current step's burst window.
     pub fn sigma_mult(&self) -> f32 {
         let p = &self.profile;
@@ -373,6 +382,25 @@ mod tests {
             let base = mults[w * 4];
             assert!(mults[w * 4..(w + 1) * 4].iter().all(|&x| x == base));
         }
+    }
+
+    #[test]
+    fn drift_query_grows_with_step_and_matches_column_view() {
+        let mut p = FaultProfile::none();
+        p.drift_gain_std = 0.01;
+        p.drift_offset_std_lsb = 0.05;
+        let m = FaultModel::new(p);
+        assert_eq!(m.at_step(0).drift_at(), (0.0, 0.0), "no walk before step 1");
+        let (g40, o40) = m.at_step(40).drift_at();
+        assert!(g40 != 0.0 && o40 != 0.0, "walk must have moved by step 40");
+        // the query is exactly what column_faults folds into every column
+        let cf = m.at_step(40).column_faults(8);
+        for i in 0..8 {
+            assert_eq!(cf.gain[i], 1.0 + g40);
+            assert_eq!(cf.offset[i], o40);
+        }
+        // deterministic: same step, same displacement
+        assert_eq!(m.at_step(40).drift_at(), (g40, o40));
     }
 
     #[test]

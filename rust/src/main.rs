@@ -29,8 +29,11 @@ USAGE:
   pim-qat sweep --grid \"k=v1,v2;k2=v3..v4\" [key=val ...]
   pim-qat serve --ckpt DIR [--replicas N] [--batch B] [--latency-budget-us U]
                 [--requests R] [--interarrival-us G] [--producers P]
-                [--queue-cap Q] [--chip SPEC] [--faults PROFILE]
+                [--queue-cap Q] [--chip SPEC] [--faults PROFILE] [--fault-chip I]
+                [--ttl-us T] [--hedge-after-us H]
+                [--health-probe-every N] [--quarantine-threshold F]
                                                chip-farm inference serving demo
+                                               (health flags enable the monitor)
   pim-qat experiment <id|all> [--full]         regenerate paper tables/figures
   pim-qat chip-info [--b-pim B] [--noise S]    curve bank + ENOB report
   pim-qat list                                 models + artifacts in the manifest
@@ -86,6 +89,11 @@ fn parse_cli(args: &[String]) -> Cli {
                     | "interarrival-us"
                     | "producers"
                     | "queue-cap"
+                    | "fault-chip"
+                    | "ttl-us"
+                    | "hedge-after-us"
+                    | "health-probe-every"
+                    | "quarantine-threshold"
             );
             if takes_value && i + 1 < args.len() {
                 cli.flags.push((name.to_string(), Some(args[i + 1].clone())));
@@ -361,6 +369,20 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     let interarrival_us = flag_num("interarrival-us", 0)? as u64;
     let producers = flag_num("producers", 2)?.max(1);
     let queue_cap = flag_num("queue-cap", 4 * batch)?.max(1);
+    let ttl_us = flag_num("ttl-us", 0)? as u64;
+    let hedge_after_us = flag_num("hedge-after-us", 0)? as u64;
+    let fault_chip = match cli.flag_value("fault-chip") {
+        Some(v) => Some(v.parse::<u64>()?),
+        None => None,
+    };
+    // either health flag turns the monitor on; the other takes its default
+    let health_on = cli.flag_value("health-probe-every").is_some()
+        || cli.flag_value("quarantine-threshold").is_some();
+    let probe_every = flag_num("health-probe-every", 8)? as u64;
+    let quarantine_threshold: f64 = match cli.flag_value("quarantine-threshold") {
+        Some(v) => v.parse()?,
+        None => 0.25,
+    };
 
     let chip = match cli.flag_value("chip") {
         Some(spec) => parse_chip(spec)?,
@@ -383,39 +405,83 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
         unit_channels: job.unit_channels,
         chip,
         faults,
+        faults_only: fault_chip,
         seed: job.seed,
     };
-    let farm = pim_qat::serve::Farm::new(backend.manifest(), &ckpt, &rcfg, replicas)?;
+    let mut farm = pim_qat::serve::Farm::new(backend.manifest(), &ckpt, &rcfg, replicas)?;
+    if health_on {
+        let hcfg = pim_qat::serve::HealthCfg {
+            probe_every,
+            quarantine_threshold,
+            ..Default::default()
+        };
+        // held-out shards: the probe batch and calibration data are drawn
+        // from streams disjoint from the request traffic
+        let probe_ds =
+            pim_qat::data::synth::generate(entry.image, entry.classes, 32, 0x9B0B ^ job.seed);
+        let calib =
+            pim_qat::data::synth::generate(entry.image, entry.classes, 128, 0xCA11B ^ job.seed);
+        let monitor = pim_qat::serve::HealthMonitor::new(
+            backend.manifest(),
+            &ckpt,
+            &rcfg,
+            replicas,
+            &probe_ds,
+            calib,
+            hcfg,
+        )?;
+        farm.attach_health(monitor);
+    }
     let scfg = pim_qat::serve::ServeCfg {
         batch,
         latency_budget: Duration::from_micros(budget_us),
         queue_cap,
+        hedge_after: (hedge_after_us > 0).then_some(Duration::from_micros(hedge_after_us)),
     };
     println!(
         "serving {} on {replicas} replica chip(s): batch {batch}, budget {budget_us}us, \
-         queue cap {queue_cap}, faults {}",
+         queue cap {queue_cap}, faults {}{}{}",
         ckpt.model,
         cli.flag_value("faults").unwrap_or("none"),
+        match fault_chip {
+            Some(i) => format!(" (chip {i} only)"),
+            None => String::new(),
+        },
+        if health_on {
+            format!(
+                ", health on (probe every {probe_every} batches, threshold {quarantine_threshold})"
+            )
+        } else {
+            String::new()
+        },
     );
     let mut server = pim_qat::serve::FarmServer::start(farm, scfg);
     let lcfg = pim_qat::serve::LoadCfg {
         requests,
         interarrival: Duration::from_micros(interarrival_us),
         producers,
+        ttl: (ttl_us > 0).then_some(Duration::from_micros(ttl_us)),
+        ..Default::default()
     };
     let rep = pim_qat::serve::run_open_loop(&server, &ds, &lcfg);
     server.shutdown();
 
-    let ms = |d: Duration| d.as_secs_f64() * 1e3;
+    let ms = |d: Option<Duration>| match d {
+        Some(d) => format!("{:.2}", d.as_secs_f64() * 1e3),
+        None => "-".to_string(),
+    };
     println!(
-        "served {} requests in {:.2}s — {:.1} QPS, mean batch {:.2}",
+        "served {} requests in {:.2}s — {:.1} QPS, mean batch {:.2}, \
+         timeouts {}, failures {}",
         rep.requests,
         rep.wall.as_secs_f64(),
         rep.qps(),
-        rep.mean_batch
+        rep.mean_batch,
+        rep.timeouts,
+        rep.failures
     );
     println!(
-        "latency ms: mean {:.2}  p50 {:.2}  p95 {:.2}  p99 {:.2}",
+        "latency ms: mean {}  p50 {}  p95 {}  p99 {}",
         ms(rep.mean_latency()),
         ms(rep.percentile(50.0)),
         ms(rep.percentile(95.0)),
@@ -423,6 +489,24 @@ fn cmd_serve(cli: &Cli) -> Result<()> {
     );
     for (chip_id, n) in &rep.per_chip {
         println!("  chip {chip_id}: {n} requests");
+    }
+    if let Some(snap) = server.health_snapshot() {
+        println!("replica health:");
+        for r in &snap.rows {
+            println!(
+                "  chip {}: {:?} — {} batches, {} probes, last disagreement {}, \
+                 drift {:.3}, {} errors, {} recal attempts",
+                r.chip,
+                r.state,
+                r.batches,
+                r.probes,
+                r.last_disagreement.map_or("-".into(), |d| format!("{d:.3}")),
+                r.drift_score,
+                r.errors,
+                r.recal_attempts
+            );
+        }
+        println!("  ({} state transitions logged above)", snap.transitions.len());
     }
     Ok(())
 }

@@ -66,6 +66,14 @@ impl EngineCache {
         self.engines.get_mut(name)
     }
 
+    /// The replica fault model engines built by this cache inherit (the
+    /// identity bound by the last [`EngineCache::set_faults_all`]), if any.
+    /// The serving health monitor reads this to report which injury a
+    /// quarantined replica carries.
+    pub fn default_faults(&self) -> Option<&FaultModel> {
+        self.default_faults.as_ref()
+    }
+
     /// Bind one replica fault model to every cached engine (a whole farm
     /// node going bad), or clear them all with `None`.  The binding also
     /// becomes the cache's *default*: engines built later by

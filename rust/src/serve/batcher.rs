@@ -7,6 +7,12 @@
 //! therefore never waits for stragglers longer than the budget, and an
 //! idle server burns no CPU (the wait for the batch's first request has no
 //! deadline at all).
+//!
+//! A server that also runs periodic background work (health probes,
+//! hedging scans — `serve::health`) cannot afford the deadline-less first
+//! wait: it uses [`next_batch_poll`] with an idle tick, which bounds the
+//! wait for the opening request and reports [`BatchPoll::Idle`] so the
+//! caller can run its tick and come back.
 
 use std::time::{Duration, Instant};
 
@@ -21,17 +27,53 @@ pub struct BatcherCfg {
     pub budget: Duration,
 }
 
+/// What one polling round of the batcher produced.
+#[derive(Debug)]
+pub enum BatchPoll<T> {
+    /// A coalesced batch, ready to dispatch.
+    Batch(Vec<T>),
+    /// No request arrived within the idle tick — run background work and
+    /// poll again.
+    Idle,
+    /// Queue closed *and* drained: the batcher's termination condition.
+    Closed,
+}
+
 /// Block for the next batch: the first request opens the batch and starts
 /// the budget clock; further requests join until the batch is full or the
 /// deadline hits.  `None` means the queue is closed *and* drained — the
 /// batcher's termination condition, guaranteeing every accepted request
 /// was part of some returned batch.
 pub fn next_batch<T>(q: &BoundedQueue<T>, cfg: &BatcherCfg) -> Option<Vec<T>> {
+    match next_batch_poll(q, cfg, None) {
+        BatchPoll::Batch(b) => Some(b),
+        BatchPoll::Closed => None,
+        BatchPoll::Idle => unreachable!("tick-less poll cannot go idle"),
+    }
+}
+
+/// [`next_batch`] with a bounded wait for the *opening* request: if no
+/// request arrives within `idle_tick`, returns [`BatchPoll::Idle`] instead
+/// of blocking forever.  `None` tick degenerates to the blocking wait.
+/// Once a batch opens, the fill policy (full-or-deadline) is identical to
+/// [`next_batch`] — the tick bounds idleness, not batch latency.
+pub fn next_batch_poll<T>(
+    q: &BoundedQueue<T>,
+    cfg: &BatcherCfg,
+    idle_tick: Option<Duration>,
+) -> BatchPoll<T> {
     debug_assert!(cfg.batch > 0);
-    let first = match q.pop() {
-        Pop::Item(t) => t,
-        Pop::Closed => return None,
-        Pop::TimedOut => unreachable!("deadline-less pop cannot time out"),
+    let first = match idle_tick {
+        None => match q.pop() {
+            Pop::Item(t) => t,
+            Pop::Closed => return BatchPoll::Closed,
+            Pop::TimedOut => unreachable!("deadline-less pop cannot time out"),
+        },
+        Some(tick) => match q.pop_deadline(Instant::now() + tick) {
+            Pop::Item(t) => t,
+            Pop::Closed => return BatchPoll::Closed,
+            Pop::TimedOut => return BatchPoll::Idle,
+        },
     };
     let deadline = Instant::now() + cfg.budget;
     let mut out = Vec::with_capacity(cfg.batch);
@@ -44,7 +86,7 @@ pub fn next_batch<T>(q: &BoundedQueue<T>, cfg: &BatcherCfg) -> Option<Vec<T>> {
             Pop::TimedOut | Pop::Closed => break,
         }
     }
-    Some(out)
+    BatchPoll::Batch(out)
 }
 
 #[cfg(test)]
@@ -84,6 +126,22 @@ mod tests {
         let q: BoundedQueue<u32> = BoundedQueue::new(4);
         q.close();
         assert!(next_batch(&q, &cfg(4, 5)).is_none());
+    }
+
+    #[test]
+    fn idle_tick_reports_idle_then_batches_when_work_arrives() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        let tick = Some(Duration::from_millis(10));
+        let t0 = Instant::now();
+        assert!(matches!(next_batch_poll(&q, &cfg(4, 5), tick), BatchPoll::Idle));
+        assert!(t0.elapsed() >= Duration::from_millis(10), "idle must wait out the tick");
+        q.push(7).unwrap();
+        match next_batch_poll(&q, &cfg(4, 5), tick) {
+            BatchPoll::Batch(b) => assert_eq!(b, vec![7]),
+            other => panic!("expected a batch, got {other:?}"),
+        }
+        q.close();
+        assert!(matches!(next_batch_poll(&q, &cfg(4, 5), tick), BatchPoll::Closed));
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Chip farm + serving front-end: N simulated chip replicas behind the
-//! dynamic batcher.
+//! dynamic batcher, with health monitoring, quarantine, hedging, and
+//! request deadlines.
 //!
 //! Each [`Replica`] is a full inference stack — its own [`Network`] (and
 //! thus its own lazily-warmed `EngineCache`), its own [`ChipModel`], its
@@ -14,6 +15,20 @@
 //! one job per batch, one in-flight batch per replica (per-replica FIFO),
 //! idle replicas found with the non-blocking `Ticket::is_complete` probe
 //! and a round-robin fallback that bounds the wait when all are busy.
+//! Replicas quarantined by the health monitor (`super::health`) drop out
+//! of the rotation without touching their in-flight batch; backpressure is
+//! unchanged (the bounded queue, not the replica count, is the admission
+//! limit), so a farm running at N−1 replicas serves every accepted
+//! request, just slower.
+//!
+//! Requests may carry a TTL: a request that would start service after its
+//! deadline gets an explicit [`Reply::Timeout`] instead of a stale answer.
+//! With hedging enabled, a batch whose replica exceeds the hedge budget is
+//! re-submitted to a second idle replica and each request takes the first
+//! answer that lands (first-wins).  Which replica wins is a race, but the
+//! winning answer is still bitwise that replica's standalone answer under
+//! the noiseless-chip contract — per-request `chip_id` records the winner,
+//! so the parity invariant stays checkable under hedging.
 
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -23,14 +38,16 @@ use crate::util::error::Result;
 
 use crate::chip::{ChipModel, FaultModel, FaultProfile};
 use crate::config::Scheme;
+use crate::data::Dataset;
 use crate::nn::{ExecSpec, Network};
 use crate::runtime::Manifest;
 use crate::tensor::{ops, Tensor};
-use crate::train::{network_from_ckpt, Checkpoint};
+use crate::train::{network_from_ckpt, recalibrate_network, Checkpoint};
 use crate::util::pool::{self, ScopedJob, Ticket};
 use crate::util::rng::{CounterRng, Rng};
 
-use super::batcher::{next_batch, BatcherCfg};
+use super::batcher::{next_batch_poll, BatchPoll, BatcherCfg};
+use super::health::{probe_step, HealthMonitor, HealthShared, HealthSnapshot, ReplicaState};
 use super::queue::BoundedQueue;
 
 /// Per-replica execution config, shared by every chip in the farm; the
@@ -43,6 +60,9 @@ pub struct ReplicaCfg {
     /// Fault family: replica `i` carries `profile.on_chip(i)`.  `None`
     /// serves on pristine chips.
     pub faults: Option<FaultProfile>,
+    /// When set, only this chip id carries the fault replica — the
+    /// one-injured-chip-in-a-healthy-farm scenario (`--fault-chip`).
+    pub faults_only: Option<u64>,
     /// Base seed of the farm's noise streams (replica `i` draws from
     /// `CounterRng::new(seed).stream(i)`).
     pub seed: u64,
@@ -55,6 +75,7 @@ impl Default for ReplicaCfg {
             unit_channels: 8,
             chip: ChipModel::ideal(7),
             faults: None,
+            faults_only: None,
             seed: 0x5EED,
         }
     }
@@ -74,21 +95,57 @@ pub struct Response {
     pub latency: Duration,
 }
 
+/// What a request resolved to.  Every accepted request resolves to exactly
+/// one of these — including across shutdown, quarantine, and hedging.
+#[derive(Debug, Clone)]
+pub enum Reply {
+    /// Served.
+    Answer(Response),
+    /// The request's TTL expired before service began; no stale answer.
+    Timeout {
+        /// Enqueue → expiry detection.
+        waited: Duration,
+    },
+    /// The serving replica's forward pass failed.
+    Failed { error: String },
+}
+
+impl Reply {
+    /// The response, panicking on [`Reply::Timeout`] / [`Reply::Failed`] —
+    /// the ergonomic accessor for clients that did not set a TTL (without
+    /// one, every accepted request is answered or the farm panics loudly).
+    pub fn answer(self) -> Response {
+        match self {
+            Reply::Answer(r) => r,
+            Reply::Timeout { waited } => panic!("request timed out after {waited:?}"),
+            Reply::Failed { error } => panic!("request failed: {error}"),
+        }
+    }
+
+    pub fn is_answer(&self) -> bool {
+        matches!(self, Reply::Answer(_))
+    }
+
+    pub fn is_timeout(&self) -> bool {
+        matches!(self, Reply::Timeout { .. })
+    }
+}
+
 struct Oneshot {
-    slot: Mutex<Option<Response>>,
+    slot: Mutex<Option<Reply>>,
     ready: Condvar,
 }
 
 /// Client-side completion handle of a submitted request.  The server's
 /// shutdown path drains every accepted request, so `wait` always returns.
-#[must_use = "a Pending that is never waited discards its Response"]
+#[must_use = "a Pending that is never waited discards its Reply"]
 pub struct Pending {
     cell: Arc<Oneshot>,
 }
 
 impl Pending {
-    /// Block until the request's response is ready.
-    pub fn wait(self) -> Response {
+    /// Block until the request resolves.
+    pub fn wait(self) -> Reply {
         let mut g = self.cell.slot.lock().unwrap();
         loop {
             if let Some(r) = g.take() {
@@ -97,21 +154,72 @@ impl Pending {
             g = self.cell.ready.wait(g).unwrap();
         }
     }
+
+    /// [`Pending::wait`] with a client-side escape hatch: `None` after
+    /// `patience` with no resolution — the wedged-farm failure mode
+    /// (batcher thread dead with the request still queued), which the
+    /// plain `wait` would turn into an eternal hang.  Consumes the handle
+    /// either way; an abandoned request's eventual reply is discarded.
+    pub fn wait_timeout(self, patience: Duration) -> Option<Reply> {
+        let deadline = Instant::now() + patience;
+        let mut g = self.cell.slot.lock().unwrap();
+        loop {
+            if let Some(r) = g.take() {
+                return Some(r);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g2, _timed_out) = self.cell.ready.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+        }
+    }
 }
 
 /// One queued inference request: a single [H, W, C] image.
 pub struct Request {
     image: Tensor,
     enqueued: Instant,
+    /// TTL deadline; a request not yet in service by this point resolves
+    /// to [`Reply::Timeout`].
+    deadline: Option<Instant>,
     cell: Arc<Oneshot>,
 }
 
 impl Request {
-    fn fulfill(self, mut resp: Response) {
-        resp.latency = self.enqueued.elapsed();
-        *self.cell.slot.lock().unwrap() = Some(resp);
-        self.cell.ready.notify_all();
+    /// Resolve this request — first writer wins, later resolutions are
+    /// dropped (the hedging contract: both replicas fulfill the same
+    /// shared batch, each request keeps whichever answer landed first).
+    fn complete(&self, reply: Reply) {
+        let mut g = self.cell.slot.lock().unwrap();
+        if g.is_none() {
+            *g = Some(reply);
+            self.cell.ready.notify_all();
+        }
     }
+
+    fn fulfill(&self, mut resp: Response) {
+        resp.latency = self.enqueued.elapsed();
+        self.complete(Reply::Answer(resp));
+    }
+
+    fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+}
+
+/// Cheap per-batch observations handed to the health ledger.
+#[derive(Debug, Clone)]
+pub struct BatchStats {
+    /// Requests in the batch.
+    pub batch: usize,
+    /// Mean |logit| over the batch (0 when the forward failed).
+    pub mean_abs_logit: f64,
+    /// Wall time of the forward pass.
+    pub service: Duration,
+    /// Forward failure, if any (every request got [`Reply::Failed`]).
+    pub error: Option<String>,
 }
 
 /// One simulated chip: network + chip model + fault replica + noise
@@ -134,7 +242,8 @@ impl Replica {
         chip_id: u64,
     ) -> Result<Replica> {
         let mut net = network_from_ckpt(manifest, ckpt)?;
-        if let Some(profile) = cfg.faults {
+        let injured = cfg.faults_only.is_none_or(|only| only == chip_id);
+        if let Some(profile) = cfg.faults.filter(|_| injured) {
             // bind the replica identity up front; EngineCache's default
             // carries it onto the engines the first forward will build
             let fm = FaultModel::new(profile.on_chip(chip_id)).at_step(0);
@@ -153,8 +262,11 @@ impl Replica {
         })
     }
 
-    /// Run one coalesced batch and fulfill every request in it.
-    fn serve_batch(&mut self, reqs: Vec<Request>) {
+    /// Run one coalesced batch, fulfill every request in it (first-wins —
+    /// requests already answered by a hedge partner are left alone), and
+    /// report the batch's health signals.  A forward failure resolves
+    /// every request to [`Reply::Failed`] instead of panicking the worker.
+    pub(super) fn serve_batch(&mut self, reqs: &[Request]) -> BatchStats {
         let b = reqs.len();
         let (h, w, c) = {
             let s = &reqs[0].image.shape;
@@ -165,9 +277,25 @@ impl Replica {
         for (i, r) in reqs.iter().enumerate() {
             x.data[i * px..(i + 1) * px].copy_from_slice(&r.image.data);
         }
-        let (logits, classes) = self.infer(&x);
+        let t0 = Instant::now();
+        let (logits, classes) = match self.try_infer(&x) {
+            Ok(out) => out,
+            Err(e) => {
+                let error = format!("chip {} forward failed: {e}", self.chip_id);
+                for r in reqs {
+                    r.complete(Reply::Failed { error: error.clone() });
+                }
+                return BatchStats {
+                    batch: b,
+                    mean_abs_logit: 0.0,
+                    service: t0.elapsed(),
+                    error: Some(error),
+                };
+            }
+        };
+        let service = t0.elapsed();
         let preds = ops::argmax_rows(&logits);
-        for (i, r) in reqs.into_iter().enumerate() {
+        for (i, r) in reqs.iter().enumerate() {
             r.fulfill(Response {
                 logits: logits.data[i * classes..(i + 1) * classes].to_vec(),
                 class: preds[i],
@@ -176,6 +304,25 @@ impl Replica {
                 latency: Duration::ZERO, // overwritten by fulfill
             });
         }
+        let mean_abs_logit = if logits.data.is_empty() {
+            0.0
+        } else {
+            logits.data.iter().map(|v| v.abs() as f64).sum::<f64>() / logits.data.len() as f64
+        };
+        BatchStats { batch: b, mean_abs_logit, service, error: None }
+    }
+
+    /// Fallible forward of a prepared [B, H, W, C] batch → (logits
+    /// [B, classes], classes) — the health monitor's probe entry point.
+    pub fn try_infer(&mut self, x: &Tensor) -> Result<(Tensor, usize)> {
+        let exec = ExecSpec::Pim {
+            scheme: self.scheme,
+            unit_channels: self.unit_channels,
+            chip: &self.chip,
+        };
+        let logits = self.net.forward(x, &exec, &mut self.rng)?;
+        let classes = logits.shape[1];
+        Ok((logits, classes))
     }
 
     /// Forward a prepared [B, H, W, C] batch → (logits [B, classes],
@@ -183,14 +330,7 @@ impl Replica {
     /// time through here must match the farm's coalesced answer bitwise on
     /// a noiseless chip.
     pub fn infer(&mut self, x: &Tensor) -> (Tensor, usize) {
-        let exec = ExecSpec::Pim {
-            scheme: self.scheme,
-            unit_channels: self.unit_channels,
-            chip: &self.chip,
-        };
-        let logits = self.net.forward(x, &exec, &mut self.rng).expect("replica forward");
-        let classes = logits.shape[1];
-        (logits, classes)
+        self.try_infer(x).expect("replica forward")
     }
 
     /// Single-image convenience wrapper over [`Replica::infer`].
@@ -200,18 +340,70 @@ impl Replica {
         let (logits, _) = self.infer(&x);
         logits.data
     }
+
+    /// In-service BN recalibration (§3.4 / PR 6's self-tuning core):
+    /// stream a held-out calibration shard through this replica's own —
+    /// injured — engines and re-estimate the BN running statistics.  The
+    /// engine cache's fault binding overrides the chip model, so the
+    /// calibration sees exactly the degradation it must absorb.
+    pub fn recalibrate(
+        &mut self,
+        calib: &Dataset,
+        batch: usize,
+        batches: usize,
+        seed: u64,
+    ) -> Result<()> {
+        let mut rng = Rng::new(seed);
+        recalibrate_network(
+            &mut self.net,
+            &self.chip,
+            self.scheme,
+            self.unit_channels,
+            calib,
+            batch,
+            batches,
+            &mut rng,
+        )
+    }
+}
+
+/// One batch on the pool, traceable for hedging.
+struct InFlight {
+    ticket: Ticket,
+    since: Instant,
+    /// The batch, shared so a hedge partner can serve the same requests.
+    batch: Arc<Vec<Request>>,
+    /// Already hedged (or is itself a hedge) — never hedged again.
+    hedged: bool,
 }
 
 struct Slot {
     state: Arc<Mutex<Replica>>,
-    ticket: Option<Ticket>,
+    inflight: Option<InFlight>,
+    /// In-progress recalibration job (quarantined replicas only).
+    recal: Option<Ticket>,
+}
+
+impl Slot {
+    /// Free to take a new batch right now (no blocking work pending).
+    fn idle(&self) -> bool {
+        self.inflight.as_ref().is_none_or(|f| f.ticket.is_complete())
+            && self.recal.as_ref().is_none_or(|t| t.is_complete())
+    }
 }
 
 /// The chip farm: N replicas, each with at most one batch in flight on the
-/// global worker pool.
+/// global worker pool, plus the optional health monitor and hedging.
 pub struct Farm {
     slots: Vec<Slot>,
     rr: usize,
+    /// Batches dispatched (primary only, not hedges) — the health probe
+    /// cadence clock.
+    dispatches: u64,
+    /// Hedge a batch onto a second idle replica once its primary ticket
+    /// is older than this.
+    hedge_after: Option<Duration>,
+    health: Option<HealthMonitor>,
 }
 
 impl Farm {
@@ -231,47 +423,248 @@ impl Farm {
         let mut slots = Vec::with_capacity(replicas);
         for i in 0..replicas {
             let r = Replica::new(manifest, ckpt, cfg, i as u64)?;
-            slots.push(Slot { state: Arc::new(Mutex::new(r)), ticket: None });
+            slots.push(Slot { state: Arc::new(Mutex::new(r)), inflight: None, recal: None });
         }
-        Ok(Farm { slots, rr: 0 })
+        Ok(Farm { slots, rr: 0, dispatches: 0, hedge_after: None, health: None })
     }
 
     pub fn replicas(&self) -> usize {
         self.slots.len()
     }
 
-    /// Ship one batch to a replica: the first idle one at or after the
-    /// round-robin cursor, else the cursor's replica (waiting for its
-    /// previous batch first — per-replica FIFO, bounded wait).
+    /// Attach the health monitor (built by [`HealthMonitor::new`] for this
+    /// farm's replica count).  One extra pool worker covers a concurrent
+    /// recalibration job without starving the serving batches.
+    pub fn attach_health(&mut self, monitor: HealthMonitor) {
+        assert_eq!(
+            monitor.shared.ledger.lock().unwrap().rows().len(),
+            self.slots.len(),
+            "health monitor sized for a different farm"
+        );
+        pool::reserve(self.slots.len() + 1);
+        self.health = Some(monitor);
+    }
+
+    /// The shared health state, for snapshots from outside the batcher
+    /// thread (the server handle keeps one).
+    pub fn health_shared(&self) -> Option<Arc<HealthShared>> {
+        self.health.as_ref().map(|m| m.shared())
+    }
+
+    /// Which slots may receive dispatched batches right now.
+    fn rotation_mask(&self) -> Vec<bool> {
+        match &self.health {
+            Some(m) => m.shared.ledger.lock().unwrap().rotation_mask(),
+            None => vec![true; self.slots.len()],
+        }
+    }
+
+    /// Ship one batch to a replica: the first *in-rotation* idle one at or
+    /// after the round-robin cursor, else the first in-rotation one
+    /// (waiting for its previous batch first — per-replica FIFO, bounded
+    /// wait).  Requests whose TTL already expired resolve to
+    /// [`Reply::Timeout`] here, before any chip time is spent on them.
     fn dispatch(&mut self, reqs: Vec<Request>) {
-        if reqs.is_empty() {
+        let now = Instant::now();
+        let (live, expired): (Vec<Request>, Vec<Request>) =
+            reqs.into_iter().partition(|r| !r.expired(now));
+        for r in expired {
+            r.complete(Reply::Timeout { waited: r.enqueued.elapsed() });
+        }
+        if live.is_empty() {
             return;
         }
         let n = self.slots.len();
-        let mut pick = self.rr;
+        let rotation = self.rotation_mask();
+        let mut pick = None;
         for off in 0..n {
             let i = (self.rr + off) % n;
-            if self.slots[i].ticket.as_ref().map_or(true, |t| t.is_complete()) {
-                pick = i;
+            if rotation[i] && self.slots[i].idle() {
+                pick = Some(i);
                 break;
             }
         }
+        // all in-rotation replicas busy: queue behind the cursor's; if the
+        // rotation is somehow empty (defensively — the monitor never
+        // empties it), serve degraded on the cursor rather than hang
+        let pick = pick
+            .or_else(|| (0..n).map(|off| (self.rr + off) % n).find(|&i| rotation[i]))
+            .unwrap_or(self.rr);
         self.rr = (pick + 1) % n;
-        let slot = &mut self.slots[pick];
-        if let Some(t) = slot.ticket.take() {
+        self.dispatches += 1;
+        self.submit_to(pick, Arc::new(live), false);
+    }
+
+    /// Put `batch` on slot `i`'s replica (waiting out any previous ticket
+    /// — per-replica FIFO).
+    fn submit_to(&mut self, i: usize, batch: Arc<Vec<Request>>, hedged: bool) {
+        let slot = &mut self.slots[i];
+        if let Some(f) = slot.inflight.take() {
+            f.ticket.wait();
+        }
+        if let Some(t) = slot.recal.take() {
             t.wait();
         }
         let state = Arc::clone(&slot.state);
+        let chip = i as u64;
+        let shared = self.health.as_ref().map(|m| m.shared());
+        let jb = Arc::clone(&batch);
         let job: ScopedJob<'static> = Box::new(move || {
-            state.lock().unwrap().serve_batch(reqs);
+            let stats = state.lock().unwrap().serve_batch(&jb);
+            if let Some(sh) = shared {
+                sh.ledger.lock().unwrap().record_batch(chip, &stats);
+            }
         });
-        slot.ticket = Some(pool::submit(vec![job]));
+        self.slots[i].inflight = Some(InFlight {
+            ticket: pool::submit(vec![job]),
+            since: Instant::now(),
+            batch,
+            hedged,
+        });
     }
 
-    /// Wait out every in-flight batch (shutdown barrier).
+    /// Background work between batches: hedge overdue in-flight batches,
+    /// then run the health monitor (harvest recalibrations, probe rounds).
+    fn tick(&mut self) {
+        self.hedge_tick();
+        self.health_tick();
+    }
+
+    /// Re-submit any unhedged in-flight batch older than the hedge budget
+    /// onto a second idle in-rotation replica.  First answer wins per
+    /// request ([`Request::complete`]); each batch is hedged at most once.
+    fn hedge_tick(&mut self) {
+        let Some(after) = self.hedge_after else { return };
+        let n = self.slots.len();
+        if n < 2 {
+            return;
+        }
+        let rotation = self.rotation_mask();
+        for i in 0..n {
+            let due = matches!(
+                &self.slots[i].inflight,
+                Some(f) if !f.hedged && !f.ticket.is_complete() && f.since.elapsed() >= after
+            );
+            if !due {
+                continue;
+            }
+            let Some(j) = (0..n).find(|&j| j != i && rotation[j] && self.slots[j].idle()) else {
+                continue;
+            };
+            let batch = {
+                let f = self.slots[i].inflight.as_mut().expect("checked in-flight above");
+                f.hedged = true;
+                Arc::clone(&f.batch)
+            };
+            self.submit_to(j, batch, true);
+        }
+    }
+
+    /// One round of the health monitor, on the batcher thread: harvest
+    /// finished recalibration tickets, and — every `probe_every` dispatches
+    /// or immediately for drift/error-flagged replicas — replay the shadow
+    /// probe on the reference replica and every in-rotation replica, then
+    /// run the quarantine state machine on the disagreement.
+    fn health_tick(&mut self) {
+        // take/restore so the monitor and the slots can be borrowed
+        // together; nothing observes `self.health` while it is out
+        let Some(mut mon) = self.health.take() else { return };
+        self.run_health_tick(&mut mon);
+        self.health = Some(mon);
+    }
+
+    fn run_health_tick(&mut self, mon: &mut HealthMonitor) {
+        for s in &mut self.slots {
+            if s.recal.as_ref().is_some_and(|t| t.is_complete()) {
+                // wait() re-raises a panicked recalibration job
+                s.recal.take().expect("checked above").wait();
+            }
+        }
+        let due_cadence = mon.cfg.probe_every > 0
+            && self.dispatches.saturating_sub(mon.last_probe) >= mon.cfg.probe_every;
+        let flagged = mon.shared.ledger.lock().unwrap().any_flagged();
+        if !due_cadence && !flagged {
+            return;
+        }
+        mon.last_probe = self.dispatches;
+        // fresh shadow replay on the designated reference replica (bitwise
+        // the committed startup answers on a noiseless chip); fall back to
+        // the committed copy if the reference itself cannot run
+        let ref_classes = match mon.probe.replay(&mut mon.reference) {
+            Ok(classes) => classes,
+            Err(_) => mon.probe.ref_classes.clone(),
+        };
+        for i in 0..self.slots.len() {
+            let chip = i as u64;
+            let (state0, breaches0) = {
+                let led = mon.shared.ledger.lock().unwrap();
+                let row = &led.rows()[i];
+                (row.state, row.breaches)
+            };
+            if !state0.in_rotation() {
+                continue;
+            }
+            // the probe needs the replica quiescent: wait out its
+            // in-flight batch (bounded — at most one batch, per-replica
+            // FIFO), never a recalibration (not in rotation)
+            if let Some(f) = self.slots[i].inflight.take() {
+                f.ticket.wait();
+            }
+            let disagreement = {
+                let mut rep = self.slots[i].state.lock().unwrap();
+                mon.probe.disagreement_vs(&mut rep, &ref_classes)
+            };
+            let others_in_rotation = {
+                let led = mon.shared.ledger.lock().unwrap();
+                led.rows()
+                    .iter()
+                    .enumerate()
+                    .filter(|(j, r)| *j != i && r.state.in_rotation())
+                    .count()
+            };
+            let breach = disagreement > mon.cfg.quarantine_threshold;
+            let (next, breaches) =
+                probe_step(state0, breaches0, mon.cfg.quarantine_after, breach);
+            let mut led = mon.shared.ledger.lock().unwrap();
+            {
+                let row = led.row_mut(chip);
+                row.probes += 1;
+                row.last_disagreement = Some(disagreement);
+                row.breaches = breaches;
+                row.flagged = false;
+            }
+            if next == ReplicaState::Quarantined && others_in_rotation == 0 {
+                // never empty the rotation: hold at Suspect and re-probe
+                // next round (recovery needs a serving farm to come back to)
+                led.note(
+                    chip,
+                    &format!(
+                        "quarantine deferred, last replica in rotation \
+                         (disagreement {disagreement:.3})"
+                    ),
+                );
+                led.row_mut(chip).state = ReplicaState::Suspect;
+                continue;
+            }
+            if next != state0 {
+                led.transition(chip, next, &format!("probe disagreement {disagreement:.3}"));
+            }
+            if next == ReplicaState::Quarantined {
+                led.transition(chip, ReplicaState::Recalibrating, "recalibration scheduled");
+                drop(led);
+                let job = mon.recal_job(chip, Arc::clone(&self.slots[i].state));
+                self.slots[i].recal = Some(pool::submit(vec![job]));
+            }
+        }
+    }
+
+    /// Wait out every in-flight batch and recalibration (shutdown barrier).
     fn drain(&mut self) {
         for s in &mut self.slots {
-            if let Some(t) = s.ticket.take() {
+            if let Some(f) = s.inflight.take() {
+                f.ticket.wait();
+            }
+            if let Some(t) = s.recal.take() {
                 t.wait();
             }
         }
@@ -287,6 +680,9 @@ pub struct ServeCfg {
     pub latency_budget: Duration,
     /// Admission queue capacity (backpressure threshold).
     pub queue_cap: usize,
+    /// Hedge an in-flight batch onto a second idle replica after this long
+    /// (`--hedge-after-us`); `None` disables hedging.
+    pub hedge_after: Option<Duration>,
 }
 
 impl Default for ServeCfg {
@@ -295,6 +691,7 @@ impl Default for ServeCfg {
             batch: 8,
             latency_budget: Duration::from_micros(2000),
             queue_cap: 64,
+            hedge_after: None,
         }
     }
 }
@@ -304,35 +701,67 @@ impl Default for ServeCfg {
 /// Shutdown discipline (tested): `shutdown` (or drop) closes the queue,
 /// the batcher drains the backlog into final (possibly partial) batches,
 /// waits out every replica ticket, and exits — every accepted request gets
-/// its [`Response`], and the batcher thread is joined, not leaked.
+/// its [`Reply`], and the batcher thread is joined, not leaked.
 pub struct FarmServer {
     queue: Arc<BoundedQueue<Request>>,
     batcher: Option<JoinHandle<()>>,
+    health: Option<Arc<HealthShared>>,
 }
 
 impl FarmServer {
-    pub fn start(farm: Farm, cfg: ServeCfg) -> FarmServer {
+    pub fn start(mut farm: Farm, cfg: ServeCfg) -> FarmServer {
+        farm.hedge_after = cfg.hedge_after;
+        let health = farm.health_shared();
         let queue = Arc::new(BoundedQueue::new(cfg.queue_cap));
         let q = Arc::clone(&queue);
         let bcfg = BatcherCfg { batch: cfg.batch.max(1), budget: cfg.latency_budget };
+        // hedging and health probes need the serve loop to wake up while
+        // idle; a plain pass-through server blocks on the queue instead
+        let idle_tick = match (cfg.hedge_after, farm.health.is_some()) {
+            (Some(h), _) => {
+                Some((h / 4).clamp(Duration::from_micros(200), Duration::from_millis(5)))
+            }
+            (None, true) => Some(Duration::from_millis(2)),
+            (None, false) => None,
+        };
         let batcher = std::thread::Builder::new()
             .name("pim-qat-batcher".into())
             .spawn(move || {
                 let mut farm = farm;
-                while let Some(reqs) = next_batch(&q, &bcfg) {
-                    farm.dispatch(reqs);
+                loop {
+                    match next_batch_poll(&q, &bcfg, idle_tick) {
+                        BatchPoll::Batch(reqs) => {
+                            farm.dispatch(reqs);
+                            farm.tick();
+                        }
+                        BatchPoll::Idle => farm.tick(),
+                        BatchPoll::Closed => break,
+                    }
                 }
                 farm.drain();
             })
             .expect("spawn batcher thread");
-        FarmServer { queue, batcher: Some(batcher) }
+        FarmServer { queue, batcher: Some(batcher), health }
     }
 
     /// Submit one [H, W, C] image.  Blocks while the queue is at capacity
     /// (backpressure); `None` after shutdown began.
     pub fn submit(&self, image: Tensor) -> Option<Pending> {
+        self.submit_with_ttl(image, None)
+    }
+
+    /// [`FarmServer::submit`] with a TTL: if the request is still queued
+    /// (not yet dispatched to a chip) when the TTL expires, it resolves to
+    /// [`Reply::Timeout`] instead of being served stale.
+    pub fn submit_with_ttl(&self, image: Tensor, ttl: Option<Duration>) -> Option<Pending> {
         let cell = Arc::new(Oneshot { slot: Mutex::new(None), ready: Condvar::new() });
-        let req = Request { image, enqueued: Instant::now(), cell: Arc::clone(&cell) };
+        let now = Instant::now();
+        let req = Request {
+            image,
+            enqueued: now,
+            deadline: ttl.map(|t| now + t),
+            cell: Arc::clone(&cell),
+        };
         match self.queue.push(req) {
             Ok(()) => Some(Pending { cell }),
             Err(_rejected) => None,
@@ -342,6 +771,12 @@ impl FarmServer {
     /// Requests admitted but not yet picked up by the batcher.
     pub fn backlog(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Current health ledger state (`None` when serving without a
+    /// monitor).  Live: may be called while the farm is serving.
+    pub fn health_snapshot(&self) -> Option<HealthSnapshot> {
+        self.health.as_ref().map(|h| h.ledger.lock().unwrap().snapshot())
     }
 
     /// Close admission, serve out everything accepted, join the batcher.

@@ -1,0 +1,572 @@
+//! Replica health: online drift detection, quarantine, and in-service
+//! recalibration for the chip farm (DESIGN.md §Serving layer).
+//!
+//! The paper's robustness story (§3.4) is that BN calibration absorbs
+//! chip non-idealities; PR 6 wired that as *offline* field repair, but a
+//! fielded farm degrades *while serving* — the fault subsystem's drift
+//! random-walk grows without bound, and nothing notices.  This module
+//! closes the loop with three cheap online signals per replica:
+//!
+//! * **logit-magnitude drift** — an EMA of mean |logit| per served batch,
+//!   compared against the value committed from a pristine reference
+//!   replica at startup.  Free (computed from answers already produced),
+//!   coarse, and only used to *flag* a replica for an early probe.
+//! * **probe disagreement** — a fixed shadow batch replayed periodically
+//!   on both the suspect replica and a designated pristine reference
+//!   replica; the fraction of differing argmax classes is the decision
+//!   signal.  Costs one inference per probed replica per round.
+//! * **error/latency counters** — forward failures flag immediately;
+//!   service-time EMA rides along for reporting.
+//!
+//! Decisions run a hysteresis state machine per replica:
+//!
+//! ```text
+//! Healthy -> Suspect -> Quarantined -> Recalibrating -> Reinstated -> Healthy
+//!    ^          |                           |
+//!    +----------+ (clean probe)             +--> Retired (retries exhausted)
+//! ```
+//!
+//! One breach (disagreement > threshold) makes a replica `Suspect`;
+//! `quarantine_after` *consecutive* breaches quarantine it — removed from
+//! dispatch rotation without touching its in-flight batch.  A quarantined
+//! replica immediately enters `Recalibrating`: a worker-pool job streams a
+//! held-out calibration shard through its **injured** engines
+//! ([`crate::train::recalibrate_network`], the §3.4 mechanism) and
+//! re-probes; it is `Reinstated` only when disagreement falls back under
+//! the threshold, and permanently `Retired` (terminal log line) after
+//! `recal_retries` failed attempts.  The farm never quarantines the last
+//! in-rotation replica — detection defers rather than emptying the farm.
+//!
+//! All state lives in the [`HealthLedger`] behind one short-hold mutex
+//! ([`HealthShared`]); batch serving jobs append observations, the batcher
+//! thread reads and decides, recalibration jobs report their outcome.
+
+use std::sync::{Arc, Mutex};
+
+use crate::data::Dataset;
+use crate::runtime::Manifest;
+use crate::tensor::{ops, Tensor};
+use crate::train::Checkpoint;
+use crate::util::error::{anyhow, Result};
+use crate::util::pool::ScopedJob;
+
+use super::farm::{BatchStats, Replica, ReplicaCfg};
+
+/// Per-replica lifecycle state.  Only [`ReplicaState::in_rotation`] states
+/// receive dispatched batches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// Serving; probes clean.
+    Healthy,
+    /// Breached the disagreement threshold once; still serving (hysteresis
+    /// against one-off flukes), probed every round until resolved.
+    Suspect,
+    /// Removed from dispatch rotation after consecutive breaches.
+    Quarantined,
+    /// Recalibration job running on the worker pool.
+    Recalibrating,
+    /// Recalibrated and probing clean again; serving.  Transitions to
+    /// [`ReplicaState::Healthy`] on its next clean probe.
+    Reinstated,
+    /// Recalibration retries exhausted — permanently out of rotation.
+    Retired,
+}
+
+impl ReplicaState {
+    /// Does the dispatcher send batches to a replica in this state?
+    pub fn in_rotation(self) -> bool {
+        matches!(self, ReplicaState::Healthy | ReplicaState::Suspect | ReplicaState::Reinstated)
+    }
+}
+
+/// Health-monitor knobs (`pim-qat serve --health-probe-every`,
+/// `--quarantine-threshold`).
+#[derive(Debug, Clone, Copy)]
+pub struct HealthCfg {
+    /// Run a probe round every this many dispatched batches (0 = probe
+    /// only when a replica is flagged by drift/errors).
+    pub probe_every: u64,
+    /// Probe disagreement fraction above which a probe counts as a breach.
+    pub quarantine_threshold: f64,
+    /// Consecutive breaches before quarantine (hysteresis; min 1).
+    pub quarantine_after: u32,
+    /// Recalibration attempts before a replica is permanently retired.
+    pub recal_retries: u32,
+    /// Images in the shadow probe batch.
+    pub probe_images: usize,
+    /// Calibration batch size for in-service recalibration.
+    pub calib_batch: usize,
+    /// Calibration batches streamed per recalibration attempt.
+    pub calib_batches: usize,
+    /// Seed of the recalibration batch sampler (attempt `k` uses
+    /// `recal_seed + k`, so retries see different calibration data).
+    pub recal_seed: u64,
+    /// Relative deviation of the logit-magnitude EMA from the committed
+    /// reference that flags a replica for an early probe.
+    pub drift_alert: f64,
+}
+
+impl Default for HealthCfg {
+    fn default() -> Self {
+        HealthCfg {
+            probe_every: 8,
+            quarantine_threshold: 0.25,
+            quarantine_after: 2,
+            recal_retries: 2,
+            probe_images: 8,
+            calib_batch: 8,
+            calib_batches: 4,
+            recal_seed: 0x0CA1B,
+            drift_alert: 0.75,
+        }
+    }
+}
+
+/// One probe decision of the hysteresis state machine: `(state, breaches)`
+/// before the probe plus whether it breached → after.  Pure, so the
+/// transition table is unit-testable without a farm.  States out of
+/// rotation are never probed; they pass through unchanged.
+pub fn probe_step(
+    state: ReplicaState,
+    breaches: u32,
+    quarantine_after: u32,
+    breach: bool,
+) -> (ReplicaState, u32) {
+    use ReplicaState::*;
+    match (state, breach) {
+        // a clean probe clears suspicion entirely (and completes the
+        // Reinstated -> Healthy leg of the recovery ladder)
+        (Healthy | Suspect | Reinstated, false) => (Healthy, 0),
+        (Healthy | Reinstated, true) => {
+            if quarantine_after <= 1 {
+                (Quarantined, 1)
+            } else {
+                (Suspect, 1)
+            }
+        }
+        (Suspect, true) => {
+            let b = breaches.saturating_add(1);
+            if b >= quarantine_after.max(1) {
+                (Quarantined, b)
+            } else {
+                (Suspect, b)
+            }
+        }
+        (s, _) => (s, breaches),
+    }
+}
+
+/// One row of the ledger: everything the monitor knows about a replica.
+#[derive(Debug, Clone)]
+pub struct ReplicaHealth {
+    pub chip: u64,
+    pub state: ReplicaState,
+    /// Consecutive probe breaches (hysteresis counter).
+    pub breaches: u32,
+    /// Probe rounds this replica has been through.
+    pub probes: u64,
+    /// Disagreement fraction of the most recent probe.
+    pub last_disagreement: Option<f64>,
+    /// Relative deviation of the logit EMA from the committed reference.
+    pub drift_score: f64,
+    /// Batches / requests served (including while Suspect).
+    pub batches: u64,
+    pub requests: u64,
+    /// Forward failures observed while serving.
+    pub errors: u64,
+    pub last_error: Option<String>,
+    /// EMA of mean |logit| over served batches.
+    pub ema_abs_logit: f64,
+    /// EMA of per-batch service time, nanoseconds.
+    pub ema_service_ns: f64,
+    /// Drift/error signal fired: probe this replica at the next tick
+    /// instead of waiting out the cadence.
+    pub flagged: bool,
+    /// Recalibration attempts consumed so far.
+    pub recal_attempts: u32,
+}
+
+impl ReplicaHealth {
+    fn new(chip: u64) -> ReplicaHealth {
+        ReplicaHealth {
+            chip,
+            state: ReplicaState::Healthy,
+            breaches: 0,
+            probes: 0,
+            last_disagreement: None,
+            drift_score: 0.0,
+            batches: 0,
+            requests: 0,
+            errors: 0,
+            last_error: None,
+            ema_abs_logit: 0.0,
+            ema_service_ns: 0.0,
+            flagged: false,
+            recal_attempts: 0,
+        }
+    }
+}
+
+/// One recorded state-machine transition (the chaos tests assert the
+/// recovery ladder on this log).
+#[derive(Debug, Clone)]
+pub struct Transition {
+    /// Monotone sequence number (global order across replicas).
+    pub seq: u64,
+    pub chip: u64,
+    pub from: ReplicaState,
+    pub to: ReplicaState,
+    pub why: String,
+}
+
+/// Owning copy of the ledger for reporting after (or during) a run.
+#[derive(Debug, Clone)]
+pub struct HealthSnapshot {
+    pub rows: Vec<ReplicaHealth>,
+    pub transitions: Vec<Transition>,
+}
+
+impl HealthSnapshot {
+    /// Transitions of one chip, in order.
+    pub fn ladder(&self, chip: u64) -> Vec<(ReplicaState, ReplicaState)> {
+        self.transitions.iter().filter(|t| t.chip == chip).map(|t| (t.from, t.to)).collect()
+    }
+}
+
+/// The mutable health state: one row per replica plus the transition log.
+/// Lock-hold discipline: every access is short (no inference, no ticket
+/// wait, no replica lock while holding this).
+pub struct HealthLedger {
+    rows: Vec<ReplicaHealth>,
+    transitions: Vec<Transition>,
+    seq: u64,
+    /// Mean |logit| of the probe batch on the pristine reference replica,
+    /// committed at startup — the drift signal's fixed point.
+    ref_abs_logit: f64,
+    drift_alert: f64,
+}
+
+impl HealthLedger {
+    fn new(replicas: usize, ref_abs_logit: f64, drift_alert: f64) -> HealthLedger {
+        HealthLedger {
+            rows: (0..replicas).map(|i| ReplicaHealth::new(i as u64)).collect(),
+            transitions: Vec::new(),
+            seq: 0,
+            ref_abs_logit,
+            drift_alert,
+        }
+    }
+
+    pub fn rows(&self) -> &[ReplicaHealth] {
+        &self.rows
+    }
+
+    pub(super) fn row_mut(&mut self, chip: u64) -> &mut ReplicaHealth {
+        &mut self.rows[chip as usize]
+    }
+
+    /// Record one served batch's cheap signals for `chip`.
+    pub fn record_batch(&mut self, chip: u64, stats: &BatchStats) {
+        let reference = self.ref_abs_logit;
+        let alert = self.drift_alert;
+        let r = &mut self.rows[chip as usize];
+        r.batches += 1;
+        r.requests += stats.batch as u64;
+        const ALPHA: f64 = 0.2;
+        let ema = |prev: f64, x: f64, first: bool| {
+            if first {
+                x
+            } else {
+                (1.0 - ALPHA) * prev + ALPHA * x
+            }
+        };
+        let first = r.batches == 1;
+        r.ema_abs_logit = ema(r.ema_abs_logit, stats.mean_abs_logit, first);
+        r.ema_service_ns = ema(r.ema_service_ns, stats.service.as_nanos() as f64, first);
+        if let Some(e) = &stats.error {
+            r.errors += 1;
+            r.last_error = Some(e.clone());
+            r.flagged = true;
+        }
+        if reference > 0.0 && r.state.in_rotation() {
+            r.drift_score = (r.ema_abs_logit - reference).abs() / reference;
+            if r.drift_score > alert {
+                r.flagged = true;
+            }
+        }
+    }
+
+    /// Move `chip` to `to`, record it, and emit the operator log line.
+    pub(super) fn transition(&mut self, chip: u64, to: ReplicaState, why: &str) {
+        let from = self.rows[chip as usize].state;
+        self.rows[chip as usize].state = to;
+        self.seq += 1;
+        self.transitions.push(Transition { seq: self.seq, chip, from, to, why: why.to_string() });
+        println!("[health] chip {chip}: {from:?} -> {to:?} ({why})");
+    }
+
+    /// Operator log line without a state change (e.g. a deferred
+    /// quarantine on the last in-rotation replica).
+    pub(super) fn note(&self, chip: u64, why: &str) {
+        println!("[health] chip {chip}: {why}");
+    }
+
+    /// Which replicas may receive dispatched batches right now.
+    pub(super) fn rotation_mask(&self) -> Vec<bool> {
+        self.rows.iter().map(|r| r.state.in_rotation()).collect()
+    }
+
+    pub(super) fn any_flagged(&self) -> bool {
+        self.rows.iter().any(|r| r.flagged && r.state.in_rotation())
+    }
+
+    pub fn snapshot(&self) -> HealthSnapshot {
+        HealthSnapshot { rows: self.rows.clone(), transitions: self.transitions.clone() }
+    }
+}
+
+/// The ledger behind its mutex — shared by serving jobs (append), the
+/// batcher thread (decide), recalibration jobs (report), and the server
+/// handle (snapshot).
+pub struct HealthShared {
+    pub ledger: Mutex<HealthLedger>,
+}
+
+/// The committed shadow probe: a fixed batch of images with the pristine
+/// reference replica's answers frozen at startup.
+pub struct ProbeSet {
+    x: Tensor,
+    /// Reference argmax classes committed at startup.  On a noiseless chip
+    /// a fresh reference replay reproduces these bitwise; recalibration
+    /// jobs (which cannot borrow the live reference replica) probe against
+    /// this committed copy.
+    pub ref_classes: Vec<usize>,
+    /// Mean |logit| of the probe batch on the reference — the drift
+    /// signal's fixed point.
+    pub ref_abs_logit: f64,
+}
+
+impl ProbeSet {
+    /// Stack the first `n` images of `ds` and commit the reference answers.
+    fn commit(ds: &Dataset, n: usize, reference: &mut Replica) -> Result<ProbeSet> {
+        if ds.is_empty() {
+            return Err(anyhow!("health probe dataset is empty"));
+        }
+        let n = n.clamp(1, ds.len());
+        let (h, w, c) = {
+            let s = &ds.images[0].shape;
+            (s[0], s[1], s[2])
+        };
+        let px = h * w * c;
+        let mut x = Tensor::zeros(&[n, h, w, c]);
+        for i in 0..n {
+            x.data[i * px..(i + 1) * px].copy_from_slice(&ds.images[i].data);
+        }
+        let (logits, _) = reference.try_infer(&x)?;
+        let ref_classes = ops::argmax_rows(&logits);
+        let ref_abs_logit = mean_abs(&logits.data);
+        Ok(ProbeSet { x, ref_classes, ref_abs_logit })
+    }
+
+    /// Replay the probe batch on `rep` → its argmax classes.
+    pub(super) fn replay(&self, rep: &mut Replica) -> Result<Vec<usize>> {
+        let (logits, _) = rep.try_infer(&self.x)?;
+        Ok(ops::argmax_rows(&logits))
+    }
+
+    /// Fraction of probe images where `rep` disagrees with `ref_classes`.
+    /// A replica that cannot even run the probe counts as fully disagreeing.
+    pub(super) fn disagreement_vs(&self, rep: &mut Replica, ref_classes: &[usize]) -> f64 {
+        match self.replay(rep) {
+            Ok(classes) => {
+                let n = classes.len().min(ref_classes.len());
+                if n == 0 {
+                    return 1.0;
+                }
+                let diff = classes.iter().zip(ref_classes).filter(|(a, b)| a != b).count();
+                diff as f64 / n as f64
+            }
+            Err(_) => 1.0,
+        }
+    }
+
+    /// Disagreement against the committed startup reference.
+    pub(super) fn disagreement(&self, rep: &mut Replica) -> f64 {
+        let reference = self.ref_classes.clone();
+        self.disagreement_vs(rep, &reference)
+    }
+}
+
+fn mean_abs(v: &[f32]) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.iter().map(|x| x.abs() as f64).sum::<f64>() / v.len() as f64
+}
+
+/// The farm-side health driver: ledger + reference replica + probe set +
+/// calibration shard.  Owned by the [`super::Farm`] and driven from the
+/// batcher thread between batches; recalibration runs on the worker pool.
+pub struct HealthMonitor {
+    pub(super) shared: Arc<HealthShared>,
+    pub(super) cfg: HealthCfg,
+    /// The designated reference replica: pristine (no fault replica),
+    /// never in the dispatch rotation, replays the shadow probe each round.
+    pub(super) reference: Replica,
+    pub(super) probe: Arc<ProbeSet>,
+    /// Held-out calibration shard for in-service recalibration.
+    pub(super) calib: Arc<Dataset>,
+    /// Dispatch count at the last probe round.
+    pub(super) last_probe: u64,
+}
+
+impl HealthMonitor {
+    /// Build the monitor for a farm of `replicas` chips served from
+    /// (`manifest`, `ckpt`) under `rcfg`.  The reference replica is the
+    /// same stack with faults stripped (chip id `replicas`, outside the
+    /// farm); `probe_ds` supplies the shadow batch, `calib` the held-out
+    /// recalibration shard.
+    pub fn new(
+        manifest: &Manifest,
+        ckpt: &Checkpoint,
+        rcfg: &ReplicaCfg,
+        replicas: usize,
+        probe_ds: &Dataset,
+        calib: Dataset,
+        cfg: HealthCfg,
+    ) -> Result<HealthMonitor> {
+        if calib.is_empty() {
+            return Err(anyhow!("health calibration shard is empty"));
+        }
+        let mut ref_cfg = rcfg.clone();
+        ref_cfg.faults = None;
+        let mut reference = Replica::new(manifest, ckpt, &ref_cfg, replicas as u64)?;
+        let probe = ProbeSet::commit(probe_ds, cfg.probe_images, &mut reference)?;
+        let ledger = HealthLedger::new(replicas, probe.ref_abs_logit, cfg.drift_alert);
+        Ok(HealthMonitor {
+            shared: Arc::new(HealthShared { ledger: Mutex::new(ledger) }),
+            cfg,
+            reference,
+            probe: Arc::new(probe),
+            calib: Arc::new(calib),
+            last_probe: 0,
+        })
+    }
+
+    pub fn shared(&self) -> Arc<HealthShared> {
+        Arc::clone(&self.shared)
+    }
+
+    /// The recalibration job for a quarantined replica: runs PR 6's BN
+    /// self-tuning through the replica's injured engine cache, re-probes
+    /// against the committed reference, reinstates under threshold or
+    /// retires after bounded retries.  Holds the replica mutex for the
+    /// whole job — safe because a quarantined replica is out of rotation
+    /// and never probed by the batcher thread.
+    pub(super) fn recal_job(
+        &self,
+        chip: u64,
+        state: Arc<Mutex<Replica>>,
+    ) -> ScopedJob<'static> {
+        let shared = Arc::clone(&self.shared);
+        let probe = Arc::clone(&self.probe);
+        let calib = Arc::clone(&self.calib);
+        let cfg = self.cfg;
+        Box::new(move || {
+            let mut rep = state.lock().unwrap();
+            let attempts = cfg.recal_retries.max(1);
+            for attempt in 0..attempts {
+                let seed = cfg.recal_seed.wrapping_add(attempt as u64);
+                let recal =
+                    rep.recalibrate(&calib, cfg.calib_batch.max(1), cfg.calib_batches.max(1), seed);
+                let d = match recal {
+                    Ok(()) => probe.disagreement(&mut rep),
+                    Err(_) => 1.0,
+                };
+                {
+                    let mut led = shared.ledger.lock().unwrap();
+                    let row = led.row_mut(chip);
+                    row.recal_attempts += 1;
+                    row.last_disagreement = Some(d);
+                }
+                if d <= cfg.quarantine_threshold {
+                    shared.ledger.lock().unwrap().transition(
+                        chip,
+                        ReplicaState::Reinstated,
+                        &format!(
+                            "probe disagreement {d:.3} <= {:.3} after attempt {}",
+                            cfg.quarantine_threshold,
+                            attempt + 1
+                        ),
+                    );
+                    return;
+                }
+            }
+            shared.ledger.lock().unwrap().transition(
+                chip,
+                ReplicaState::Retired,
+                &format!("permanently retired after {attempts} recalibration attempts"),
+            );
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+    use ReplicaState::*;
+
+    #[test]
+    fn hysteresis_requires_consecutive_breaches() {
+        // one fluke does not quarantine
+        let (s, b) = probe_step(Healthy, 0, 2, true);
+        assert_eq!((s, b), (Suspect, 1));
+        // a clean probe resets the counter entirely
+        let (s, b) = probe_step(s, b, 2, false);
+        assert_eq!((s, b), (Healthy, 0));
+        // two consecutive breaches do
+        let (s, b) = probe_step(Healthy, 0, 2, true);
+        let (s, b) = probe_step(s, b, 2, true);
+        assert_eq!((s, b), (Quarantined, 2));
+        // quarantine_after = 1 skips the Suspect stage
+        assert_eq!(probe_step(Healthy, 0, 1, true), (Quarantined, 1));
+    }
+
+    #[test]
+    fn reinstated_completes_the_ladder_or_relapses() {
+        assert_eq!(probe_step(Reinstated, 0, 2, false), (Healthy, 0));
+        assert_eq!(probe_step(Reinstated, 0, 2, true), (Suspect, 1));
+        // out-of-rotation states pass through untouched
+        for s in [Quarantined, Recalibrating, Retired] {
+            assert_eq!(probe_step(s, 3, 2, true), (s, 3));
+        }
+    }
+
+    #[test]
+    fn ledger_flags_drift_and_errors_and_logs_transitions() {
+        let mut led = HealthLedger::new(2, 1.0, 0.5);
+        let ok = BatchStats {
+            batch: 4,
+            mean_abs_logit: 1.02,
+            service: Duration::from_micros(80),
+            error: None,
+        };
+        led.record_batch(0, &ok);
+        assert!(!led.any_flagged(), "2% drift is under the 50% alert");
+        assert_eq!(led.rows()[0].requests, 4);
+        // a drifted replica flags itself for an early probe
+        let drifted = BatchStats { mean_abs_logit: 9.0, ..ok.clone() };
+        led.record_batch(1, &drifted);
+        assert!(led.any_flagged());
+        assert!(led.rows()[1].drift_score > 0.5);
+        // errors flag too, and the rotation mask tracks transitions
+        let failed = BatchStats { error: Some("boom".into()), ..ok };
+        led.record_batch(0, &failed);
+        assert_eq!(led.rows()[0].errors, 1);
+        led.transition(1, Quarantined, "test");
+        assert_eq!(led.rotation_mask(), vec![true, false]);
+        let snap = led.snapshot();
+        assert_eq!(snap.ladder(1), vec![(Healthy, Quarantined)]);
+    }
+}

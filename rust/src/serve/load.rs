@@ -5,13 +5,17 @@
 //! surface queueing delay and tail latency.  When the bounded queue fills,
 //! `submit` blocks and the generator degrades into a closed loop: the
 //! backpressure contract, measured rather than hidden.
+//!
+//! Every wait goes through [`Pending::wait_timeout`] with a generous
+//! patience budget: a wedged farm (batcher thread dead with requests still
+//! queued) fails the run loudly instead of hanging the client forever.
 
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::data::Dataset;
 
-use super::farm::{FarmServer, Response};
+use super::farm::{FarmServer, Pending, Reply, Response};
 
 /// Load-generator knobs.
 #[derive(Debug, Clone, Copy)]
@@ -22,25 +26,44 @@ pub struct LoadCfg {
     pub interarrival: Duration,
     /// Producer threads hammering the queue concurrently.
     pub producers: usize,
+    /// Per-request TTL (`--ttl-us`); `None` = requests never expire.
+    pub ttl: Option<Duration>,
+    /// How long a producer waits on any single response before declaring
+    /// the farm wedged and panicking (the loud-failure satellite; never a
+    /// normal-operation path).
+    pub give_up: Duration,
 }
 
 impl Default for LoadCfg {
     fn default() -> Self {
-        LoadCfg { requests: 256, interarrival: Duration::ZERO, producers: 2 }
+        LoadCfg {
+            requests: 256,
+            interarrival: Duration::ZERO,
+            producers: 2,
+            ttl: None,
+            give_up: Duration::from_secs(60),
+        }
     }
 }
 
-/// What the run measured.
+/// What the run measured.  Latency statistics cover *answered* requests
+/// only; timeouts and failures are counted, not averaged in.
 #[derive(Debug, Clone)]
 pub struct LoadReport {
+    /// Requests submitted (answered + timed out + failed).
     pub requests: usize,
     pub wall: Duration,
-    /// Per-request enqueue→response latencies, ascending.
+    /// Per-request enqueue→response latencies of answered requests,
+    /// ascending.
     pub latencies: Vec<Duration>,
     /// Requests served per replica chip id (coalescing evidence).
     pub per_chip: Vec<(u64, usize)>,
-    /// Mean coalesced batch size over all responses.
+    /// Mean coalesced batch size over answered requests.
     pub mean_batch: f64,
+    /// Requests whose TTL expired while queued ([`Reply::Timeout`]).
+    pub timeouts: usize,
+    /// Requests resolved as [`Reply::Failed`].
+    pub failures: usize,
 }
 
 impl LoadReport {
@@ -48,36 +71,43 @@ impl LoadReport {
         self.requests as f64 / self.wall.as_secs_f64().max(1e-9)
     }
 
-    /// Latency at percentile `p` in [0, 100] (nearest-rank).
-    pub fn percentile(&self, p: f64) -> Duration {
+    /// Latency at percentile `p` in [0, 100] (nearest-rank); `None` when
+    /// no request was answered (e.g. every TTL expired) — the caller must
+    /// not read a tail out of an empty distribution.
+    pub fn percentile(&self, p: f64) -> Option<Duration> {
         if self.latencies.is_empty() {
-            return Duration::ZERO;
+            return None;
         }
         let n = self.latencies.len();
+        let p = if p.is_finite() { p.clamp(0.0, 100.0) } else { 100.0 };
         let rank = ((p / 100.0) * n as f64).ceil().max(1.0) as usize;
-        self.latencies[rank.min(n) - 1]
+        Some(self.latencies[rank.min(n) - 1])
     }
 
-    pub fn mean_latency(&self) -> Duration {
+    /// Mean latency of answered requests; `None` when none were.
+    pub fn mean_latency(&self) -> Option<Duration> {
         if self.latencies.is_empty() {
-            return Duration::ZERO;
+            return None;
         }
-        self.latencies.iter().sum::<Duration>() / self.latencies.len() as u32
+        Some(self.latencies.iter().sum::<Duration>() / self.latencies.len() as u32)
     }
 }
 
 /// Drive `server` with `cfg.requests` images cycled from `ds`, spread
 /// round-robin over `cfg.producers` threads on one shared arrival
 /// schedule, and wait out every response.
+///
+/// Panics if any response takes longer than `cfg.give_up` — the wedged
+/// farm failure mode must be loud, not a hang.
 pub fn run_open_loop(server: &FarmServer, ds: &Dataset, cfg: &LoadCfg) -> LoadReport {
     assert!(cfg.producers > 0 && cfg.requests > 0);
-    let responses: Mutex<Vec<Response>> = Mutex::new(Vec::with_capacity(cfg.requests));
+    let replies: Mutex<Vec<Reply>> = Mutex::new(Vec::with_capacity(cfg.requests));
     let t0 = Instant::now();
     std::thread::scope(|s| {
         for p in 0..cfg.producers {
-            let responses = &responses;
+            let replies = &replies;
             s.spawn(move || {
-                let mut got = Vec::new();
+                let mut got: Vec<Pending> = Vec::new();
                 // producer p owns arrivals p, p+producers, ... of the
                 // shared schedule: request q is due at t0 + q*interarrival
                 for q in (p..cfg.requests).step_by(cfg.producers) {
@@ -86,20 +116,38 @@ pub fn run_open_loop(server: &FarmServer, ds: &Dataset, cfg: &LoadCfg) -> LoadRe
                         std::thread::sleep(gap);
                     }
                     let img = ds.images[q % ds.len()].clone();
-                    let pending = server.submit(img).expect("server closed under load");
+                    let pending =
+                        server.submit_with_ttl(img, cfg.ttl).expect("server closed under load");
                     got.push(pending);
                 }
                 // waiting only at the end keeps the loop open (arrivals
                 // never gate on completions; the bounded queue may)
-                let mut out = responses.lock().unwrap();
+                let mut out = replies.lock().unwrap();
                 for pending in got {
-                    out.push(pending.wait());
+                    match pending.wait_timeout(cfg.give_up) {
+                        Some(reply) => out.push(reply),
+                        None => panic!(
+                            "farm wedged: no response within {:?} — batcher dead?",
+                            cfg.give_up
+                        ),
+                    }
                 }
             });
         }
     });
     let wall = t0.elapsed();
-    let responses = responses.into_inner().unwrap();
+    let replies = replies.into_inner().unwrap();
+    let total = replies.len();
+    let mut timeouts = 0usize;
+    let mut failures = 0usize;
+    let mut responses: Vec<Response> = Vec::with_capacity(total);
+    for r in replies {
+        match r {
+            Reply::Answer(resp) => responses.push(resp),
+            Reply::Timeout { .. } => timeouts += 1,
+            Reply::Failed { .. } => failures += 1,
+        }
+    }
     let mut latencies: Vec<Duration> = responses.iter().map(|r| r.latency).collect();
     latencies.sort();
     let mut per_chip: std::collections::BTreeMap<u64, usize> = Default::default();
@@ -109,10 +157,60 @@ pub fn run_open_loop(server: &FarmServer, ds: &Dataset, cfg: &LoadCfg) -> LoadRe
         batch_sum += r.batch_size;
     }
     LoadReport {
-        requests: responses.len(),
+        requests: total,
         wall,
         latencies,
         per_chip: per_chip.into_iter().collect(),
         mean_batch: batch_sum as f64 / responses.len().max(1) as f64,
+        timeouts,
+        failures,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empty_report() -> LoadReport {
+        LoadReport {
+            requests: 4,
+            wall: Duration::from_millis(10),
+            latencies: Vec::new(),
+            per_chip: Vec::new(),
+            mean_batch: 0.0,
+            timeouts: 4,
+            failures: 0,
+        }
+    }
+
+    #[test]
+    fn percentiles_of_zero_answered_requests_are_none_not_a_panic() {
+        // the every-request-timed-out run: stats must degrade, not index
+        // into an empty latency vector
+        let rep = empty_report();
+        assert_eq!(rep.percentile(50.0), None);
+        assert_eq!(rep.percentile(99.0), None);
+        assert_eq!(rep.mean_latency(), None);
+        assert!(rep.qps() > 0.0, "throughput still well-defined");
+    }
+
+    #[test]
+    fn percentile_is_nan_safe_and_clamped() {
+        let rep = LoadReport {
+            latencies: vec![
+                Duration::from_micros(10),
+                Duration::from_micros(20),
+                Duration::from_micros(30),
+            ],
+            timeouts: 0,
+            ..empty_report()
+        };
+        assert_eq!(rep.percentile(0.0), Some(Duration::from_micros(10)));
+        assert_eq!(rep.percentile(50.0), Some(Duration::from_micros(20)));
+        assert_eq!(rep.percentile(100.0), Some(Duration::from_micros(30)));
+        // out-of-range and NaN degrade to the distribution's edges
+        assert_eq!(rep.percentile(250.0), Some(Duration::from_micros(30)));
+        assert_eq!(rep.percentile(-3.0), Some(Duration::from_micros(10)));
+        assert_eq!(rep.percentile(f64::NAN), Some(Duration::from_micros(30)));
     }
 }

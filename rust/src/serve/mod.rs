@@ -5,22 +5,34 @@
 //! backpressure) → [`batcher`] (coalesce to engine-sized batches under a
 //! latency budget) → [`farm::Farm`] (N isolated chip replicas, one
 //! in-flight batch each, scheduled on the global worker pool) → per-request
-//! [`farm::Response`]s.
+//! [`farm::Reply`]s.  The [`health`] module closes the robustness loop:
+//! online drift detection, replica quarantine, in-service BN recalibration
+//! (§3.4), and reinstatement — plus request TTLs and batch hedging in the
+//! dispatcher.
 //!
 //! Determinism contract: replicas share nothing mutable, and on a
 //! *noiseless* chip a replica's answer for an image is bitwise independent
 //! of how requests were coalesced — the f32/integer kernels accumulate
 //! each batch row in a batch-size-invariant order, faults are per-column,
 //! and no RNG is drawn.  With thermal noise enabled, results are instead
-//! reproducible per (replica, batch composition, seed).  See
-//! `tests/serve.rs` for the pinned properties.
+//! reproducible per (replica, batch composition, seed).  Under hedging,
+//! *which* replica answers is a race, but the answer is still bitwise that
+//! replica's standalone answer (per-response `chip_id` names the winner).
+//! See `tests/serve.rs` for the pinned properties.
 
 pub mod batcher;
 pub mod farm;
+pub mod health;
 pub mod load;
 pub mod queue;
 
-pub use batcher::{next_batch, BatcherCfg};
-pub use farm::{Farm, FarmServer, Pending, Replica, ReplicaCfg, Response, ServeCfg};
+pub use batcher::{next_batch, next_batch_poll, BatchPoll, BatcherCfg};
+pub use farm::{
+    BatchStats, Farm, FarmServer, Pending, Replica, ReplicaCfg, Reply, Request, Response, ServeCfg,
+};
+pub use health::{
+    probe_step, HealthCfg, HealthLedger, HealthMonitor, HealthShared, HealthSnapshot,
+    ReplicaHealth, ReplicaState, Transition,
+};
 pub use load::{run_open_loop, LoadCfg, LoadReport};
 pub use queue::{BoundedQueue, Pop};

@@ -19,7 +19,7 @@
 use crate::chip::{ChipModel, FaultModel, FaultProfile};
 use crate::config::Scheme;
 use crate::data::Dataset;
-use crate::nn::ExecSpec;
+use crate::nn::{ExecSpec, Network};
 use crate::runtime::Manifest;
 use crate::util::error::Result;
 use crate::util::rng::Rng;
@@ -77,6 +77,29 @@ impl SelfTuneReport {
             ((self.tuned_acc - self.injured_acc) / lost).clamp(0.0, 1.0)
         }
     }
+}
+
+/// The self-tuning core, shared by the offline [`self_tune`] ladder and the
+/// serving layer's in-service recovery (`serve::health`): stream `batches`
+/// calibration batches of `batch` images through the network's **own**
+/// forward path under `chip` and re-estimate every BN layer's running
+/// statistics.  The injury is whatever the network already carries — a
+/// `ChipModel::faults` binding or, on a serving replica, the per-replica
+/// fault model bound through its engine cache (which takes precedence over
+/// `chip`) — so a quarantined replica recalibrates through exactly the
+/// injured engines it will keep serving on.  No weight is touched.
+pub fn recalibrate_network(
+    net: &mut Network,
+    chip: &ChipModel,
+    scheme: Scheme,
+    unit_channels: usize,
+    calib: &Dataset,
+    batch: usize,
+    batches: usize,
+    rng: &mut Rng,
+) -> Result<()> {
+    let exec = ExecSpec::Pim { scheme, unit_channels, chip };
+    net.calibrate_bn(calib, batch, batches, &exec, rng)
 }
 
 /// Run the clean → injured → self-tuned ladder for one checkpoint on one

@@ -33,7 +33,7 @@ pub mod native;
 pub mod schedule;
 
 pub use arena::TrainArena;
-pub use calib::{self_tune, SelfTuneCfg, SelfTuneReport};
+pub use calib::{recalibrate_network, self_tune, SelfTuneCfg, SelfTuneReport};
 pub use checkpoint::Checkpoint;
 pub use native::NativeBackend;
 
