@@ -8,7 +8,13 @@
 //! * `u8i16` — the integer plane kernel (native/differential cells).
 //! * `binpacked` — the bit-packed bit-serial plane kernel (64 cols/u64
 //!   word, the engine's stored layout).
-//! * `f32acc` — the dense f32 GEMM (digital convs, FC).
+//! * `f32acc` — the dense f32 GEMM (digital convs, FC; packed-panel
+//!   blocked on the SIMD arms, §Perf L3.9).
+//! * `f32nt` / `f32tn` — the A·Bᵀ / Aᵀ·B backward-pass kernels (data- and
+//!   weight-gradient GEMMs of the native trainer).
+//!
+//! The shape list includes a backward-shaped tall-k case (`bwd_k1152_o64`)
+//! so the packed-panel path is measured where it matters most.
 //!
 //! Emits `BENCH_gemm_kernels.json`; CI gates it against
 //! `baselines/BENCH_gemm_kernels.json` via `bench_check` (see ROADMAP.md,
@@ -32,12 +38,17 @@ fn main() {
         active.name,
         if active.name == "scalar" { " — no SIMD on this host" } else { "" }
     );
+    match kernels::autotune::chosen() {
+        Some(t) => println!("blocked-GEMM tile (autotuned or pinned): {}x{}x{}", t.mc, t.kc, t.nc),
+        None => println!("blocked-GEMM tile: n/a (scalar arm never consults it)"),
+    }
 
     // (label, m, k, n): m batch rows, k = N per conversion chain, n = O
     let shapes: &[(&str, usize, usize, usize)] = &[
-        ("n144_o32", 1024, 144, 32), // uc=16 3x3 mid conv (the paper's N=144)
-        ("n72_o64", 1024, 72, 64),   // uc=8 3x3, wider output
-        ("n9_o16", 1024, 9, 16),     // native uc=1 — many small planes
+        ("n144_o32", 1024, 144, 32),     // uc=16 3x3 mid conv (the paper's N=144)
+        ("n72_o64", 1024, 72, 64),       // uc=8 3x3, wider output
+        ("n9_o16", 1024, 9, 16),         // native uc=1 — many small planes
+        ("bwd_k1152_o64", 256, 1152, 64), // backward-shaped tall-k (128ch 3x3 grad)
     ];
     let arms: Vec<(&str, &'static KernelTable)> =
         vec![("scalar", &scalar::TABLE), ("dispatch", active)];
@@ -51,10 +62,15 @@ fn main() {
         let wp = pack_bin_plane(&bin, k, n);
         let af: Vec<f32> = a.iter().map(|&v| v as f32).collect();
         let wf: Vec<f32> = w16.iter().map(|&v| v as f32).collect();
+        // backward operands: B[n,k]ᵀ for nt, dY[m,n] for tn (af doubles as
+        // the patches operand in both)
+        let wtf: Vec<f32> = (0..n * k).map(|_| rng.normal_in(0.0, 1.0)).collect();
+        let btf: Vec<f32> = (0..m * n).map(|_| rng.normal_in(0.0, 1.0)).collect();
         let macs = (m * k * n) as f64;
 
         let mut ci = vec![0i32; m * n];
         let mut cf = vec![0.0f32; m * n];
+        let mut ctn = vec![0.0f32; k * n];
         for (arm, table) in &arms {
             let stats = b.run(&format!("u8i16/{label}/{arm}"), Some(macs), || {
                 ci.fill(0);
@@ -76,6 +92,24 @@ fn main() {
                 cf.fill(0.0);
                 (table.gemm_acc)(m, k, n, &af, &wf, &mut cf);
                 std::hint::black_box(&cf);
+            });
+            println!("{}", stats.report());
+            all.push(stats);
+
+            // backward kernels: nt treats wf as B[n,k]ᵀ (same buffer,
+            // reinterpreted — only the shape contract matters to timing)
+            let stats = b.run(&format!("f32nt/{label}/{arm}"), Some(macs), || {
+                cf.fill(0.0);
+                (table.gemm_nt_acc)(m, k, n, &af, &wtf, &mut cf);
+                std::hint::black_box(&cf);
+            });
+            println!("{}", stats.report());
+            all.push(stats);
+
+            let stats = b.run(&format!("f32tn/{label}/{arm}"), Some(macs), || {
+                ctn.fill(0.0);
+                (table.gemm_tn_acc)(m, k, n, &af, &btf, &mut ctn);
+                std::hint::black_box(&ctn);
             });
             println!("{}", stats.report());
             all.push(stats);

@@ -1,11 +1,14 @@
 //! GEMM facade over the runtime-dispatched kernel subsystem
-//! (`tensor::kernels`, §Perf L3.6).
+//! (`tensor::kernels`, §Perf L3.6 / L3.9).
 //!
 //! All single-call GEMM entry points live here (threading happens above,
 //! across batch rows, in `crate::pim::engine`); the actual inner loops are
 //! the arm picked once per process by [`crate::tensor::kernels::active`] —
-//! AVX2+FMA on capable x86_64 hosts, the portable scalar reference
-//! otherwise or under `PIM_QAT_NO_SIMD=1`.
+//! AVX-512F, else AVX2+FMA, on capable x86_64 hosts, NEON on aarch64, the
+//! portable scalar reference otherwise or under `PIM_QAT_NO_SIMD=1`.  The
+//! SIMD arms' dense f32 path runs the packed-panel blocked driver
+//! (`kernels::blocked`) with a per-process autotuned tile triple
+//! (`kernels::autotune`; `PIM_QAT_TILE` / `PIM_QAT_NO_AUTOTUNE` pin it).
 //!
 //! * [`gemm_acc`] / [`gemm`] / [`gemm_into`] — dense f32 C += A·B.
 //! * [`gemm_nt`] / [`gemm_nt_into`] — C = A·Bᵀ (data-gradient pass).
@@ -23,7 +26,8 @@
 //! * [`gemm_acc_u8_bin_packed`] — binary planes bit-packed 64 columns per
 //!   u64 word (`pim::layout::packed_words`), the layout `PimEngine` stores
 //!   for the bit-serial scheme: 8× less weight traffic, broadcast-AND-
-//!   accumulate inner loops on the AVX2 arm.
+//!   accumulate inner loops on the AVX2/NEON arms, native `__mmask16`
+//!   masked adds on the AVX-512 arm.
 //!
 //! Exactness contract: integer kernels are bit-identical across arms on
 //! every shape (tails included); f32 kernels are deterministic per arm

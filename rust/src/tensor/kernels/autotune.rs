@@ -1,0 +1,205 @@
+//! One-shot deterministic startup autotuner for the blocked-GEMM tile
+//! triple (§Perf L3.9).
+//!
+//! The packed-panel driver (`kernels::blocked`) needs an (MC, KC, NC)
+//! block geometry.  Good values are host-dependent (L1/L2 sizes, SIMD
+//! width), so instead of a compile-time guess the first resolution probes
+//! a **small fixed candidate set** on a fixed synthetic workload and
+//! caches the winner for the rest of the process in a `OnceLock`:
+//!
+//! * the candidate list and probe workload are compiled in — no search
+//!   space drift between hosts;
+//! * candidates are probed in a **seeded deterministic order** (a fixed-
+//!   seed Fisher–Yates permutation), and ties break toward the earlier
+//!   probe, so the only host-dependent input is the timing itself;
+//! * the probe runs once, at startup (first `kernels::active()` call on a
+//!   SIMD arm), single-threaded, on ~1 MiB of data — tens of milliseconds
+//!   end to end.
+//!
+//! Reproducibility knobs (DESIGN.md §Kernel dispatch, knob table):
+//!
+//! * `PIM_QAT_TILE=MCxKCxNC` (e.g. `64x64x256`) pins the triple outright —
+//!   the probe never runs.  A malformed value panics loudly rather than
+//!   silently degrading the reproducibility the pin was asked for.
+//! * `PIM_QAT_NO_AUTOTUNE=1` skips the probe and uses the fixed
+//!   [`DEFAULT`] triple — the CI / cross-host-comparison configuration
+//!   (combine with `PIM_QAT_NO_SIMD=1` for cross-host *bitwise* f32
+//!   comparisons; the scalar arm never consults the tile at all).
+//!
+//! Within a process the resolved tile is immutable, so the f32 blocked
+//! path stays bit-identical run-to-run (the L3.6 determinism contract).
+//! Across *processes* the probed winner may differ when host timing
+//! flips between close candidates — pin the tile (or disable autotune)
+//! when two runs must agree bitwise.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use super::blocked::{self, TileKernel};
+use crate::util::rng::Rng;
+
+/// Blocked-GEMM tile triple: C is walked in NC-wide column stripes, K in
+/// KC slabs (the packed B panel is KC×NC), and rows in MC blocks (the
+/// packed A block is MC×KC).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tile {
+    pub mc: usize,
+    pub kc: usize,
+    pub nc: usize,
+}
+
+/// Fixed default (the `PIM_QAT_NO_AUTOTUNE=1` triple): a 16 KiB A block
+/// (half of a typical L1d) and a 64 KiB B panel (comfortably L2), with
+/// the NC-wide C stripe (1 KiB/row) staying L1-resident across the KC
+/// loop.
+pub const DEFAULT: Tile = Tile { mc: 64, kc: 64, nc: 256 };
+
+/// The probe's fixed candidate set.  Small on purpose: the probe is paid
+/// at every process start, and the per-candidate parity sweep in
+/// `tests/engine_parity.rs` runs the full f32 contract over every entry.
+pub const CANDIDATES: &[Tile] = &[
+    DEFAULT,
+    Tile { mc: 32, kc: 32, nc: 384 },  // the pre-L3.9 AVX2 guess (KB=32, NB=384)
+    Tile { mc: 128, kc: 64, nc: 128 }, // taller A block, narrower stripe
+    Tile { mc: 32, kc: 128, nc: 256 }, // deeper K slab
+    Tile { mc: 64, kc: 256, nc: 64 },  // deepest K, narrow stripe (tall-k shapes)
+    Tile { mc: 16, kc: 64, nc: 512 },  // wide stripe (large-n shapes)
+];
+
+static TILE: OnceLock<Tile> = OnceLock::new();
+
+/// Resolve the process tile eagerly for the selected arm — called by
+/// `kernels::select()` once, right after SIMD arm selection, so the probe
+/// cost lands at startup instead of inside the first training step.
+pub(super) fn warm(table: &super::KernelTable) {
+    let _ = tile_for(table.gemm_acc_tile);
+}
+
+/// The process-wide tile triple, resolved on first call (env pin →
+/// fixed default → probe with `kernel`) and cached in the `OnceLock`.
+pub fn tile_for(kernel: TileKernel) -> Tile {
+    *TILE.get_or_init(|| resolve(kernel))
+}
+
+/// The already-resolved tile, if any (benches report it alongside the arm
+/// name; `None` until the first blocked dispatch or `warm`).
+pub fn chosen() -> Option<Tile> {
+    TILE.get().copied()
+}
+
+/// `PIM_QAT_NO_AUTOTUNE=1` (any non-empty value other than "0") forces
+/// the fixed [`DEFAULT`] triple.
+fn no_autotune_forced() -> bool {
+    std::env::var_os("PIM_QAT_NO_AUTOTUNE").is_some_and(|v| !v.is_empty() && v != "0")
+}
+
+fn resolve(kernel: TileKernel) -> Tile {
+    if let Ok(s) = std::env::var("PIM_QAT_TILE") {
+        if !s.is_empty() {
+            return parse_tile(&s).unwrap_or_else(|| {
+                panic!("PIM_QAT_TILE must be MCxKCxNC, e.g. 64x64x256 (got {s:?})")
+            });
+        }
+    }
+    if no_autotune_forced() {
+        return DEFAULT;
+    }
+    probe(kernel)
+}
+
+/// Parse `MCxKCxNC` (three positive decimal sizes separated by `x`).
+pub fn parse_tile(s: &str) -> Option<Tile> {
+    let mut parts = s.split('x');
+    let mc: usize = parts.next()?.parse().ok()?;
+    let kc: usize = parts.next()?.parse().ok()?;
+    let nc: usize = parts.next()?.parse().ok()?;
+    if parts.next().is_some() || mc == 0 || kc == 0 || nc == 0 {
+        return None;
+    }
+    Some(Tile { mc, kc, nc })
+}
+
+/// The seeded deterministic probe order: a fixed-seed Fisher–Yates
+/// permutation of the candidate indices — identical on every host.
+fn probe_order() -> Vec<usize> {
+    let mut order: Vec<usize> = (0..CANDIDATES.len()).collect();
+    Rng::new(0x9A07).shuffle(&mut order);
+    order
+}
+
+/// Probe workload: one mid-size GEMM per candidate (several repetitions,
+/// best-of), big enough to exercise the packed-panel walk for every
+/// candidate and small enough to keep startup cost in the tens of
+/// milliseconds on a SIMD arm.
+const PROBE_M: usize = 96;
+const PROBE_K: usize = 256;
+const PROBE_N: usize = 256;
+const PROBE_REPS: usize = 3;
+
+fn probe(kernel: TileKernel) -> Tile {
+    let mut rng = Rng::new(0x711E);
+    let a: Vec<f32> = (0..PROBE_M * PROBE_K).map(|_| rng.normal_in(0.0, 1.0)).collect();
+    let b: Vec<f32> = (0..PROBE_K * PROBE_N).map(|_| rng.normal_in(0.0, 1.0)).collect();
+    let mut c = vec![0.0f32; PROBE_M * PROBE_N];
+    let mut best: Option<(f64, Tile)> = None;
+    for ci in probe_order() {
+        let t = CANDIDATES[ci];
+        // one unmeasured warmup pass per candidate (panel arena grow,
+        // instruction cache), then best-of-REPS
+        blocked::gemm_acc_packed_with(t, PROBE_M, PROBE_K, PROBE_N, &a, &b, &mut c, kernel);
+        let mut best_ns = f64::INFINITY;
+        for _ in 0..PROBE_REPS {
+            c.fill(0.0);
+            let t0 = Instant::now();
+            blocked::gemm_acc_packed_with(t, PROBE_M, PROBE_K, PROBE_N, &a, &b, &mut c, kernel);
+            best_ns = best_ns.min(t0.elapsed().as_nanos() as f64);
+        }
+        std::hint::black_box(&c);
+        // strict `<`: ties keep the earlier candidate in the seeded order
+        if best.is_none_or(|(ns, _)| best_ns < ns) {
+            best = Some((best_ns, t));
+        }
+    }
+    best.map(|(_, t)| t).unwrap_or(DEFAULT)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_tile_roundtrip_and_rejects_garbage() {
+        assert_eq!(parse_tile("64x64x256"), Some(DEFAULT));
+        assert_eq!(parse_tile("8x16x32"), Some(Tile { mc: 8, kc: 16, nc: 32 }));
+        for bad in ["", "64", "64x64", "64x64x0", "0x1x1", "axbxc", "64x64x256x4", "64X64X256"] {
+            assert_eq!(parse_tile(bad), None, "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn probe_order_is_a_seeded_deterministic_permutation() {
+        let o1 = probe_order();
+        let o2 = probe_order();
+        assert_eq!(o1, o2, "probe order must be deterministic");
+        let mut sorted = o1.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..CANDIDATES.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn candidates_are_positive_and_include_the_fixed_default() {
+        assert!(CANDIDATES.contains(&DEFAULT), "NO_AUTOTUNE triple must be a probed candidate");
+        for t in CANDIDATES {
+            assert!(t.mc > 0 && t.kc > 0 && t.nc > 0, "{t:?}");
+        }
+    }
+
+    #[test]
+    fn tile_for_caches_one_process_wide_answer() {
+        let t1 = tile_for(super::super::scalar::gemm_acc_tile);
+        let t2 = tile_for(super::super::scalar::gemm_acc_tile);
+        assert_eq!(t1, t2, "OnceLock must hand out one tile");
+        assert_eq!(chosen(), Some(t1));
+        assert!(t1.mc > 0 && t1.kc > 0 && t1.nc > 0);
+    }
+}

@@ -1,27 +1,31 @@
-//! AVX2 + FMA arm (`std::arch::x86_64`), selected at runtime by
-//! [`super::active`] after `is_x86_feature_detected!("avx2")` and `("fma")`
-//! both pass.
+//! AVX-512 arm (`std::arch::x86_64`), selected at runtime by
+//! [`super::active`] when `is_x86_feature_detected!("avx512f")` passes —
+//! ahead of the AVX2 arm (§Perf L3.9).
 //!
 //! * Integer kernels are exact i32 arithmetic, so they are **bit-identical
 //!   to the scalar arm** on every shape; k/n tails that are not multiples
-//!   of the 8-lane width run the same scalar tail code.
-//! * f32 kernels use FMA with a fixed (shape-only) tile order — the
-//!   packed-panel blocked walk of `kernels::blocked` for [`gemm_acc`]
-//!   (autotuned per-process tile triple, then fixed), 8-lane partial sums
-//!   reduced in a fixed lane order for [`gemm_nt_acc`] — so outputs are
-//!   deterministic run-to-run, and differ from scalar only by summation
-//!   order (tested at 1e-3 absolute tolerance on unit-scale data).
-//! * The bit-packed binary kernel expands each byte of a packed u64 word
-//!   to an 8-lane 0/-1 mask (broadcast-AND-compare against per-lane bit
-//!   constants) and accumulates the broadcast activation under that mask —
-//!   one load/store pair per 8 outputs, no multiplies.
+//!   of the 16-lane width run the same scalar tail code.
+//! * f32 kernels use 512-bit FMA with a fixed (shape-only) tile order —
+//!   the packed-panel blocked walk of `kernels::blocked` for
+//!   [`gemm_acc`] (autotuned per-process tile triple, then fixed),
+//!   16-lane partial sums reduced in a fixed quarter order for
+//!   [`gemm_nt_acc`] — so outputs are deterministic run-to-run, and
+//!   differ from scalar only by summation order (1e-3 absolute tolerance
+//!   on unit-scale data).
+//! * The bit-packed binary kernel is where AVX-512 pulls ahead cleanly:
+//!   each 16-bit chunk of a packed u64 word **is** a native `__mmask16`,
+//!   so the plane accumulate is one masked add per 16 outputs —
+//!   `_mm512_mask_add_epi32` under the bit chunk — with no byte-expand
+//!   or compare step at all (the AVX2 arm needs both).
 //!
-//! Every public fn here asserts the slice geometry *and* the CPU features
+//! Every public fn here asserts the slice geometry *and* the CPU feature
 //! before entering the `#[target_feature]` inner body, so each table entry
 //! is sound in isolation — the feature assert runs in release too (these
-//! are safe `pub fn`s; without it, a direct call on a non-AVX2 x86_64 CPU
+//! are safe `pub fn`s; without it, a direct call on a non-AVX-512 CPU
 //! would be UB reachable from safe code).  The in-bounds pointer
-//! arithmetic is established by the geometry asserts.
+//! arithmetic is established by the geometry asserts.  512-bit FMA and
+//! the masked integer ops are all part of the base AVX512F set — no
+//! additional feature bits are required.
 
 #![allow(unsafe_code)]
 
@@ -29,9 +33,9 @@ use std::arch::x86_64::*;
 
 use super::KernelTable;
 
-/// The AVX2+FMA kernel table.  Only select this after feature detection.
+/// The AVX-512 kernel table.  Only select this after feature detection.
 pub static TABLE: KernelTable = KernelTable {
-    name: "avx2",
+    name: "avx512",
     gemm_acc,
     gemm_acc_tile,
     gemm_nt_acc,
@@ -44,15 +48,15 @@ pub static TABLE: KernelTable = KernelTable {
     gemm_acc_u8_bin_packed,
 };
 
-/// Release-mode guard: these are safe `pub fn`s, so executing the AVX2
-/// bodies on a CPU without the features would be UB reachable from safe
+/// Release-mode guard: these are safe `pub fn`s, so executing the AVX-512
+/// bodies on a CPU without the feature would be UB reachable from safe
 /// code.  `is_x86_feature_detected!` caches its answer, so this is one
 /// atomic load per GEMM call — noise next to the kernel itself.
 #[inline]
 fn check_features() {
     assert!(
-        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma"),
-        "avx2 kernel table used without AVX2+FMA"
+        is_x86_feature_detected!("avx512f"),
+        "avx512 kernel table used without AVX-512F"
     );
 }
 
@@ -60,18 +64,16 @@ fn check_features() {
 
 /// Dense f32 GEMM routes through the packed-panel blocked driver
 /// (`kernels::blocked`, §Perf L3.9): the driver packs MC×KC / KC×NC
-/// panels into arena scratch and hands them to [`gemm_acc_tile`].  The
-/// block walk depends only on the shape and the per-process tile triple,
-/// which keeps the f32 determinism contract.
+/// panels into arena scratch and hands them to [`gemm_acc_tile`].
 pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     check_features();
     super::blocked::gemm_acc_packed(m, k, n, a, b, c, gemm_acc_tile);
 }
 
 /// Packed-tile microkernel: `pa[mb,kb] · pb[kb,nb]` accumulated into the
-/// C block at flat offset `c0`, row stride `ldc`.  8-lane FMA over the
-/// contiguous packed B rows, 4-wide k register blocking, scalar j tail —
-/// a fixed shape-only order.
+/// C block at flat offset `c0`, row stride `ldc`.  16-lane zmm FMA over
+/// the contiguous packed B rows, 4-wide k register blocking, scalar j
+/// tail — a fixed shape-only order.
 pub fn gemm_acc_tile(
     mb: usize,
     kb: usize,
@@ -93,8 +95,7 @@ pub fn gemm_acc_tile(
     unsafe { gemm_acc_tile_impl(mb, kb, nb, pa, pb, c, c0, ldc) }
 }
 
-#[target_feature(enable = "avx2")]
-#[target_feature(enable = "fma")]
+#[target_feature(enable = "avx512f")]
 #[allow(clippy::too_many_arguments)]
 unsafe fn gemm_acc_tile_impl(
     mb: usize,
@@ -111,23 +112,23 @@ unsafe fn gemm_acc_tile_impl(
         let cp = c.as_mut_ptr().add(c0 + ii * ldc);
         let mut kk = 0;
         while kk + 4 <= kb {
-            let a0 = _mm256_set1_ps(arow[kk]);
-            let a1 = _mm256_set1_ps(arow[kk + 1]);
-            let a2 = _mm256_set1_ps(arow[kk + 2]);
-            let a3 = _mm256_set1_ps(arow[kk + 3]);
+            let a0 = _mm512_set1_ps(arow[kk]);
+            let a1 = _mm512_set1_ps(arow[kk + 1]);
+            let a2 = _mm512_set1_ps(arow[kk + 2]);
+            let a3 = _mm512_set1_ps(arow[kk + 3]);
             let b0 = pb.as_ptr().add(kk * nb);
             let b1 = pb.as_ptr().add((kk + 1) * nb);
             let b2 = pb.as_ptr().add((kk + 2) * nb);
             let b3 = pb.as_ptr().add((kk + 3) * nb);
             let mut j = 0;
-            while j + 8 <= nb {
-                let mut cv = _mm256_loadu_ps(cp.add(j));
-                cv = _mm256_fmadd_ps(a0, _mm256_loadu_ps(b0.add(j)), cv);
-                cv = _mm256_fmadd_ps(a1, _mm256_loadu_ps(b1.add(j)), cv);
-                cv = _mm256_fmadd_ps(a2, _mm256_loadu_ps(b2.add(j)), cv);
-                cv = _mm256_fmadd_ps(a3, _mm256_loadu_ps(b3.add(j)), cv);
-                _mm256_storeu_ps(cp.add(j), cv);
-                j += 8;
+            while j + 16 <= nb {
+                let mut cv = _mm512_loadu_ps(cp.add(j));
+                cv = _mm512_fmadd_ps(a0, _mm512_loadu_ps(b0.add(j)), cv);
+                cv = _mm512_fmadd_ps(a1, _mm512_loadu_ps(b1.add(j)), cv);
+                cv = _mm512_fmadd_ps(a2, _mm512_loadu_ps(b2.add(j)), cv);
+                cv = _mm512_fmadd_ps(a3, _mm512_loadu_ps(b3.add(j)), cv);
+                _mm512_storeu_ps(cp.add(j), cv);
+                j += 16;
             }
             while j < nb {
                 *cp.add(j) += arow[kk] * *b0.add(j)
@@ -139,13 +140,13 @@ unsafe fn gemm_acc_tile_impl(
             kk += 4;
         }
         while kk < kb {
-            let av = _mm256_set1_ps(arow[kk]);
+            let av = _mm512_set1_ps(arow[kk]);
             let brow = pb.as_ptr().add(kk * nb);
             let mut j = 0;
-            while j + 8 <= nb {
-                let cv = _mm256_loadu_ps(cp.add(j));
-                _mm256_storeu_ps(cp.add(j), _mm256_fmadd_ps(av, _mm256_loadu_ps(brow.add(j)), cv));
-                j += 8;
+            while j + 16 <= nb {
+                let cv = _mm512_loadu_ps(cp.add(j));
+                _mm512_storeu_ps(cp.add(j), _mm512_fmadd_ps(av, _mm512_loadu_ps(brow.add(j)), cv));
+                j += 16;
             }
             while j < nb {
                 *cp.add(j) += arow[kk] * *brow.add(j);
@@ -166,37 +167,39 @@ pub fn gemm_nt_acc(m: usize, p: usize, n: usize, a: &[f32], b: &[f32], c: &mut [
     unsafe { gemm_nt_acc_impl(m, p, n, a, b, c) }
 }
 
-/// Fixed-order horizontal sum: (lane 0+4, 1+5, 2+6, 3+7) → pairwise.
-#[target_feature(enable = "avx2")]
-unsafe fn hsum256(v: __m256) -> f32 {
-    let hi = _mm256_extractf128_ps(v, 1);
-    let lo = _mm256_castps256_ps128(v);
-    let s = _mm_add_ps(lo, hi);
+/// Fixed-order horizontal sum: quarters (0+1) + (2+3), then the same
+/// 128-bit pairwise reduction the AVX2 arm uses.
+#[target_feature(enable = "avx512f")]
+unsafe fn hsum512(v: __m512) -> f32 {
+    let q0 = _mm512_extractf32x4_ps(v, 0);
+    let q1 = _mm512_extractf32x4_ps(v, 1);
+    let q2 = _mm512_extractf32x4_ps(v, 2);
+    let q3 = _mm512_extractf32x4_ps(v, 3);
+    let s = _mm_add_ps(_mm_add_ps(q0, q1), _mm_add_ps(q2, q3));
     let shuf = _mm_movehdup_ps(s); // [1,1,3,3]
     let sums = _mm_add_ps(s, shuf); // [0+1, _, 2+3, _]
     let shuf2 = _mm_movehl_ps(shuf, sums); // [2+3, _, ...]
     _mm_cvtss_f32(_mm_add_ss(sums, shuf2))
 }
 
-#[target_feature(enable = "avx2")]
-#[target_feature(enable = "fma")]
+#[target_feature(enable = "avx512f")]
 unsafe fn gemm_nt_acc_impl(m: usize, p: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     for i in 0..m {
         let arow = a.as_ptr().add(i * p);
         let crow = &mut c[i * n..(i + 1) * n];
         for j in 0..n {
             let brow = b.as_ptr().add(j * p);
-            let mut acc = _mm256_setzero_ps();
+            let mut acc = _mm512_setzero_ps();
             let mut q = 0;
-            while q + 8 <= p {
-                acc = _mm256_fmadd_ps(
-                    _mm256_loadu_ps(arow.add(q)),
-                    _mm256_loadu_ps(brow.add(q)),
+            while q + 16 <= p {
+                acc = _mm512_fmadd_ps(
+                    _mm512_loadu_ps(arow.add(q)),
+                    _mm512_loadu_ps(brow.add(q)),
                     acc,
                 );
-                q += 8;
+                q += 16;
             }
-            let mut s = hsum256(acc);
+            let mut s = hsum512(acc);
             while q < p {
                 s += *arow.add(q) * *brow.add(q);
                 q += 1;
@@ -216,8 +219,7 @@ pub fn gemm_tn_acc(p: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut [
     unsafe { gemm_tn_acc_impl(p, m, n, a, b, c) }
 }
 
-#[target_feature(enable = "avx2")]
-#[target_feature(enable = "fma")]
+#[target_feature(enable = "avx512f")]
 unsafe fn gemm_tn_acc_impl(p: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
     for q in 0..p {
         let arow = &a[q * m..(q + 1) * m];
@@ -226,13 +228,13 @@ unsafe fn gemm_tn_acc_impl(p: usize, m: usize, n: usize, a: &[f32], b: &[f32], c
             if aq == 0.0 {
                 continue;
             }
-            let av = _mm256_set1_ps(aq);
+            let av = _mm512_set1_ps(aq);
             let cp = c.as_mut_ptr().add(i * n);
             let mut j = 0;
-            while j + 8 <= n {
-                let cv = _mm256_loadu_ps(cp.add(j));
-                _mm256_storeu_ps(cp.add(j), _mm256_fmadd_ps(av, _mm256_loadu_ps(brow.add(j)), cv));
-                j += 8;
+            while j + 16 <= n {
+                let cv = _mm512_loadu_ps(cp.add(j));
+                _mm512_storeu_ps(cp.add(j), _mm512_fmadd_ps(av, _mm512_loadu_ps(brow.add(j)), cv));
+                j += 16;
             }
             while j < n {
                 *cp.add(j) += aq * *brow.add(j);
@@ -252,7 +254,7 @@ pub fn gemm_acc_u8_i16(m: usize, k: usize, n: usize, a: &[u8], b: &[i16], c: &mu
     unsafe { gemm_acc_u8_i16_impl(m, k, n, a, b, c) }
 }
 
-#[target_feature(enable = "avx2")]
+#[target_feature(enable = "avx512f")]
 unsafe fn gemm_acc_u8_i16_impl(m: usize, k: usize, n: usize, a: &[u8], b: &[i16], c: &mut [i32]) {
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
@@ -262,27 +264,27 @@ unsafe fn gemm_acc_u8_i16_impl(m: usize, k: usize, n: usize, a: &[u8], b: &[i16]
         // scalar; sums are exact, so the order is irrelevant to the bits)
         while kk + 4 <= k {
             let cp = crow.as_mut_ptr();
-            let a0 = _mm256_set1_epi32(arow[kk] as i32);
-            let a1 = _mm256_set1_epi32(arow[kk + 1] as i32);
-            let a2 = _mm256_set1_epi32(arow[kk + 2] as i32);
-            let a3 = _mm256_set1_epi32(arow[kk + 3] as i32);
+            let a0 = _mm512_set1_epi32(arow[kk] as i32);
+            let a1 = _mm512_set1_epi32(arow[kk + 1] as i32);
+            let a2 = _mm512_set1_epi32(arow[kk + 2] as i32);
+            let a3 = _mm512_set1_epi32(arow[kk + 3] as i32);
             let b0 = b.as_ptr().add(kk * n);
             let b1 = b.as_ptr().add((kk + 1) * n);
             let b2 = b.as_ptr().add((kk + 2) * n);
             let b3 = b.as_ptr().add((kk + 3) * n);
             let mut j = 0;
-            while j + 8 <= n {
-                let w0 = _mm256_cvtepi16_epi32(_mm_loadu_si128(b0.add(j) as *const __m128i));
-                let w1 = _mm256_cvtepi16_epi32(_mm_loadu_si128(b1.add(j) as *const __m128i));
-                let w2 = _mm256_cvtepi16_epi32(_mm_loadu_si128(b2.add(j) as *const __m128i));
-                let w3 = _mm256_cvtepi16_epi32(_mm_loadu_si128(b3.add(j) as *const __m128i));
-                let mut cv = _mm256_loadu_si256(cp.add(j) as *const __m256i);
-                cv = _mm256_add_epi32(cv, _mm256_mullo_epi32(a0, w0));
-                cv = _mm256_add_epi32(cv, _mm256_mullo_epi32(a1, w1));
-                cv = _mm256_add_epi32(cv, _mm256_mullo_epi32(a2, w2));
-                cv = _mm256_add_epi32(cv, _mm256_mullo_epi32(a3, w3));
-                _mm256_storeu_si256(cp.add(j) as *mut __m256i, cv);
-                j += 8;
+            while j + 16 <= n {
+                let w0 = _mm512_cvtepi16_epi32(_mm256_loadu_si256(b0.add(j) as *const __m256i));
+                let w1 = _mm512_cvtepi16_epi32(_mm256_loadu_si256(b1.add(j) as *const __m256i));
+                let w2 = _mm512_cvtepi16_epi32(_mm256_loadu_si256(b2.add(j) as *const __m256i));
+                let w3 = _mm512_cvtepi16_epi32(_mm256_loadu_si256(b3.add(j) as *const __m256i));
+                let mut cv = _mm512_loadu_epi32(cp.add(j));
+                cv = _mm512_add_epi32(cv, _mm512_mullo_epi32(a0, w0));
+                cv = _mm512_add_epi32(cv, _mm512_mullo_epi32(a1, w1));
+                cv = _mm512_add_epi32(cv, _mm512_mullo_epi32(a2, w2));
+                cv = _mm512_add_epi32(cv, _mm512_mullo_epi32(a3, w3));
+                _mm512_storeu_epi32(cp.add(j), cv);
+                j += 16;
             }
             while j < n {
                 crow[j] += arow[kk] as i32 * *b0.add(j) as i32
@@ -295,17 +297,14 @@ unsafe fn gemm_acc_u8_i16_impl(m: usize, k: usize, n: usize, a: &[u8], b: &[i16]
         }
         while kk < k {
             let cp = crow.as_mut_ptr();
-            let av = _mm256_set1_epi32(arow[kk] as i32);
+            let av = _mm512_set1_epi32(arow[kk] as i32);
             let brow = b.as_ptr().add(kk * n);
             let mut j = 0;
-            while j + 8 <= n {
-                let w = _mm256_cvtepi16_epi32(_mm_loadu_si128(brow.add(j) as *const __m128i));
-                let cv = _mm256_loadu_si256(cp.add(j) as *const __m256i);
-                _mm256_storeu_si256(
-                    cp.add(j) as *mut __m256i,
-                    _mm256_add_epi32(cv, _mm256_mullo_epi32(av, w)),
-                );
-                j += 8;
+            while j + 16 <= n {
+                let w = _mm512_cvtepi16_epi32(_mm256_loadu_si256(brow.add(j) as *const __m256i));
+                let cv = _mm512_loadu_epi32(cp.add(j));
+                _mm512_storeu_epi32(cp.add(j), _mm512_add_epi32(cv, _mm512_mullo_epi32(av, w)));
+                j += 16;
             }
             while j < n {
                 crow[j] += arow[kk] as i32 * *brow.add(j) as i32;
@@ -327,7 +326,7 @@ pub fn gemm_acc_u8_bin_packed(m: usize, k: usize, n: usize, a: &[u8], b: &[u64],
     unsafe { gemm_acc_u8_bin_packed_impl(m, k, n, wpr, a, b, c) }
 }
 
-#[target_feature(enable = "avx2")]
+#[target_feature(enable = "avx512f")]
 unsafe fn gemm_acc_u8_bin_packed_impl(
     m: usize,
     k: usize,
@@ -337,8 +336,6 @@ unsafe fn gemm_acc_u8_bin_packed_impl(
     b: &[u64],
     c: &mut [i32],
 ) {
-    // per-lane bit constants: lane j tests bit j of the broadcast byte
-    let bits = _mm256_setr_epi32(1, 2, 4, 8, 16, 32, 64, 128);
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
@@ -346,7 +343,7 @@ unsafe fn gemm_acc_u8_bin_packed_impl(
             if aik == 0 {
                 continue;
             }
-            let av = _mm256_set1_epi32(aik as i32);
+            let av = _mm512_set1_epi32(aik as i32);
             let brow = &b[kk * wpr..(kk + 1) * wpr];
             for (wi, &word) in brow.iter().enumerate() {
                 if word == 0 {
@@ -354,23 +351,17 @@ unsafe fn gemm_acc_u8_bin_packed_impl(
                 }
                 let o0 = wi * 64;
                 if o0 + 64 <= n {
-                    // full word: 8 bytes × 8 lanes, broadcast-AND-accumulate
+                    // full word: each 16-bit chunk is a native __mmask16 —
+                    // one masked add per 16 outputs, no expand/compare
                     let cp = crow.as_mut_ptr();
-                    for byte in 0..8 {
-                        let bv = ((word >> (8 * byte)) & 0xFF) as i32;
-                        if bv == 0 {
+                    for chunk in 0..4 {
+                        let mask = ((word >> (16 * chunk)) & 0xFFFF) as __mmask16;
+                        if mask == 0 {
                             continue;
                         }
-                        let mask = _mm256_cmpeq_epi32(
-                            _mm256_and_si256(_mm256_set1_epi32(bv), bits),
-                            bits,
-                        );
-                        let j = o0 + 8 * byte;
-                        let cv = _mm256_loadu_si256(cp.add(j) as *const __m256i);
-                        _mm256_storeu_si256(
-                            cp.add(j) as *mut __m256i,
-                            _mm256_add_epi32(cv, _mm256_and_si256(av, mask)),
-                        );
+                        let j = o0 + 16 * chunk;
+                        let cv = _mm512_loadu_epi32(cp.add(j));
+                        _mm512_storeu_epi32(cp.add(j), _mm512_mask_add_epi32(cv, mask, cv, av));
                     }
                 } else {
                     // tail word (n not a multiple of 64): scalar bit walk
@@ -391,17 +382,17 @@ mod tests {
     use super::super::scalar;
     use crate::util::rng::Rng;
 
-    fn have_avx2() -> bool {
-        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+    fn have_avx512() -> bool {
+        is_x86_feature_detected!("avx512f")
     }
 
     #[test]
     fn integer_kernels_bit_identical_to_scalar() {
-        if !have_avx2() {
-            return; // nothing to check on this host; CI x86 runners cover it
+        if !have_avx512() {
+            return; // nothing to check on this host; covered where avx512 exists
         }
-        let mut rng = Rng::new(0xA2);
-        let shapes = [(1, 1, 1), (3, 5, 7), (2, 9, 8), (4, 13, 17), (5, 64, 33), (2, 7, 130)];
+        let mut rng = Rng::new(0xA5);
+        let shapes = [(1, 1, 1), (3, 5, 7), (2, 9, 16), (4, 13, 17), (5, 64, 33), (2, 7, 130)];
         for &(m, k, n) in &shapes {
             let a: Vec<u8> = (0..m * k).map(|_| rng.int_in(0, 15) as u8).collect();
             let w: Vec<i16> = (0..k * n).map(|_| rng.int_in(-7, 7) as i16).collect();
@@ -415,10 +406,10 @@ mod tests {
 
     #[test]
     fn packed_kernel_bit_identical_to_scalar() {
-        if !have_avx2() {
+        if !have_avx512() {
             return;
         }
-        let mut rng = Rng::new(0xB3);
+        let mut rng = Rng::new(0xB5);
         for &(m, k, n) in &[(1, 1, 1), (2, 3, 63), (3, 5, 64), (2, 9, 65), (4, 7, 200)] {
             let a: Vec<u8> = (0..m * k).map(|_| rng.int_in(0, 3) as u8).collect();
             let bin: Vec<u8> = (0..k * n).map(|_| rng.below(2) as u8).collect();
@@ -433,10 +424,10 @@ mod tests {
 
     #[test]
     fn f32_kernels_close_to_scalar() {
-        if !have_avx2() {
+        if !have_avx512() {
             return;
         }
-        let mut rng = Rng::new(0xC4);
+        let mut rng = Rng::new(0xC5);
         for &(m, k, n) in &[(1, 1, 1), (4, 9, 6), (3, 130, 17), (7, 33, 384), (2, 400, 10)] {
             let a: Vec<f32> = (0..m * k).map(|_| rng.normal_in(0.0, 1.0)).collect();
             let b: Vec<f32> = (0..k * n).map(|_| rng.normal_in(0.0, 1.0)).collect();

@@ -1,0 +1,198 @@
+//! Packed-panel blocked f32 GEMM driver (§Perf L3.9).
+//!
+//! The SIMD arms' dense `gemm_acc` no longer streams B straight from the
+//! caller's row-major buffer: the driver here walks C in (NC, KC, MC)
+//! blocks — the classic jc→pc→ic loop nest — and **packs** the current
+//! KC×NC panel of B and MC×KC block of A into contiguous scratch buffers
+//! before handing them to an arm-specific [`TileKernel`].  Packing happens
+//! once per tile: the B panel is reused across every MC block of the
+//! column stripe, and the packed operands stream linearly through the
+//! microkernel regardless of the caller's leading dimensions, so large-k /
+//! large-n shapes (the backward passes) stop thrashing the TLB and L2.
+//!
+//! Panel scratch comes from a **thread-local [`BufPool`] arena** — the
+//! same grown-once discipline as the training-step arena (DESIGN.md
+//! §Arena ownership), so steady-state panel packing performs zero large
+//! allocations (the counting-allocator test in `train::native` pins the
+//! whole armed window, packed panels included).  Worker-pool threads get
+//! their own pool each; workers are never torn down, so the grow-once
+//! phase happens once per thread, not once per call.
+//!
+//! Tile sizes come from [`super::autotune`]: resolved once per process
+//! (deterministic probe, `PIM_QAT_TILE` override, `PIM_QAT_NO_AUTOTUNE`
+//! fixed default) and then fixed, so the block walk depends only on the
+//! shape and the per-process tile triple — the f32 determinism contract
+//! (fixed shape-only tile order, bit-identical run-to-run within a
+//! process) survives unchanged.
+
+use std::cell::RefCell;
+
+use super::autotune::{self, Tile};
+use crate::tensor::arena::BufPool;
+
+/// Arm-specific packed-tile microkernel: accumulate the product of a
+/// packed `mb×kb` A block (`pa`, row-major contiguous) and a packed
+/// `kb×nb` B panel (`pb`, row-major contiguous) into the C block starting
+/// at flat offset `c0` with row stride `ldc` (`c[c0 + ii*ldc + jj] +=`).
+/// Every implementation must assert the slice geometry itself and use a
+/// fixed, shape-only accumulation order.
+pub type TileKernel = fn(
+    mb: usize,
+    kb: usize,
+    nb: usize,
+    pa: &[f32],
+    pb: &[f32],
+    c: &mut [f32],
+    c0: usize,
+    ldc: usize,
+);
+
+thread_local! {
+    /// Per-thread panel arena (grown once per thread, reused forever).
+    static PANELS: RefCell<BufPool> = RefCell::new(BufPool::new());
+}
+
+/// C[m,n] += A[m,k] · B[k,n] through the packed-panel blocked walk, with
+/// the tile triple resolved by the process-wide autotuner.
+pub fn gemm_acc_packed(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    kernel: TileKernel,
+) {
+    let t = autotune::tile_for(kernel);
+    gemm_acc_packed_with(t, m, k, n, a, b, c, kernel);
+}
+
+/// [`gemm_acc_packed`] with an explicit tile triple — the autotune probe
+/// and the per-candidate parity tests call this directly, so tile choice
+/// and the block walk stay independently testable.
+pub fn gemm_acc_packed_with(
+    t: Tile,
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    kernel: TileKernel,
+) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    // Single-block fast path: the whole problem already is one contiguous
+    // packed tile (A is mb×kb row-major, B is kb×nb row-major with
+    // ldc = n = nb), so packing would be a pure copy.  Shape-only branch —
+    // determinism is unaffected.
+    if m <= t.mc && k <= t.kc && n <= t.nc {
+        kernel(m, k, n, a, b, c, 0, n);
+        return;
+    }
+    let (mut pa, mut pb) = PANELS.with(|p| {
+        let mut pool = p.borrow_mut();
+        (pool.take_f32(t.mc * t.kc), pool.take_f32(t.kc * t.nc))
+    });
+    for j0 in (0..n).step_by(t.nc) {
+        let nb = (n - j0).min(t.nc);
+        for k0 in (0..k).step_by(t.kc) {
+            let kb = (k - k0).min(t.kc);
+            // pack the KC×NC panel of B once per (j0, k0) stripe
+            pb.clear();
+            for kk in 0..kb {
+                let row = (k0 + kk) * n + j0;
+                pb.extend_from_slice(&b[row..row + nb]);
+            }
+            for i0 in (0..m).step_by(t.mc) {
+                let mb = (m - i0).min(t.mc);
+                pa.clear();
+                for ii in 0..mb {
+                    let row = (i0 + ii) * k + k0;
+                    pa.extend_from_slice(&a[row..row + kb]);
+                }
+                kernel(mb, kb, nb, &pa, &pb, c, i0 * n + j0, n);
+            }
+        }
+    }
+    PANELS.with(|p| {
+        let mut pool = p.borrow_mut();
+        pool.put_f32(pa);
+        pool.put_f32(pb);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scalar;
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gemm_naive(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive_for_assorted_tiles_and_shapes() {
+        let mut rng = Rng::new(0xB10C);
+        let tiles = [
+            Tile { mc: 2, kc: 3, nc: 5 }, // stress every block tail
+            Tile { mc: 8, kc: 8, nc: 8 },
+            Tile { mc: 64, kc: 64, nc: 256 },
+        ];
+        for t in tiles {
+            for &(m, k, n) in &[(1, 1, 1), (3, 7, 5), (5, 9, 17), (7, 130, 33), (16, 65, 64)] {
+                // integer-valued data keeps f32 sums exact, so any
+                // accumulation order must agree bitwise with naive
+                let a: Vec<f32> = (0..m * k).map(|_| rng.int_in(-7, 7) as f32).collect();
+                let b: Vec<f32> = (0..k * n).map(|_| rng.int_in(-7, 7) as f32).collect();
+                let c0: Vec<f32> = (0..m * n).map(|_| rng.int_in(-3, 3) as f32).collect();
+                let mut cn = c0.clone();
+                let mut cb = c0.clone();
+                gemm_naive(m, k, n, &a, &b, &mut cn);
+                gemm_acc_packed_with(t, m, k, n, &a, &b, &mut cb, scalar::gemm_acc_tile);
+                assert_eq!(cn, cb, "tile {t:?} shape ({m},{k},{n})");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_is_bitwise_stable_under_a_pinned_tile() {
+        let mut rng = Rng::new(0x51AB);
+        let t = Tile { mc: 4, kc: 6, nc: 10 };
+        let (m, k, n) = (9, 31, 23);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_in(0.0, 1.0)).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal_in(0.0, 1.0)).collect();
+        let run = || {
+            let mut c = vec![0.0f32; m * n];
+            gemm_acc_packed_with(t, m, k, n, &a, &b, &mut c, scalar::gemm_acc_tile);
+            c
+        };
+        assert_eq!(run(), run(), "pinned tile must give bit-identical reruns");
+    }
+
+    #[test]
+    fn single_block_fast_path_matches_blocked_walk() {
+        let mut rng = Rng::new(0xFA57);
+        let (m, k, n) = (4, 7, 9);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.int_in(-5, 5) as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.int_in(-5, 5) as f32).collect();
+        let big = Tile { mc: 64, kc: 64, nc: 64 }; // covers the whole problem
+        let small = Tile { mc: 2, kc: 2, nc: 4 };
+        let mut c1 = vec![0.0f32; m * n];
+        let mut c2 = vec![0.0f32; m * n];
+        gemm_acc_packed_with(big, m, k, n, &a, &b, &mut c1, scalar::gemm_acc_tile);
+        gemm_acc_packed_with(small, m, k, n, &a, &b, &mut c2, scalar::gemm_acc_tile);
+        assert_eq!(c1, c2, "integer data: fast path and blocked walk must agree exactly");
+    }
+}

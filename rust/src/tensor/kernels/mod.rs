@@ -1,23 +1,38 @@
-//! Runtime-dispatched GEMM kernel subsystem (§Perf L3.6).
+//! Runtime-dispatched GEMM kernel subsystem (§Perf L3.6, completed in
+//! §Perf L3.9).
 //!
 //! Every plane GEMM and f32 GEMM in the crate goes through one function-
 //! pointer table, resolved **once per process**:
 //!
 //! * [`scalar`] — the portable reference arm, always compiled.  Its integer
 //!   kernels define the bit-exact contract; its f32 kernels are the
-//!   pre-dispatch implementations unchanged.
-//! * [`avx2`] — `std::arch::x86_64` paths (AVX2 + FMA), selected at runtime
-//!   via `is_x86_feature_detected!`.  Compiled only on x86_64; other
-//!   targets fall back to [`scalar`] at compile time.
+//!   pre-dispatch implementations unchanged (the scalar arm never routes
+//!   through the blocked driver, so `PIM_QAT_NO_SIMD=1` outputs stay
+//!   bit-identical across releases).
+//! * `avx512` (`kernels/avx512.rs`) — `std::arch::x86_64` AVX-512 paths
+//!   (16-lane zmm FMA, widening u8×i16→i32, native-`__mmask16` masked
+//!   adds for the bit-packed binary plane), selected at runtime via
+//!   `is_x86_feature_detected!("avx512f")`.  Compiled only on x86_64.
+//! * [`avx2`] — `std::arch::x86_64` paths (AVX2 + FMA), the fallback when
+//!   AVX-512 is absent.  Compiled only on x86_64; other targets fall back
+//!   to [`scalar`] at compile time.
 //! * `neon` (`kernels/neon.rs`) — `std::arch::aarch64` paths for the
-//!   integer plane kernels (u8×i16→i32 and the bit-packed binary plane),
-//!   selected at runtime via `is_aarch64_feature_detected!`.  Compiled
-//!   only on aarch64.
+//!   integer plane kernels (u8×i16→i32 and the bit-packed binary plane)
+//!   *and* the f32 family (4-lane FMA), selected at runtime via
+//!   `is_aarch64_feature_detected!`.  Compiled only on aarch64.
+//!
+//! The SIMD arms' dense f32 `gemm_acc` routes through the packed-panel
+//! **blocked driver** ([`blocked`]) with an arm-specific tile microkernel
+//! (`gemm_acc_tile`); the (MC, KC, NC) tile triple is resolved once per
+//! process by the deterministic startup autotuner ([`autotune`]) —
+//! `PIM_QAT_TILE=MCxKCxNC` pins it, `PIM_QAT_NO_AUTOTUNE=1` forces the
+//! fixed default.
 //!
 //! Selection order: `PIM_QAT_NO_SIMD=1` forces the scalar arm (the CI leg
-//! that keeps the fallback exercised); otherwise the target's SIMD arm
-//! when the CPU has the features (AVX2+FMA on x86_64, NEON on aarch64);
-//! otherwise scalar.
+//! that keeps the fallback exercised); otherwise the best SIMD arm the
+//! CPU has (AVX-512F, else AVX2+FMA, on x86_64; NEON on aarch64);
+//! otherwise scalar.  Selecting a SIMD arm also warms the autotuner so
+//! the probe cost lands at startup, not inside the first training step.
 //!
 //! ## Exactness contract (DESIGN.md §Kernel dispatch)
 //!
@@ -37,10 +52,15 @@
 //! want a plain product), and every arm asserts the slice geometry itself,
 //! so each entry is independently sound.
 
+pub mod autotune;
+pub mod blocked;
 pub mod scalar;
 
 #[cfg(target_arch = "x86_64")]
 pub mod avx2;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx512;
 
 #[cfg(target_arch = "aarch64")]
 pub mod neon;
@@ -50,10 +70,15 @@ use std::sync::OnceLock;
 /// The dispatched kernel set.  One static instance per arm; `active()`
 /// returns the arm selected for this process.
 pub struct KernelTable {
-    /// Arm name ("scalar", "avx2", "neon") — surfaced by benches and tests.
+    /// Arm name ("scalar", "avx2", "avx512", "neon") — surfaced by benches
+    /// and tests.
     pub name: &'static str,
-    /// C[m,n] += A[m,k] · B[k,n], dense f32 (row-major).
+    /// C[m,n] += A[m,k] · B[k,n], dense f32 (row-major).  SIMD arms route
+    /// this through the packed-panel blocked driver.
     pub gemm_acc: fn(usize, usize, usize, &[f32], &[f32], &mut [f32]),
+    /// Packed-tile microkernel consumed by `blocked::gemm_acc_packed` (and
+    /// by the autotune probe, which times it under each tile candidate).
+    pub gemm_acc_tile: blocked::TileKernel,
     /// C[m,n] += A[m,p] · B[n,p]ᵀ, f32 (dot-product form).
     pub gemm_nt_acc: fn(usize, usize, usize, &[f32], &[f32], &mut [f32]),
     /// C[m,n] += A[p,m]ᵀ · B[p,n], f32 (zero-skip on A).
@@ -83,17 +108,25 @@ fn no_simd_forced() -> bool {
 
 fn select() -> &'static KernelTable {
     if no_simd_forced() {
+        // scalar never consults the tile triple, so the NO_SIMD leg also
+        // skips the autotune probe entirely
         return &scalar::TABLE;
     }
     #[cfg(target_arch = "x86_64")]
     {
+        if is_x86_feature_detected!("avx512f") {
+            autotune::warm(&avx512::TABLE);
+            return &avx512::TABLE;
+        }
         if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            autotune::warm(&avx2::TABLE);
             return &avx2::TABLE;
         }
     }
     #[cfg(target_arch = "aarch64")]
     {
         if std::arch::is_aarch64_feature_detected!("neon") {
+            autotune::warm(&neon::TABLE);
             return &neon::TABLE;
         }
     }
@@ -109,7 +142,8 @@ mod tests {
         let t1 = active();
         let t2 = active();
         assert!(std::ptr::eq(t1, t2), "OnceLock must hand out one table");
-        assert!(t1.name == "scalar" || t1.name == "avx2" || t1.name == "neon");
+        let known = ["scalar", "avx2", "avx512", "neon"];
+        assert!(known.contains(&t1.name), "unknown arm {:?}", t1.name);
     }
 
     #[test]

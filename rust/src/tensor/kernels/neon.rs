@@ -3,16 +3,22 @@
 //! target Rust ships, but the runtime check keeps the selection honest and
 //! mirrors the AVX2 arm's discipline).
 //!
-//! Scope (the L3.7 satellite): the **integer plane kernels** — u8×i16→i32
-//! and the bit-packed binary-plane kernel — which carry the PIM engine's
-//! hot loops.  Both compute exact i32 sums, so they are **bit-identical to
-//! the scalar arm** on every shape; k/n tails that are not multiples of
-//! the vector width run the same scalar tail code.  Pinned by the existing
-//! odd-shape property sweep in `tests/engine_parity.rs` (which compares
-//! the dispatched arm against scalar — on aarch64 that *is* this arm).
-//! The f32 entries and the legacy u8 binary plane stay scalar: the f32
-//! family is bandwidth-bound on the small-model shapes this repo runs, so
-//! a NEON arm there is a measured follow-up, not a freebie.
+//! The **integer plane kernels** (the L3.7 satellite) — u8×i16→i32 and
+//! the bit-packed binary-plane kernel — carry the PIM engine's hot loops.
+//! Both compute exact i32 sums, so they are **bit-identical to the scalar
+//! arm** on every shape; k/n tails that are not multiples of the vector
+//! width run the same scalar tail code.  Pinned by the odd-shape property
+//! sweep in `tests/engine_parity.rs` (which compares the dispatched arm
+//! against scalar — on aarch64 that *is* this arm).
+//!
+//! The **f32 family** (added in L3.9) uses 4-lane FMA with a fixed
+//! (shape-only) tile order — the packed-panel blocked walk of
+//! `kernels::blocked` for `gemm_acc` (autotuned per-process tile triple,
+//! then fixed), 4-lane partial sums reduced by `vaddvq_f32` for
+//! `gemm_nt_acc`, zero-skip axpy for `gemm_tn_acc` — so outputs are
+//! deterministic run-to-run and differ from scalar only by summation
+//! order (1e-3 absolute tolerance on unit-scale data).  Only the legacy
+//! u8 binary plane still delegates to scalar.
 //!
 //! * `gemm_acc_u8_i16` — widening multiply-accumulate: the u8 activation
 //!   (≤ 255, so it fits i16 exactly) broadcasts as the scalar operand of
@@ -36,10 +42,10 @@ use super::KernelTable;
 /// The NEON kernel table.  Only select this after feature detection.
 pub static TABLE: KernelTable = KernelTable {
     name: "neon",
-    // f32 kernels stay scalar (see module docs)
-    gemm_acc: super::scalar::gemm_acc,
-    gemm_nt_acc: super::scalar::gemm_nt_acc,
-    gemm_tn_acc: super::scalar::gemm_tn_acc,
+    gemm_acc,
+    gemm_acc_tile,
+    gemm_nt_acc,
+    gemm_tn_acc,
     gemm_acc_u8_i16,
     // the one-weight-per-u8 binary layout survives only as the
     // reference/compat surface; the engine runs the packed kernel below
@@ -56,6 +62,168 @@ fn check_features() {
         std::arch::is_aarch64_feature_detected!("neon"),
         "neon kernel table used without NEON"
     );
+}
+
+// -- f32 dense: C += A·B (packed-panel blocked) -----------------------------
+
+/// Dense f32 GEMM routes through the packed-panel blocked driver
+/// (`kernels::blocked`, §Perf L3.9): the driver packs MC×KC / KC×NC
+/// panels into arena scratch and hands them to [`gemm_acc_tile`].
+pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    check_features();
+    super::blocked::gemm_acc_packed(m, k, n, a, b, c, gemm_acc_tile);
+}
+
+/// Packed-tile microkernel: `pa[mb,kb] · pb[kb,nb]` accumulated into the
+/// C block at flat offset `c0`, row stride `ldc`.  4-lane FMA
+/// (`vfmaq_n_f32`) over the contiguous packed B rows, 4-wide k register
+/// blocking, scalar j tail — a fixed shape-only order.
+pub fn gemm_acc_tile(
+    mb: usize,
+    kb: usize,
+    nb: usize,
+    pa: &[f32],
+    pb: &[f32],
+    c: &mut [f32],
+    c0: usize,
+    ldc: usize,
+) {
+    assert_eq!(pa.len(), mb * kb);
+    assert_eq!(pb.len(), kb * nb);
+    assert!(nb <= ldc);
+    if mb == 0 || nb == 0 {
+        return;
+    }
+    assert!(c0 + (mb - 1) * ldc + nb <= c.len());
+    check_features();
+    unsafe { gemm_acc_tile_impl(mb, kb, nb, pa, pb, c, c0, ldc) }
+}
+
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn gemm_acc_tile_impl(
+    mb: usize,
+    kb: usize,
+    nb: usize,
+    pa: &[f32],
+    pb: &[f32],
+    c: &mut [f32],
+    c0: usize,
+    ldc: usize,
+) {
+    for ii in 0..mb {
+        let arow = &pa[ii * kb..(ii + 1) * kb];
+        let cp = c.as_mut_ptr().add(c0 + ii * ldc);
+        let mut kk = 0;
+        while kk + 4 <= kb {
+            let a0 = arow[kk];
+            let a1 = arow[kk + 1];
+            let a2 = arow[kk + 2];
+            let a3 = arow[kk + 3];
+            let b0 = pb.as_ptr().add(kk * nb);
+            let b1 = pb.as_ptr().add((kk + 1) * nb);
+            let b2 = pb.as_ptr().add((kk + 2) * nb);
+            let b3 = pb.as_ptr().add((kk + 3) * nb);
+            let mut j = 0;
+            while j + 4 <= nb {
+                let mut cv = vld1q_f32(cp.add(j));
+                cv = vfmaq_n_f32(cv, vld1q_f32(b0.add(j)), a0);
+                cv = vfmaq_n_f32(cv, vld1q_f32(b1.add(j)), a1);
+                cv = vfmaq_n_f32(cv, vld1q_f32(b2.add(j)), a2);
+                cv = vfmaq_n_f32(cv, vld1q_f32(b3.add(j)), a3);
+                vst1q_f32(cp.add(j), cv);
+                j += 4;
+            }
+            while j < nb {
+                *cp.add(j) += a0 * *b0.add(j) + a1 * *b1.add(j) + a2 * *b2.add(j) + a3 * *b3.add(j);
+                j += 1;
+            }
+            kk += 4;
+        }
+        while kk < kb {
+            let av = arow[kk];
+            let brow = pb.as_ptr().add(kk * nb);
+            let mut j = 0;
+            while j + 4 <= nb {
+                let cv = vld1q_f32(cp.add(j));
+                vst1q_f32(cp.add(j), vfmaq_n_f32(cv, vld1q_f32(brow.add(j)), av));
+                j += 4;
+            }
+            while j < nb {
+                *cp.add(j) += av * *brow.add(j);
+                j += 1;
+            }
+            kk += 1;
+        }
+    }
+}
+
+// -- f32 A·Bᵀ: dot-product rows ---------------------------------------------
+
+pub fn gemm_nt_acc(m: usize, p: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), m * p);
+    assert_eq!(b.len(), n * p);
+    assert_eq!(c.len(), m * n);
+    check_features();
+    unsafe { gemm_nt_acc_impl(m, p, n, a, b, c) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn gemm_nt_acc_impl(m: usize, p: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    for i in 0..m {
+        let arow = a.as_ptr().add(i * p);
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = b.as_ptr().add(j * p);
+            let mut acc = vdupq_n_f32(0.0);
+            let mut q = 0;
+            while q + 4 <= p {
+                acc = vfmaq_f32(acc, vld1q_f32(arow.add(q)), vld1q_f32(brow.add(q)));
+                q += 4;
+            }
+            // vaddvq_f32 reduces in a fixed lane order — deterministic
+            let mut s = vaddvq_f32(acc);
+            while q < p {
+                s += *arow.add(q) * *brow.add(q);
+                q += 1;
+            }
+            crow[j] += s;
+        }
+    }
+}
+
+// -- f32 Aᵀ·B: zero-skip axpy rows ------------------------------------------
+
+pub fn gemm_tn_acc(p: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    assert_eq!(a.len(), p * m);
+    assert_eq!(b.len(), p * n);
+    assert_eq!(c.len(), m * n);
+    check_features();
+    unsafe { gemm_tn_acc_impl(p, m, n, a, b, c) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn gemm_tn_acc_impl(p: usize, m: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32]) {
+    for q in 0..p {
+        let arow = &a[q * m..(q + 1) * m];
+        let brow = b.as_ptr().add(q * n);
+        for (i, &aq) in arow.iter().enumerate() {
+            if aq == 0.0 {
+                continue;
+            }
+            let cp = c.as_mut_ptr().add(i * n);
+            let mut j = 0;
+            while j + 4 <= n {
+                let cv = vld1q_f32(cp.add(j));
+                vst1q_f32(cp.add(j), vfmaq_n_f32(cv, vld1q_f32(brow.add(j)), aq));
+                j += 4;
+            }
+            while j < n {
+                *cp.add(j) += aq * *brow.add(j);
+                j += 1;
+            }
+        }
+    }
 }
 
 // -- u8 × i16 → i32 plane kernel --------------------------------------------
@@ -198,6 +366,46 @@ mod tests {
             scalar::gemm_acc_u8_i16(m, k, n, &a, &w, &mut c1);
             super::gemm_acc_u8_i16(m, k, n, &a, &w, &mut c2);
             assert_eq!(c1, c2, "u8i16 ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn f32_kernels_close_to_scalar() {
+        if !have_neon() {
+            return;
+        }
+        let mut rng = Rng::new(0xC6);
+        for &(m, k, n) in &[(1, 1, 1), (4, 9, 6), (3, 130, 17), (7, 33, 384), (2, 400, 10)] {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal_in(0.0, 1.0)).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal_in(0.0, 1.0)).collect();
+            let mut c1 = vec![0.0f32; m * n];
+            let mut c2 = vec![0.0f32; m * n];
+            scalar::gemm_acc(m, k, n, &a, &b, &mut c1);
+            super::gemm_acc(m, k, n, &a, &b, &mut c2);
+            for (x, y) in c1.iter().zip(&c2) {
+                assert!((x - y).abs() < 1e-3, "acc ({m},{k},{n}): {x} vs {y}");
+            }
+            // nt: b as [n, k]ᵀ operand
+            let bt: Vec<f32> = (0..n * k).map(|_| rng.normal_in(0.0, 1.0)).collect();
+            let mut c3 = vec![0.0f32; m * n];
+            let mut c4 = vec![0.0f32; m * n];
+            scalar::gemm_nt_acc(m, k, n, &a, &bt, &mut c3);
+            super::gemm_nt_acc(m, k, n, &a, &bt, &mut c4);
+            for (x, y) in c3.iter().zip(&c4) {
+                assert!((x - y).abs() < 1e-3, "nt ({m},{k},{n}): {x} vs {y}");
+            }
+            // tn: a as [k, m] operand (zero-skip path)
+            let a2: Vec<f32> = (0..k * m)
+                .map(|_| if rng.below(3) == 0 { 0.0 } else { rng.normal_in(0.0, 1.0) })
+                .collect();
+            let b2: Vec<f32> = (0..k * n).map(|_| rng.normal_in(0.0, 1.0)).collect();
+            let mut c5 = vec![0.0f32; m * n];
+            let mut c6 = vec![0.0f32; m * n];
+            scalar::gemm_tn_acc(k, m, n, &a2, &b2, &mut c5);
+            super::gemm_tn_acc(k, m, n, &a2, &b2, &mut c6);
+            for (x, y) in c5.iter().zip(&c6) {
+                assert!((x - y).abs() < 1e-3, "tn ({k},{m},{n}): {x} vs {y}");
+            }
         }
     }
 

@@ -6,10 +6,14 @@
 
 use super::KernelTable;
 
-/// The scalar kernel table.
+/// The scalar kernel table.  Note `gemm_acc` here is the direct (non-
+/// blocked) walk: the scalar arm never routes through the packed-panel
+/// driver, which keeps `PIM_QAT_NO_SIMD=1` outputs bit-identical across
+/// releases (the cross-host / checkpoint-compat contract).
 pub static TABLE: KernelTable = KernelTable {
     name: "scalar",
     gemm_acc,
+    gemm_acc_tile,
     gemm_nt_acc,
     gemm_tn_acc,
     gemm_acc_u8_i16,
@@ -45,6 +49,57 @@ pub fn gemm_acc(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], c: &mut [f32
             let aik = arow[kk];
             let brow = &b[kk * n..kk * n + n];
             for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+            kk += 1;
+        }
+    }
+}
+
+/// Packed-tile microkernel for the blocked driver (`kernels::blocked`):
+/// accumulate `pa[mb,kb] · pb[kb,nb]` into the C block at flat offset
+/// `c0` with row stride `ldc`.  Same 4-wide k register blocking as
+/// [`gemm_acc`]; the reference [`TileKernel`](super::blocked::TileKernel)
+/// the per-candidate parity tests compare SIMD tile kernels against.
+pub fn gemm_acc_tile(
+    mb: usize,
+    kb: usize,
+    nb: usize,
+    pa: &[f32],
+    pb: &[f32],
+    c: &mut [f32],
+    c0: usize,
+    ldc: usize,
+) {
+    assert_eq!(pa.len(), mb * kb);
+    assert_eq!(pb.len(), kb * nb);
+    assert!(nb <= ldc);
+    if mb == 0 || nb == 0 {
+        return;
+    }
+    assert!(c0 + (mb - 1) * ldc + nb <= c.len());
+    for ii in 0..mb {
+        let arow = &pa[ii * kb..(ii + 1) * kb];
+        let crow = &mut c[c0 + ii * ldc..c0 + ii * ldc + nb];
+        let mut kk = 0;
+        while kk + 4 <= kb {
+            let a0 = arow[kk];
+            let a1 = arow[kk + 1];
+            let a2 = arow[kk + 2];
+            let a3 = arow[kk + 3];
+            let b0 = &pb[kk * nb..kk * nb + nb];
+            let b1 = &pb[(kk + 1) * nb..(kk + 1) * nb + nb];
+            let b2 = &pb[(kk + 2) * nb..(kk + 2) * nb + nb];
+            let b3 = &pb[(kk + 3) * nb..(kk + 3) * nb + nb];
+            for j in 0..nb {
+                crow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+            kk += 4;
+        }
+        while kk < kb {
+            let aik = arow[kk];
+            let brow = &pb[kk * nb..kk * nb + nb];
+            for j in 0..nb {
                 crow[j] += aik * brow[j];
             }
             kk += 1;

@@ -1413,7 +1413,13 @@ mod tests {
         // BN/activation maps are 32·8·8·4 floats = 32 KiB, the quantized
         // input copy 24 KiB) while weight-scale temporaries stay ≤ ~9 KiB
         // — so 16 KiB now pins the WHOLE armed window: batch acquisition,
-        // patch buffers AND the L3.7 pooled feature-map intermediates.
+        // patch buffers, the L3.7 pooled feature-map intermediates AND the
+        // L3.9 packed GEMM panels (the blocked driver's per-thread panel
+        // arena: an MC×KC A block alone is ≥ 16 KiB at the default tile,
+        // and the micro geometry has k > KC, so the armed step walks the
+        // real packing path — a per-call panel allocation would trip this).
+        // The autotune probe and the panel-arena grow both happen during
+        // the warmup steps below (the probe at the first dispatched call).
         let mut m = micro_manifest();
         m.batch = 32;
         let job = micro_job(Mode::Ours, 3);

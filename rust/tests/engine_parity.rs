@@ -12,7 +12,7 @@ use pim_qat::chip::{ChipModel, Converter, FaultModel, FaultProfile};
 use pim_qat::config::Scheme;
 use pim_qat::pim::layout::{pack_bin_plane, plan_groups};
 use pim_qat::pim::{plane_full_scale, PimEngine, QuantBits};
-use pim_qat::tensor::kernels::{self, scalar};
+use pim_qat::tensor::kernels::{self, autotune, blocked, scalar};
 use pim_qat::tensor::Tensor;
 use pim_qat::util::rng::Rng;
 
@@ -332,7 +332,8 @@ fn fault_profile_json_roundtrip_reproduces_engine_bitwise() {
 }
 
 /// Shape sweep for the kernel-parity property tests: primes, powers of
-/// two, and every tail class around the 8-lane and 64-bit widths.
+/// two, and every tail class around the 4/8/16-lane SIMD widths (NEON /
+/// AVX2 / AVX-512) and the 64-bit packed-word width.
 const ODD_SHAPES: &[(usize, usize, usize)] = &[
     (1, 1, 1),
     (1, 1, 7),
@@ -350,14 +351,17 @@ const ODD_SHAPES: &[(usize, usize, usize)] = &[
     (6, 144, 32),
     (4, 72, 12),
     (2, 9, 129),
+    (1, 3, 47),
+    (3, 6, 48),
 ];
 
 /// The L3.6 exactness contract: every integer kernel arm is bit-identical
 /// to the scalar reference on every shape — k/n tails that are not
-/// multiples of the SIMD width included.  On hosts without AVX2 the
-/// dispatched arm *is* scalar and this passes trivially; the CI x86_64
-/// runners exercise the real comparison, and the `PIM_QAT_NO_SIMD=1` test
-/// leg pins the forced-scalar path.
+/// multiples of the SIMD width included.  The dispatched arm here is
+/// whatever `select()` picked (avx512 ≻ avx2 on x86_64, neon on aarch64);
+/// on hosts without SIMD it *is* scalar and this passes trivially.  The
+/// CI runners exercise the real comparison, and the `PIM_QAT_NO_SIMD=1`
+/// test leg pins the forced-scalar path.
 #[test]
 fn integer_kernel_arms_bit_identical_to_scalar_on_odd_shapes() {
     let active = kernels::active();
@@ -435,6 +439,55 @@ fn f32_kernel_arms_match_scalar_within_tolerance() {
         (active.gemm_tn_acc)(k, m, n, &a2, &b2, &mut cd);
         for (x, y) in cs.iter().zip(&cd) {
             assert!((x - y).abs() < 1e-3, "gemm_tn ({k},{m},{n}): {x} vs {y}");
+        }
+    }
+}
+
+/// L3.9: the packed-panel blocked driver, driven by the dispatched arm's
+/// tile microkernel, must hold the f32 contract under **every** autotune
+/// tile candidate — within 1e-3 of scalar on unit-scale data, and bitwise
+/// rerun-stable once the tile is pinned (the `PIM_QAT_TILE` guarantee;
+/// `gemm_acc_packed_with` is exactly the pinned-tile path).
+#[test]
+fn blocked_f32_holds_contract_for_every_autotune_candidate() {
+    let active = kernels::active();
+    let mut rng = Rng::new(0x7115);
+    for &t in autotune::CANDIDATES {
+        for &(m, k, n) in ODD_SHAPES {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal_in(0.0, 1.0)).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal_in(0.0, 1.0)).collect();
+            let mut cs = vec![0.0f32; m * n];
+            (scalar::TABLE.gemm_acc)(m, k, n, &a, &b, &mut cs);
+            let mut cb = vec![0.0f32; m * n];
+            blocked::gemm_acc_packed_with(t, m, k, n, &a, &b, &mut cb, active.gemm_acc_tile);
+            for (x, y) in cs.iter().zip(&cb) {
+                assert!((x - y).abs() < 1e-3, "tile {t:?} ({m},{k},{n}): {x} vs {y}");
+            }
+            let mut cb2 = vec![0.0f32; m * n];
+            blocked::gemm_acc_packed_with(t, m, k, n, &a, &b, &mut cb2, active.gemm_acc_tile);
+            assert_eq!(cb, cb2, "tile {t:?} ({m},{k},{n}) must be bitwise rerun-stable");
+        }
+    }
+}
+
+/// Integer-valued f32 data keeps every product and partial sum exactly
+/// representable, so the blocked walk must agree with scalar **bitwise**
+/// for every arm and every tile candidate — this pins the block/pack
+/// bookkeeping itself (offsets, tails, panel reuse), with no tolerance to
+/// hide an indexing bug behind.
+#[test]
+fn blocked_f32_bitwise_exact_on_integer_data_for_every_candidate() {
+    let active = kernels::active();
+    let mut rng = Rng::new(0x1B17);
+    for &t in autotune::CANDIDATES {
+        for &(m, k, n) in ODD_SHAPES {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.int_in(-7, 7) as f32).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.int_in(-7, 7) as f32).collect();
+            let mut cs = vec![0.0f32; m * n];
+            (scalar::TABLE.gemm_acc)(m, k, n, &a, &b, &mut cs);
+            let mut cb = vec![0.0f32; m * n];
+            blocked::gemm_acc_packed_with(t, m, k, n, &a, &b, &mut cb, active.gemm_acc_tile);
+            assert_eq!(cs, cb, "tile {t:?} ({m},{k},{n}) arm {}", active.name);
         }
     }
 }
