@@ -1,0 +1,80 @@
+//! Bench: data-parallel training scaling (§Perf L3.10).  One global step
+//! of the in-process data-parallel driver — N replica trainers, each
+//! running one microbatch (fwd + bwd) against its own shard stream, a
+//! fixed-order tree all-reduce over the gradient bus, a single optimizer
+//! apply and in-place weight broadcast — at N ∈ {1, 2, 4}.
+//!
+//! Work per iteration is `N * batch` samples, so the reported throughput
+//! column is directly comparable across N: ideal scaling holds
+//! `ns_per_iter` flat while samples/s grows Nx.  The run prints the
+//! scaling-efficiency curve (`t_1 / t_N`, the fraction of ideal) recorded
+//! in EXPERIMENTS.md §Perf L3.10.
+//!
+//! Emits `BENCH_train_parallel.json`; CI gates it against
+//! `baselines/BENCH_train_parallel.json` via `bench_check`.  Set
+//! `PIM_QAT_BENCH_QUICK=1` for a fast smoke run.
+
+use pim_qat::config::{JobConfig, Mode, Scheme};
+use pim_qat::data::synth;
+use pim_qat::runtime::Manifest;
+use pim_qat::train::{with_parallel, ParallelCfg};
+use pim_qat::util::bench::{save_json, Bencher};
+
+fn main() {
+    let b = if std::env::var_os("PIM_QAT_BENCH_QUICK").is_some() {
+        Bencher::quick()
+    } else {
+        Bencher::default()
+    };
+    let manifest = Manifest::builtin();
+    let bs = manifest.batch;
+    let job = JobConfig {
+        model: "tiny".into(),
+        mode: Mode::Ours,
+        scheme: Scheme::BitSerial,
+        unit_channels: 8,
+        b_pim_train: 7,
+        ..Default::default()
+    };
+    // big enough that every shard stream sees several epochs without the
+    // reshuffle dominating, small enough to stay cache-resident
+    let ds = synth::generate(16, 10, (4 * bs).max(256), 1);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("data-parallel train step, tiny model, batch {bs} per replica, {cores} cores");
+
+    let mut all = Vec::new();
+    let mut ns_at = Vec::new();
+    for replicas in [1usize, 2, 4] {
+        let label = format!("dp/bit_serial_b7/replicas{replicas}");
+        let pcfg = ParallelCfg::new(replicas);
+        let stats = with_parallel(&manifest, &job, &ds, &pcfg, |pt| {
+            b.run(&label, Some((replicas * bs) as f64), || {
+                std::hint::black_box(pt.step(0.05).unwrap());
+            })
+        })
+        .unwrap();
+        println!("{}", stats.report());
+        ns_at.push((replicas, stats.mean_ns));
+        all.push(stats);
+    }
+
+    // scaling efficiency: ideal data parallelism does N x the work in the
+    // same wall time, so eff(N) = t_1 / t_N
+    if let Some(&(_, t1)) = ns_at.first() {
+        println!("scaling efficiency vs 1 replica (ideal 100%):");
+        for &(n, tn) in &ns_at {
+            let eff = if tn > 0.0 { t1 / tn } else { 0.0 };
+            println!(
+                "  replicas {n}: {:.2}x sample throughput vs serial (ideal {n}x), efficiency {:.0}%",
+                n as f64 * eff,
+                100.0 * eff
+            );
+        }
+    }
+
+    let path = std::path::Path::new("BENCH_train_parallel.json");
+    match save_json(path, &all) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

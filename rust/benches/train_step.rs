@@ -80,7 +80,16 @@ fn main() {
             ..Default::default()
         };
         let mut trainer = NativeTrainer::new(&manifest, &job).unwrap();
-        let cfg = LoaderCfg { batch: bs, augment: true, flip: false, seed: 7, prefetch, shards: 0 };
+        let cfg = LoaderCfg {
+            batch: bs,
+            augment: true,
+            flip: false,
+            seed: 7,
+            prefetch,
+            shards: 0,
+            stream_stride: 1,
+            stream_offset: 0,
+        };
         let mut rng = Rng::new(2);
         let stats = with_loader(&ds, cfg, |loader| {
             b.run(label, Some(bs as f64), || {

@@ -14,6 +14,13 @@
 //! actually uses), the figure needed to tighten carried-over
 //! seeded-estimate baselines from a real CI `BENCH-records` artifact with
 //! informed margins.
+//!
+//! `bench_check --emit-baseline <current.json> <out.json>` writes a
+//! *suggested* committed baseline from a fresh measurement: every case's
+//! `ns_per_iter` ceiling set to 1.2x the measured figure, tagged
+//! `"provenance": "ci-measured"`.  CI uploads these next to the raw
+//! `BENCH-records` artifact; refreshing a baseline is then a reviewed
+//! copy into `rust/baselines/`, never a hand-typed number.
 
 use std::process::exit;
 
@@ -72,13 +79,65 @@ fn report(baseline: &str, current: &str) {
     );
 }
 
+/// `--emit-baseline`: write a suggested committed baseline from a fresh
+/// measurement — 1.2x ceilings, `"provenance": "ci-measured"`.
+fn emit_baseline(current: &str, out: &str) {
+    const MARGIN: f64 = 1.2;
+    let cur_cases = cases(&load(current));
+    if cur_cases.is_empty() {
+        eprintln!("bench_check: no bench cases in {current}");
+        exit(2);
+    }
+    let benches: Vec<Json> = cur_cases
+        .iter()
+        .map(|(name, ns)| {
+            let ceil = (ns * MARGIN).ceil();
+            Json::obj(vec![
+                ("name", Json::str(name)),
+                ("iters", Json::num(0.0)),
+                ("ns_per_iter", Json::num(ceil)),
+                ("median_ns", Json::num(ceil)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        (
+            "note",
+            Json::str(&format!(
+                "Suggested committed baseline emitted by `bench_check --emit-baseline` \
+                 from {current}: ns_per_iter ceilings at {MARGIN}x the quick-mode figures \
+                 measured on this run. Review on a healthy commit, then copy into \
+                 rust/baselines/ — see ROADMAP.md, bench-baseline convention."
+            )),
+        ),
+        ("provenance", Json::str("ci-measured")),
+        ("benches", Json::Arr(benches)),
+    ]);
+    if let Err(e) = std::fs::write(out, format!("{doc}\n")) {
+        eprintln!("bench_check: cannot write {out}: {e}");
+        exit(2);
+    }
+    println!(
+        "bench_check: wrote suggested baseline ({} case(s), {MARGIN}x margin) to {out}",
+        cur_cases.len()
+    );
+}
+
 fn main() {
     let mut args: Vec<String> = std::env::args().collect();
     let report_mode = args.iter().any(|a| a == "--report");
-    args.retain(|a| a != "--report");
-    if args.len() < 3 {
-        eprintln!("usage: bench_check [--report] <baseline.json> <current.json> [max_ratio]");
+    let emit_mode = args.iter().any(|a| a == "--emit-baseline");
+    args.retain(|a| a != "--report" && a != "--emit-baseline");
+    if args.len() < 3 || (report_mode && emit_mode) {
+        eprintln!(
+            "usage: bench_check [--report] <baseline.json> <current.json> [max_ratio]\n\
+                    bench_check --emit-baseline <current.json> <out.json>"
+        );
         exit(2);
+    }
+    if emit_mode {
+        emit_baseline(&args[1], &args[2]);
+        return;
     }
     if report_mode {
         report(&args[1], &args[2]);

@@ -99,6 +99,17 @@ pub struct LoaderCfg {
     /// Worker shards per batch assembly; 0 = auto (sized like the other
     /// threaded ops, tiny workloads assemble in one piece).
     pub shards: usize,
+    /// Shard-stream partition (data-parallel training, §Perf L3.10): of
+    /// the *global* batch stream, this loader materializes only batches
+    /// `g` with `g % stream_stride == stream_offset`, while advancing the
+    /// shared shuffle/epoch bookkeeping through **every** batch.  All
+    /// loaders built with the same seed therefore observe the same global
+    /// epoch order and partition it disjointly — every dataset index is
+    /// seen exactly once per epoch across the shard set, for any stride.
+    /// `(1, 0)` (the default) is the unsharded stream.
+    pub stream_stride: usize,
+    /// This loader's shard slot in `0..stream_stride`.
+    pub stream_offset: usize,
 }
 
 impl LoaderCfg {
@@ -112,7 +123,18 @@ impl LoaderCfg {
             seed,
             prefetch: prefetch_from_env(),
             shards: 0,
+            stream_stride: 1,
+            stream_offset: 0,
         }
+    }
+
+    /// This configuration rebound to shard slot `offset` of a
+    /// `stride`-way data-parallel partition of the global batch stream
+    /// (see [`LoaderCfg::stream_stride`]).
+    pub fn sharded(mut self, offset: usize, stride: usize) -> LoaderCfg {
+        self.stream_stride = stride;
+        self.stream_offset = offset;
+        self
     }
 }
 
@@ -145,6 +167,10 @@ pub struct BatchLoader<'ds> {
     order: Vec<usize>,
     pos: usize,
     epoch: u64,
+    /// Next **global** batch to be drawn from the shuffle stream (counts
+    /// skipped-over batches of other shards; equals the local submit
+    /// counter only at stride 1).  This is the positional fill key.
+    gstep: u64,
     /// Per-sample element count (H·W·C).
     sample: usize,
     slots: Vec<Slot>,
@@ -182,6 +208,13 @@ impl<'ds> BatchLoader<'ds> {
         if cfg.batch == 0 {
             return Err(anyhow!("batch size 0"));
         }
+        if cfg.stream_stride == 0 || cfg.stream_offset >= cfg.stream_stride {
+            return Err(anyhow!(
+                "shard stream offset {} out of range for stride {}",
+                cfg.stream_offset,
+                cfg.stream_stride
+            ));
+        }
         if ds.len() < cfg.batch {
             return Err(anyhow!("dataset smaller than one batch"));
         }
@@ -210,6 +243,7 @@ impl<'ds> BatchLoader<'ds> {
             order,
             pos: 0,
             epoch: 0,
+            gstep: 0,
             sample: h * w * c,
             slots,
             next_submit: 0,
@@ -236,38 +270,68 @@ impl<'ds> BatchLoader<'ds> {
         Ok((&buf.x, buf.y.as_slice()))
     }
 
-    /// Epochs completed so far (diagnostics / tests).
+    /// Global epochs completed so far (diagnostics / tests).  Advances
+    /// with the *global* batch stream, including batches this shard
+    /// skipped over.
     pub fn epoch(&self) -> u64 {
         self.epoch
     }
 
-    /// Draw the next batch's indices (sequential shuffle stream — caller
-    /// thread, step order) and stage them into the slot.
-    fn draw_indices(&mut self, si: usize) {
+    /// Dataset indices of the most recently acquired batch (shard-coverage
+    /// tests / diagnostics).  Valid until the next `&mut self` call, like
+    /// the batch borrow itself; meaningless before the first
+    /// [`BatchLoader::next`].
+    pub fn last_batch_indices(&self) -> &[usize] {
+        let si = (self.next_take.wrapping_sub(1) % self.slots.len() as u64) as usize;
+        &self.slots[si].buf.idx
+    }
+
+    /// Advance the shared shuffle/epoch stream by one global batch
+    /// (sequential shuffle stream — caller thread, global step order),
+    /// returning the drawn range's start within `order`.
+    fn advance_stream(&mut self) -> usize {
         if self.pos + self.cfg.batch > self.order.len() {
             self.epoch += 1;
             self.shuffle.shuffle(&mut self.order);
             self.pos = 0;
         }
-        let buf = &mut *self.slots[si].buf;
-        buf.idx.clear();
-        buf.idx.extend_from_slice(&self.order[self.pos..self.pos + self.cfg.batch]);
         self.pos += self.cfg.batch;
-        buf.y.clear();
-        buf.y.extend(buf.idx.iter().map(|&i| self.ds.labels[i]));
+        self.pos - self.cfg.batch
     }
 
-    /// Submit (or, serial mode, run) the assembly of step `next_submit`
-    /// into its slot.
+    /// Draw this shard's next batch: advance the global stream past the
+    /// batches owned by other shards, draw the one owned by this shard,
+    /// and stage its indices into the slot.  Returns the batch's global
+    /// step — the positional key `fill_samples` must be given so a
+    /// sample's augmentation is independent of the shard partition.
+    fn draw_indices(&mut self, si: usize) -> u64 {
+        let (stride, offset) = (self.cfg.stream_stride as u64, self.cfg.stream_offset as u64);
+        while self.gstep % stride != offset {
+            self.advance_stream();
+            self.gstep += 1;
+        }
+        let start = self.advance_stream();
+        let g = self.gstep;
+        self.gstep += 1;
+        let buf = &mut *self.slots[si].buf;
+        buf.idx.clear();
+        buf.idx.extend_from_slice(&self.order[start..start + self.cfg.batch]);
+        buf.y.clear();
+        buf.y.extend(buf.idx.iter().map(|&i| self.ds.labels[i]));
+        g
+    }
+
+    /// Submit (or, serial mode, run) the assembly of local step
+    /// `next_submit` into its slot.
     fn submit_one(&mut self) {
-        let step = self.next_submit;
+        let local = self.next_submit;
         self.next_submit += 1;
-        let si = (step % self.slots.len() as u64) as usize;
+        let si = (local % self.slots.len() as u64) as usize;
         debug_assert!(
             self.slots[si].ticket.is_none(),
             "slot reused while its assembly is in flight"
         );
-        self.draw_indices(si);
+        let step = self.draw_indices(si);
         let epoch = self.epoch;
         let (ds, aug) = (self.ds, self.aug);
         let (augment, flip, sample) = (self.cfg.augment, self.cfg.flip, self.sample);
@@ -376,7 +440,16 @@ mod tests {
     use crate::data::synth;
 
     fn cfg(batch: usize, prefetch: usize, shards: usize, augment: bool) -> LoaderCfg {
-        LoaderCfg { batch, augment, flip: false, seed: 11, prefetch, shards }
+        LoaderCfg {
+            batch,
+            augment,
+            flip: false,
+            seed: 11,
+            prefetch,
+            shards,
+            stream_stride: 1,
+            stream_offset: 0,
+        }
     }
 
     #[test]
@@ -402,6 +475,64 @@ mod tests {
         let want = run(0, 1);
         for &(p, s) in &[(0usize, 4usize), (1, 1), (1, 4), (2, 3), (4, 2)] {
             assert_eq!(run(p, s), want, "prefetch={p} shards={s} diverged from serial");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_shard_stream() {
+        let ds = synth::generate(8, 2, 16, 0);
+        assert!(BatchLoader::new(&ds, cfg(8, 0, 1, false).sharded(0, 0)).is_err());
+        assert!(BatchLoader::new(&ds, cfg(8, 0, 1, false).sharded(2, 2)).is_err());
+        assert!(BatchLoader::new(&ds, cfg(8, 0, 1, false).sharded(1, 2)).is_ok());
+    }
+
+    #[test]
+    fn sharded_streams_partition_the_global_batch_sequence_bitwise() {
+        let ds = synth::generate(8, 4, 24, 13);
+        let take = |c: LoaderCfg, n: usize| {
+            let mut l = BatchLoader::new(&ds, c).unwrap();
+            let mut out = Vec::new();
+            for _ in 0..n {
+                let (x, y) = {
+                    let (x, y) = l.next().unwrap();
+                    (x.data.clone(), y.to_vec())
+                };
+                out.push((x, y, l.last_batch_indices().to_vec()));
+            }
+            out
+        };
+        // augment=true so the positional fill key (global step, not the
+        // shard-local counter) is what the pixel comparison pins
+        let global = take(cfg(8, 1, 0, true), 6);
+        for stride in [2usize, 3] {
+            let shards: Vec<_> = (0..stride)
+                .map(|o| take(cfg(8, 1, 0, true).sharded(o, stride), 6 / stride))
+                .collect();
+            for (g, want) in global.iter().enumerate() {
+                let got = &shards[g % stride][g / stride];
+                assert_eq!(got, want, "global batch {g} diverged at stride {stride}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_epoch_coverage_is_exact() {
+        // 24 samples / batch 8 = 3 global batches per epoch, no tail: for
+        // any stride, the union of the shards' epoch-0 batches must be the
+        // whole dataset, each index exactly once.
+        let ds = synth::generate(8, 2, 24, 5);
+        for stride in [1usize, 2, 3] {
+            let mut seen: Vec<usize> = Vec::new();
+            for o in 0..stride {
+                let mut l = BatchLoader::new(&ds, cfg(8, 0, 1, false).sharded(o, stride)).unwrap();
+                let mine = (3 - o + stride - 1) / stride; // this shard's epoch-0 batches
+                for _ in 0..mine {
+                    l.next().unwrap();
+                    seen.extend_from_slice(l.last_batch_indices());
+                }
+            }
+            seen.sort();
+            assert_eq!(seen, (0..24).collect::<Vec<_>>(), "stride {stride} epoch coverage");
         }
     }
 

@@ -22,7 +22,10 @@ const USAGE: &str = "\
 pim-qat — PIM-QAT reproduction (Jin et al. 2022)
 
 USAGE:
-  pim-qat train [key=val ...]                  one training job
+  pim-qat train [key=val ...] [--replicas N]   one training job (N = in-process
+                                               data-parallel replica trainers with a
+                                               deterministic tree all-reduce;
+                                               $PIM_QAT_REPLICAS; native backend)
   pim-qat eval --ckpt DIR [--chip SPEC] [--faults PROFILE] [--calibrate] [key=val ...]
   pim-qat calibrate --ckpt DIR [--chip SPEC] [--faults PROFILE] [--out DIR] [key=val ...]
                                                self-tune BN stats on an injured chip
@@ -187,11 +190,60 @@ fn job_from_cli(cli: &Cli) -> Result<JobConfig> {
 fn cmd_train(cli: &Cli) -> Result<()> {
     let backend = open_backend(cli)?;
     let job = job_from_cli(cli)?;
+    let replicas = match cli.flag_value("replicas") {
+        Some(v) => Some(v.parse::<usize>()?.max(1)),
+        None => train::parallel::replicas_from_env(),
+    };
+    if let Some(n) = replicas {
+        return cmd_train_parallel(&job, backend.as_ref(), n);
+    }
     let mut runner = SweepRunner::new(backend.as_ref());
     let out = runner.run(&job)?;
     println!("checkpoint: {}", runner.ckpt_root.join(sweep::fingerprint(&job)).display());
     println!("software accuracy: {:.2}%", out.software_acc);
     for l in &out.history {
+        println!(
+            "  step {:>5}  lr {:<7} loss {:<8.4} batch-acc {:.1}%",
+            l.step, l.lr, l.loss, l.acc
+        );
+    }
+    Ok(())
+}
+
+/// `pim-qat train --replicas N` (or `$PIM_QAT_REPLICAS`): route the job
+/// through the data-parallel driver (`train::parallel`).  Native backend
+/// only — the replicated trainers are in-crate state.  The checkpoint dir
+/// gets a `_dpN` suffix for N > 1 (a different global batch is a different
+/// trajectory); N = 1 shares the serial fingerprint, to which it is
+/// bitwise identical.
+fn cmd_train_parallel(job: &JobConfig, backend: &dyn Backend, replicas: usize) -> Result<()> {
+    if backend.name() != "native" {
+        return Err(anyhow!(
+            "--replicas requires the native backend (got {:?}); use --backend native",
+            backend.name()
+        ));
+    }
+    let manifest = backend.manifest();
+    let entry = manifest.model(&job.model)?;
+    let (train_ds, test_ds) = pim_qat::data::load_default(
+        entry.image, entry.classes, job.train_size, job.test_size, 0xDA7A ^ job.seed,
+    );
+    let pcfg = train::ParallelCfg::new(replicas);
+    let mut res = train::run_job_parallel(manifest, job, &train_ds, &test_ds, 10, &pcfg)?;
+    let fp = if replicas > 1 {
+        format!("{}_dp{replicas}", sweep::fingerprint(job))
+    } else {
+        sweep::fingerprint(job)
+    };
+    let root = std::env::var_os("PIM_QAT_CKPTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("results/ckpts"));
+    let dir = root.join(fp);
+    res.ckpt.meta.insert("software_acc".into(), format!("{:.4}", res.software_acc));
+    res.ckpt.save(&dir)?;
+    println!("checkpoint: {}", dir.display());
+    println!("software accuracy: {:.2}%", res.software_acc);
+    for l in &res.history {
         println!(
             "  step {:>5}  lr {:<7} loss {:<8.4} batch-acc {:.1}%",
             l.step, l.lr, l.loss, l.acc

@@ -419,7 +419,7 @@ impl Farm {
         assert!(replicas > 0, "a farm needs at least one replica");
         // one in-flight batch per replica: make sure the pool can actually
         // run them side by side instead of serializing on a smaller pool
-        pool::reserve(replicas);
+        pool::reserve_for(replicas, 1);
         let mut slots = Vec::with_capacity(replicas);
         for i in 0..replicas {
             let r = Replica::new(manifest, ckpt, cfg, i as u64)?;
@@ -441,7 +441,7 @@ impl Farm {
             self.slots.len(),
             "health monitor sized for a different farm"
         );
-        pool::reserve(self.slots.len() + 1);
+        pool::reserve_for(self.slots.len() + 1, 1);
         self.health = Some(monitor);
     }
 

@@ -96,6 +96,102 @@ impl BufPool {
     }
 }
 
+/// Slot-sharded accumulation buffer (§Perf L3.10): `slots` flat f32
+/// buffers of identical length, written disjointly (one writer per slot —
+/// lock-free by ownership, not by atomics) and combined by a **fixed-order
+/// tree reduce**.
+///
+/// The reduction schedule is recursive halving over slot indices: at
+/// stride `s`, slot `i` absorbs slot `i + s` for every `i ≡ 0 (mod 2s)`,
+/// element by element in index order.  The floating-point association is
+/// therefore a pure function of the slot indices — never of arrival
+/// order, worker identity, or thread count — so the reduced sum in slot 0
+/// is bitwise reproducible, and identical whether the pairs of a level
+/// run in parallel on the worker pool ([`SlotBank::reduce_tree`]) or
+/// serially on the calling thread
+/// ([`SlotBank::reduce_serial_reference`], the parity oracle the tests
+/// pin the parallel path against).
+#[derive(Debug)]
+pub struct SlotBank {
+    slots: Vec<Vec<f32>>,
+}
+
+impl SlotBank {
+    /// `slots` zeroed buffers of `len` elements each, allocated once.
+    pub fn new(slots: usize, len: usize) -> SlotBank {
+        SlotBank { slots: (0..slots.max(1)).map(|_| vec![0.0; len]).collect() }
+    }
+
+    /// Element count of one slot buffer.
+    pub fn len(&self) -> usize {
+        self.slots[0].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots[0].is_empty()
+    }
+
+    /// Number of slots.
+    pub fn slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Disjoint per-slot write access: hand `&mut` of slot `m` to the
+    /// writer that owns microbatch `m` (one writer per slot — the
+    /// lock-free contract).
+    pub fn slots_mut(&mut self) -> &mut [Vec<f32>] {
+        &mut self.slots
+    }
+
+    /// Fixed-order tree reduce into slot 0, the pairs of each level run as
+    /// jobs on the shared worker pool.  Returns the reduced sum.  Slots
+    /// other than 0 are left holding partial sums; every slot must be
+    /// fully rewritten before the next reduce.
+    pub fn reduce_tree(&mut self) -> &[f32] {
+        let n = self.slots.len();
+        let mut stride = 1;
+        while stride < n {
+            let mut jobs: Vec<crate::util::pool::ScopedJob<'_>> = Vec::new();
+            for chunk in self.slots.chunks_mut(2 * stride) {
+                if chunk.len() > stride {
+                    let (a, b) = chunk.split_at_mut(stride);
+                    let (dst, src) = (&mut a[0], &b[0]);
+                    jobs.push(Box::new(move || add_assign(dst, src)));
+                }
+            }
+            crate::util::pool::run_scoped(jobs);
+            stride *= 2;
+        }
+        &self.slots[0]
+    }
+
+    /// The same halving schedule executed strictly serially on the calling
+    /// thread — the reference [`SlotBank::reduce_tree`] must match
+    /// bitwise (each pair's element-order sum is computed identically; the
+    /// pool only changes *where* a pair runs, never its association).
+    pub fn reduce_serial_reference(&mut self) -> &[f32] {
+        let n = self.slots.len();
+        let mut stride = 1;
+        while stride < n {
+            for chunk in self.slots.chunks_mut(2 * stride) {
+                if chunk.len() > stride {
+                    let (a, b) = chunk.split_at_mut(stride);
+                    add_assign(&mut a[0], &b[0]);
+                }
+            }
+            stride *= 2;
+        }
+        &self.slots[0]
+    }
+}
+
+fn add_assign(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += *s;
+    }
+}
+
 /// Best-fit take: the smallest pooled buffer whose capacity covers `len`.
 /// A too-small buffer is left pooled for its own size class — growing it
 /// would reallocate anyway.
@@ -161,6 +257,63 @@ mod tests {
         assert!(i.capacity() >= 4);
         p.put_u32(i);
         assert_eq!(p.pooled(), 1);
+    }
+
+    /// Deterministic pseudo-random fill (no RNG dep in this module's tests).
+    fn fill(bank: &mut SlotBank) {
+        for (m, slot) in bank.slots_mut().iter_mut().enumerate() {
+            for (i, v) in slot.iter_mut().enumerate() {
+                let h = (m as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(i as u64);
+                *v = ((h >> 40) as f32 / 1.6e7) - 0.5;
+            }
+        }
+    }
+
+    #[test]
+    fn tree_reduce_matches_serial_fold_reference_bitwise() {
+        for &slots in &[1usize, 2, 3, 4, 5, 8] {
+            let mut a = SlotBank::new(slots, 257);
+            let mut b = SlotBank::new(slots, 257);
+            fill(&mut a);
+            fill(&mut b);
+            let pa = a.reduce_tree().to_vec();
+            let pb = b.reduce_serial_reference().to_vec();
+            assert_eq!(pa, pb, "parallel tree diverged from the serial fold at {slots} slots");
+        }
+    }
+
+    #[test]
+    fn tree_reduce_is_deterministic_and_close_to_naive_sum() {
+        let run = || {
+            let mut bank = SlotBank::new(4, 1001);
+            fill(&mut bank);
+            bank.reduce_tree().to_vec()
+        };
+        let first = run();
+        assert_eq!(first, run(), "tree reduce must be bitwise reproducible");
+        // numerical sanity vs the naive left fold (not bitwise: different
+        // association, same value to f64 accuracy of the inputs)
+        let mut bank = SlotBank::new(4, 1001);
+        fill(&mut bank);
+        let mut naive = vec![0.0f64; 1001];
+        for slot in bank.slots_mut().iter() {
+            for (d, s) in naive.iter_mut().zip(slot) {
+                *d += *s as f64;
+            }
+        }
+        for (t, n) in first.iter().zip(&naive) {
+            assert!((*t as f64 - n).abs() < 1e-4, "tree sum {t} vs naive {n}");
+        }
+    }
+
+    #[test]
+    fn slot_bank_single_slot_is_identity() {
+        let mut bank = SlotBank::new(1, 8);
+        fill(&mut bank);
+        let want = bank.slots_mut()[0].clone();
+        assert_eq!(bank.reduce_tree(), &want[..]);
+        assert_eq!(bank.slots(), 1);
+        assert_eq!(bank.len(), 8);
     }
 
     #[test]

@@ -30,12 +30,14 @@ pub mod arena;
 pub mod calib;
 pub mod checkpoint;
 pub mod native;
+pub mod parallel;
 pub mod schedule;
 
 pub use arena::TrainArena;
 pub use calib::{recalibrate_network, self_tune, SelfTuneCfg, SelfTuneReport};
 pub use checkpoint::Checkpoint;
 pub use native::NativeBackend;
+pub use parallel::{run_job_parallel, with_parallel, ParallelCfg};
 
 use crate::util::error::{anyhow, Result};
 use crate::runtime::literal::Literal;

@@ -320,8 +320,9 @@ struct VggTape {
 }
 
 /// Per-channel batch statistics recorded by the forward stage, consumed by
-/// the apply stage's running-stat update.
-type BnStats = Vec<(String, (Vec<f32>, Vec<f32>))>;
+/// the apply stage's running-stat update (and, data-parallel, reduced
+/// across replicas on the gradient bus — `train::parallel`).
+pub(crate) type BnStats = Vec<(String, (Vec<f32>, Vec<f32>))>;
 
 /// Everything the forward stage hands to the backward stage: the saved
 /// per-layer tapes plus what the loss head needs.  Tapes own pooled
@@ -599,6 +600,44 @@ impl NativeTrainer {
         Ok((loss, correct))
     }
 
+    /// The replica-local half of a data-parallel step (`train::parallel`):
+    /// forward + loss + backward on this replica's own arena, **without**
+    /// the apply stage.  Returns the microbatch's (mean loss, correct
+    /// count, parameter gradients, BN batch statistics) for the caller to
+    /// reduce across replicas and apply once via [`Self::apply_reduced`].
+    /// The gradients and statistics are bitwise those [`Self::train_step`]
+    /// would have applied — the stages are shared, only the apply is
+    /// deferred.
+    pub(crate) fn grad_step(
+        &mut self,
+        x: &Tensor,
+        y: &[i32],
+        rng: &mut Rng,
+    ) -> Result<(f32, usize, BTreeMap<String, Tensor>, BnStats)> {
+        let mut arena = std::mem::take(&mut self.arena);
+        let result = self.grad_stages(x, y, rng, &mut arena);
+        self.arena = arena;
+        result
+    }
+
+    /// Forward + loss + backward for [`Self::grad_step`], under the same
+    /// arena swap-out as [`Self::step_stages`].
+    fn grad_stages(
+        &mut self,
+        x: &Tensor,
+        y_lab: &[i32],
+        rng: &mut Rng,
+        arena: &mut TrainArena,
+    ) -> Result<(f32, usize, BTreeMap<String, Tensor>, BnStats)> {
+        let mut stats = BnStats::new();
+        let (logits, tape) = self.forward(x, rng, arena, &mut stats)?;
+        let (loss, correct, dlogits) = grad::softmax_xent(&logits, y_lab);
+        // the backward runs even on a non-finite loss so the tape's pooled
+        // buffers return to the arena; the caller skips the apply
+        let grads = self.backward(tape, &dlogits, arena);
+        Ok((loss, correct, grads, stats))
+    }
+
     /// Forward stage: run the training-mode network on `x`, returning the
     /// logits and the tape the backward stage consumes.
     fn forward(
@@ -638,23 +677,37 @@ impl NativeTrainer {
     /// Apply stage: BN running-statistic momentum update + SGD with
     /// Nesterov momentum and weight decay (TrainConfig defaults).
     fn apply(&mut self, grads: BTreeMap<String, Tensor>, stats: BnStats, lr: f32) -> Result<()> {
+        self.apply_reduced(&grads, &stats, lr)
+    }
+
+    /// The shared-apply half of a step, borrowed form: the single-trainer
+    /// [`Self::apply`] delegates here, and the data-parallel driver
+    /// (`train::parallel`) calls it directly with the tree-reduced mean
+    /// gradients and statistics — one optimizer update per global step,
+    /// whatever the replica count.
+    pub(crate) fn apply_reduced(
+        &mut self,
+        grads: &BTreeMap<String, Tensor>,
+        stats: &BnStats,
+        lr: f32,
+    ) -> Result<()> {
         // BN running statistics: (1-m)·old + m·batch (training-mode BN)
         let mom = self.bn_momentum;
         for (name, (bm, bv)) in stats {
             let ent = self
                 .bn_state
-                .get_mut(&name)
+                .get_mut(name)
                 .ok_or_else(|| anyhow!("bn state {name:?} missing"))?;
-            for (o, n) in ent.0.iter_mut().zip(&bm) {
+            for (o, n) in ent.0.iter_mut().zip(bm) {
                 *o = (1.0 - mom) * *o + mom * *n;
             }
-            for (o, n) in ent.1.iter_mut().zip(&bv) {
+            for (o, n) in ent.1.iter_mut().zip(bv) {
                 *o = (1.0 - mom) * *o + mom * *n;
             }
         }
 
         #[cfg(debug_assertions)]
-        for (name, g) in &grads {
+        for (name, g) in grads {
             let norm2: f64 = g.data.iter().map(|&v| (v as f64) * (v as f64)).sum();
             debug_assert!(norm2.is_finite(), "non-finite gradient norm for layer {name:?}");
         }
@@ -662,11 +715,11 @@ impl NativeTrainer {
         for (name, g) in grads {
             let p = self
                 .params
-                .get_mut(&name)
+                .get_mut(name)
                 .ok_or_else(|| anyhow!("param {name:?} missing"))?;
             let v = self
                 .vel
-                .get_mut(&name)
+                .get_mut(name)
                 .ok_or_else(|| anyhow!("momentum {name:?} missing"))?;
             for i in 0..g.data.len() {
                 let gi = g.data[i] + self.weight_decay * p.data[i];
@@ -687,6 +740,53 @@ impl NativeTrainer {
         if let Some(p) = self.train_faults {
             self.chip.faults = Some(p.training_sample(step as u64));
         }
+    }
+
+    /// Data-parallel variability-aware training (`train::parallel`): bind
+    /// the injured device for global microbatch slot `slot` at step
+    /// `step`.  The slot offsets the profile's base chip id (the farm's
+    /// `on_chip(i)` fingerprint convention, PR 6), so each slot trains
+    /// against its own chip instance of the population; a pure function of
+    /// (slot, step) — never of which physical replica runs the slot.
+    /// Slot 0 is bitwise [`Self::set_step_faults`].  No-op without a
+    /// profile.
+    pub(crate) fn set_slot_faults(&mut self, step: usize, slot: usize) {
+        if let Some(p) = self.train_faults {
+            let p = p.on_chip(p.chip_id.wrapping_add(slot as u64));
+            self.chip.faults = Some(p.training_sample(step as u64));
+        }
+    }
+
+    /// In-place weight broadcast (`train::parallel`): copy `src`'s
+    /// parameters, SGD velocity, and BN running state into this replica's
+    /// existing buffers.  Engine caches in the arena are left alone — they
+    /// reprogram from `params` on the next forward, skipping unchanged
+    /// groups, so the broadcast costs no reallocation and no cache loss.
+    pub(crate) fn adopt_state_from(&mut self, src: &NativeTrainer) {
+        debug_assert_eq!(self.params.len(), src.params.len(), "replica param sets differ");
+        for (d, s) in self.params.values_mut().zip(src.params.values()) {
+            d.data.clone_from(&s.data);
+        }
+        for (d, s) in self.vel.values_mut().zip(src.vel.values()) {
+            d.data.clone_from(&s.data);
+        }
+        for (d, s) in self.bn_state.values_mut().zip(src.bn_state.values()) {
+            d.0.clone_from(&s.0);
+            d.1.clone_from(&s.1);
+        }
+    }
+
+    /// Parameter shape template, in the fixed (sorted) iteration order the
+    /// gradient maps share — the `train::parallel` bus layout is built
+    /// from this.
+    pub(crate) fn param_template(&self) -> &BTreeMap<String, Tensor> {
+        &self.params
+    }
+
+    /// BN running-state template (name → per-channel buffers), fixed order
+    /// — sizes the bus's statistics ranges.
+    pub(crate) fn bn_template(&self) -> &BTreeMap<String, (Vec<f32>, Vec<f32>)> {
+        &self.bn_state
     }
 
     /// Snapshot the mutable training state (parameters, momentum, BN
@@ -1432,6 +1532,8 @@ mod tests {
             seed: 5,
             prefetch: 0, // serial: assembly runs inside the armed window
             shards: 1,
+            stream_stride: 1,
+            stream_offset: 0,
         };
         let mut loader = BatchLoader::new(&ds, cfg).unwrap();
         let mut rng = Rng::new(0);

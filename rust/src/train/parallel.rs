@@ -1,0 +1,482 @@
+//! In-process data-parallel training (§Perf L3.10): N replica trainers
+//! over disjoint shard streams, a lock-free gradient bus, and a
+//! fixed-order deterministic tree all-reduce.
+//!
+//! ## Execution model
+//!
+//! A global step processes `M` **microbatch slots** (global batch `M·B`).
+//! Slot `m` is handled by physical replica `m % R` (`M % R == 0`), each
+//! replica being a full [`NativeTrainer`] with its own
+//! [`TrainArena`](super::TrainArena) (engine cache + grown-once buffer
+//! pool, the L3.5 contracts hold per replica) and its own [`BatchLoader`]
+//! sharded over the global batch stream (`LoaderCfg::sharded(r, R)` —
+//! every loader advances the same shuffle stream and materializes a
+//! disjoint subset, so each dataset index is seen exactly once per global
+//! epoch for any `R`).  Per step, each replica runs forward+backward on
+//! its slots (`NativeTrainer::grad_step`), writes each slot's gradients,
+//! BN batch statistics and loss/correct scalars into that slot's own flat
+//! bus buffer, the slots are tree-reduced, and the **leader replica
+//! applies one optimizer update** (`NativeTrainer::apply_reduced`) which
+//! is then broadcast in place into every other replica's buffers
+//! (`NativeTrainer::adopt_state_from` — engine caches reprogram from the
+//! new weights on the next forward, skipping unchanged groups).
+//!
+//! ## Determinism contract
+//!
+//! The trajectory is a pure function of the **slot count `M`**, never of
+//! the replica count, thread count, or prefetch depth:
+//!
+//! * every per-slot random stream is keyed by the *global microbatch
+//!   counter* `g = step·M + m` — the loader's shuffle/augmentation
+//!   coordinates, the per-microbatch noise seed
+//!   (`Rng::new(g ^ (seed << 8) ^ 0x5EED)`, the serial trainer's formula
+//!   with `g` in place of `step`), and the variability-training fault
+//!   replica (`NativeTrainer::set_slot_faults` — keyed by (slot, step),
+//!   never by which physical replica ran the slot);
+//! * the **GradBus** ([`SlotBank`]) gives each slot its own buffer (one
+//!   writer per slot — lock-free by disjoint ownership), and the
+//!   all-reduce is the fixed recursive-halving schedule over slot indices:
+//!   the floating-point association is a pure function of (layer offset,
+//!   slot), never arrival order (`tensor::arena::SlotBank::reduce_tree`);
+//! * the reduced sums are scaled by `1/M` and applied once, so at `M = 1`
+//!   the whole path is bitwise the serial trainer's (`×1.0` is an f32
+//!   identity), and at fixed `M` the trajectories for every valid `R`
+//!   (including `R = 1` — "N=1 at global batch M·B") are bitwise
+//!   identical.  `tests/train_parallel.rs` pins all of this.
+//!
+//! The divergence guard and crash-safe resume of the serial
+//! [`super::native::run_job_native`] are *not* replicated here: a
+//! non-finite mean loss records a [`StepLog`] and stops (the serial driver
+//! behaves identically when the guard is out of retries).
+//!
+//! ## Soundness
+//!
+//! [`ParallelTrainer`] owns `BatchLoader`s, whose in-flight assembly jobs
+//! borrow the dataset with erased lifetimes; the loader's `Drop` joins
+//! them.  The public entry points are therefore **scoped**
+//! ([`with_parallel`], [`run_job_parallel`]): the trainer value lives on
+//! this module's stack frame and callers only ever see `&mut
+//! ParallelTrainer`, which cannot be leaked past the dataset borrow
+//! (the same contract as `data::loader::with_loader`).
+
+use std::collections::BTreeMap;
+
+use crate::config::JobConfig;
+use crate::data::loader::{BatchLoader, LoaderCfg, MAX_PREFETCH};
+use crate::data::Dataset;
+use crate::runtime::Manifest;
+use crate::tensor::arena::SlotBank;
+use crate::tensor::{ops, Tensor};
+use crate::util::error::{anyhow, Error, Result};
+use crate::util::pool;
+use crate::util::rng::Rng;
+
+use super::native::{eval_software_native, BnStats, NativeTrainer};
+use super::{schedule, Checkpoint, StepLog, TrainResult};
+
+/// Data-parallel execution shape.
+#[derive(Debug, Clone)]
+pub struct ParallelCfg {
+    /// Physical replica trainers (own arena, engine cache, loader each).
+    pub replicas: usize,
+    /// Global microbatch slots per step (global batch = `slots × B`).
+    /// Must be a multiple of `replicas`; the trajectory is a pure function
+    /// of this number alone.  [`ParallelCfg::new`] sets `slots = replicas`.
+    pub slots: usize,
+    /// Loader prefetch override per replica (`None` = env-resolved
+    /// default, like the serial driver).
+    pub prefetch: Option<usize>,
+}
+
+impl ParallelCfg {
+    /// `replicas` trainers, one slot each (the common shape: global batch
+    /// `replicas × B`).
+    pub fn new(replicas: usize) -> ParallelCfg {
+        let r = replicas.max(1);
+        ParallelCfg { replicas: r, slots: r, prefetch: None }
+    }
+
+    /// Validated (replicas, slots).
+    fn resolved(&self) -> Result<(usize, usize)> {
+        let r = self.replicas.max(1);
+        let m = self.slots.max(1);
+        if m % r != 0 {
+            return Err(anyhow!("slots {m} must be a multiple of replicas {r}"));
+        }
+        Ok((r, m))
+    }
+}
+
+/// `$PIM_QAT_REPLICAS` when set and parseable (the env twin of
+/// `--replicas`).
+pub fn replicas_from_env() -> Option<usize> {
+    std::env::var("PIM_QAT_REPLICAS").ok().and_then(|v| v.parse::<usize>().ok())
+}
+
+/// Flat-buffer layout of the gradient bus: every parameter gradient (in
+/// the fixed sorted order of the parameter map), then each BN layer's
+/// (batch-mean, batch-var) pair, then two trailing scalars (loss, correct
+/// count).  One such buffer per slot; identical offsets in every slot, so
+/// the tree reduce sums corresponding quantities and the reduction order
+/// per element is (layer offset, slot) — fixed by construction.
+struct BusLayout {
+    /// (param name, offset, element count) in `BTreeMap` iteration order.
+    params: Vec<(String, usize, usize)>,
+    /// (bn name, offset, channels); batch mean at `offset`, batch var at
+    /// `offset + channels`.
+    bn: Vec<(String, usize, usize)>,
+    /// Offset of the two trailing scalars.
+    scalar_off: usize,
+}
+
+impl BusLayout {
+    fn new(
+        params: &BTreeMap<String, Tensor>,
+        bn: &BTreeMap<String, (Vec<f32>, Vec<f32>)>,
+    ) -> BusLayout {
+        let mut off = 0usize;
+        let mut pv = Vec::with_capacity(params.len());
+        for (name, t) in params {
+            pv.push((name.clone(), off, t.len()));
+            off += t.len();
+        }
+        let mut bv = Vec::with_capacity(bn.len());
+        for (name, (mean, _)) in bn {
+            bv.push((name.clone(), off, mean.len()));
+            off += 2 * mean.len();
+        }
+        BusLayout { params: pv, bn: bv, scalar_off: off }
+    }
+
+    /// Total bus elements per slot.
+    fn len(&self) -> usize {
+        self.scalar_off + 2
+    }
+
+    /// Serialize one microbatch's contribution into its slot buffer.
+    fn write(
+        &self,
+        grads: &BTreeMap<String, Tensor>,
+        stats: &BnStats,
+        loss: f32,
+        correct: usize,
+        buf: &mut [f32],
+    ) {
+        buf.fill(0.0);
+        for (name, off, len) in &self.params {
+            let (off, len) = (*off, *len);
+            match grads.get(name) {
+                Some(g) => {
+                    debug_assert_eq!(g.len(), len, "gradient size for {name:?}");
+                    buf[off..off + len].copy_from_slice(&g.data);
+                }
+                None => debug_assert!(false, "no gradient for param {name:?}"),
+            }
+        }
+        for (name, off, c) in &self.bn {
+            let (off, c) = (*off, *c);
+            match stats.iter().find(|(n, _)| n == name) {
+                Some((_, (bm, bv))) => {
+                    buf[off..off + c].copy_from_slice(bm);
+                    buf[off + c..off + 2 * c].copy_from_slice(bv);
+                }
+                None => debug_assert!(false, "no batch stats for bn {name:?}"),
+            }
+        }
+        buf[self.scalar_off] = loss;
+        buf[self.scalar_off + 1] = correct as f32;
+    }
+
+    /// Scatter the reduced sum back out as means (`× inv`, `inv = 1/M` —
+    /// at `M = 1` a bitwise identity).  Returns (mean loss, summed correct
+    /// count — a count, not an average).
+    fn read_into(
+        &self,
+        sum: &[f32],
+        inv: f32,
+        grads: &mut BTreeMap<String, Tensor>,
+        stats: &mut BnStats,
+    ) -> (f32, f32) {
+        for (name, off, len) in &self.params {
+            let (off, len) = (*off, *len);
+            let g = grads.get_mut(name).expect("grads buffer built from the same template");
+            for (d, s) in g.data.iter_mut().zip(&sum[off..off + len]) {
+                *d = *s * inv;
+            }
+        }
+        for ((name, off, c), (sname, (bm, bv))) in self.bn.iter().zip(stats.iter_mut()) {
+            let (off, c) = (*off, *c);
+            debug_assert_eq!(name, sname, "stats buffer order");
+            for (d, s) in bm.iter_mut().zip(&sum[off..off + c]) {
+                *d = *s * inv;
+            }
+            for (d, s) in bv.iter_mut().zip(&sum[off + c..off + 2 * c]) {
+                *d = *s * inv;
+            }
+        }
+        (sum[self.scalar_off] * inv, sum[self.scalar_off + 1])
+    }
+}
+
+/// The data-parallel driver state: `R` replica trainers + loaders, the
+/// slot-sharded gradient bus, and the reduced-gradient staging buffers.
+/// Construct through [`with_parallel`] (scoped — see the module docs).
+pub struct ParallelTrainer<'ds> {
+    trainers: Vec<NativeTrainer>,
+    loaders: Vec<BatchLoader<'ds>>,
+    layout: BusLayout,
+    bank: SlotBank,
+    /// Reduced mean gradients, reused every step (template shapes).
+    grads_buf: BTreeMap<String, Tensor>,
+    /// Reduced mean BN batch statistics, reused every step.
+    stats_buf: BnStats,
+    step: usize,
+    slots: usize,
+    seed: u64,
+}
+
+impl ParallelTrainer<'_> {
+    /// One global step at learning rate `lr`: every slot's microbatch
+    /// through its replica (forward + backward, replica-parallel on the
+    /// worker pool), tree all-reduce, one leader apply, in-place
+    /// broadcast.  Returns (mean loss over slots, correct predictions in
+    /// the global batch).  On a non-finite mean loss the apply and
+    /// broadcast are skipped, exactly like the serial trainer.
+    pub fn step(&mut self, lr: f32) -> Result<(f32, usize)> {
+        let (reps, slots) = (self.trainers.len(), self.slots);
+        let step = self.step;
+        let seed = self.seed;
+        let layout = &self.layout;
+        let mut errs: Vec<Option<Error>> = Vec::new();
+        errs.resize_with(reps, || None);
+        {
+            let mut slot_bufs: Vec<Option<&mut Vec<f32>>> =
+                self.bank.slots_mut().iter_mut().map(Some).collect();
+            let mut jobs: Vec<pool::ScopedJob<'_>> = Vec::with_capacity(reps);
+            for (r, ((trainer, loader), err)) in self
+                .trainers
+                .iter_mut()
+                .zip(self.loaders.iter_mut())
+                .zip(errs.iter_mut())
+                .enumerate()
+            {
+                // slots m ≡ r (mod R), in increasing m order — the order
+                // this replica's sharded loader yields them
+                let mine: Vec<(usize, &mut Vec<f32>)> = slot_bufs
+                    .iter_mut()
+                    .enumerate()
+                    .skip(r)
+                    .step_by(reps)
+                    .map(|(m, b)| (m, b.take().expect("each slot has one owner")))
+                    .collect();
+                jobs.push(Box::new(move || {
+                    for (m, buf) in mine {
+                        let g = (step * slots + m) as u64;
+                        let run = || -> Result<()> {
+                            trainer.set_slot_faults(step, m);
+                            let (x, y) = loader.next()?;
+                            // the serial per-step noise-seed formula, with
+                            // the global microbatch counter as the key
+                            let mut srng = Rng::new(g ^ (seed << 8) ^ 0x5EED);
+                            let (loss, correct, grads, stats) = trainer.grad_step(x, y, &mut srng)?;
+                            layout.write(&grads, &stats, loss, correct, buf);
+                            Ok(())
+                        };
+                        if let Err(e) = run() {
+                            *err = Some(e);
+                            return;
+                        }
+                    }
+                }));
+            }
+            pool::run_scoped(jobs);
+        }
+        if let Some(e) = errs.into_iter().flatten().next() {
+            return Err(e);
+        }
+        self.step += 1;
+
+        // fixed-order tree all-reduce, then scatter the means
+        let inv = 1.0 / slots as f32;
+        let sum = self.bank.reduce_tree();
+        let (loss, correct) =
+            layout.read_into(sum, inv, &mut self.grads_buf, &mut self.stats_buf);
+        let correct = correct as usize;
+        if !loss.is_finite() {
+            return Ok((loss, correct));
+        }
+
+        // one optimizer update on the leader, broadcast in place
+        let (leader, rest) = self.trainers.split_at_mut(1);
+        leader[0].apply_reduced(&self.grads_buf, &self.stats_buf, lr)?;
+        for t in rest.iter_mut() {
+            t.adopt_state_from(&leader[0]);
+        }
+        Ok((loss, correct))
+    }
+
+    /// Global steps completed.
+    pub fn steps_done(&self) -> usize {
+        self.step
+    }
+
+    /// Snapshot the leader replica into a checkpoint (all replicas hold
+    /// identical state between steps — the broadcast invariant).
+    pub fn checkpoint(&self, job: &JobConfig) -> Checkpoint {
+        self.trainers[0].checkpoint(job)
+    }
+}
+
+/// Run `f` with a [`ParallelTrainer`] over `train_ds` — the sound scoped
+/// entry point (module docs §Soundness).  Builds `R` replica trainers and
+/// sharded loaders, pre-grows the worker pool for `R` concurrent replicas
+/// at the per-replica `$PIM_QAT_THREADS` budget
+/// (`pool::reserve_for`), and lends `f` the driver.
+pub fn with_parallel<R>(
+    manifest: &Manifest,
+    job: &JobConfig,
+    train_ds: &Dataset,
+    pcfg: &ParallelCfg,
+    f: impl FnOnce(&mut ParallelTrainer<'_>) -> R,
+) -> Result<R> {
+    let (reps, slots) = pcfg.resolved()?;
+    let bs = manifest.batch.max(1);
+    pool::reserve_for(reps, ops::resolve_threads(0));
+    let trainers: Vec<NativeTrainer> =
+        (0..reps).map(|_| NativeTrainer::new(manifest, job)).collect::<Result<_>>()?;
+    let mut loaders = Vec::with_capacity(reps);
+    for r in 0..reps {
+        let mut cfg = LoaderCfg::for_training(bs, job.seed ^ 0x7EAC).sharded(r, reps);
+        if let Some(p) = pcfg.prefetch {
+            cfg.prefetch = p.min(MAX_PREFETCH);
+        }
+        loaders.push(BatchLoader::new(train_ds, cfg)?);
+    }
+    let layout = BusLayout::new(trainers[0].param_template(), trainers[0].bn_template());
+    let bank = SlotBank::new(slots, layout.len());
+    let grads_buf = trainers[0].param_template().clone();
+    let stats_buf: BnStats = trainers[0]
+        .bn_template()
+        .iter()
+        .map(|(k, (m, _))| (k.clone(), (vec![0.0; m.len()], vec![0.0; m.len()])))
+        .collect();
+    let mut pt = ParallelTrainer {
+        trainers,
+        loaders,
+        layout,
+        bank,
+        grads_buf,
+        stats_buf,
+        step: 0,
+        slots,
+        seed: job.seed,
+    };
+    Ok(f(&mut pt))
+}
+
+/// Run one training job under the data-parallel driver — the replicated
+/// twin of [`super::native::run_job_native`].  At `replicas = slots = 1`
+/// the produced history and checkpoint are bitwise the serial driver's
+/// (pinned in `tests/train_parallel.rs`); at higher slot counts the
+/// trajectory is the fixed global-batch-`slots·B` trajectory, whatever
+/// the replica count.
+pub fn run_job_parallel(
+    manifest: &Manifest,
+    job: &JobConfig,
+    train_ds: &Dataset,
+    test_ds: &Dataset,
+    log_every: usize,
+    pcfg: &ParallelCfg,
+) -> Result<TrainResult> {
+    let log_every = log_every.max(1);
+    let (reps, slots) = pcfg.resolved()?;
+    let bs = manifest.batch.max(1);
+    let lr_sched = schedule::MultiStepLr::new(job.lr, job.milestones, job.steps);
+    println!(
+        "data-parallel: {reps} replica trainer(s) x batch {bs} ({slots} slot(s), \
+         global batch {}), fixed-order tree all-reduce",
+        slots * bs
+    );
+    let mut history = Vec::new();
+    let ckpt = with_parallel(manifest, job, train_ds, pcfg, |pt| -> Result<Checkpoint> {
+        for step in 0..job.steps {
+            let lr = lr_sched.at(step);
+            let (loss, correct) = pt.step(lr)?;
+            if !loss.is_finite() {
+                eprintln!("warning: training diverged at step {step} (loss {loss}); stopping");
+                history.push(StepLog { step, loss, acc: 0.0, lr });
+                break;
+            }
+            if step % log_every == 0 || step + 1 == job.steps {
+                let acc = 100.0 * correct as f32 / (slots * bs) as f32;
+                history.push(StepLog { step, loss, acc, lr });
+            }
+        }
+        Ok(pt.checkpoint(job))
+    })??;
+    let software_acc = eval_software_native(manifest, &ckpt, test_ds)?;
+    Ok(TrainResult { ckpt, history, software_acc })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cfg_validation() {
+        assert_eq!(ParallelCfg::new(0).resolved().unwrap(), (1, 1));
+        assert_eq!(ParallelCfg::new(3).resolved().unwrap(), (3, 3));
+        let mut c = ParallelCfg::new(2);
+        c.slots = 4;
+        assert_eq!(c.resolved().unwrap(), (2, 4));
+        c.slots = 3;
+        assert!(c.resolved().is_err());
+    }
+
+    #[test]
+    fn bus_layout_roundtrips_grads_stats_and_scalars() {
+        let mut params = BTreeMap::new();
+        params.insert("a/w".to_string(), Tensor::from_vec(&[2, 2], vec![0.0; 4]));
+        params.insert("b/w".to_string(), Tensor::from_vec(&[3], vec![0.0; 3]));
+        let mut bn = BTreeMap::new();
+        bn.insert("a/bn".to_string(), (vec![0.0; 2], vec![0.0; 2]));
+        let layout = BusLayout::new(&params, &bn);
+        assert_eq!(layout.len(), 4 + 3 + 2 * 2 + 2);
+
+        let mut grads = params.clone();
+        grads.get_mut("a/w").unwrap().data.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        grads.get_mut("b/w").unwrap().data.copy_from_slice(&[5.0, 6.0, 7.0]);
+        // recording order differs from sorted order on purpose: the bus is
+        // keyed by name, not by arrival
+        let stats: BnStats = vec![("a/bn".to_string(), (vec![0.5, 0.25], vec![1.5, 2.5]))];
+        let mut buf = vec![f32::NAN; layout.len()];
+        layout.write(&grads, &stats, 0.75, 6, &mut buf);
+
+        let mut out_g = params.clone();
+        let mut out_s: BnStats = vec![("a/bn".to_string(), (vec![0.0; 2], vec![0.0; 2]))];
+        let (loss, correct) = layout.read_into(&buf, 0.5, &mut out_g, &mut out_s);
+        assert_eq!(out_g.get("a/w").unwrap().data, vec![0.5, 1.0, 1.5, 2.0]);
+        assert_eq!(out_g.get("b/w").unwrap().data, vec![2.5, 3.0, 3.5]);
+        assert_eq!(out_s[0].1 .0, vec![0.25, 0.125]);
+        assert_eq!(out_s[0].1 .1, vec![0.75, 1.25]);
+        assert_eq!(loss, 0.375);
+        assert_eq!(correct, 6.0, "correct is a summed count, never averaged");
+    }
+
+    #[test]
+    fn read_at_unit_inverse_is_bitwise_identity() {
+        let mut params = BTreeMap::new();
+        params.insert("w".to_string(), Tensor::from_vec(&[3], vec![0.0; 3]));
+        let bn = BTreeMap::new();
+        let layout = BusLayout::new(&params, &bn);
+        let mut grads = params.clone();
+        let vals = [1.0e-30f32, -3.5, 7.0 / 3.0];
+        grads.get_mut("w").unwrap().data.copy_from_slice(&vals);
+        let mut buf = vec![0.0; layout.len()];
+        layout.write(&grads, &Vec::new(), 1.0 / 3.0, 2, &mut buf);
+        let mut out = params.clone();
+        let (loss, _) = layout.read_into(&buf, 1.0, &mut out, &mut Vec::new());
+        assert_eq!(out.get("w").unwrap().data.as_slice(), &vals, "×1.0 must be exact");
+        assert_eq!(loss.to_bits(), (1.0f32 / 3.0).to_bits());
+    }
+}

@@ -170,6 +170,21 @@ pub fn reserve(n: usize) {
     pool().ensure_workers(n);
 }
 
+/// Pre-grow the pool for `replicas` concurrent coarse-grained submitters
+/// (data-parallel replica trainers, farm chip replicas), each of which
+/// fans its own hot loops out over `threads_per_replica` workers.  This is
+/// the one place the `$PIM_QAT_THREADS` semantics are decided:
+/// **`PIM_QAT_THREADS` is a per-replica, per-op budget** (what
+/// `tensor::ops::resolve_threads` hands each GEMM/assembly call), so the
+/// pool itself must hold roughly `replicas × threads` workers for the
+/// replicas to run side by side instead of serializing their bursts.
+/// Returns the worker count requested, for diagnostics.
+pub fn reserve_for(replicas: usize, threads_per_replica: usize) -> usize {
+    let n = replicas.max(1) * threads_per_replica.max(1);
+    reserve(n);
+    n
+}
+
 /// Queue `jobs` for asynchronous execution on the pool and return a
 /// [`Ticket`] immediately — the detached twin of [`run_scoped`].  Jobs
 /// must be `'static`: nothing here blocks, so there is no barrier to make

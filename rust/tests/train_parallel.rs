@@ -1,0 +1,155 @@
+//! Data-parallel driver parity suite (§Perf L3.10, DESIGN.md §Data
+//! parallelism).  The determinism contract under test:
+//!
+//! 1. The training trajectory is a pure function of the **slot count**
+//!    (global batch), never the replica count: with noise *and* fault
+//!    injection live in the graph, N ∈ {1, 2, 4} replicas over 4 slots
+//!    produce bit-identical per-step losses and final weights — "N=1 at
+//!    global batch k·B" is bitwise "N=k at batch B".
+//! 2. Loader prefetch depth does not perturb the trajectory (the sharded
+//!    streams inherit the serial loader's pipeline invariance).
+//! 3. At one replica and one slot, the data-parallel driver *is* the
+//!    serial driver: `run_job_parallel` reproduces `run_job_native`'s
+//!    history, checkpoint, and software accuracy bitwise (the ×1/M mean
+//!    is an f32 identity at M = 1).
+//!
+//! Shard-stream disjointness/coverage and the fixed-order tree-reduce vs
+//! serial-fold equivalence are pinned by unit tests next to their
+//! implementations (`data::loader`, `tensor::arena`).
+
+use pim_qat::config::{JobConfig, Mode, Scheme};
+use pim_qat::data::{synth, Dataset};
+use pim_qat::runtime::Manifest;
+use pim_qat::train::native::run_job_native;
+use pim_qat::train::{run_job_parallel, with_parallel, ParallelCfg};
+
+/// The down-scaled resnet geometry the native-trainer unit tests use,
+/// rebuilt here (integration tests cannot reach the private helper).
+fn micro_manifest() -> Manifest {
+    let mut m = Manifest::builtin();
+    let mut e = m.models.get("tiny").unwrap().clone();
+    e.width = 4;
+    e.image = 8;
+    e.classes = 4;
+    m.models.insert("micro".to_string(), e);
+    m.batch = 8;
+    m
+}
+
+/// PIM-QAT training with the full stochastic surface on: injected PIM
+/// noise (mode=ours) *and* variability-aware fault training, so the test
+/// covers every per-slot random stream the driver keys positionally.
+fn micro_job(steps: usize) -> JobConfig {
+    JobConfig {
+        model: "micro".to_string(),
+        mode: Mode::Ours,
+        scheme: Scheme::BitSerial,
+        unit_channels: 8,
+        b_pim_train: 7,
+        steps,
+        lr: 0.05,
+        train_size: 64,
+        test_size: 16,
+        faults: "mild:7".to_string(),
+        ..Default::default()
+    }
+}
+
+/// Drive `steps` global steps at the given shape and return (per-step
+/// (loss bits, correct), full final parameter state) for bitwise
+/// comparison.
+fn run_steps(
+    ds: &Dataset,
+    job: &JobConfig,
+    replicas: usize,
+    slots: usize,
+    prefetch: Option<usize>,
+) -> (Vec<(u32, usize)>, Vec<(String, Vec<u32>)>) {
+    let m = micro_manifest();
+    let mut pcfg = ParallelCfg::new(replicas);
+    pcfg.slots = slots;
+    pcfg.prefetch = prefetch;
+    with_parallel(&m, job, ds, &pcfg, |pt| {
+        let mut logs = Vec::new();
+        for _ in 0..job.steps {
+            let (loss, correct) = pt.step(job.lr).unwrap();
+            assert!(loss.is_finite(), "micro job must train stably");
+            logs.push((loss.to_bits(), correct));
+        }
+        let params = pt
+            .checkpoint(job)
+            .params_map()
+            .into_iter()
+            .map(|(k, t)| (k, t.data.iter().map(|v| v.to_bits()).collect()))
+            .collect();
+        (logs, params)
+    })
+    .unwrap()
+}
+
+#[test]
+fn trajectory_is_a_pure_function_of_the_slot_count() {
+    // 5 steps x 4 slots x batch 8 over 64 samples: the global stream
+    // crosses epoch boundaries, so reshuffle timing under sharding is on
+    // the path too
+    let ds = synth::generate(8, 4, 64, 9);
+    let job = micro_job(5);
+    let (ref_logs, ref_params) = run_steps(&ds, &job, 1, 4, None);
+    for replicas in [2usize, 4] {
+        let (logs, params) = run_steps(&ds, &job, replicas, 4, None);
+        assert_eq!(
+            logs, ref_logs,
+            "per-step (loss, correct) diverged from 1 replica at {replicas} replicas"
+        );
+        assert_eq!(
+            params, ref_params,
+            "final weights diverged from 1 replica at {replicas} replicas"
+        );
+    }
+}
+
+#[test]
+fn prefetch_depth_does_not_change_the_trajectory() {
+    let ds = synth::generate(8, 4, 64, 9);
+    let job = micro_job(4);
+    let serial = run_steps(&ds, &job, 2, 4, Some(0));
+    for p in [1usize, 2] {
+        assert_eq!(
+            run_steps(&ds, &job, 2, 4, Some(p)),
+            serial,
+            "trajectory diverged at prefetch={p}"
+        );
+    }
+}
+
+#[test]
+fn single_slot_parallel_is_bitwise_the_serial_driver() {
+    let m = micro_manifest();
+    let train = synth::generate(8, 4, 64, 9);
+    let test = synth::generate(8, 4, 16, 10);
+    let job = micro_job(5);
+    let serial = run_job_native(&m, &job, &train, &test, 2).unwrap();
+    let par = run_job_parallel(&m, &job, &train, &test, 2, &ParallelCfg::new(1)).unwrap();
+
+    assert_eq!(serial.history.len(), par.history.len(), "history cadence");
+    for (a, b) in serial.history.iter().zip(&par.history) {
+        assert_eq!(a.step, b.step);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss diverged at step {}", a.step);
+        assert_eq!(a.acc.to_bits(), b.acc.to_bits(), "batch acc diverged at step {}", a.step);
+        assert_eq!(a.lr.to_bits(), b.lr.to_bits());
+    }
+    let sp = serial.ckpt.params_map();
+    let pp = par.ckpt.params_map();
+    assert_eq!(
+        sp.keys().collect::<Vec<_>>(),
+        pp.keys().collect::<Vec<_>>(),
+        "parameter sets differ"
+    );
+    for (name, t) in &sp {
+        let bits = |t: &pim_qat::tensor::Tensor| {
+            t.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        };
+        assert_eq!(bits(t), bits(&pp[name]), "weights diverged for {name}");
+    }
+    assert_eq!(serial.software_acc.to_bits(), par.software_acc.to_bits());
+}

@@ -50,7 +50,16 @@ fn run_loop(ds: &Dataset, prefetch: usize, shards: usize, steps: usize) -> (Vec<
     let m = micro_manifest();
     let job = micro_job(steps);
     let mut trainer = NativeTrainer::new(&m, &job).unwrap();
-    let cfg = LoaderCfg { batch: 8, augment: true, flip: false, seed: 77, prefetch, shards };
+    let cfg = LoaderCfg {
+        batch: 8,
+        augment: true,
+        flip: false,
+        seed: 77,
+        prefetch,
+        shards,
+        stream_stride: 1,
+        stream_offset: 0,
+    };
     let losses = with_loader(ds, cfg, |loader| {
         let mut losses = Vec::new();
         for step in 0..steps {
@@ -123,7 +132,16 @@ fn prefetch_zero_and_deep_pipelines_share_the_shuffle_stream() {
     // the *label* streams, which are pure functions of the index draws
     let ds = synth::generate(8, 4, 20, 2);
     let labels = |prefetch: usize| {
-        let cfg = LoaderCfg { batch: 8, augment: false, flip: false, seed: 3, prefetch, shards: 2 };
+        let cfg = LoaderCfg {
+            batch: 8,
+            augment: false,
+            flip: false,
+            seed: 3,
+            prefetch,
+            shards: 2,
+            stream_stride: 1,
+            stream_offset: 0,
+        };
         with_loader(&ds, cfg, |l| {
             let mut seen = Vec::new();
             for _ in 0..8 {
